@@ -1,0 +1,105 @@
+"""AOT lowering: JAX model (+ Pallas kernel) → HLO text artifacts.
+
+``make artifacts`` runs ``python -m compile.aot --out ../artifacts``; the
+Rust runtime (``rust/src/runtime``) loads the HLO text through
+``HloModuleProto::from_text_file`` and executes via PJRT. Python never
+runs after this step.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the crate's xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+
+Each entry is lowered for a ladder of ``(n, m2)`` shape buckets at a fixed
+lane count ``R`` (XLA executables are shape-specialized); the Rust side
+pads any concrete graph into the smallest fitting bucket — padding rules
+in ``rust/src/runtime/mod.rs``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Lane count the artifacts are built for. The native engine supports any
+# R; the XLA path slices the first r_count ≤ R lanes out of the bucket.
+R_LANES = 64
+
+# (vertex capacity N, directed-edge capacity M2) ladder. M2 must be a
+# multiple of the Pallas tile height (DEFAULT_TE = 256).
+BUCKETS = [
+    (256, 2048),
+    (1024, 8192),
+    (4096, 32768),
+    (16384, 131072),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_entries():
+    """Yield (kind, n, m2, r, lowered) for every artifact.
+
+    CPU-interpret note: the Pallas interpreter pays a fixed ~20 ms per
+    *grid step* on the CPU PJRT backend, so the CPU artifacts are lowered
+    with ``te = m2`` (one tile, grid = 1) — measured 750x faster at the
+    largest bucket with bit-identical results. On a real TPU the same
+    kernel lowers with ``te = 512`` so a (TE, R) tile fits VMEM; see
+    DESIGN.md §Perf.
+    """
+    import functools
+
+    for n, m2 in BUCKETS:
+        args = (i32(n, R_LANES), i32(m2), i32(m2), i32(m2), i32(m2), i32(R_LANES))
+        sweep = functools.partial(model.lp_sweep, te=m2)
+        converge = functools.partial(model.lp_converge, te=m2)
+        yield "lp_sweep", n, m2, R_LANES, jax.jit(sweep).lower(*args)
+        yield "lp_converge", n, m2, R_LANES, jax.jit(converge).lower(*args)
+    for n, _ in BUCKETS:
+        margs = (i32(n, R_LANES), i32(n, R_LANES))
+        yield "mg_compute", n, 0, R_LANES, jax.jit(model.mg_compute).lower(*margs)
+
+
+def build(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for kind, n, m2, r, lowered in lower_entries():
+        fname = f"{kind}_n{n}_m{m2}_r{r}.hlo.txt"
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append({"kind": kind, "file": fname, "n": n, "m2": m2, "r": r})
+        print(f"  {fname}  ({len(text) / 1024:.0f} KiB)", file=sys.stderr)
+    manifest = {"version": 1, "r_lanes": R_LANES, "entries": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest to {out_dir}", file=sys.stderr)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

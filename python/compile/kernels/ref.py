@@ -1,0 +1,81 @@
+"""Pure-jnp reference oracle for the L1/L2 pipeline.
+
+Semantically identical to the Pallas VECLABEL kernel and the L2 model, in
+the most transparent jnp formulation possible. Pytest checks the Pallas
+kernel and the lowered model against these functions across
+hypothesis-generated shapes and seeds; the Rust integration tests check
+the compiled artifacts against the native engine, closing the loop.
+
+All label math is int32; the sampling test is pure integer (no floats on
+the hot path), mirroring ``rust/src/simd::veclabel_row_scalar``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+HASH_MASK = 0x7FFFFFFF
+
+
+def sample_mask(h, thr, x):
+    """Aliveness of every (edge, lane) pair.
+
+    h:   [M]   i32 — direction-oblivious edge hashes
+    thr: [M]   i32 — ``floor(w * 2^31)``
+    x:   [R]   i32 — per-simulation words
+    →    [M,R] bool
+    """
+    probs = jnp.bitwise_and(
+        jnp.bitwise_xor(h[:, None], x[None, :]), jnp.int32(HASH_MASK)
+    )
+    return probs < thr[:, None]
+
+
+def veclabel_ref(l_u, l_v, h, thr, x):
+    """VECLABEL candidates (paper Alg. 6, all lanes at once).
+
+    l_u, l_v: [M,R] i32 — endpoint label rows per edge
+    →         [M,R] i32 — ``alive ? min(l_u, l_v) : l_v``
+    """
+    alive = sample_mask(h, thr, x)
+    return jnp.where(alive, jnp.minimum(l_u, l_v), l_v)
+
+
+def lp_sweep_ref(labels, eu, ev, h, thr, x):
+    """One Jacobi label-propagation sweep (paper Alg. 5 body).
+
+    labels: [N,R] i32; eu/ev/h/thr: [M] i32 (directed CSR copies — both
+    orientations present); x: [R] i32 → [N,R] i32.
+    """
+    l_u = labels[eu]
+    l_v = labels[ev]
+    cand = veclabel_ref(l_u, l_v, h, thr, x)
+    return labels.at[ev].min(cand)
+
+
+def lp_converge_ref(labels, eu, ev, h, thr, x, max_iters=10_000):
+    """Sweep to fixpoint (eager Python loop — reference only)."""
+    it = 0
+    while it < max_iters:
+        nxt = lp_sweep_ref(labels, eu, ev, h, thr, x)
+        it += 1
+        if bool(jnp.all(nxt == labels)):
+            return nxt, it
+        labels = nxt
+    raise RuntimeError("label propagation did not converge")
+
+
+def mg_compute_ref(labels, covered):
+    """Memoized marginal gains (paper Alg. 5 lines 18–21 / Alg. 7 line 16).
+
+    labels:  [N,R] i32 — fixpoint component labels
+    covered: [N,R] i32 — 1 iff label row's component is covered in lane r
+    → (sizes [N,R] i32, mg_scaled [N] i32) where ``mg = mg_scaled / R``.
+    """
+    n, r = labels.shape
+    lanes = jnp.broadcast_to(jnp.arange(r, dtype=jnp.int32), (n, r))
+    sizes = jnp.zeros((n, r), jnp.int32).at[labels, lanes].add(1)
+    own = sizes[labels, lanes]
+    alive = 1 - covered[labels, lanes]
+    mg_scaled = jnp.sum(own * alive, axis=1, dtype=jnp.int32)
+    return sizes, mg_scaled

@@ -1,0 +1,84 @@
+"""L1 — the VECLABEL Pallas kernel.
+
+The paper's Alg. 6 is an AVX2 sequence over ``B = 8`` i32 lanes:
+
+    mask   = cmpgt(l_u, l_v)            ; labels = blendv(l_u, l_v, mask)
+    probs  = xor(set1(h), X)            ; select = cmpgt(set1(thr), probs)
+    l_v'   = blendv(l_v, labels, select); live   = movemask(and(select, mask))
+
+Re-thought for TPU (DESIGN.md §Hardware-Adaptation): instead of one edge ×
+8 lanes per instruction, a VMEM tile of ``TE`` edges × ``R`` lanes is
+processed per grid step — lane-major batching on the 8×128 VPU. The
+integer ops are the literal analog of the AVX2 sequence: ``xor`` /
+``and`` / ``<`` / ``where``. The irregular gather/scatter of endpoint
+label rows stays in XLA (L2): TPUs have no efficient in-kernel random
+scatter, so the kernel consumes pre-gathered ``l_u``/``l_v`` tiles and
+emits candidate tiles that L2 scatter-mins into the label matrix.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which both the Python
+tests and the Rust PJRT runtime execute. On a real TPU the same
+BlockSpecs express the HBM→VMEM pipeline (see DESIGN.md §Perf for the
+VMEM budget: ``(2 in + 1 out) · TE · R · 4 B`` ≤ 16 MiB at TE=512, R=1024
+⇒ 6 MiB — double-bufferable).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+HASH_MASK = 0x7FFFFFFF
+
+# Default edge-tile height; must divide the (padded) edge count.
+DEFAULT_TE = 256
+
+
+def _veclabel_kernel(lu_ref, lv_ref, h_ref, thr_ref, x_ref, out_ref):
+    """One (TE, R) tile: candidate labels for TE edges × R simulations."""
+    l_u = lu_ref[...]          # [TE, R] i32
+    l_v = lv_ref[...]          # [TE, R] i32
+    h = h_ref[...]             # [TE, 1] i32
+    thr = thr_ref[...]         # [TE, 1] i32
+    x = x_ref[...]             # [1, R]  i32
+    # probs = (X ⊕ h) & 0x7fffffff — the paper's xor+and; 31-bit keeps the
+    # signed compare correct (cf. _mm256_cmpgt_epi32).
+    probs = jnp.bitwise_and(jnp.bitwise_xor(h, x), jnp.int32(HASH_MASK))
+    select = probs < thr                      # cmpgt(w_vec, probs)
+    labels = jnp.minimum(l_u, l_v)            # cmpgt + blendv
+    out_ref[...] = jnp.where(select, labels, l_v)  # blendv(l_v, labels, select)
+
+
+@functools.partial(jax.jit, static_argnames=("te",))
+def veclabel(l_u, l_v, h, thr, x, te: int = DEFAULT_TE):
+    """Pallas VECLABEL over all edges.
+
+    l_u, l_v: [M,R] i32 pre-gathered endpoint label rows
+    h, thr:   [M]   i32 per-edge hash / sampling threshold
+    x:        [R]   i32 per-simulation words
+    →         [M,R] i32 candidate labels (``alive ? min : l_v``)
+
+    ``M`` must be a multiple of ``te`` (callers pad with ``thr = 0``
+    slots, which are inert).
+    """
+    m, r = l_u.shape
+    if m % te != 0:
+        raise ValueError(f"edge count {m} not a multiple of tile height {te}")
+    grid = (m // te,)
+    return pl.pallas_call(
+        _veclabel_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((te, r), lambda i: (i, 0)),   # l_u tile
+            pl.BlockSpec((te, r), lambda i: (i, 0)),   # l_v tile
+            pl.BlockSpec((te, 1), lambda i: (i, 0)),   # h column
+            pl.BlockSpec((te, 1), lambda i: (i, 0)),   # thr column
+            pl.BlockSpec((1, r), lambda i: (0, 0)),    # X row (broadcast)
+        ],
+        out_specs=pl.BlockSpec((te, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, r), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(l_u, l_v, h.reshape(m, 1), thr.reshape(m, 1), x.reshape(1, r))

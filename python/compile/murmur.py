@@ -1,0 +1,99 @@
+"""Determinism contract — Python side.
+
+The fused sampler's integer recipe is implemented twice, once in Rust
+(``rust/src/hash`` + ``rust/src/sampling``) and once here, so the AOT
+artifacts and the native engine make bit-identical sampling decisions:
+
+* ``edge_hash(u, v) = murmur3_x86_32(LE64(min||max), seed=0x9747B28C) & 0x7fffffff``
+* ``threshold(w) = clamp(floor(w * 2^31), 0, 2^31 - 1)``
+* ``xr_word(seed, r) = (splitmix64_mix(seed + (r+1)*PHI) >> 16) & 0x7fffffff``
+* edge alive in sim ``r`` ⟺ ``((X_r ^ h) & 0x7fffffff) < thr``
+
+These run at *build/test* time only (goldens + test-vector generation);
+at run time Rust computes the words and feeds them to the artifacts as
+plain i32 tensors.
+"""
+
+from __future__ import annotations
+
+MASK32 = 0xFFFFFFFF
+MASK64 = 0xFFFFFFFFFFFFFFFF
+HASH_MASK = 0x7FFFFFFF
+EDGE_HASH_SEED = 0x9747B28C
+PHI64 = 0x9E3779B97F4A7C15
+
+
+def _rotl32(x: int, r: int) -> int:
+    x &= MASK32
+    return ((x << r) | (x >> (32 - r))) & MASK32
+
+
+def murmur3_32(key: bytes, seed: int = 0) -> int:
+    """MurmurHash3 x86_32 (Appleby's reference), bit-exact."""
+    c1, c2 = 0xCC9E2D51, 0x1B873593
+    h = seed & MASK32
+    nblocks = len(key) // 4
+    for i in range(nblocks):
+        k = int.from_bytes(key[4 * i : 4 * i + 4], "little")
+        k = (k * c1) & MASK32
+        k = _rotl32(k, 15)
+        k = (k * c2) & MASK32
+        h ^= k
+        h = _rotl32(h, 13)
+        h = (h * 5 + 0xE6546B64) & MASK32
+    tail = key[4 * nblocks :]
+    k = 0
+    if len(tail) >= 3:
+        k ^= tail[2] << 16
+    if len(tail) >= 2:
+        k ^= tail[1] << 8
+    if len(tail) >= 1:
+        k ^= tail[0]
+        k = (k * c1) & MASK32
+        k = _rotl32(k, 15)
+        k = (k * c2) & MASK32
+        h ^= k
+    h ^= len(key)
+    h ^= h >> 16
+    h = (h * 0x85EBCA6B) & MASK32
+    h ^= h >> 13
+    h = (h * 0xC2B2AE35) & MASK32
+    h ^= h >> 16
+    return h
+
+
+def edge_hash(u: int, v: int) -> int:
+    """Direction-oblivious 31-bit edge hash (paper Eq. 1)."""
+    lo, hi = (u, v) if u <= v else (v, u)
+    key = lo.to_bytes(4, "little") + hi.to_bytes(4, "little")
+    return murmur3_32(key, EDGE_HASH_SEED) & HASH_MASK
+
+
+def prob_to_threshold(w: float) -> int:
+    """``floor(w * 2^31)`` clamped to ``[0, 2^31 - 1]`` (i32-safe)."""
+    t = int(w * 2147483648.0)
+    return max(0, min(t, 0x7FFFFFFF))
+
+
+def splitmix64_mix(z: int) -> int:
+    """The stateless SplitMix64 finalizer."""
+    z &= MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return (z ^ (z >> 31)) & MASK64
+
+
+def xr_word(seed: int, r: int) -> int:
+    """Per-simulation random word ``X_r`` (31-bit, non-negative)."""
+    z = (seed + (r + 1) * PHI64) & MASK64
+    return (splitmix64_mix(z) >> 16) & HASH_MASK
+
+
+def xr_stream(seed: int, r_count: int) -> list[int]:
+    """``[X_0 .. X_{R-1}]``."""
+    return [xr_word(seed, r) for r in range(r_count)]
+
+
+def edge_alive(h: int, thr: int, xr: int) -> bool:
+    """The fused sampler's aliveness test."""
+    return ((xr ^ h) & HASH_MASK) < thr

@@ -1,0 +1,8 @@
+"""Make `pytest python/tests/` work from the repository root: the test
+modules import the build-time package as `compile.*`, which lives beside
+this file."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,102 @@
+"""L1 Pallas kernel vs the pure-jnp reference, across hypothesis-generated
+shapes, thresholds and seeds. The kernel runs in interpret mode (CPU); the
+reference is transparent jnp. Bitwise equality is required — both sides
+are pure int32 arithmetic."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import murmur
+from compile.kernels.ref import veclabel_ref, sample_mask
+from compile.kernels.veclabel import veclabel
+
+
+def make_case(rng, m, r, p):
+    l_u = rng.integers(0, 1 << 30, (m, r)).astype(np.int32)
+    l_v = rng.integers(0, 1 << 30, (m, r)).astype(np.int32)
+    h = rng.integers(0, murmur.HASH_MASK, m, endpoint=True).astype(np.uint32).astype(np.int32)
+    thr = np.full(m, murmur.prob_to_threshold(p), dtype=np.int32)
+    x = np.array(murmur.xr_stream(int(rng.integers(0, 2**31)), r), dtype=np.int32)
+    return l_u, l_v, h, thr, x
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize("te,m", [(256, 256), (256, 1024), (128, 896)])
+    @pytest.mark.parametrize("r", [8, 64])
+    @pytest.mark.parametrize("p", [0.0, 0.05, 0.5, 1.0])
+    def test_grid(self, te, m, r, p):
+        rng = np.random.default_rng(m * r + int(p * 100))
+        l_u, l_v, h, thr, x = make_case(rng, m, r, p)
+        got = np.asarray(veclabel(jnp.array(l_u), jnp.array(l_v), jnp.array(h),
+                                  jnp.array(thr), jnp.array(x), te=te))
+        want = np.asarray(veclabel_ref(jnp.array(l_u), jnp.array(l_v), jnp.array(h),
+                                       jnp.array(thr), jnp.array(x)))
+        np.testing.assert_array_equal(got, want)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        mtiles=st.integers(1, 4),
+        r=st.sampled_from([4, 8, 16, 64]),
+        p=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, mtiles, r, p, seed):
+        te = 128
+        m = te * mtiles
+        rng = np.random.default_rng(seed)
+        l_u, l_v, h, thr, x = make_case(rng, m, r, p)
+        got = np.asarray(veclabel(jnp.array(l_u), jnp.array(l_v), jnp.array(h),
+                                  jnp.array(thr), jnp.array(x), te=te))
+        want = np.asarray(veclabel_ref(jnp.array(l_u), jnp.array(l_v), jnp.array(h),
+                                       jnp.array(thr), jnp.array(x)))
+        np.testing.assert_array_equal(got, want)
+
+    def test_non_multiple_tile_rejected(self):
+        rng = np.random.default_rng(1)
+        l_u, l_v, h, thr, x = make_case(rng, 300, 8, 0.5)
+        with pytest.raises(ValueError, match="not a multiple"):
+            veclabel(jnp.array(l_u), jnp.array(l_v), jnp.array(h),
+                     jnp.array(thr), jnp.array(x), te=256)
+
+
+class TestKernelSemantics:
+    """Hand-checkable invariants mirroring rust/src/simd tests."""
+
+    def test_unsampled_lanes_never_change(self):
+        m, r = 256, 8
+        l_u = np.zeros((m, r), np.int32)
+        l_v = np.arange(m * r, dtype=np.int32).reshape(m, r) + 1
+        h = np.full(m, 12345, np.int32)
+        thr = np.zeros(m, np.int32)  # never alive
+        x = np.array(murmur.xr_stream(3, r), np.int32)
+        out = np.asarray(veclabel(jnp.array(l_u), jnp.array(l_v), jnp.array(h),
+                                  jnp.array(thr), jnp.array(x)))
+        np.testing.assert_array_equal(out, l_v)
+
+    def test_all_sampled_takes_min(self):
+        m, r = 256, 8
+        rng = np.random.default_rng(9)
+        l_u = rng.integers(0, 100, (m, r)).astype(np.int32)
+        l_v = rng.integers(0, 100, (m, r)).astype(np.int32)
+        h = rng.integers(0, murmur.HASH_MASK, m).astype(np.int32)
+        thr = np.full(m, 0x7FFFFFFF, np.int32)  # always alive
+        x = np.array(murmur.xr_stream(5, r), np.int32)
+        out = np.asarray(veclabel(jnp.array(l_u), jnp.array(l_v), jnp.array(h),
+                                  jnp.array(thr), jnp.array(x)))
+        np.testing.assert_array_equal(out, np.minimum(l_u, l_v))
+
+    def test_sample_mask_matches_scalar_contract(self):
+        m, r = 64, 16
+        rng = np.random.default_rng(4)
+        h = rng.integers(0, murmur.HASH_MASK, m).astype(np.int32)
+        thr = np.array([murmur.prob_to_threshold(p) for p in rng.uniform(0, 1, m)],
+                       np.int32)
+        x = np.array(murmur.xr_stream(11, r), np.int32)
+        mask = np.asarray(sample_mask(jnp.array(h), jnp.array(thr), jnp.array(x)))
+        for e in range(m):
+            for lane in range(r):
+                want = murmur.edge_alive(int(np.uint32(h[e])), int(thr[e]),
+                                         int(np.uint32(x[lane])))
+                assert mask[e, lane] == want, (e, lane)

@@ -1,0 +1,193 @@
+"""L2 model tests: sweep/fixpoint/marginal-gain semantics on random graphs
+against both the jnp reference and a pure-Python union-find ground truth
+(the same oracle the Rust tests use)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import murmur
+from compile.kernels import ref
+from compile.model import lp_converge, lp_sweep, mg_compute
+
+TE = 128
+
+
+def random_graph(rng, n, m_undirected, p):
+    """Directed-copy edge arrays for a random undirected multigraph-free
+    graph, padded to a multiple of TE with inert (thr=0) slots."""
+    edges = set()
+    while len(edges) < m_undirected:
+        u, v = int(rng.integers(0, n)), int(rng.integers(0, n))
+        if u != v:
+            edges.add((min(u, v), max(u, v)))
+    eu, ev, h, thr = [], [], [], []
+    t = murmur.prob_to_threshold(p)
+    for u, v in sorted(edges):
+        hh = murmur.edge_hash(u, v)
+        for a, b in ((u, v), (v, u)):
+            eu.append(a)
+            ev.append(b)
+            h.append(hh)
+            thr.append(t)
+    m2 = len(eu)
+    pad = (-m2) % TE
+    eu += [0] * pad
+    ev += [0] * pad
+    h += [0] * pad
+    thr += [0] * pad
+    to = lambda a: np.array(a, np.int32)
+    return to(eu), to(ev), to(h), to(thr), sorted(edges)
+
+
+def union_find_labels(n, edges, p, x_words):
+    """Per-lane min-label components over alive edges (ground truth)."""
+    t = murmur.prob_to_threshold(p)
+    out = np.zeros((n, len(x_words)), np.int32)
+    for lane, xr in enumerate(x_words):
+        parent = list(range(n))
+
+        def find(a):
+            while parent[a] != a:
+                parent[a] = parent[parent[a]]
+                a = parent[a]
+            return a
+
+        for u, v in edges:
+            if murmur.edge_alive(murmur.edge_hash(u, v), t, int(xr)):
+                ru, rv = find(u), find(v)
+                if ru != rv:
+                    lo, hi = min(ru, rv), max(ru, rv)
+                    parent[hi] = lo
+        for v in range(n):
+            out[v, lane] = find(v)
+    return out
+
+
+def identity_labels(n, r):
+    return np.broadcast_to(np.arange(n, dtype=np.int32)[:, None], (n, r)).copy()
+
+
+class TestFixpoint:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n=st.integers(4, 40),
+        density=st.floats(0.5, 3.0),
+        p=st.floats(0.05, 0.9),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_converge_matches_union_find(self, n, density, p, seed):
+        rng = np.random.default_rng(seed)
+        m = max(1, int(n * density))
+        eu, ev, h, thr, edges = random_graph(rng, n, m, p)
+        r = 8
+        x = np.array(murmur.xr_stream(seed, r), np.int32)
+        labels = identity_labels(n, r)
+        fin, iters = lp_converge(jnp.array(labels), jnp.array(eu), jnp.array(ev),
+                                 jnp.array(h), jnp.array(thr), jnp.array(x), te=TE)
+        want = union_find_labels(n, edges, p, x)
+        np.testing.assert_array_equal(np.asarray(fin), want)
+        assert int(iters) >= 1
+
+    def test_p1_connected_collapses_to_zero(self):
+        # Ring at p=1: every lane's component is the whole graph.
+        n, r = 32, 8
+        edges = [(i, (i + 1) % n) for i in range(n)]
+        edges = [(min(u, v), max(u, v)) for u, v in edges]
+        eu, ev, h, thr = [], [], [], []
+        t = murmur.prob_to_threshold(1.0)
+        for u, v in edges:
+            hh = murmur.edge_hash(u, v)
+            for a, b in ((u, v), (v, u)):
+                eu.append(a); ev.append(b); h.append(hh); thr.append(t)
+        pad = (-len(eu)) % TE
+        eu += [0] * pad; ev += [0] * pad; h += [0] * pad; thr += [0] * pad
+        x = np.array(murmur.xr_stream(1, r), np.int32)
+        fin, _ = lp_converge(jnp.array(identity_labels(n, r)),
+                             jnp.array(np.array(eu, np.int32)),
+                             jnp.array(np.array(ev, np.int32)),
+                             jnp.array(np.array(h, np.int32)),
+                             jnp.array(np.array(thr, np.int32)),
+                             jnp.array(x), te=TE)
+        assert (np.asarray(fin) == 0).all()
+
+    def test_sweep_is_monotone_nonincreasing(self):
+        rng = np.random.default_rng(3)
+        n = 20
+        eu, ev, h, thr, _ = random_graph(rng, n, 30, 0.5)
+        r = 8
+        x = np.array(murmur.xr_stream(5, r), np.int32)
+        cur = jnp.array(identity_labels(n, r))
+        for _ in range(5):
+            nxt = lp_sweep(cur, jnp.array(eu), jnp.array(ev), jnp.array(h),
+                           jnp.array(thr), jnp.array(x), te=TE)
+            assert (np.asarray(nxt) <= np.asarray(cur)).all()
+            cur = nxt
+
+
+class TestMgCompute:
+    def test_sizes_partition_n(self):
+        rng = np.random.default_rng(8)
+        n, r = 24, 8
+        eu, ev, h, thr, edges = random_graph(rng, n, 30, 0.4)
+        x = np.array(murmur.xr_stream(7, r), np.int32)
+        fin, _ = lp_converge(jnp.array(identity_labels(n, r)), jnp.array(eu),
+                             jnp.array(ev), jnp.array(h), jnp.array(thr),
+                             jnp.array(x), te=TE)
+        sizes, mg = mg_compute(fin, jnp.zeros((n, r), jnp.int32))
+        assert (np.asarray(sizes).sum(axis=0) == n).all()
+        # Uncovered mg equals the lane-sum of own-component sizes.
+        s = np.asarray(sizes)
+        f = np.asarray(fin)
+        want = np.array([
+            sum(s[f[v, lane], lane] for lane in range(r)) for v in range(n)
+        ])
+        np.testing.assert_array_equal(np.asarray(mg), want)
+
+    def test_covered_labels_contribute_zero(self):
+        n, r = 8, 4
+        labels = np.zeros((n, r), np.int32)  # one big component label 0
+        covered = np.zeros((n, r), np.int32)
+        covered[0, :] = 1  # label 0 covered in every lane
+        sizes, mg = mg_compute(jnp.array(labels), jnp.array(covered))
+        assert (np.asarray(mg) == 0).all()
+        assert (np.asarray(sizes)[0] == n).all()
+
+    def test_matches_ref(self):
+        rng = np.random.default_rng(12)
+        n, r = 30, 8
+        labels = np.sort(rng.integers(0, n, (n, r)).astype(np.int32), axis=0)
+        labels = np.minimum(labels, np.arange(n, dtype=np.int32)[:, None])
+        covered = (rng.uniform(0, 1, (n, r)) < 0.3).astype(np.int32)
+        s1, m1 = mg_compute(jnp.array(labels), jnp.array(covered))
+        s2, m2 = ref.mg_compute_ref(jnp.array(labels), jnp.array(covered))
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+        np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+
+class TestPaddingContract:
+    """The Rust runtime's padding rules must be inert (runtime/mod.rs)."""
+
+    def test_padding_vertices_and_edges_are_inert(self):
+        rng = np.random.default_rng(21)
+        n, big_n, r = 12, 32, 8
+        eu, ev, h, thr, edges = random_graph(rng, n, 16, 0.6)
+        x = np.array(murmur.xr_stream(9, r), np.int32)
+        fin_small, _ = lp_converge(jnp.array(identity_labels(n, r)),
+                                   jnp.array(eu), jnp.array(ev), jnp.array(h),
+                                   jnp.array(thr), jnp.array(x), te=TE)
+        # Pad vertices to big_n and edges with an extra inert tile.
+        pad_e = np.zeros(TE, np.int32)
+        fin_big, _ = lp_converge(
+            jnp.array(identity_labels(big_n, r)),
+            jnp.array(np.concatenate([eu, pad_e])),
+            jnp.array(np.concatenate([ev, pad_e])),
+            jnp.array(np.concatenate([h, pad_e])),
+            jnp.array(np.concatenate([thr, pad_e])),
+            jnp.array(x), te=TE)
+        np.testing.assert_array_equal(np.asarray(fin_big)[:n], np.asarray(fin_small))
+        # Padding rows keep identity labels.
+        np.testing.assert_array_equal(
+            np.asarray(fin_big)[n:],
+            identity_labels(big_n, r)[n:])

@@ -1,0 +1,110 @@
+//! Ablation bench (§4.4's speedup-breakdown analysis, extended per
+//! DESIGN.md): isolates each of the paper's three techniques.
+//!
+//! 1. **Fusing** — MIXGREEDY (explicit SAMPLE materialization) vs
+//!    FUSEDSAMPLING (hash sampling, same one-by-one structure).
+//! 2. **Vectorization** — INFUSER-MG with the scalar VECLABEL backend vs
+//!    the AVX2 backend (same algorithm, same schedule).
+//! 3. **Memoization** — the CELF phase's cost: K=1 (no CELF) vs full K
+//!    runtime; plus the count of memoized re-evaluations (the paper's
+//!    "79 vertex visits" style number).
+//! 4. **Schedule** — async frontier (Gauss–Seidel) vs sync sweeps
+//!    (Jacobi, the XLA engine's schedule).
+
+use infuser::algo::fused::{FusedParams, FusedSampling};
+use infuser::algo::infuser::{InfuserMg, InfuserParams};
+use infuser::algo::mixgreedy::{MixGreedy, MixGreedyParams};
+use infuser::algo::Budget;
+use infuser::bench::{ratio_cell, time_it, BenchEnv};
+use infuser::config::DatasetRef;
+use infuser::coordinator::Table;
+use infuser::graph::WeightModel;
+use infuser::labelprop::Mode;
+use infuser::simd::Backend;
+
+fn main() -> infuser::Result<()> {
+    let env = BenchEnv::load();
+    env.banner(
+        "Ablation — fusing / vectorization / memoization / schedule",
+        "fusing alone gives 3-21x (Table 4); the rest comes from batching+memoization",
+    );
+    let datasets: Vec<&str> = env.dataset_ids().into_iter().take(4).collect();
+    // NB: Budget deadlines are absolute — create a fresh one per run.
+    let budget = || Budget::timeout(env.timeout);
+
+    let mut t = Table::new("Ablation — seconds per stage variant");
+    t.header(vec![
+        "dataset".into(),
+        "mixgreedy".into(),
+        "fused".into(),
+        "fusing-gain".into(),
+        "inf-scalar".into(),
+        "inf-avx2".into(),
+        "simd-gain".into(),
+        "inf-K1".into(),
+        "celf-cost".into(),
+        "celf-reevals".into(),
+        "sync/async".into(),
+    ]);
+
+    for id in &datasets {
+        let g = DatasetRef::parse(id)?.load()?.with_weights(WeightModel::Const(0.05), 7);
+        let k = env.k;
+        let r = env.r;
+
+        let (mix, mix_s) = time_it(|| {
+            MixGreedy::new(MixGreedyParams { k, r_count: r, seed: 1 }).run(&g, &budget())
+        });
+        let mix_secs = mix.ok().map(|_| mix_s);
+        let (fus, fus_s) = time_it(|| {
+            FusedSampling::new(FusedParams { k, r_count: r, seed: 1 }).run(&g, &budget())
+        });
+        let fus_secs = fus.ok().map(|_| fus_s);
+
+        let base = InfuserParams { k, r_count: r, seed: 1, threads: env.threads, ..Default::default() };
+        let scalar = InfuserParams { backend: Backend::Scalar, ..base };
+        let (rs, scalar_s) = time_it(|| InfuserMg::new(scalar).run(&g, &budget()));
+        rs?;
+        let avx2_available = Backend::detect() != Backend::Scalar;
+        let (avx2_s, reevals) = if avx2_available {
+            let fast = InfuserParams { backend: Backend::detect(), ..base };
+            let (rf, s) = time_it(|| InfuserMg::new(fast).run(&g, &budget()));
+            let res = rf?;
+            let re = res
+                .counters
+                .iter()
+                .find(|c| c.0 == "celf_reevals")
+                .map(|c| c.1)
+                .unwrap_or(0.0);
+            (Some(s), re)
+        } else {
+            (None, 0.0)
+        };
+
+        let (rk1, k1_s) = time_it(|| InfuserMg::new(base).run_first_seed(&g, &budget()));
+        rk1?;
+        let full_s = avx2_s.unwrap_or(scalar_s);
+
+        let sync = InfuserParams { mode: Mode::Sync, ..base };
+        let (rsync, sync_s) = time_it(|| InfuserMg::new(sync).run(&g, &budget()));
+        rsync?;
+        let async_s = full_s;
+
+        t.row(vec![
+            id.to_string(),
+            mix_secs.map_or("-".into(), |s| format!("{s:.2}")),
+            fus_secs.map_or("-".into(), |s| format!("{s:.2}")),
+            ratio_cell(mix_secs, fus_secs),
+            format!("{scalar_s:.3}"),
+            avx2_s.map_or("n/a".into(), |s| format!("{s:.3}")),
+            ratio_cell(Some(scalar_s), avx2_s),
+            format!("{k1_s:.3}"),
+            format!("{:.0}%", 100.0 * (full_s - k1_s).max(0.0) / full_s),
+            format!("{reevals:.0}"),
+            format!("{:.2}x", sync_s / async_s),
+        ]);
+    }
+    env.emit("ablation", &[&t]);
+    println!("celf-cost = share of full runtime spent adding seeds 2..K (paper: 10-20%)");
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! Estimator-bias analysis (reproduction finding, beyond the paper).
+//!
+//! The paper's Eq. 2 samples edge `{u,v}` in simulation `r` iff
+//! `(X_r ⊕ h(u,v)) < thr`. A bare XOR preserves interval geometry: the set
+//! of hashes alive under a given `X_r` is an *XOR interval* (a union of
+//! aligned blocks), so edges whose hashes share a prefix with `X_r` live
+//! and die together. At constant `p` this leaves only ≈ `1/p` effectively
+//! distinct samples — reachability estimates stop converging with `R` and
+//! sit a few percent above the true σ. The paper never observes this
+//! because its Table 7 rescores all seed sets with an *independent-coin*
+//! oracle (as do we).
+//!
+//! This bench quantifies the effect: σ̂ from (a) classical independent
+//! coins, (b) the paper's fused XOR, (c) the strong-mix extension
+//! (`sampling::edge_alive_mixed`, two extra vector ops), against the
+//! mt19937 oracle, across p and R.
+
+use infuser::algo::{oracle, Budget};
+use infuser::bench::BenchEnv;
+use infuser::coordinator::Table;
+use infuser::gen::{self, GenSpec};
+use infuser::graph::{Graph, WeightModel};
+use infuser::rng::Pcg32;
+use infuser::sampling::{edge_alive, edge_alive_mixed, xr_word};
+
+/// Fused RANDCAS parameterized by the aliveness function.
+fn randcas_with(
+    graph: &Graph,
+    seeds: &[u32],
+    r_count: usize,
+    seed: u64,
+    alive: fn(u32, i32, i32) -> bool,
+) -> f64 {
+    let n = graph.num_vertices();
+    let mut visited = vec![u32::MAX; n];
+    let mut queue: Vec<u32> = Vec::new();
+    let mut total = 0u64;
+    for r in 0..r_count {
+        let xr = xr_word(seed, r);
+        let epoch = r as u32;
+        queue.clear();
+        for &s in seeds {
+            if visited[s as usize] != epoch {
+                visited[s as usize] = epoch;
+                queue.push(s);
+            }
+        }
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            let (a, b) = (
+                graph.xadj[u as usize] as usize,
+                graph.xadj[u as usize + 1] as usize,
+            );
+            for idx in a..b {
+                let v = graph.adj[idx];
+                if visited[v as usize] == epoch {
+                    continue;
+                }
+                if alive(graph.edge_hash[idx], graph.threshold[idx], xr) {
+                    visited[v as usize] = epoch;
+                    queue.push(v);
+                }
+            }
+        }
+        total += queue.len() as u64;
+    }
+    total as f64 / r_count as f64
+}
+
+fn main() -> infuser::Result<()> {
+    let env = BenchEnv::load();
+    env.banner(
+        "Estimator bias — XOR (paper Eq. 2) vs strong-mix vs independent coins",
+        "not in the paper; explains why internal fused estimates sit above the oracle",
+    );
+    let g = gen::generate(&GenSpec::barabasi_albert(2_000, 3, 7));
+    let seeds: Vec<u32> = vec![0, 1, 2, 5, 9, 14];
+
+    let mut t = Table::new("sigma-hat of a fixed seed set, by estimator (oracle = mt19937 independent coins)");
+    t.header(vec![
+        "p".into(),
+        "R".into(),
+        "oracle".into(),
+        "classic".into(),
+        "fused-xor".into(),
+        "xor bias".into(),
+        "fused-mix".into(),
+        "mix bias".into(),
+        "distinct xor samples".into(),
+    ]);
+    for p in [0.01f32, 0.05, 0.1] {
+        let g = g.clone().with_weights(WeightModel::Const(p), 3);
+        let orc = oracle::influence_score(
+            &g,
+            &seeds,
+            &oracle::OracleParams { r_count: 20_000, seed: 0xBEEF, threads: env.threads },
+        );
+        for r in [512usize, 8192] {
+            let mut rng = Pcg32::seeded(11, 4);
+            let classic =
+                infuser::algo::mixgreedy::randcas(&g, &seeds, r, &mut rng, &Budget::unlimited())?;
+            let fx = randcas_with(&g, &seeds, r, 0x0DD, edge_alive);
+            let fm = randcas_with(&g, &seeds, r, 0x0DD, edge_alive_mixed);
+            // Count distinct alive-sets over a hash signature of the first
+            // 64 edges' decisions — a cheap proxy for sample diversity.
+            let mut sigs = std::collections::HashSet::new();
+            for ri in 0..r {
+                let xr = xr_word(0x0DD, ri);
+                let mut sig = 0u64;
+                for e in 0..64.min(g.adj.len()) {
+                    sig = (sig << 1) | u64::from(edge_alive(g.edge_hash[e], g.threshold[e], xr));
+                }
+                sigs.insert(sig);
+            }
+            t.row(vec![
+                format!("{p}"),
+                r.to_string(),
+                format!("{orc:.2}"),
+                format!("{classic:.2}"),
+                format!("{fx:.2}"),
+                format!("{:+.1}%", 100.0 * (fx - orc) / orc),
+                format!("{fm:.2}"),
+                format!("{:+.1}%", 100.0 * (fm - orc) / orc),
+                sigs.len().to_string(),
+            ]);
+        }
+    }
+    env.emit("estimator_bias", &[&t]);
+    println!("distinct-xor-samples ~ 1/p regardless of R — the XOR interval effect;");
+    println!("the mix column restores convergence at the cost of 2 extra vector ops.");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Fig. 5: speedup of INFUSER-MG over IMM(ε=0.13) per dataset × setting —
+//! the ratio series derived from the Table 5 measurement grid.
+//!
+//! Paper shape: speedups between 2.3× and 173.8×, larger on the denser
+//! settings (IMM's RR sets blow up with p while INFUSER-MG's cost is flat
+//! in sample density).
+
+use infuser::bench::BenchEnv;
+use infuser::config::{AlgoSpec, DatasetRef, ExperimentConfig};
+use infuser::coordinator::{Runner, Table};
+
+fn main() -> infuser::Result<()> {
+    let env = BenchEnv::load();
+    env.banner(
+        "Fig. 5 — INFUSER-MG speedup over IMM(eps=0.13)",
+        "2.3x - 173.8x across datasets x settings",
+    );
+    let cfg = ExperimentConfig {
+        datasets: env
+            .dataset_ids()
+            .iter()
+            .map(|id| DatasetRef::parse(id))
+            .collect::<infuser::Result<_>>()?,
+        settings: ExperimentConfig::paper_settings(),
+        algos: vec![AlgoSpec::Imm { epsilon: 0.13 }, AlgoSpec::InfuserMg],
+        ..env.base_config()
+    };
+    let runner = Runner::new(cfg);
+    let cells = runner.run_grid()?;
+
+    let settings = ["p=0.01", "p=0.1", "U[0,0.1]", "N(0.05,0.025)"];
+    let mut t = Table::new("Fig. 5 — speedup (IMM(e=0.13) time / Infuser-MG time)");
+    let mut header = vec!["dataset".to_string()];
+    header.extend(settings.iter().map(|s| s.to_string()));
+    t.header(header);
+    let (mut lo, mut hi) = (f64::INFINITY, 0.0f64);
+    for d in env.dataset_ids() {
+        let mut row = vec![d.to_string()];
+        for s in settings {
+            let secs = |algo: &str| {
+                cells
+                    .iter()
+                    .find(|c| c.dataset == d && c.algo == algo && c.setting == s)
+                    .and_then(|c| c.outcome.secs())
+            };
+            match (secs("IMM(e=0.13)"), secs("Infuser-MG")) {
+                (Some(imm), Some(inf)) if inf > 0.0 => {
+                    let sp = imm / inf;
+                    lo = lo.min(sp);
+                    hi = hi.max(sp);
+                    row.push(format!("{sp:.1}x"));
+                }
+                _ => row.push("-".into()),
+            }
+        }
+        t.row(row);
+    }
+    env.emit("fig5_speedup", &[&t]);
+    if hi > 0.0 {
+        println!("speedup range: {lo:.1}x - {hi:.1}x  (paper: 2.3x - 173.8x)");
+    }
+    Ok(())
+}

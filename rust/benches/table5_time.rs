@@ -1,0 +1,38 @@
+//! Table 5: execution times of IMM(ε=0.13), IMM(ε=0.5) and INFUSER-MG
+//! across the paper's four weight settings (p=0.01, p=0.1, N(0.05,0.025),
+//! U[0,0.1]).
+//!
+//! Paper shape: INFUSER-MG is 2.3–173.8× faster than IMM(ε=0.13) and
+//! competitive with (usually faster than) IMM(ε=0.5) on the denser
+//! settings; IMM(ε=0.13) dies (time/memory) on the largest graphs.
+
+use infuser::bench::BenchEnv;
+use infuser::config::{AlgoSpec, DatasetRef, ExperimentConfig};
+use infuser::coordinator::{render_grid, Runner};
+
+fn main() -> infuser::Result<()> {
+    let env = BenchEnv::load();
+    env.banner(
+        "Table 5 — execution time vs state-of-the-art, 4 weight settings",
+        "INFUSER-MG 2.3-173.8x faster than IMM(eps=0.13)",
+    );
+    let cfg = ExperimentConfig {
+        datasets: env
+            .dataset_ids()
+            .iter()
+            .map(|id| DatasetRef::parse(id))
+            .collect::<infuser::Result<_>>()?,
+        settings: ExperimentConfig::paper_settings(),
+        algos: vec![
+            AlgoSpec::Imm { epsilon: 0.13 },
+            AlgoSpec::Imm { epsilon: 0.5 },
+            AlgoSpec::InfuserMg,
+        ],
+        ..env.base_config()
+    };
+    let runner = Runner::new(cfg);
+    let cells = runner.run_grid()?;
+    let t = render_grid(&cells, "Table 5 — execution time (s)", |o| o.time_cell());
+    env.emit("table5_time", &[&t]);
+    Ok(())
+}

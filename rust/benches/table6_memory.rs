@@ -1,0 +1,59 @@
+//! Table 6: memory use of IMM(ε=0.13), IMM(ε=0.5) and INFUSER-MG across
+//! the four weight settings.
+//!
+//! Paper shape: IMM's memory grows with smaller ε (more RR sets) **and**
+//! with denser samples (larger p ⇒ bigger RR sets; ε=0.13 OOMs on the
+//! biggest graphs), while INFUSER-MG's footprint is *flat across p* —
+//! fusing never materializes samples; the label matrix depends only on
+//! (n, R). An explicit per-setting flatness check is printed.
+
+use infuser::bench::BenchEnv;
+use infuser::config::{AlgoSpec, DatasetRef, ExperimentConfig};
+use infuser::coordinator::{render_grid, Outcome, Runner};
+
+fn main() -> infuser::Result<()> {
+    let env = BenchEnv::load();
+    env.banner(
+        "Table 6 — memory vs state-of-the-art, 4 weight settings",
+        "IMM grows with p and 1/eps (OOM at eps=0.13 on the largest); INFUSER flat in p",
+    );
+    let cfg = ExperimentConfig {
+        datasets: env
+            .dataset_ids()
+            .iter()
+            .map(|id| DatasetRef::parse(id))
+            .collect::<infuser::Result<_>>()?,
+        settings: ExperimentConfig::paper_settings(),
+        algos: vec![
+            AlgoSpec::Imm { epsilon: 0.13 },
+            AlgoSpec::Imm { epsilon: 0.5 },
+            AlgoSpec::InfuserMg,
+        ],
+        ..env.base_config()
+    };
+    let runner = Runner::new(cfg);
+    let cells = runner.run_grid()?;
+    let t = render_grid(&cells, "Table 6 — tracked memory (GB)", |o| o.mem_cell());
+    env.emit("table6_memory", &[&t]);
+
+    // Flatness / growth checks.
+    println!("per-dataset memory ratios (p=0.1 / p=0.01):");
+    for d in env.dataset_ids() {
+        let bytes = |algo: &str, setting: &str| {
+            cells
+                .iter()
+                .find(|c| c.dataset == d && c.algo == algo && c.setting == setting)
+                .and_then(|c| match &c.outcome {
+                    Outcome::Done { bytes, .. } => Some(*bytes as f64),
+                    _ => None,
+                })
+        };
+        let imm = infuser::bench::ratio_cell(bytes("IMM(e=0.5)", "p=0.1"), bytes("IMM(e=0.5)", "p=0.01"));
+        let inf = infuser::bench::ratio_cell(
+            bytes("Infuser-MG", "p=0.1"),
+            bytes("Infuser-MG", "p=0.01"),
+        );
+        println!("  {d:<16} IMM(e=0.5) {imm:>8}   Infuser-MG {inf:>8}  (paper: IMM grows, Infuser 1.0x)");
+    }
+    Ok(())
+}

@@ -1,0 +1,273 @@
+//! FUSEDSAMPLING — the paper's first ablation variant (§4.3): MIXGREEDY's
+//! structure (one-by-one simulations, CELF with resampling) but with the
+//! hash-based fused sampler replacing explicit subgraph materialization.
+//!
+//! Per simulation `r`, edge aliveness is recomputed on the fly from
+//! `(X_r ⊕ h(u,v)) < thr(w)` — no subgraph is built, no RNG state is
+//! consumed during traversal, and only reached regions are touched. The
+//! paper credits fusing alone with the 3–21× speedups of Table 4's
+//! FUSEDSAMPLING column; the remaining orders of magnitude need the
+//! batched vectorization + memoization of [`super::infuser`].
+
+use super::celf::celf_select;
+use super::{Budget, ImResult};
+use crate::graph::Graph;
+use crate::sampling::{edge_alive, xr_word};
+use crate::VertexId;
+
+/// FUSEDSAMPLING parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct FusedParams {
+    /// Seed-set size K.
+    pub k: usize,
+    /// Monte-Carlo simulations per estimate R.
+    pub r_count: usize,
+    /// Run seed (drives the X_r stream — same contract as INFUSER-MG).
+    pub seed: u64,
+}
+
+impl Default for FusedParams {
+    fn default() -> Self {
+        Self { k: 50, r_count: 100, seed: 0 }
+    }
+}
+
+/// The FUSEDSAMPLING variant.
+pub struct FusedSampling {
+    params: FusedParams,
+}
+
+/// Fused RANDCAS: σ(S) over `r_count` simulations, sampling edges by hash
+/// during the BFS (one traversal per simulation, nothing materialized).
+pub fn randcas_fused(
+    graph: &Graph,
+    seeds: &[VertexId],
+    r_count: usize,
+    seed: u64,
+    xr_offset: usize,
+    budget: &Budget,
+) -> Result<f64, super::AlgoError> {
+    let n = graph.num_vertices();
+    let mut visited = vec![u32::MAX; n];
+    let mut queue: Vec<VertexId> = Vec::new();
+    let mut total = 0u64;
+    for r in 0..r_count {
+        if r % 16 == 0 {
+            budget.check()?;
+        }
+        let xr = xr_word(seed, xr_offset + r);
+        let epoch = r as u32;
+        queue.clear();
+        for &s in seeds {
+            if visited[s as usize] != epoch {
+                visited[s as usize] = epoch;
+                queue.push(s);
+            }
+        }
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            let (a, b) = (
+                graph.xadj[u as usize] as usize,
+                graph.xadj[u as usize + 1] as usize,
+            );
+            for idx in a..b {
+                let v = graph.adj[idx];
+                if visited[v as usize] == epoch {
+                    continue;
+                }
+                if edge_alive(graph.edge_hash[idx], graph.threshold[idx], xr) {
+                    visited[v as usize] = epoch;
+                    queue.push(v);
+                }
+            }
+        }
+        total += queue.len() as u64;
+    }
+    Ok(total as f64 / r_count as f64)
+}
+
+/// Per-simulation connected components via fused union-find: the
+/// NEWGREEDY initialization without materializing samples. Returns the
+/// accumulated average component size per vertex.
+fn fused_initial_gains(
+    graph: &Graph,
+    r_count: usize,
+    seed: u64,
+    budget: &Budget,
+) -> Result<Vec<f64>, super::AlgoError> {
+    let n = graph.num_vertices();
+    let mut mg = vec![0f64; n];
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    let mut size: Vec<u32> = vec![1; n];
+
+    fn find(parent: &mut [u32], mut x: u32) -> u32 {
+        while parent[x as usize] != x {
+            parent[x as usize] = parent[parent[x as usize] as usize];
+            x = parent[x as usize];
+        }
+        x
+    }
+
+    for r in 0..r_count {
+        budget.check()?;
+        let xr = xr_word(seed, r);
+        for (p, s) in parent.iter_mut().zip(size.iter_mut()).enumerate() {
+            *s.0 = p as u32;
+            *s.1 = 1;
+        }
+        for u in 0..n as u32 {
+            let (a, b) = (
+                graph.xadj[u as usize] as usize,
+                graph.xadj[u as usize + 1] as usize,
+            );
+            for idx in a..b {
+                let v = graph.adj[idx];
+                if v < u {
+                    continue;
+                }
+                if edge_alive(graph.edge_hash[idx], graph.threshold[idx], xr) {
+                    let (ru, rv) = (find(&mut parent, u), find(&mut parent, v));
+                    if ru != rv {
+                        let (lo, hi) = (ru.min(rv), ru.max(rv));
+                        parent[hi as usize] = lo;
+                        size[lo as usize] += size[hi as usize];
+                    }
+                }
+            }
+        }
+        for v in 0..n as u32 {
+            let root = find(&mut parent, v);
+            mg[v as usize] += f64::from(size[root as usize]);
+        }
+    }
+    for g in mg.iter_mut() {
+        *g /= r_count as f64;
+    }
+    Ok(mg)
+}
+
+impl FusedSampling {
+    /// Create with parameters.
+    pub fn new(params: FusedParams) -> Self {
+        Self { params }
+    }
+
+    /// Run FUSEDSAMPLING: NEWGREEDY init + CELF with fused RANDCAS.
+    pub fn run(&self, graph: &Graph, budget: &Budget) -> crate::Result<ImResult> {
+        let p = self.params;
+        let n = graph.num_vertices();
+        let mg = fused_initial_gains(graph, p.r_count, p.seed, budget)?;
+
+        let current_seeds: std::cell::RefCell<Vec<VertexId>> = std::cell::RefCell::new(Vec::new());
+        let sigma_s = std::cell::Cell::new(0.0f64);
+        let mut reeval_counter = 0usize;
+        let mut err: Option<super::AlgoError> = None;
+        let (seeds, sigma, stats) = celf_select(
+            &mg,
+            p.k,
+            |v, _| {
+                let mut trial = current_seeds.borrow().clone();
+                trial.push(v);
+                // Fresh X_r block per re-evaluation (disjoint offsets) —
+                // mirrors MIXGREEDY consuming fresh randomness per RANDCAS.
+                reeval_counter += 1;
+                let off = p.r_count * reeval_counter;
+                match randcas_fused(graph, &trial, p.r_count, p.seed, off, budget) {
+                    Ok(s) => s - sigma_s.get(),
+                    Err(e) => {
+                        err = Some(e);
+                        f64::NEG_INFINITY
+                    }
+                }
+            },
+            |v, gain| {
+                current_seeds.borrow_mut().push(v);
+                sigma_s.set(sigma_s.get() + gain);
+            },
+            budget,
+        )?;
+        if let Some(e) = err {
+            return Err(e.into());
+        }
+
+        Ok(ImResult {
+            seeds,
+            influence: sigma,
+            // Fused: no sample materialization — the visited epochs and the
+            // union-find arrays are the footprint (Table 4's tiny numbers).
+            tracked_bytes: (n * (4 + 4 + 4 + 8)) as u64,
+            counters: vec![("celf_reevals", stats.reevals as f64)],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, WeightModel};
+
+    fn star(n: usize, p: f32) -> Graph {
+        let mut b = GraphBuilder::new(n);
+        for v in 1..n as u32 {
+            b.edge(0, v);
+        }
+        b.build().with_weights(WeightModel::Const(p), 1)
+    }
+
+    #[test]
+    fn randcas_fused_exact_at_p1() {
+        let g = star(12, 1.0);
+        let s = randcas_fused(&g, &[3], 8, 7, 0, &Budget::unlimited()).unwrap();
+        assert!((s - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn randcas_fused_seed_only_at_p0() {
+        let g = star(12, 0.0);
+        let s = randcas_fused(&g, &[3, 5], 8, 7, 0, &Budget::unlimited()).unwrap();
+        assert!((s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn initial_gains_match_propagation_estimates() {
+        // fused UF init must equal labelprop-derived initial gains for the
+        // same seed (identical sampling contract).
+        let g = crate::gen::generate(&crate::gen::GenSpec::erdos_renyi(80, 200, 3))
+            .with_weights(WeightModel::Const(0.25), 5);
+        let mg_uf = fused_initial_gains(&g, 16, 42, &Budget::unlimited()).unwrap();
+        let res = crate::labelprop::propagate(
+            &g,
+            &crate::labelprop::PropagateOpts {
+                r_count: 16,
+                seed: 42,
+                threads: 2,
+                ..Default::default()
+            },
+        );
+        let sizes = crate::labelprop::component_sizes(&res.labels);
+        let mg_lp = crate::labelprop::initial_gains(
+            &res.labels,
+            &sizes,
+            &crate::util::ThreadPool::new(2),
+        );
+        for v in 0..80 {
+            assert!(
+                (mg_uf[v] - mg_lp[v]).abs() < 1e-9,
+                "v={v}: uf={} lp={}",
+                mg_uf[v],
+                mg_lp[v]
+            );
+        }
+    }
+
+    #[test]
+    fn hub_first_on_star() {
+        let g = star(24, 0.5);
+        let res = FusedSampling::new(FusedParams { k: 2, r_count: 128, seed: 3 })
+            .run(&g, &Budget::unlimited())
+            .unwrap();
+        assert_eq!(res.seeds[0], 0);
+    }
+}

@@ -1,0 +1,404 @@
+//! IMM — the state-of-the-art reverse-influence-sampling baseline the
+//! paper compares against (§4.5; Tang et al. 2015, as implemented for
+//! multicore by Minutoli et al. 2019).
+//!
+//! IMM estimates influence from **random reverse-reachable (RR) sets**: a
+//! uniformly random root `v` plus every vertex that reaches `v` in a
+//! sampled subgraph. The probability a seed set covers a random RR set is
+//! `σ(S)/n`, so max-coverage over enough RR sets maximizes influence with
+//! a `(1 − 1/e − ε)` guarantee. The sampling phase doubles the target
+//! count each round until a martingale lower bound on OPT is confident
+//! (`ε' = √2·ε`), then the selection phase greedily covers.
+//!
+//! On undirected graphs reverse reachability equals forward reachability,
+//! so an RR set is one sampled BFS from the root — the same primitive as
+//! RANDCAS, but *stored*: IMM's memory is the total RR footprint, which is
+//! why its usage grows with edge probability `p` and with `1/ε` (Table 6)
+//! while INFUSER-MG's stays flat.
+
+use super::{Budget, ImResult};
+use crate::graph::Graph;
+use crate::rng::{Pcg32, Rng32};
+use crate::util::ThreadPool;
+use crate::VertexId;
+
+/// IMM parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ImmParams {
+    /// Seed-set size K.
+    pub k: usize,
+    /// Approximation knob ε (paper variants: 0.13 and 0.5).
+    pub epsilon: f64,
+    /// Failure-probability exponent ℓ (guarantee holds w.p. 1 − n^−ℓ).
+    pub ell: f64,
+    /// Run seed.
+    pub seed: u64,
+    /// Worker threads for RR-set generation.
+    pub threads: usize,
+    /// Optional cap on tracked RR bytes (models the paper's OOM "-" cells).
+    pub memory_limit: Option<u64>,
+}
+
+impl Default for ImmParams {
+    fn default() -> Self {
+        Self {
+            k: 50,
+            epsilon: 0.13,
+            ell: 1.0,
+            seed: 0,
+            threads: 1,
+            memory_limit: None,
+        }
+    }
+}
+
+/// The IMM algorithm.
+pub struct Imm {
+    params: ImmParams,
+}
+
+/// A growable pool of RR sets with the inverted index used by coverage.
+struct RrPool {
+    /// Flattened RR sets (`sets[i]` = vertices of RR set `i`).
+    sets: Vec<Vec<VertexId>>,
+    /// Total stored vertex entries (memory tracking).
+    entries: u64,
+}
+
+impl RrPool {
+    fn new() -> Self {
+        Self { sets: Vec::new(), entries: 0 }
+    }
+
+    fn len(&self) -> usize {
+        self.sets.len()
+    }
+
+    fn bytes(&self) -> u64 {
+        // vertex entries + per-set Vec headers + inverted index (built at
+        // selection: one u32 per entry again).
+        self.entries * 8 + (self.sets.len() * 24) as u64
+    }
+}
+
+/// One RR set: sampled BFS from a uniform root (undirected ⇒ reverse =
+/// forward). `visited` is an epoch array shared across calls per worker.
+fn rr_set(
+    graph: &Graph,
+    root: VertexId,
+    rng: &mut Pcg32,
+    visited: &mut [u32],
+    epoch: u32,
+    queue: &mut Vec<VertexId>,
+) -> Vec<VertexId> {
+    queue.clear();
+    visited[root as usize] = epoch;
+    queue.push(root);
+    let mut head = 0;
+    while head < queue.len() {
+        let u = queue[head];
+        head += 1;
+        let (a, b) = (
+            graph.xadj[u as usize] as usize,
+            graph.xadj[u as usize + 1] as usize,
+        );
+        for idx in a..b {
+            let v = graph.adj[idx];
+            if visited[v as usize] == epoch {
+                continue;
+            }
+            if rng.next_f64() <= f64::from(graph.weights[idx]) {
+                visited[v as usize] = epoch;
+                queue.push(v);
+            }
+        }
+    }
+    queue.clone()
+}
+
+/// `log C(n, k)` via the log-gamma-free telescoping sum.
+fn log_binom(n: usize, k: usize) -> f64 {
+    let k = k.min(n);
+    (0..k).map(|i| (((n - i) as f64) / ((i + 1) as f64)).ln()).sum()
+}
+
+/// Greedy max-coverage over the RR pool: pick `k` vertices covering the
+/// most sets (lazy-greedy). Returns `(seeds, covered_fraction)`.
+fn max_coverage(pool: &RrPool, n: usize, k: usize) -> (Vec<VertexId>, f64) {
+    // Inverted index: vertex → RR ids containing it.
+    let mut deg = vec![0u32; n];
+    for set in &pool.sets {
+        for &v in set {
+            deg[v as usize] += 1;
+        }
+    }
+    let mut offsets = vec![0usize; n + 1];
+    for v in 0..n {
+        offsets[v + 1] = offsets[v] + deg[v] as usize;
+    }
+    let mut index = vec![0u32; offsets[n]];
+    let mut cursor = offsets.clone();
+    for (i, set) in pool.sets.iter().enumerate() {
+        for &v in set {
+            index[cursor[v as usize]] = i as u32;
+            cursor[v as usize] += 1;
+        }
+    }
+
+    let covered = std::cell::RefCell::new(vec![false; pool.len()]);
+    let covered_count = std::cell::Cell::new(0usize);
+    let gains: Vec<f64> = deg.iter().map(|&d| f64::from(d)).collect();
+    let mut seeds = Vec::with_capacity(k);
+    // Lazy greedy via the shared CELF queue (coverage is submodular).
+    let budget = Budget::unlimited();
+    let res = super::celf::celf_select(
+        &gains,
+        k,
+        |v, _| {
+            let cov = covered.borrow();
+            index[offsets[v as usize]..offsets[v as usize + 1]]
+                .iter()
+                .filter(|&&i| !cov[i as usize])
+                .count() as f64
+        },
+        |v, _| {
+            let mut cov = covered.borrow_mut();
+            for &i in &index[offsets[v as usize]..offsets[v as usize + 1]] {
+                if !cov[i as usize] {
+                    cov[i as usize] = true;
+                    covered_count.set(covered_count.get() + 1);
+                }
+            }
+            seeds.push(v);
+        },
+        &budget,
+    );
+    let _ = res; // infallible with unlimited budget
+    let frac = if pool.len() == 0 {
+        0.0
+    } else {
+        covered_count.get() as f64 / pool.len() as f64
+    };
+    (seeds, frac)
+}
+
+impl Imm {
+    /// Create with parameters.
+    pub fn new(params: ImmParams) -> Self {
+        Self { params }
+    }
+
+    /// Generate RR sets in parallel until the pool holds `target` sets.
+    fn extend_pool(
+        &self,
+        graph: &Graph,
+        pool_sets: &mut RrPool,
+        target: usize,
+        round: &mut u64,
+        budget: &Budget,
+    ) -> crate::Result<()> {
+        let p = self.params;
+        let n = graph.num_vertices();
+        let need = target.saturating_sub(pool_sets.len());
+        if need == 0 {
+            return Ok(());
+        }
+        budget.check()?;
+        let tp = ThreadPool::new(p.threads);
+        let base = *round;
+        *round += need as u64;
+        // Each RR set gets its own deterministic RNG stream ⇒ results are
+        // independent of τ and of batching.
+        let per_thread = need.div_ceil(tp.threads());
+        let batches: Vec<Vec<Vec<VertexId>>> = tp.map(tp.threads(), |t| {
+            let lo = t * per_thread;
+            let hi = ((t + 1) * per_thread).min(need);
+            let mut visited = vec![u32::MAX; n];
+            let mut queue = Vec::new();
+            let mut out = Vec::with_capacity(hi.saturating_sub(lo));
+            for i in lo..hi {
+                let id = base + i as u64;
+                let mut rng = Pcg32::from_seed_stream(p.seed, id.wrapping_mul(2).wrapping_add(1));
+                let root = rng.below(n as u32);
+                out.push(rr_set(graph, root, &mut rng, &mut visited, i as u32, &mut queue));
+            }
+            out
+        });
+        for batch in batches {
+            for set in batch {
+                pool_sets.entries += set.len() as u64;
+                pool_sets.sets.push(set);
+            }
+            if let Some(limit) = p.memory_limit {
+                if pool_sets.bytes() > limit {
+                    return Err(super::AlgoError::OutOfMemory(pool_sets.bytes()).into());
+                }
+            }
+        }
+        budget.check()?;
+        Ok(())
+    }
+
+    /// Run IMM: sampling phase (θ estimation) + node-selection phase.
+    pub fn run(&self, graph: &Graph, budget: &Budget) -> crate::Result<ImResult> {
+        let p = self.params;
+        let n = graph.num_vertices();
+        anyhow::ensure!(n >= 2, "IMM needs at least 2 vertices");
+        let nf = n as f64;
+        let k = p.k.min(n);
+        // ℓ' adjustment (Tang et al. §4.3) keeps the 1 − n^−ℓ guarantee
+        // after the union bound over the log₂ n sampling rounds.
+        let ell = p.ell * (1.0 + 2f64.ln() / nf.ln());
+        let eps_p = (2.0f64).sqrt() * p.epsilon;
+        let log_nk = log_binom(n, k);
+        // λ' for the sampling phase (Tang et al. Eq. 9).
+        let lambda_p = (2.0 + 2.0 * eps_p / 3.0)
+            * (log_nk + ell * nf.ln() + (nf.log2()).max(1.0).ln())
+            * nf
+            / (eps_p * eps_p);
+        // λ* for the final θ (Tang et al. Eq. 6).
+        let alpha = (ell * nf.ln() + 2f64.ln()).sqrt();
+        let beta = ((1.0 - 1.0 / std::f64::consts::E) * (log_nk + ell * nf.ln() + 2f64.ln())).sqrt();
+        let lambda_star = 2.0 * nf * (((1.0 - 1.0 / std::f64::consts::E) * alpha + beta)
+            / p.epsilon)
+            .powi(2);
+
+        let mut pool = RrPool::new();
+        let mut round_counter = 0u64;
+        let mut lb = 1.0f64;
+        let max_rounds = (nf.log2() as usize).max(1);
+        for i in 1..=max_rounds {
+            let x = nf / 2f64.powi(i as i32);
+            let theta_i = (lambda_p / x).ceil() as usize;
+            self.extend_pool(graph, &mut pool, theta_i, &mut round_counter, budget)?;
+            let (_, frac) = max_coverage(&pool, n, k);
+            if nf * frac >= (1.0 + eps_p) * x {
+                lb = nf * frac / (1.0 + eps_p);
+                break;
+            }
+        }
+        let theta = (lambda_star / lb).ceil() as usize;
+        self.extend_pool(graph, &mut pool, theta, &mut round_counter, budget)?;
+
+        let (seeds, frac) = max_coverage(&pool, n, k);
+        Ok(ImResult {
+            seeds,
+            influence: frac * nf,
+            tracked_bytes: pool.bytes() + (pool.entries * 4) / 2, // + inverted index
+            counters: vec![
+                ("rr_sets", pool.len() as f64),
+                ("rr_entries", pool.entries as f64),
+                ("theta", theta as f64),
+            ],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::GenSpec;
+    use crate::graph::{GraphBuilder, WeightModel};
+
+    fn star(n: usize, p: f32) -> Graph {
+        let mut b = GraphBuilder::new(n);
+        for v in 1..n as u32 {
+            b.edge(0, v);
+        }
+        b.build().with_weights(WeightModel::Const(p), 1)
+    }
+
+    #[test]
+    fn log_binom_matches_known_values() {
+        assert!((log_binom(5, 2) - 10f64.ln()).abs() < 1e-12);
+        assert!((log_binom(10, 10) - 1f64.ln()).abs() < 1e-12);
+        assert!((log_binom(52, 5) - 2_598_960f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rr_sets_cover_whole_component_at_p1() {
+        let g = star(10, 1.0);
+        let mut rng = Pcg32::seeded(1, 1);
+        let mut visited = vec![u32::MAX; 10];
+        let mut queue = Vec::new();
+        let set = rr_set(&g, 3, &mut rng, &mut visited, 0, &mut queue);
+        assert_eq!(set.len(), 10);
+    }
+
+    #[test]
+    fn hub_first_on_star() {
+        let g = star(40, 0.3);
+        let res = Imm::new(ImmParams { k: 2, epsilon: 0.3, seed: 4, threads: 2, ..Default::default() })
+            .run(&g, &Budget::unlimited())
+            .unwrap();
+        assert_eq!(res.seeds[0], 0, "hub must dominate coverage");
+    }
+
+    #[test]
+    fn smaller_epsilon_generates_more_rr_sets() {
+        let g = crate::gen::generate(&GenSpec::erdos_renyi(200, 600, 2))
+            .with_weights(WeightModel::Const(0.05), 3);
+        let loose = Imm::new(ImmParams { k: 5, epsilon: 0.5, seed: 1, ..Default::default() })
+            .run(&g, &Budget::unlimited())
+            .unwrap();
+        let tight = Imm::new(ImmParams { k: 5, epsilon: 0.13, seed: 1, ..Default::default() })
+            .run(&g, &Budget::unlimited())
+            .unwrap();
+        let rr = |r: &ImResult| r.counters.iter().find(|c| c.0 == "rr_sets").unwrap().1;
+        assert!(
+            rr(&tight) > rr(&loose) * 2.0,
+            "ε=0.13 needs far more samples: {} vs {}",
+            rr(&tight),
+            rr(&loose)
+        );
+        assert!(tight.tracked_bytes > loose.tracked_bytes);
+    }
+
+    #[test]
+    fn memory_limit_trips_oom() {
+        let g = crate::gen::generate(&GenSpec::erdos_renyi(300, 1200, 7))
+            .with_weights(WeightModel::Const(0.3), 1);
+        let out = Imm::new(ImmParams {
+            k: 10,
+            epsilon: 0.13,
+            seed: 2,
+            memory_limit: Some(10_000),
+            ..Default::default()
+        })
+        .run(&g, &Budget::unlimited());
+        assert!(out.is_err());
+        assert!(super::super::is_oom(&out.unwrap_err()));
+    }
+
+    #[test]
+    fn influence_estimate_tracks_oracle() {
+        // IMM's internal estimate (n · coverage) must be within a few
+        // percent of the mt19937 oracle on a mid-size instance.
+        let g = crate::gen::generate(&GenSpec::barabasi_albert(400, 3, 9))
+            .with_weights(WeightModel::Const(0.1), 4);
+        let res = Imm::new(ImmParams { k: 8, epsilon: 0.2, seed: 6, threads: 2, ..Default::default() })
+            .run(&g, &Budget::unlimited())
+            .unwrap();
+        let oracle = crate::algo::oracle::influence_score(
+            &g,
+            &res.seeds,
+            &crate::algo::oracle::OracleParams { r_count: 4000, seed: 11, threads: 4 },
+        );
+        let rel = (res.influence - oracle).abs() / oracle;
+        assert!(rel < 0.1, "imm={} oracle={oracle} rel={rel}", res.influence);
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let g = crate::gen::generate(&GenSpec::erdos_renyi(150, 450, 5))
+            .with_weights(WeightModel::Const(0.1), 8);
+        let mk = |t: usize| {
+            Imm::new(ImmParams { k: 4, epsilon: 0.4, seed: 12, threads: t, ..Default::default() })
+                .run(&g, &Budget::unlimited())
+                .unwrap()
+        };
+        let a = mk(1);
+        let b = mk(4);
+        assert_eq!(a.seeds, b.seeds, "per-RR RNG streams make τ irrelevant");
+    }
+}

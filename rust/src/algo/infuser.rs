@@ -1,0 +1,391 @@
+//! INFUSER-MG (paper Alg. 7) — the proposed algorithm: fused hash-based
+//! sampling + vectorized batched label propagation (NEWGREEDYSTEP-VEC,
+//! Alg. 5) + memoized CELF (§3.3).
+//!
+//! The `n × R` component-label matrix produced by the propagation stage is
+//! *retained*; the marginal gain of `u` against seeds `S` is then a pure
+//! table lookup
+//!
+//! ```text
+//! mg_u = (1/R) · Σ_r size_r(l_u[r]) · [l_u[r] ∉ {l_s[r] : s ∈ S}]
+//! ```
+//!
+//! so the CELF phase performs **no further sampling or traversal** — the
+//! reason the paper's K=50 column is barely slower than K=1 (Table 4,
+//! "adding the next 49 seeds only takes 10%–20% of the overall execution
+//! time").
+//!
+//! The propagation stage can run on either execution engine
+//! ([`crate::engine`]): the native Rust frontier engine (default) or the
+//! AOT-compiled XLA pipeline loaded via PJRT — both honor the same
+//! determinism contract, so seeds are identical.
+
+use super::celf::celf_select;
+use super::{Budget, ImResult};
+use crate::engine::Engine;
+use crate::graph::Graph;
+use crate::labelprop::{self, Labels, Mode, PropagateOpts};
+use crate::simd::Backend;
+use crate::util::ThreadPool;
+
+/// INFUSER-MG parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct InfuserParams {
+    /// Seed-set size K.
+    pub k: usize,
+    /// Monte-Carlo simulations R (label-matrix lanes).
+    pub r_count: usize,
+    /// Run seed (drives the `X_r` stream).
+    pub seed: u64,
+    /// Worker threads τ.
+    pub threads: usize,
+    /// VECLABEL backend (scalar / AVX2).
+    pub backend: Backend,
+    /// Propagation schedule (async Gauss–Seidel / sync Jacobi).
+    pub mode: Mode,
+}
+
+impl Default for InfuserParams {
+    fn default() -> Self {
+        Self {
+            k: 50,
+            r_count: 256,
+            seed: 0,
+            threads: 1,
+            backend: Backend::detect(),
+            mode: Mode::Async,
+        }
+    }
+}
+
+/// The INFUSER-MG algorithm.
+pub struct InfuserMg {
+    params: InfuserParams,
+}
+
+/// The memoized state NEWGREEDYSTEP-VEC hands to the CELF phase: labels,
+/// per-(label, lane) component sizes, and the covered-label bitmap that
+/// grows as seeds are committed. This is the paper's "high memory usage"
+/// trade (§4.4) — two `n × R` i32 arrays plus an `n × R` bit array.
+pub struct Memo {
+    /// Fixpoint `n × R` component-label matrix.
+    pub labels: Labels,
+    /// `sizes[l * R + r]` = size of the component labelled `l` in lane `r`
+    /// (zero if `l` names no component — space traded for O(1) access).
+    pub sizes: Vec<i32>,
+    /// `covered[l * R + r]` = 1 iff some seed's lane-`r` component is `l`.
+    covered: Vec<u8>,
+}
+
+impl Memo {
+    /// Build from a propagation fixpoint.
+    pub fn new(labels: Labels) -> Self {
+        let sizes = labelprop::component_sizes(&labels);
+        let covered = vec![0u8; labels.n * labels.r_count];
+        Self { labels, sizes, covered }
+    }
+
+    /// Memoized marginal gain of `v` given the committed coverage
+    /// (Alg. 7 line 16), optionally parallelized over lanes.
+    pub fn marginal_gain(&self, v: usize, pool: &ThreadPool) -> f64 {
+        let r = self.labels.r_count;
+        let row = self.labels.row(v);
+        if r < 4096 || pool.threads() == 1 {
+            let mut acc = 0i64;
+            for (lane, &l) in row.iter().enumerate() {
+                let idx = l as usize * r + lane;
+                if self.covered[idx] == 0 {
+                    acc += i64::from(self.sizes[idx]);
+                }
+            }
+            return acc as f64 / r as f64;
+        }
+        // Large-R path: parallel reduce over lane blocks (Alg. 7 line 15).
+        let chunk = r.div_ceil(pool.threads());
+        let partials = pool.map(pool.threads(), |t| {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(r);
+            let mut acc = 0i64;
+            for lane in lo..hi {
+                let idx = row[lane] as usize * r + lane;
+                if self.covered[idx] == 0 {
+                    acc += i64::from(self.sizes[idx]);
+                }
+            }
+            acc
+        });
+        partials.into_iter().sum::<i64>() as f64 / r as f64
+    }
+
+    /// Commit `v` as a seed: mark its component label covered in every lane
+    /// (Alg. 7 line 11 — "append `l_u` to `R_{G'}(S)`").
+    pub fn commit(&mut self, v: usize) {
+        let r = self.labels.r_count;
+        for (lane, &l) in self.labels.row(v).iter().enumerate() {
+            self.covered[l as usize * r + lane] = 1;
+        }
+    }
+
+    /// Tracked heap bytes of the memoized structures.
+    pub fn bytes(&self) -> u64 {
+        self.labels.bytes() + (self.sizes.len() * 4 + self.covered.len()) as u64
+    }
+
+    /// Initial (empty-seed-set) gains for every vertex, in parallel.
+    pub fn initial_gains(&self, pool: &ThreadPool) -> Vec<f64> {
+        labelprop::initial_gains(&self.labels, &self.sizes, pool)
+    }
+
+    /// Exact memoized σ(S) for an arbitrary seed set (used by tests to
+    /// cross-check against RANDCAS over the same samples): average over
+    /// lanes of the union of the seeds' component sizes.
+    pub fn sigma_of(&self, seeds: &[u32]) -> f64 {
+        let r = self.labels.r_count;
+        let mut seen: Vec<u8> = vec![0; self.labels.n * r];
+        let mut total = 0i64;
+        for &s in seeds {
+            for (lane, &l) in self.labels.row(s as usize).iter().enumerate() {
+                let idx = l as usize * r + lane;
+                if seen[idx] == 0 {
+                    seen[idx] = 1;
+                    total += i64::from(self.sizes[idx]);
+                }
+            }
+        }
+        total as f64 / r as f64
+    }
+}
+
+impl InfuserMg {
+    /// Create with parameters.
+    pub fn new(params: InfuserParams) -> Self {
+        Self { params }
+    }
+
+    /// Parameters (for logs).
+    pub fn params(&self) -> &InfuserParams {
+        &self.params
+    }
+
+    /// Run INFUSER-MG with the native propagation engine.
+    pub fn run(&self, graph: &Graph, budget: &Budget) -> crate::Result<ImResult> {
+        let engine = crate::engine::NativeEngine;
+        self.run_with_engine(graph, &engine, budget)
+    }
+
+    /// Run INFUSER-MG with an explicit propagation [`Engine`] (native or
+    /// the PJRT-loaded XLA pipeline — Alg. 7 is engine-agnostic).
+    pub fn run_with_engine(
+        &self,
+        graph: &Graph,
+        engine: &dyn Engine,
+        budget: &Budget,
+    ) -> crate::Result<ImResult> {
+        let p = self.params;
+        let pool = ThreadPool::new(p.threads);
+
+        // ---- Stage 1: NEWGREEDYSTEP-VEC (Alg. 7 line 1).
+        let opts = PropagateOpts {
+            r_count: p.r_count,
+            seed: p.seed,
+            threads: p.threads,
+            backend: p.backend,
+            mode: p.mode,
+        };
+        let prop = engine.propagate(graph, &opts)?;
+        budget.check()?;
+        let iterations = prop.iterations;
+        let edge_visits = prop.edge_visits;
+        let mut memo = Memo::new(prop.labels);
+        let mg0 = memo.initial_gains(&pool);
+        budget.check()?;
+        let tracked = memo.bytes() + (mg0.len() * 8) as u64;
+
+        // ---- Stage 2: memoized CELF (Alg. 7 lines 2–18).
+        // `reeval` borrows memo immutably, `commit` mutably; thread the
+        // state through a RefCell-free split by deferring commits via index.
+        let memo_cell = std::cell::RefCell::new(&mut memo);
+        let (seeds, sigma, stats) = celf_select(
+            &mg0,
+            p.k,
+            |v, _| memo_cell.borrow().marginal_gain(v as usize, &pool),
+            |v, _| memo_cell.borrow_mut().commit(v as usize),
+            budget,
+        )?;
+
+        Ok(ImResult {
+            seeds,
+            influence: sigma,
+            tracked_bytes: tracked,
+            counters: vec![
+                ("celf_reevals", stats.reevals as f64),
+                ("lp_iterations", iterations as f64),
+                ("edge_visits", edge_visits as f64),
+            ],
+        })
+    }
+
+    /// The K=1 column of Table 4: propagation + initial gains + argmax,
+    /// skipping the CELF phase entirely.
+    pub fn run_first_seed(&self, graph: &Graph, budget: &Budget) -> crate::Result<ImResult> {
+        let p = self.params;
+        let pool = ThreadPool::new(p.threads);
+        let opts = PropagateOpts {
+            r_count: p.r_count,
+            seed: p.seed,
+            threads: p.threads,
+            backend: p.backend,
+            mode: p.mode,
+        };
+        let prop = labelprop::propagate(graph, &opts);
+        budget.check()?;
+        let memo = Memo::new(prop.labels);
+        let mg = memo.initial_gains(&pool);
+        let (best, gain) = mg
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+            .map(|(v, &g)| (v as u32, g))
+            .unwrap_or((0, 0.0));
+        Ok(ImResult {
+            seeds: vec![best],
+            influence: gain,
+            tracked_bytes: memo.bytes(),
+            counters: vec![("lp_iterations", prop.iterations as f64)],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::fused::randcas_fused;
+    use crate::gen::GenSpec;
+    use crate::graph::{GraphBuilder, WeightModel};
+    use crate::util::proptest_lite::check;
+
+    fn params(k: usize, r: usize, seed: u64) -> InfuserParams {
+        InfuserParams { k, r_count: r, seed, threads: 2, ..Default::default() }
+    }
+
+    #[test]
+    fn hub_first_on_star() {
+        let mut b = GraphBuilder::new(30);
+        for v in 1..30 {
+            b.edge(0, v);
+        }
+        let g = b.build().with_weights(WeightModel::Const(0.4), 1);
+        let res = InfuserMg::new(params(3, 256, 7)).run(&g, &Budget::unlimited()).unwrap();
+        assert_eq!(res.seeds[0], 0);
+        assert_eq!(res.seeds.len(), 3);
+    }
+
+    #[test]
+    fn memoized_sigma_matches_randcas_on_same_samples() {
+        // The memoized evaluator must equal a fused RANDCAS re-traversal of
+        // the *same* X_r block — the §3.3 equivalence claim.
+        check("memo-vs-randcas", 10, |gen| {
+            let g = gen
+                .gen_graph(60)
+                .with_weights(WeightModel::Uniform(0.05, 0.5), gen.u64());
+            let seed = gen.u64();
+            let r = 16;
+            let prop = labelprop::propagate(
+                &g,
+                &PropagateOpts { r_count: r, seed, threads: 2, ..Default::default() },
+            );
+            let memo = Memo::new(prop.labels);
+            let n = g.num_vertices();
+            let seeds: Vec<u32> = (0..gen.size(1, 4.min(n)))
+                .map(|_| gen.below(n as u32))
+                .collect();
+            let memo_sigma = memo.sigma_of(&seeds);
+            let cas = randcas_fused(&g, &seeds, r, seed, 0, &Budget::unlimited()).unwrap();
+            assert!(
+                (memo_sigma - cas).abs() < 1e-9,
+                "memo={memo_sigma} randcas={cas} seeds={seeds:?} g={}",
+                g.name
+            );
+        });
+    }
+
+    #[test]
+    fn marginal_gains_decrease_with_commits() {
+        let g = crate::gen::generate(&GenSpec::erdos_renyi(100, 300, 5))
+            .with_weights(WeightModel::Const(0.3), 3);
+        let prop = labelprop::propagate(
+            &g,
+            &PropagateOpts { r_count: 32, seed: 1, threads: 1, ..Default::default() },
+        );
+        let mut memo = Memo::new(prop.labels);
+        let pool = ThreadPool::new(1);
+        let before = memo.marginal_gain(5, &pool);
+        memo.commit(5);
+        let after = memo.marginal_gain(5, &pool);
+        assert!(after <= before);
+        assert_eq!(after, 0.0, "a committed vertex gains nothing more");
+    }
+
+    #[test]
+    fn submodularity_of_memoized_gains() {
+        // For any u, gain given larger seed set ≤ gain given smaller one.
+        check("memo-submodular", 8, |gen| {
+            let g = gen.gen_graph(50).with_weights(WeightModel::Const(0.25), gen.u64());
+            let n = g.num_vertices();
+            let prop = labelprop::propagate(
+                &g,
+                &PropagateOpts { r_count: 16, seed: gen.u64(), threads: 1, ..Default::default() },
+            );
+            let mut memo = Memo::new(prop.labels);
+            let pool = ThreadPool::new(1);
+            let u = gen.below(n as u32) as usize;
+            let s1 = gen.below(n as u32) as usize;
+            let s2 = gen.below(n as u32) as usize;
+            let g0 = memo.marginal_gain(u, &pool);
+            memo.commit(s1);
+            let g1 = memo.marginal_gain(u, &pool);
+            memo.commit(s2);
+            let g2 = memo.marginal_gain(u, &pool);
+            assert!(g0 >= g1 && g1 >= g2, "g0={g0} g1={g1} g2={g2}");
+        });
+    }
+
+    #[test]
+    fn influence_equals_oracle_sigma_of_seeds() {
+        // σ̂ accumulated by CELF == memoized σ(S) of the final seed set.
+        let g = crate::gen::generate(&GenSpec::barabasi_albert(200, 3, 2))
+            .with_weights(WeightModel::Const(0.1), 9);
+        let p = params(5, 64, 11);
+        let res = InfuserMg::new(p).run(&g, &Budget::unlimited()).unwrap();
+        let prop = labelprop::propagate(
+            &g,
+            &PropagateOpts { r_count: 64, seed: 11, threads: 2, ..Default::default() },
+        );
+        let memo = Memo::new(prop.labels);
+        assert!((res.influence - memo.sigma_of(&res.seeds)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn k1_matches_full_run_first_seed() {
+        let g = crate::gen::generate(&GenSpec::erdos_renyi(150, 400, 4))
+            .with_weights(WeightModel::Const(0.2), 6);
+        let p = params(4, 64, 3);
+        let full = InfuserMg::new(p).run(&g, &Budget::unlimited()).unwrap();
+        let first = InfuserMg::new(p).run_first_seed(&g, &Budget::unlimited()).unwrap();
+        assert_eq!(full.seeds[0], first.seeds[0]);
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let g = crate::gen::generate(&GenSpec::barabasi_albert(300, 2, 8))
+            .with_weights(WeightModel::Const(0.15), 2);
+        let r1 = InfuserMg::new(InfuserParams { threads: 1, ..params(6, 64, 5) })
+            .run(&g, &Budget::unlimited())
+            .unwrap();
+        let r8 = InfuserMg::new(InfuserParams { threads: 8, ..params(6, 64, 5) })
+            .run(&g, &Budget::unlimited())
+            .unwrap();
+        assert_eq!(r1.seeds, r8.seeds);
+        assert!((r1.influence - r8.influence).abs() < 1e-9);
+    }
+}

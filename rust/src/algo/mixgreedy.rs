@@ -1,0 +1,315 @@
+//! MIXGREEDY (Chen et al. 2009) — the conventional simulation-based
+//! baseline, implemented faithfully (paper Algs. 1–4):
+//!
+//! * SAMPLE (Alg. 2): *explicitly* materializes a sampled subgraph per
+//!   simulation — the memory traffic the fused approach eliminates.
+//! * NEWGREEDY step (Alg. 1 with K=1): average component size over `R`
+//!   samples initializes the marginal gains.
+//! * MIXGREEDY (Alg. 3): CELF refinement where every re-evaluation runs
+//!   RANDCAS (Alg. 4) — `R` fresh sampled-BFS simulations. This is the
+//!   `O(K·R·n·σ)` cost that makes the baseline infeasible beyond small
+//!   graphs (Table 4's "-" rows).
+//!
+//! Randomness: PCG32 streams (one per simulation) — the classical
+//! sample-from-`[0,1)` comparison of Alg. 2 line 3, *not* the hash-based
+//! sampler (that's [`super::fused`]'s upgrade).
+
+use super::celf::celf_select;
+use super::{Budget, ImResult};
+use crate::graph::Graph;
+use crate::rng::{Pcg32, Rng32};
+use crate::VertexId;
+
+/// MIXGREEDY parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct MixGreedyParams {
+    /// Seed-set size K.
+    pub k: usize,
+    /// Monte-Carlo simulations per estimate R.
+    pub r_count: usize,
+    /// Run seed.
+    pub seed: u64,
+}
+
+impl Default for MixGreedyParams {
+    fn default() -> Self {
+        Self { k: 50, r_count: 100, seed: 0 }
+    }
+}
+
+/// The MIXGREEDY baseline.
+pub struct MixGreedy {
+    params: MixGreedyParams,
+}
+
+/// An explicitly materialized sampled subgraph (CSR without weights) —
+/// what Alg. 2 constructs and what the fused approach avoids.
+pub struct SampledSubgraph {
+    /// CSR row offsets of the sample.
+    pub xadj: Vec<u64>,
+    /// CSR neighbor array of the sample.
+    pub adj: Vec<VertexId>,
+}
+
+/// SAMPLE (Alg. 2): keep each undirected edge with probability `w_{u,v}`,
+/// materializing the surviving CSR (both directions).
+pub fn sample_subgraph(graph: &Graph, rng: &mut Pcg32) -> SampledSubgraph {
+    let n = graph.num_vertices();
+    // Flip one coin per undirected edge; record survivors.
+    let mut survivors: Vec<(VertexId, VertexId)> = Vec::new();
+    for u in 0..n as VertexId {
+        for (v, e) in graph.edges_of(u) {
+            if v < u {
+                continue;
+            }
+            if rng.next_f64() <= f64::from(graph.weights[e]) {
+                survivors.push((u, v));
+            }
+        }
+    }
+    // Counting sort into CSR.
+    let mut xadj = vec![0u64; n + 1];
+    for &(u, v) in &survivors {
+        xadj[u as usize + 1] += 1;
+        xadj[v as usize + 1] += 1;
+    }
+    for i in 0..n {
+        xadj[i + 1] += xadj[i];
+    }
+    let mut adj = vec![0 as VertexId; xadj[n] as usize];
+    let mut cursor = xadj.clone();
+    for &(u, v) in &survivors {
+        adj[cursor[u as usize] as usize] = v;
+        cursor[u as usize] += 1;
+        adj[cursor[v as usize] as usize] = u;
+        cursor[v as usize] += 1;
+    }
+    SampledSubgraph { xadj, adj }
+}
+
+/// Connected-component labels of a sampled subgraph via BFS; returns
+/// `(comp_id per vertex, size per comp_id)`.
+pub fn components(sub: &SampledSubgraph) -> (Vec<u32>, Vec<u32>) {
+    let n = sub.xadj.len() - 1;
+    let mut comp = vec![u32::MAX; n];
+    let mut sizes = Vec::new();
+    let mut queue: Vec<u32> = Vec::new();
+    for s in 0..n as u32 {
+        if comp[s as usize] != u32::MAX {
+            continue;
+        }
+        let id = sizes.len() as u32;
+        sizes.push(0u32);
+        comp[s as usize] = id;
+        queue.clear();
+        queue.push(s);
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            sizes[id as usize] += 1;
+            let (a, b) = (sub.xadj[u as usize] as usize, sub.xadj[u as usize + 1] as usize);
+            for &v in &sub.adj[a..b] {
+                if comp[v as usize] == u32::MAX {
+                    comp[v as usize] = id;
+                    queue.push(v);
+                }
+            }
+        }
+    }
+    (comp, sizes)
+}
+
+/// RANDCAS (Alg. 4): estimate σ(S) with `R` simulations. Faithful to the
+/// one-sample-per-simulation baseline the paper describes (§3: the
+/// state-of-the-art implementations "build a unique graph for every
+/// sample"): each simulation materializes a full SAMPLE of `G` and then
+/// computes reachability from `S` on it — the memory traffic the fused
+/// approach (`fused::randcas_fused`) eliminates.
+pub fn randcas(
+    graph: &Graph,
+    seeds: &[VertexId],
+    r_count: usize,
+    rng: &mut Pcg32,
+    budget: &Budget,
+) -> Result<f64, super::AlgoError> {
+    let n = graph.num_vertices();
+    let mut visited = vec![u32::MAX; n]; // epoch marking: visited[v]==r
+    let mut queue: Vec<VertexId> = Vec::new();
+    let mut total = 0u64;
+    for r in 0..r_count as u32 {
+        budget.check()?;
+        let sub = sample_subgraph(graph, rng); // Alg. 2, materialized
+        queue.clear();
+        for &s in seeds {
+            if visited[s as usize] != r {
+                visited[s as usize] = r;
+                queue.push(s);
+            }
+        }
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            let (a, b) = (sub.xadj[u as usize] as usize, sub.xadj[u as usize + 1] as usize);
+            for &v in &sub.adj[a..b] {
+                if visited[v as usize] == r {
+                    continue;
+                }
+                visited[v as usize] = r;
+                queue.push(v);
+            }
+        }
+        total += queue.len() as u64;
+    }
+    Ok(total as f64 / r_count as f64)
+}
+
+impl MixGreedy {
+    /// Create with parameters.
+    pub fn new(params: MixGreedyParams) -> Self {
+        Self { params }
+    }
+
+    /// Run MIXGREEDY (Alg. 3).
+    pub fn run(&self, graph: &Graph, budget: &Budget) -> crate::Result<ImResult> {
+        let p = self.params;
+        let n = graph.num_vertices();
+        let mut rng = Pcg32::from_seed_stream(p.seed, 0x317);
+        let mut tracked: u64 = 0;
+
+        // ---- NEWGREEDY step (Alg. 1, K = 1): initial marginal gains.
+        let mut mg = vec![0f64; n];
+        for _ in 0..p.r_count {
+            budget.check()?;
+            let sub = sample_subgraph(graph, &mut rng);
+            let (comp, sizes) = components(&sub);
+            tracked = tracked.max(
+                (sub.adj.len() * 4 + sub.xadj.len() * 8 + comp.len() * 4 + sizes.len() * 4) as u64,
+            );
+            for v in 0..n {
+                mg[v] += f64::from(sizes[comp[v] as usize]);
+            }
+        }
+        for g in mg.iter_mut() {
+            *g /= p.r_count as f64;
+        }
+
+        // ---- CELF phase: every re-evaluation is a fresh RANDCAS batch.
+        let current_seeds: std::cell::RefCell<Vec<VertexId>> = std::cell::RefCell::new(Vec::new());
+        let sigma_s = std::cell::Cell::new(0.0f64); // σ(S) under the running estimator
+        let mut reeval_rng = Pcg32::from_seed_stream(p.seed, 0xCE1F);
+        let mut err: Option<super::AlgoError> = None;
+        let (seeds, sigma, stats) = {
+            let result = celf_select(
+                &mg,
+                p.k,
+                |v, _s_len| {
+                    // σ(S ∪ {v}) - σ(S), via RANDCAS (Alg. 3 line 14).
+                    let mut trial: Vec<VertexId> = current_seeds.borrow().clone();
+                    trial.push(v);
+                    match randcas(graph, &trial, p.r_count, &mut reeval_rng, budget) {
+                        Ok(s) => s - sigma_s.get(),
+                        Err(e) => {
+                            err = Some(e);
+                            f64::NEG_INFINITY
+                        }
+                    }
+                },
+                |v, gain| {
+                    current_seeds.borrow_mut().push(v);
+                    sigma_s.set(sigma_s.get() + gain);
+                },
+                budget,
+            )?;
+            if let Some(e) = err {
+                return Err(e.into());
+            }
+            result
+        };
+
+        Ok(ImResult {
+            seeds,
+            influence: sigma,
+            tracked_bytes: tracked + (n * 8) as u64,
+            counters: vec![("celf_reevals", stats.reevals as f64)],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::GenSpec;
+    use crate::graph::{GraphBuilder, WeightModel};
+
+    fn star(n: usize) -> Graph {
+        let mut b = GraphBuilder::new(n);
+        for v in 1..n as u32 {
+            b.edge(0, v);
+        }
+        b.build().with_weights(WeightModel::Const(1.0), 1)
+    }
+
+    #[test]
+    fn sample_keeps_all_edges_at_p1() {
+        let g = star(10);
+        let mut rng = Pcg32::seeded(1, 2);
+        let sub = sample_subgraph(&g, &mut rng);
+        assert_eq!(sub.adj.len(), 18);
+    }
+
+    #[test]
+    fn sample_keeps_none_at_p0() {
+        let g = star(10).with_weights(WeightModel::Const(0.0), 1);
+        let mut rng = Pcg32::seeded(1, 2);
+        let sub = sample_subgraph(&g, &mut rng);
+        assert_eq!(sub.adj.len(), 0);
+    }
+
+    #[test]
+    fn components_of_two_triangles() {
+        let g = GraphBuilder::new(6)
+            .edges(&[(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3)])
+            .build()
+            .with_weights(WeightModel::Const(1.0), 1);
+        let mut rng = Pcg32::seeded(3, 4);
+        let sub = sample_subgraph(&g, &mut rng);
+        let (comp, sizes) = components(&sub);
+        assert_eq!(sizes, vec![3, 3]);
+        assert_eq!(comp[0], comp[1]);
+        assert_eq!(comp[3], comp[4]);
+        assert_ne!(comp[0], comp[3]);
+    }
+
+    #[test]
+    fn randcas_exact_on_deterministic_graph() {
+        let g = star(8); // p=1: σ({0}) = 8, σ({leaf}) = 8 too (undirected).
+        let mut rng = Pcg32::seeded(5, 6);
+        let s = randcas(&g, &[0], 16, &mut rng, &Budget::unlimited()).unwrap();
+        assert!((s - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hub_is_first_seed_on_star() {
+        // p = 0.5 star: hub strictly dominates.
+        let g = star(20).with_weights(WeightModel::Const(0.5), 2);
+        let res = MixGreedy::new(MixGreedyParams { k: 3, r_count: 200, seed: 1 })
+            .run(&g, &Budget::unlimited())
+            .unwrap();
+        assert_eq!(res.seeds[0], 0, "hub must be picked first");
+        assert_eq!(res.seeds.len(), 3);
+        assert!(res.influence > 1.0);
+    }
+
+    #[test]
+    fn budget_timeout_propagates() {
+        let g = crate::gen::generate(&GenSpec::erdos_renyi(2000, 8000, 1))
+            .with_weights(WeightModel::Const(0.1), 1);
+        let budget = Budget::timeout(std::time::Duration::from_millis(1));
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let out = MixGreedy::new(MixGreedyParams { k: 5, r_count: 500, seed: 1 }).run(&g, &budget);
+        assert!(out.is_err());
+        assert!(super::super::is_timeout(&out.unwrap_err()));
+    }
+}

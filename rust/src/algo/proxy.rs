@@ -1,0 +1,178 @@
+//! Proxy-based baselines (paper §2.2's third class): no simulations at
+//! all, just structural heuristics. From the same Chen et al. 2009 paper
+//! that contributes MIXGREEDY:
+//!
+//! * [`degree`] — take the K highest-degree vertices ("degree
+//!   centrality", the classic strawman).
+//! * [`degree_discount`] — DEGREEDISCOUNTIC: after picking a seed,
+//!   discount each neighbor's effective degree by
+//!   `dd_v = d_v − 2 t_v − (d_v − t_v) t_v p` where `t_v` counts already-
+//!   selected neighbors — the expected wasted influence under IC with
+//!   uniform probability `p`.
+//!
+//! These run in `O(m + n log n)`; the paper's point is that simulation-
+//! based greedy buys noticeably better seed sets for the extra cost, and
+//! the `compare_algorithms` example lets you see both sides.
+
+use crate::graph::Graph;
+use crate::VertexId;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Top-K degree heuristic.
+pub fn degree(graph: &Graph, k: usize) -> Vec<VertexId> {
+    let n = graph.num_vertices();
+    let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+    order.sort_by_key(|&v| (Reverse(graph.degree(v)), v));
+    order.truncate(k.min(n));
+    order
+}
+
+/// DEGREEDISCOUNTIC (Chen et al. 2009, Alg. 4) for uniform probability
+/// `p`. For non-uniform weight models the mean edge weight is used as
+/// `p` — the heuristic's own approximation, not ours.
+pub fn degree_discount(graph: &Graph, k: usize, p: f64) -> Vec<VertexId> {
+    let n = graph.num_vertices();
+    let k = k.min(n);
+    let mut t = vec![0u32; n]; // selected-neighbor counts
+    let mut dd: Vec<f64> = (0..n).map(|v| graph.degree(v as VertexId) as f64).collect();
+    // Lazy max-heap over (dd, vertex); stale entries skipped via version.
+    let mut version = vec![0u32; n];
+    let mut heap: BinaryHeap<(Ordered, u32, VertexId)> = (0..n)
+        .map(|v| (Ordered(dd[v]), 0u32, v as VertexId))
+        .collect();
+    let mut selected = vec![false; n];
+    let mut seeds = Vec::with_capacity(k);
+    while seeds.len() < k {
+        let Some((_, ver, u)) = heap.pop() else { break };
+        if selected[u as usize] || ver != version[u as usize] {
+            continue;
+        }
+        selected[u as usize] = true;
+        seeds.push(u);
+        for &v in graph.neighbors(u) {
+            if selected[v as usize] {
+                continue;
+            }
+            let vi = v as usize;
+            t[vi] += 1;
+            let d = graph.degree(v) as f64;
+            let tv = f64::from(t[vi]);
+            dd[vi] = d - 2.0 * tv - (d - tv) * tv * p;
+            version[vi] += 1;
+            heap.push((Ordered(dd[vi]), version[vi], v));
+        }
+    }
+    seeds
+}
+
+/// Mean edge weight of a graph — the `p` a discount heuristic assumes.
+pub fn mean_weight(graph: &Graph) -> f64 {
+    if graph.weights.is_empty() {
+        return 0.0;
+    }
+    graph.weights.iter().map(|&w| f64::from(w)).sum::<f64>() / graph.weights.len() as f64
+}
+
+/// Total order wrapper for f64 heap keys (NaN-free by construction).
+#[derive(PartialEq, PartialOrd)]
+struct Ordered(f64);
+impl Eq for Ordered {}
+impl Ord for Ordered {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{oracle, Budget};
+    use crate::algo::infuser::{InfuserMg, InfuserParams};
+    use crate::gen::GenSpec;
+    use crate::graph::{GraphBuilder, WeightModel};
+
+    fn star(n: usize) -> Graph {
+        let mut b = GraphBuilder::new(n);
+        for v in 1..n as u32 {
+            b.edge(0, v);
+        }
+        b.build().with_weights(WeightModel::Const(0.1), 1)
+    }
+
+    #[test]
+    fn degree_picks_hub_first() {
+        let g = star(20);
+        let seeds = degree(&g, 3);
+        assert_eq!(seeds[0], 0);
+        assert_eq!(seeds.len(), 3);
+    }
+
+    #[test]
+    fn degree_discount_prefers_fresh_vertex_over_discounted_hub() {
+        // hub 0 (degree 7, incl. hub 1) is picked first. At p = 1 hub 1's
+        // discounted degree is d - 2t - (d-t)tp = 5 - 2 - 4 = -1, so the
+        // fresh vertex 13 (degree 4) must be picked second even though
+        // hub 1's raw degree is higher. Plain degree picks hub 1.
+        let mut b = GraphBuilder::new(18);
+        for v in 2..8 {
+            b.edge(0, v); // hub 0: leaves 2..7
+        }
+        b.edge(0, 1);
+        for v in 9..13 {
+            b.edge(1, v); // hub 1: fresh leaves 9..12 (+ hub 0) => degree 5
+        }
+        for v in 14..18 {
+            b.edge(13, v); // vertex 13: 4 fresh leaves
+        }
+        let g = b.build().with_weights(WeightModel::Const(1.0), 1);
+        let dd = degree_discount(&g, 2, 1.0);
+        assert_eq!(dd[0], 0);
+        assert_eq!(dd[1], 13, "discounted hub 1 must lose to fresh vertex 13");
+        let plain = degree(&g, 2);
+        assert_eq!(plain, vec![0, 1], "plain degree falls into the trap");
+    }
+
+    #[test]
+    fn discount_handles_k_ge_n() {
+        let g = star(5);
+        assert_eq!(degree_discount(&g, 50, 0.1).len(), 5);
+    }
+
+    #[test]
+    fn greedy_beats_proxies_on_clustered_graph() {
+        // The paper's motivation for simulation-based IM: on a graph with
+        // redundant hubs, INFUSER-MG's seeds must be at least as good as
+        // the proxies' (usually strictly better).
+        let g = crate::gen::generate(&GenSpec::barabasi_albert(400, 3, 11))
+            .with_weights(WeightModel::Const(0.1), 5);
+        let k = 8;
+        let inf = InfuserMg::new(InfuserParams { k, r_count: 512, seed: 3, threads: 2, ..Default::default() })
+            .run(&g, &Budget::unlimited())
+            .unwrap();
+        let score = |s: &[u32]| {
+            oracle::influence_score(
+                &g,
+                s,
+                &oracle::OracleParams { r_count: 2000, seed: 7, threads: 2 },
+            )
+        };
+        let s_inf = score(&inf.seeds);
+        let s_dd = score(&degree_discount(&g, k, mean_weight(&g)));
+        let s_deg = score(&degree(&g, k));
+        // 10% band, not strict dominance: at p = 0.1 the paper's XOR
+        // sampler has only ~1/p ≈ 10 effectively distinct samples
+        // (DESIGN.md §9.1), so greedy selection carries real noise on a
+        // 400-vertex graph, while BA degree heuristics are near-optimal
+        // by construction. On the p = 0.01 settings (Table 4/7 geometry)
+        // the greedy family wins as the paper reports.
+        assert!(s_inf >= s_dd * 0.90, "infuser {s_inf:.1} vs degree-discount {s_dd:.1}");
+        assert!(s_inf >= s_deg * 0.90, "infuser {s_inf:.1} vs degree {s_deg:.1}");
+    }
+
+    #[test]
+    fn mean_weight_is_mean() {
+        let g = star(4).with_weights(WeightModel::Const(0.25), 1);
+        assert!((mean_weight(&g) - 0.25).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,170 @@
+//! Shared support for the paper-table bench binaries (`rust/benches/`).
+//!
+//! criterion is unavailable offline, so each bench target is a plain
+//! `harness = false` binary using these helpers: an environment-driven
+//! scale knob, the dataset subsets, wall-clock measurement, and markdown
+//! dumping so results can be pasted into EXPERIMENTS.md.
+//!
+//! Environment knobs (all optional):
+//!
+//! * `INFUSER_BENCH_FULL=1` — run the full 12-dataset grid (default: the
+//!   6-dataset subset that finishes in minutes on a laptop).
+//! * `INFUSER_BENCH_K` — seed-set size (default 10; paper uses 50).
+//! * `INFUSER_BENCH_R` — simulations (default 128; paper uses more).
+//! * `INFUSER_BENCH_TIMEOUT` — per-cell timeout seconds (default 60; the
+//!   paper's is 302,400 — timeouts render as "-" either way).
+//! * `INFUSER_BENCH_OUT` — directory for markdown dumps (default
+//!   `bench_results/`).
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::Table;
+use std::time::Duration;
+
+/// Environment-derived bench geometry.
+#[derive(Clone, Debug)]
+pub struct BenchEnv {
+    /// Full 12-dataset grid vs quick subset.
+    pub full: bool,
+    /// Seed-set size.
+    pub k: usize,
+    /// Simulation count.
+    pub r: usize,
+    /// Per-cell timeout.
+    pub timeout: Duration,
+    /// Threads available.
+    pub threads: usize,
+    /// Markdown output directory.
+    pub out_dir: String,
+}
+
+impl BenchEnv {
+    /// Read the knobs.
+    pub fn load() -> Self {
+        let get = |k: &str| std::env::var(k).ok();
+        Self {
+            full: get("INFUSER_BENCH_FULL").is_some_and(|v| v == "1"),
+            k: get("INFUSER_BENCH_K").and_then(|v| v.parse().ok()).unwrap_or(10),
+            r: get("INFUSER_BENCH_R").and_then(|v| v.parse().ok()).unwrap_or(128),
+            timeout: Duration::from_secs(
+                get("INFUSER_BENCH_TIMEOUT").and_then(|v| v.parse().ok()).unwrap_or(60),
+            ),
+            threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2),
+            out_dir: get("INFUSER_BENCH_OUT").unwrap_or_else(|| "bench_results".into()),
+        }
+    }
+
+    /// Dataset ids for this run: a fast subset by default, all 12 under
+    /// `INFUSER_BENCH_FULL=1` (ordered as the paper's Table 3).
+    pub fn dataset_ids(&self) -> Vec<&'static str> {
+        if self.full {
+            vec![
+                "amazon-s",
+                "dblp-s",
+                "nethep-s",
+                "netphy-s",
+                "orkut-s",
+                "youtube-s",
+                "epinions-s",
+                "livejournal-s",
+                "pokec-s",
+                "slashdot0811-s",
+                "slashdot0902-s",
+                "twitter-s",
+            ]
+        } else {
+            vec![
+                "amazon-s",
+                "nethep-s",
+                "netphy-s",
+                "epinions-s",
+                "slashdot0811-s",
+                "twitter-s",
+            ]
+        }
+    }
+
+    /// Baseline experiment config with this env's geometry.
+    pub fn base_config(&self) -> ExperimentConfig {
+        ExperimentConfig {
+            k: self.k,
+            r_count: self.r,
+            threads: self.threads,
+            timeout: self.timeout,
+            seed: 0,
+            oracle_r: 0,
+            ..Default::default()
+        }
+    }
+
+    /// Write a rendered table to `{out_dir}/{name}.md` and echo to stdout.
+    pub fn emit(&self, name: &str, tables: &[&Table]) {
+        let mut md = String::new();
+        for t in tables {
+            println!("{}", t.render());
+            md.push_str(&t.render_markdown());
+            md.push('\n');
+        }
+        if std::fs::create_dir_all(&self.out_dir).is_ok() {
+            let path = format!("{}/{name}.md", self.out_dir);
+            if std::fs::write(&path, md).is_ok() {
+                eprintln!("[bench] wrote {path}");
+            }
+        }
+    }
+
+    /// Banner with the geometry, printed at the top of every bench.
+    pub fn banner(&self, what: &str, paper_ref: &str) {
+        println!("### {what}");
+        println!(
+            "(paper: {paper_ref}; this run: K={} R={} tau={} timeout={:?} datasets={})",
+            self.k,
+            self.r,
+            self.threads,
+            self.timeout,
+            if self.full { "all-12" } else { "subset-6" },
+        );
+        println!();
+    }
+}
+
+/// Measure a closure's wall-clock seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = crate::util::Timer::start();
+    let out = f();
+    (out, t.secs())
+}
+
+/// Format a ratio as `12.3x` (or `-` when either side is missing).
+pub fn ratio_cell(num: Option<f64>, den: Option<f64>) -> String {
+    match (num, den) {
+        (Some(a), Some(b)) if b > 0.0 => format!("{:.1}x", a / b),
+        _ => "-".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_defaults() {
+        let env = BenchEnv::load();
+        assert!(env.k >= 1);
+        assert!(!env.dataset_ids().is_empty());
+        assert!(env.dataset_ids().len() == 6 || env.dataset_ids().len() == 12);
+    }
+
+    #[test]
+    fn ratio_cells() {
+        assert_eq!(ratio_cell(Some(10.0), Some(2.0)), "5.0x");
+        assert_eq!(ratio_cell(None, Some(2.0)), "-");
+        assert_eq!(ratio_cell(Some(1.0), Some(0.0)), "-");
+    }
+
+    #[test]
+    fn time_it_measures() {
+        let (v, secs) = time_it(|| 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

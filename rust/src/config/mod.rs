@@ -1,0 +1,317 @@
+//! Experiment configuration — the schema the coordinator executes and the
+//! CLI's `experiment` subcommand parses from JSON.
+//!
+//! A config names datasets (catalog ids or edge-list files), weight
+//! settings (the paper's four §4.1 settings by default), algorithms with
+//! their parameters, and global run geometry (K, R, τ, timeout). The
+//! coordinator crosses them into a scenario grid, exactly like the paper's
+//! Tables 5–7 (12 graphs × 4 settings × 3 algorithms).
+
+use crate::graph::WeightModel;
+use crate::simd::Backend;
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// Which algorithm a scenario runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AlgoSpec {
+    /// Chen et al.'s baseline (τ is always 1 — the paper runs it serial).
+    MixGreedy,
+    /// Hash-fused sampling, one-by-one simulations (ablation variant).
+    FusedSampling,
+    /// The paper's contribution.
+    InfuserMg,
+    /// INFUSER-MG but only the first seed (Table 4's K=1 column).
+    InfuserK1,
+    /// IMM with an ε.
+    Imm {
+        /// Approximation knob (paper: 0.13 and 0.5).
+        epsilon: f64,
+    },
+    /// Top-K degree proxy heuristic (no simulations).
+    Degree,
+    /// DEGREEDISCOUNTIC proxy heuristic (Chen et al. 2009).
+    DegreeDiscount,
+}
+
+impl AlgoSpec {
+    /// Parse `mixgreedy` / `fused` / `infuser` / `infuser-k1` / `imm:0.13`.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "mixgreedy" => Ok(Self::MixGreedy),
+            "fused" => Ok(Self::FusedSampling),
+            "infuser" => Ok(Self::InfuserMg),
+            "infuser-k1" => Ok(Self::InfuserK1),
+            "degree" => Ok(Self::Degree),
+            "degree-discount" => Ok(Self::DegreeDiscount),
+            _ => {
+                if let Some(eps) = s.strip_prefix("imm:") {
+                    Ok(Self::Imm { epsilon: eps.parse()? })
+                } else {
+                    Err(anyhow::anyhow!("unknown algorithm '{s}'"))
+                }
+            }
+        }
+    }
+
+    /// Column header used in rendered tables.
+    pub fn label(&self) -> String {
+        match self {
+            Self::MixGreedy => "MixGreedy".into(),
+            Self::FusedSampling => "FusedSampling".into(),
+            Self::InfuserMg => "Infuser-MG".into(),
+            Self::InfuserK1 => "Infuser(K=1)".into(),
+            Self::Imm { epsilon } => format!("IMM(e={epsilon})"),
+            Self::Degree => "Degree".into(),
+            Self::DegreeDiscount => "DegreeDiscount".into(),
+        }
+    }
+}
+
+/// A dataset reference: catalog id (with scale) or an edge-list path.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DatasetRef {
+    /// Named entry of [`crate::gen::catalog`], with an integer scale.
+    Catalog {
+        /// Catalog id, e.g. `amazon-s`.
+        id: String,
+        /// Integer size multiplier.
+        scale: u32,
+    },
+    /// SNAP-style edge-list file on disk.
+    File(String),
+}
+
+impl DatasetRef {
+    /// Parse `amazon-s`, `amazon-s@4`, or `file:/path/to/edges.txt`.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        if let Some(path) = s.strip_prefix("file:") {
+            return Ok(Self::File(path.to_string()));
+        }
+        if let Some((id, scale)) = s.split_once('@') {
+            return Ok(Self::Catalog { id: id.to_string(), scale: scale.parse()? });
+        }
+        Ok(Self::Catalog { id: s.to_string(), scale: 1 })
+    }
+
+    /// Materialize the graph (weights not yet assigned).
+    pub fn load(&self) -> crate::Result<crate::graph::Graph> {
+        match self {
+            Self::Catalog { id, scale } => {
+                let spec = crate::gen::dataset(id)
+                    .ok_or_else(|| anyhow::anyhow!("unknown catalog dataset '{id}'"))?;
+                Ok(spec.generate_at_scale(*scale))
+            }
+            Self::File(path) => crate::graph::io::read_edge_list(std::path::Path::new(path)),
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> String {
+        match self {
+            Self::Catalog { id, scale } if *scale > 1 => format!("{id}@{scale}"),
+            Self::Catalog { id, .. } => id.clone(),
+            Self::File(path) => path.clone(),
+        }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Datasets to run.
+    pub datasets: Vec<DatasetRef>,
+    /// Weight settings (defaults to the paper's four).
+    pub settings: Vec<WeightModel>,
+    /// Algorithms to compare.
+    pub algos: Vec<AlgoSpec>,
+    /// Seed-set size K.
+    pub k: usize,
+    /// Simulations R.
+    pub r_count: usize,
+    /// Threads τ for the parallel algorithms.
+    pub threads: usize,
+    /// Run seed.
+    pub seed: u64,
+    /// Per-run wall-clock timeout (the paper's 302,400 s, scaled down).
+    pub timeout: Duration,
+    /// Oracle simulations for influence rescoring (0 = skip rescoring).
+    pub oracle_r: usize,
+    /// VECLABEL backend.
+    pub backend: Backend,
+    /// Memory budget for IMM's RR pool in bytes (None = unlimited). The
+    /// paper's Table 6 shows IMM(ε=0.13) failing with "insufficient
+    /// memory" on the largest graphs; this knob reproduces those "oom"
+    /// cells at laptop scale.
+    pub imm_memory_limit: Option<u64>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            datasets: vec![DatasetRef::Catalog { id: "nethep-s".into(), scale: 1 }],
+            settings: vec![WeightModel::Const(0.01)],
+            algos: vec![AlgoSpec::InfuserMg],
+            k: 50,
+            r_count: 256,
+            threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+            seed: 0,
+            timeout: Duration::from_secs(600),
+            oracle_r: 0,
+            backend: Backend::detect(),
+            imm_memory_limit: None,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from a JSON document. Missing fields fall back to defaults.
+    ///
+    /// ```json
+    /// {
+    ///   "datasets": ["nethep-s", "amazon-s@2", "file:/tmp/edges.txt"],
+    ///   "settings": ["const:0.01", "const:0.1", "uniform:0:0.1", "normal:0.05:0.025"],
+    ///   "algos": ["infuser", "imm:0.13", "imm:0.5"],
+    ///   "k": 50, "r": 256, "threads": 16, "seed": 0,
+    ///   "timeout_secs": 600, "oracle_r": 1024
+    /// }
+    /// ```
+    pub fn from_json(text: &str) -> crate::Result<Self> {
+        let json = Json::parse(text)?;
+        let mut cfg = Self::default();
+        if let Some(arr) = json.get("datasets").and_then(|v| v.as_arr()) {
+            cfg.datasets = arr
+                .iter()
+                .map(|d| {
+                    d.as_str()
+                        .ok_or_else(|| anyhow::anyhow!("dataset entries must be strings"))
+                        .and_then(DatasetRef::parse)
+                })
+                .collect::<crate::Result<_>>()?;
+        }
+        if let Some(arr) = json.get("settings").and_then(|v| v.as_arr()) {
+            cfg.settings = arr
+                .iter()
+                .map(|s| {
+                    s.as_str()
+                        .ok_or_else(|| anyhow::anyhow!("setting entries must be strings"))
+                        .and_then(WeightModel::parse)
+                })
+                .collect::<crate::Result<_>>()?;
+        }
+        if let Some(arr) = json.get("algos").and_then(|v| v.as_arr()) {
+            cfg.algos = arr
+                .iter()
+                .map(|a| {
+                    a.as_str()
+                        .ok_or_else(|| anyhow::anyhow!("algo entries must be strings"))
+                        .and_then(AlgoSpec::parse)
+                })
+                .collect::<crate::Result<_>>()?;
+        }
+        if let Some(k) = json.get("k").and_then(|v| v.as_i64()) {
+            cfg.k = k as usize;
+        }
+        if let Some(r) = json.get("r").and_then(|v| v.as_i64()) {
+            cfg.r_count = r as usize;
+        }
+        if let Some(t) = json.get("threads").and_then(|v| v.as_i64()) {
+            cfg.threads = t as usize;
+        }
+        if let Some(s) = json.get("seed").and_then(|v| v.as_i64()) {
+            cfg.seed = s as u64;
+        }
+        if let Some(t) = json.get("timeout_secs").and_then(|v| v.as_f64()) {
+            cfg.timeout = Duration::from_secs_f64(t);
+        }
+        if let Some(o) = json.get("oracle_r").and_then(|v| v.as_i64()) {
+            cfg.oracle_r = o as usize;
+        }
+        if let Some(b) = json.get("backend").and_then(|v| v.as_str()) {
+            cfg.backend = Backend::parse(b)?;
+        }
+        if let Some(gb) = json.get("imm_memory_limit_gb").and_then(|v| v.as_f64()) {
+            cfg.imm_memory_limit = Some((gb * 1024.0 * 1024.0 * 1024.0) as u64);
+        }
+        anyhow::ensure!(cfg.k >= 1, "k must be >= 1");
+        anyhow::ensure!(cfg.r_count >= 1, "r must be >= 1");
+        Ok(cfg)
+    }
+
+    /// The paper's four weight settings (§4.1).
+    pub fn paper_settings() -> Vec<WeightModel> {
+        vec![
+            WeightModel::Const(0.01),
+            WeightModel::Const(0.1),
+            WeightModel::Uniform(0.0, 0.1),
+            WeightModel::Normal(0.05, 0.025),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = ExperimentConfig::from_json(
+            r#"{
+                "datasets": ["nethep-s", "amazon-s@2"],
+                "settings": ["const:0.01", "normal:0.05:0.025"],
+                "algos": ["infuser", "imm:0.13", "fused"],
+                "k": 10, "r": 64, "threads": 4, "seed": 7,
+                "timeout_secs": 30, "oracle_r": 512
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.datasets.len(), 2);
+        assert_eq!(cfg.datasets[1], DatasetRef::Catalog { id: "amazon-s".into(), scale: 2 });
+        assert_eq!(cfg.settings[1], WeightModel::Normal(0.05, 0.025));
+        assert_eq!(cfg.algos[1], AlgoSpec::Imm { epsilon: 0.13 });
+        assert_eq!(cfg.k, 10);
+        assert_eq!(cfg.timeout, Duration::from_secs(30));
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_fields() {
+        let cfg = ExperimentConfig::from_json("{}").unwrap();
+        assert_eq!(cfg.k, 50);
+        assert!(!cfg.datasets.is_empty());
+    }
+
+    #[test]
+    fn algo_spec_parse_and_label() {
+        assert_eq!(AlgoSpec::parse("imm:0.5").unwrap(), AlgoSpec::Imm { epsilon: 0.5 });
+        assert_eq!(AlgoSpec::parse("infuser-k1").unwrap(), AlgoSpec::InfuserK1);
+        assert!(AlgoSpec::parse("bogus").is_err());
+        assert_eq!(AlgoSpec::Imm { epsilon: 0.13 }.label(), "IMM(e=0.13)");
+    }
+
+    #[test]
+    fn dataset_ref_parse_variants() {
+        assert_eq!(
+            DatasetRef::parse("orkut-s@8").unwrap(),
+            DatasetRef::Catalog { id: "orkut-s".into(), scale: 8 }
+        );
+        assert_eq!(DatasetRef::parse("file:/a/b").unwrap(), DatasetRef::File("/a/b".into()));
+        assert_eq!(DatasetRef::parse("dblp-s").unwrap().name(), "dblp-s");
+    }
+
+    #[test]
+    fn invalid_k_rejected() {
+        assert!(ExperimentConfig::from_json(r#"{"k": 0}"#).is_err());
+    }
+
+    #[test]
+    fn imm_memory_limit_parses_from_gb() {
+        let cfg = ExperimentConfig::from_json(r#"{"imm_memory_limit_gb": 0.5}"#).unwrap();
+        assert_eq!(cfg.imm_memory_limit, Some(512 * 1024 * 1024));
+        assert_eq!(ExperimentConfig::from_json("{}").unwrap().imm_memory_limit, None);
+    }
+
+    #[test]
+    fn paper_settings_are_the_four() {
+        assert_eq!(ExperimentConfig::paper_settings().len(), 4);
+    }
+}

@@ -1,0 +1,385 @@
+//! The experiment coordinator — the L3 component that reproduces the
+//! paper's evaluation: it crosses datasets × weight settings × algorithms
+//! into scenarios, runs each under a wall-clock budget with memory
+//! tracking, rescores every seed set with the common mt19937 oracle
+//! (§4.2's "oracle" methodology), and renders paper-shaped tables.
+//!
+//! Timeouts and OOMs are first-class outcomes rendered as the paper's "-"
+//! cells, not errors that abort the grid.
+
+pub mod table;
+
+pub use table::Table;
+
+use crate::algo::fused::{FusedParams, FusedSampling};
+use crate::algo::imm::{Imm, ImmParams};
+use crate::algo::infuser::{InfuserMg, InfuserParams};
+use crate::algo::mixgreedy::{MixGreedy, MixGreedyParams};
+use crate::algo::{self, oracle, Budget, ImResult};
+use crate::config::{AlgoSpec, DatasetRef, ExperimentConfig};
+use crate::graph::Graph;
+#[cfg(test)]
+use crate::graph::WeightModel;
+use crate::util::Timer;
+
+/// Outcome of one scenario cell.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    /// Completed within budget.
+    Done {
+        /// Wall-clock seconds.
+        secs: f64,
+        /// Tracked bytes of the dominant structures.
+        bytes: u64,
+        /// The algorithm's own influence estimate.
+        sigma_own: f64,
+        /// Oracle-rescored influence (None when rescoring disabled).
+        sigma_oracle: Option<f64>,
+        /// Selected seeds.
+        seeds: Vec<u32>,
+    },
+    /// Exceeded the wall-clock budget (the paper's "-" cells).
+    TimedOut,
+    /// Exceeded the memory budget (IMM(ε=0.13) on large graphs, Table 6).
+    OutOfMemory,
+    /// Any other failure, with its message.
+    Failed(String),
+}
+
+impl Outcome {
+    /// Render a time cell ("-" on timeout, like the paper).
+    pub fn time_cell(&self) -> String {
+        match self {
+            Outcome::Done { secs, .. } => format!("{secs:.2}"),
+            Outcome::TimedOut => "-".into(),
+            Outcome::OutOfMemory => "oom".into(),
+            Outcome::Failed(_) => "err".into(),
+        }
+    }
+
+    /// Render a memory cell in GB.
+    pub fn mem_cell(&self) -> String {
+        match self {
+            Outcome::Done { bytes, .. } => format!("{:.3}", crate::util::mem::gb(*bytes)),
+            Outcome::TimedOut => "-".into(),
+            Outcome::OutOfMemory => "oom".into(),
+            Outcome::Failed(_) => "err".into(),
+        }
+    }
+
+    /// Render an influence cell, preferring the oracle score.
+    pub fn influence_cell(&self) -> String {
+        match self {
+            Outcome::Done { sigma_oracle, sigma_own, .. } => {
+                format!("{:.1}", sigma_oracle.unwrap_or(*sigma_own))
+            }
+            Outcome::TimedOut => "-".into(),
+            Outcome::OutOfMemory => "oom".into(),
+            Outcome::Failed(_) => "err".into(),
+        }
+    }
+
+    /// Seconds if completed.
+    pub fn secs(&self) -> Option<f64> {
+        match self {
+            Outcome::Done { secs, .. } => Some(*secs),
+            _ => None,
+        }
+    }
+}
+
+/// One grid cell: dataset × setting × algorithm → outcome.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    /// Dataset display name.
+    pub dataset: String,
+    /// Weight-setting label.
+    pub setting: String,
+    /// Algorithm label.
+    pub algo: String,
+    /// What happened.
+    pub outcome: Outcome,
+}
+
+/// The coordinator.
+pub struct Runner {
+    cfg: ExperimentConfig,
+    /// Progress sink (stderr by default; silenceable for tests).
+    pub verbose: bool,
+}
+
+impl Runner {
+    /// Create from a config.
+    pub fn new(cfg: ExperimentConfig) -> Self {
+        Self { cfg, verbose: true }
+    }
+
+    /// Access the config.
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    fn log(&self, msg: &str) {
+        if self.verbose {
+            eprintln!("[runner] {msg}");
+        }
+    }
+
+    /// Run one algorithm on one weighted graph under the config's budget.
+    pub fn run_cell(&self, graph: &Graph, algo: AlgoSpec) -> Outcome {
+        let cfg = &self.cfg;
+        let budget = Budget::timeout(cfg.timeout);
+        let timer = Timer::start();
+        let result: crate::Result<ImResult> = match algo {
+            AlgoSpec::MixGreedy => MixGreedy::new(MixGreedyParams {
+                k: cfg.k,
+                r_count: cfg.r_count,
+                seed: cfg.seed,
+            })
+            .run(graph, &budget),
+            AlgoSpec::FusedSampling => FusedSampling::new(FusedParams {
+                k: cfg.k,
+                r_count: cfg.r_count,
+                seed: cfg.seed,
+            })
+            .run(graph, &budget),
+            AlgoSpec::InfuserMg => InfuserMg::new(InfuserParams {
+                k: cfg.k,
+                r_count: cfg.r_count,
+                seed: cfg.seed,
+                threads: cfg.threads,
+                backend: cfg.backend,
+                ..Default::default()
+            })
+            .run(graph, &budget),
+            AlgoSpec::InfuserK1 => InfuserMg::new(InfuserParams {
+                k: 1,
+                r_count: cfg.r_count,
+                seed: cfg.seed,
+                threads: cfg.threads,
+                backend: cfg.backend,
+                ..Default::default()
+            })
+            .run_first_seed(graph, &budget),
+            AlgoSpec::Degree | AlgoSpec::DegreeDiscount => {
+                let seeds = match algo {
+                    AlgoSpec::Degree => crate::algo::proxy::degree(graph, cfg.k),
+                    _ => crate::algo::proxy::degree_discount(
+                        graph,
+                        cfg.k,
+                        crate::algo::proxy::mean_weight(graph),
+                    ),
+                };
+                Ok(ImResult {
+                    seeds,
+                    influence: 0.0, // proxies carry no internal estimate
+                    tracked_bytes: (graph.num_vertices() * 24) as u64,
+                    counters: vec![],
+                })
+            }
+            AlgoSpec::Imm { epsilon } => Imm::new(ImmParams {
+                k: cfg.k,
+                epsilon,
+                seed: cfg.seed,
+                threads: cfg.threads,
+                memory_limit: cfg.imm_memory_limit,
+                ..Default::default()
+            })
+            .run(graph, &budget),
+        };
+        let secs = timer.secs();
+        match result {
+            Ok(res) => {
+                let sigma_oracle = if cfg.oracle_r > 0 {
+                    Some(oracle::influence_score(
+                        graph,
+                        &res.seeds,
+                        &oracle::OracleParams {
+                            r_count: cfg.oracle_r,
+                            seed: 0x0AC1E,
+                            threads: cfg.threads,
+                        },
+                    ))
+                } else {
+                    None
+                };
+                Outcome::Done {
+                    secs,
+                    bytes: res.tracked_bytes,
+                    sigma_own: res.influence,
+                    sigma_oracle,
+                    seeds: res.seeds,
+                }
+            }
+            Err(e) if algo::is_timeout(&e) => Outcome::TimedOut,
+            Err(e) if algo::is_oom(&e) => Outcome::OutOfMemory,
+            Err(e) => Outcome::Failed(e.to_string()),
+        }
+    }
+
+    /// Run the full grid; cells stream to the returned vector in
+    /// dataset-major order (like the paper's tables).
+    pub fn run_grid(&self) -> crate::Result<Vec<CellResult>> {
+        let cfg = &self.cfg;
+        let mut cells = Vec::new();
+        for dref in &cfg.datasets {
+            let base = self.load(dref)?;
+            for &setting in &cfg.settings {
+                let graph = base.clone().with_weights(setting, cfg.seed ^ 0x5E77);
+                for &algo in &cfg.algos {
+                    self.log(&format!(
+                        "{} / {} / {}",
+                        dref.name(),
+                        setting.label(),
+                        algo.label()
+                    ));
+                    let outcome = self.run_cell(&graph, algo);
+                    self.log(&format!("  -> {}", outcome.time_cell()));
+                    cells.push(CellResult {
+                        dataset: dref.name(),
+                        setting: setting.label(),
+                        algo: algo.label(),
+                        outcome,
+                    });
+                }
+            }
+        }
+        Ok(cells)
+    }
+
+    /// Load and validate a dataset.
+    pub fn load(&self, dref: &DatasetRef) -> crate::Result<Graph> {
+        let g = dref.load()?;
+        self.log(&format!(
+            "loaded {}: n={} m={} avg_deg={:.2}",
+            g.name,
+            g.num_vertices(),
+            g.num_edges(),
+            g.avg_degree()
+        ));
+        Ok(g)
+    }
+}
+
+/// Render a metric grid (one row per dataset, one column per
+/// setting × algo) from cells, selecting the cell field via `pick`.
+pub fn render_grid(
+    cells: &[CellResult],
+    title: &str,
+    pick: impl Fn(&Outcome) -> String,
+) -> Table {
+    let mut datasets: Vec<String> = Vec::new();
+    let mut columns: Vec<(String, String)> = Vec::new(); // (setting, algo)
+    for c in cells {
+        if !datasets.contains(&c.dataset) {
+            datasets.push(c.dataset.clone());
+        }
+        let col = (c.setting.clone(), c.algo.clone());
+        if !columns.contains(&col) {
+            columns.push(col);
+        }
+    }
+    let mut table = Table::new(title);
+    let mut header = vec!["Dataset".to_string()];
+    for (s, a) in &columns {
+        header.push(if cells.iter().any(|c| &c.setting != s) {
+            format!("{a} [{s}]")
+        } else {
+            a.clone()
+        });
+    }
+    table.header(header);
+    for d in &datasets {
+        let mut row = vec![d.clone()];
+        for (s, a) in &columns {
+            let cell = cells
+                .iter()
+                .find(|c| &c.dataset == d && &c.setting == s && &c.algo == a)
+                .map(|c| pick(&c.outcome))
+                .unwrap_or_else(|| "?".into());
+            row.push(cell);
+        }
+        table.row(row);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AlgoSpec, DatasetRef};
+    use std::time::Duration;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            datasets: vec![DatasetRef::Catalog { id: "nethep-s".into(), scale: 1 }],
+            settings: vec![WeightModel::Const(0.05)],
+            algos: vec![AlgoSpec::InfuserMg, AlgoSpec::Imm { epsilon: 0.5 }],
+            k: 3,
+            r_count: 32,
+            threads: 2,
+            seed: 1,
+            timeout: Duration::from_secs(120),
+            oracle_r: 64,
+            backend: crate::simd::Backend::detect(),
+            imm_memory_limit: None,
+        }
+    }
+
+    #[test]
+    fn grid_produces_a_cell_per_combination() {
+        let mut runner = Runner::new(tiny_cfg());
+        runner.verbose = false;
+        let cells = runner.run_grid().unwrap();
+        assert_eq!(cells.len(), 2);
+        for c in &cells {
+            assert!(matches!(c.outcome, Outcome::Done { .. }), "{:?}", c.outcome);
+            if let Outcome::Done { sigma_oracle, .. } = &c.outcome {
+                assert!(sigma_oracle.is_some(), "oracle_r > 0 must rescore");
+            }
+        }
+    }
+
+    #[test]
+    fn timeout_becomes_dash_cell() {
+        let mut cfg = tiny_cfg();
+        cfg.algos = vec![AlgoSpec::MixGreedy];
+        cfg.k = 50;
+        cfg.r_count = 4096;
+        cfg.timeout = Duration::from_millis(1);
+        let mut runner = Runner::new(cfg);
+        runner.verbose = false;
+        let cells = runner.run_grid().unwrap();
+        assert_eq!(cells[0].outcome.time_cell(), "-");
+        assert!(cells[0].outcome.secs().is_none());
+    }
+
+    #[test]
+    fn render_grid_shapes_rows_and_columns() {
+        let cells = vec![
+            CellResult {
+                dataset: "a".into(),
+                setting: "p=0.01".into(),
+                algo: "X".into(),
+                outcome: Outcome::Done {
+                    secs: 1.5,
+                    bytes: 1 << 30,
+                    sigma_own: 10.0,
+                    sigma_oracle: None,
+                    seeds: vec![],
+                },
+            },
+            CellResult {
+                dataset: "a".into(),
+                setting: "p=0.01".into(),
+                algo: "Y".into(),
+                outcome: Outcome::TimedOut,
+            },
+        ];
+        let t = render_grid(&cells, "times", |o| o.time_cell());
+        let s = t.render();
+        assert!(s.contains("1.50"));
+        assert!(s.contains('-'));
+        assert!(s.contains("times"));
+    }
+}

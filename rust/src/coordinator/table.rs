@@ -1,0 +1,134 @@
+//! Plain-text table renderer for the paper-shaped result grids: aligned
+//! columns, a title line, and a Markdown mode for EXPERIMENTS.md.
+
+/// A rendered table: title, header row, data rows.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Start a table with a title.
+    pub fn new(title: &str) -> Self {
+        Self { title: title.to_string(), ..Default::default() }
+    }
+
+    /// Set the header row.
+    pub fn header(&mut self, cells: Vec<String>) -> &mut Self {
+        self.header = cells;
+        self
+    }
+
+    /// Append a data row (padded/truncated to the header width on render).
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        self.rows.push(cells);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let cols = self.header.len().max(self.rows.iter().map(Vec::len).max().unwrap_or(0));
+        let mut w = vec![0usize; cols];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = w[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// Render as aligned plain text.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, width) in w.iter().enumerate() {
+                let cell = cells.get(i).map(String::as_str).unwrap_or("");
+                if i == 0 {
+                    line.push_str(&format!("{cell:<width$}"));
+                } else {
+                    line.push_str(&format!("  {cell:>width$}"));
+                }
+            }
+            line.push('\n');
+            line
+        };
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header, &w));
+            out.push_str(&format!("{}\n", "-".repeat(w.iter().sum::<usize>() + 2 * (w.len() - 1))));
+        }
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &w));
+        }
+        out
+    }
+
+    /// Render as a Markdown table (for EXPERIMENTS.md).
+    pub fn render_markdown(&self) -> String {
+        let cols = self.header.len();
+        let mut out = String::new();
+        out.push_str(&format!("### {}\n\n", self.title));
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        out.push_str(&format!("|{}\n", "---|".repeat(cols)));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("Table 4");
+        t.header(vec!["Dataset".into(), "MixGreedy".into(), "Infuser".into()]);
+        t.row(vec!["amazon-s".into(), "141.31".into(), "2.09".into()]);
+        t.row(vec!["orkut-s".into(), "-".into(), "654.52".into()]);
+        t
+    }
+
+    #[test]
+    fn render_aligns_and_contains_all_cells() {
+        let s = sample().render();
+        assert!(s.contains("Table 4"));
+        assert!(s.contains("141.31"));
+        assert!(s.contains("orkut-s"));
+        // Each data line has the same display width.
+        let lines: Vec<&str> = s.lines().skip(2).collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[1].chars().count(), lines[2].chars().count());
+    }
+
+    #[test]
+    fn markdown_has_separator_row() {
+        let md = sample().render_markdown();
+        assert!(md.contains("|---|---|---|"));
+        assert!(md.starts_with("### Table 4"));
+    }
+
+    #[test]
+    fn empty_table_renders_title_only() {
+        let t = Table::new("empty");
+        assert!(t.is_empty());
+        assert_eq!(t.len(), 0);
+        assert!(t.render().contains("empty"));
+    }
+}

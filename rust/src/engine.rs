@@ -1,0 +1,59 @@
+//! Execution-engine abstraction for the propagation stage.
+//!
+//! INFUSER-MG's hot numeric stage — batched, fused label propagation to
+//! fixpoint — exists twice in this repository, per the three-layer
+//! architecture:
+//!
+//! * [`NativeEngine`] — the in-crate Rust engine ([`crate::labelprop`]):
+//!   frontier-driven, push-based, AVX2 VECLABEL. This reproduces the
+//!   paper's CPU design and is what the paper-scale benchmarks run.
+//! * [`crate::runtime::XlaEngine`] — the AOT path: the same computation
+//!   authored in JAX (L2) around a Pallas VECLABEL kernel (L1), lowered at
+//!   build time to HLO text and executed from Rust through the PJRT C API.
+//!
+//! Both engines implement the same determinism contract (murmur3 edge
+//! hash ⊕ splitmix `X_r` < threshold), so their fixpoints are **identical
+//! label matrices** — asserted by the cross-engine integration tests and
+//! by `examples/xla_pipeline.rs`.
+
+use crate::graph::Graph;
+use crate::labelprop::{self, PropagateOpts, PropagationResult};
+
+/// A propagation engine: graph + options → fixpoint label matrix.
+pub trait Engine {
+    /// Run batched label propagation to fixpoint.
+    fn propagate(&self, graph: &Graph, opts: &PropagateOpts) -> crate::Result<PropagationResult>;
+
+    /// Engine name for logs and tables.
+    fn name(&self) -> &'static str;
+}
+
+/// The native Rust engine (paper's design).
+pub struct NativeEngine;
+
+impl Engine for NativeEngine {
+    fn propagate(&self, graph: &Graph, opts: &PropagateOpts) -> crate::Result<PropagationResult> {
+        Ok(labelprop::propagate(graph, opts))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::GenSpec;
+    use crate::graph::WeightModel;
+
+    #[test]
+    fn native_engine_forwards_to_labelprop() {
+        let g = crate::gen::generate(&GenSpec::grid(5, 5)).with_weights(WeightModel::Const(1.0), 1);
+        let opts = PropagateOpts { r_count: 8, ..Default::default() };
+        let via_engine = NativeEngine.propagate(&g, &opts).unwrap();
+        let direct = labelprop::propagate(&g, &opts);
+        assert_eq!(via_engine.labels.data, direct.labels.data);
+        assert_eq!(NativeEngine.name(), "native");
+    }
+}

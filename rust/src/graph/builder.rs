@@ -1,0 +1,206 @@
+//! Edge-list → CSR construction: symmetrization, dedup, self-loop removal,
+//! counting-sort bucketing (O(n + m), no comparison sort on the hot build).
+
+use super::{weights, Graph};
+use crate::VertexId;
+
+/// Incremental builder for undirected graphs.
+#[derive(Debug)]
+pub struct GraphBuilder {
+    n: usize,
+    /// Undirected edge list as (min, max) pairs, possibly with duplicates.
+    pairs: Vec<(VertexId, VertexId)>,
+    /// Optional per-pair weights (parallel to `pairs`).
+    pair_weights: Option<Vec<f32>>,
+    name: String,
+}
+
+impl GraphBuilder {
+    /// Start a builder for `n` vertices.
+    pub fn new(n: usize) -> Self {
+        assert!(n <= u32::MAX as usize, "vertex ids are 32-bit");
+        Self {
+            n,
+            pairs: Vec::new(),
+            pair_weights: None,
+            name: String::new(),
+        }
+    }
+
+    /// Set the graph name.
+    pub fn name(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    /// Add one undirected edge; self loops are silently dropped.
+    pub fn edge(&mut self, u: VertexId, v: VertexId) -> &mut Self {
+        debug_assert!((u as usize) < self.n && (v as usize) < self.n);
+        if u != v {
+            self.pairs.push((u.min(v), u.max(v)));
+            if let Some(w) = &mut self.pair_weights {
+                w.push(1.0);
+            }
+        }
+        self
+    }
+
+    /// Add one undirected edge with an explicit weight.
+    pub fn weighted_edge(&mut self, u: VertexId, v: VertexId, w: f32) -> &mut Self {
+        if u == v {
+            return self;
+        }
+        if self.pair_weights.is_none() {
+            self.pair_weights = Some(vec![1.0; self.pairs.len()]);
+        }
+        self.pairs.push((u.min(v), u.max(v)));
+        self.pair_weights.as_mut().unwrap().push(w);
+        self
+    }
+
+    /// Bulk-add edges.
+    pub fn edges(mut self, list: &[(VertexId, VertexId)]) -> Self {
+        self.pairs.reserve(list.len());
+        for &(u, v) in list {
+            self.edge(u, v);
+        }
+        self
+    }
+
+    /// Number of (pre-dedup) undirected pairs added so far.
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// True if no edges were added.
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    /// Finalize into CSR: dedups parallel edges (keeping the first weight),
+    /// symmetrizes, and computes the fused-sampling tables. Default weight
+    /// is 1.0 (caller typically applies a [`super::WeightModel`] after).
+    pub fn build(mut self) -> Graph {
+        let n = self.n;
+        // Sort (min,max) pairs to dedup. Sort indices when weights present.
+        let weights_in = self.pair_weights.take();
+        let mut order: Vec<u32> = (0..self.pairs.len() as u32).collect();
+        order.sort_unstable_by_key(|&i| self.pairs[i as usize]);
+
+        let mut uniq: Vec<(VertexId, VertexId)> = Vec::with_capacity(self.pairs.len());
+        let mut uniq_w: Vec<f32> = Vec::with_capacity(self.pairs.len());
+        let mut last: Option<(VertexId, VertexId)> = None;
+        for &i in &order {
+            let p = self.pairs[i as usize];
+            if last == Some(p) {
+                continue;
+            }
+            last = Some(p);
+            uniq.push(p);
+            uniq_w.push(weights_in.as_ref().map_or(1.0, |w| w[i as usize]));
+        }
+
+        // Counting sort into CSR (each undirected edge contributes to both
+        // endpoints' rows).
+        let mut deg = vec![0u64; n + 1];
+        for &(u, v) in &uniq {
+            deg[u as usize + 1] += 1;
+            deg[v as usize + 1] += 1;
+        }
+        let mut xadj = deg;
+        for i in 0..n {
+            xadj[i + 1] += xadj[i];
+        }
+        let total = xadj[n] as usize;
+        let mut adj = vec![0 as VertexId; total];
+        let mut w = vec![0f32; total];
+        let mut cursor = xadj.clone();
+        for (k, &(u, v)) in uniq.iter().enumerate() {
+            let cu = cursor[u as usize] as usize;
+            adj[cu] = v;
+            w[cu] = uniq_w[k];
+            cursor[u as usize] += 1;
+            let cv = cursor[v as usize] as usize;
+            adj[cv] = u;
+            w[cv] = uniq_w[k];
+            cursor[v as usize] += 1;
+        }
+        // Neighbor lists come out sorted because uniq is sorted by (min,max)
+        // only for the min endpoint; sort each row for deterministic layout.
+        for vtx in 0..n {
+            let (s, e) = (xadj[vtx] as usize, xadj[vtx + 1] as usize);
+            let row: Vec<(VertexId, f32)> = {
+                let mut r: Vec<(VertexId, f32)> =
+                    adj[s..e].iter().copied().zip(w[s..e].iter().copied()).collect();
+                r.sort_unstable_by_key(|&(nbr, _)| nbr);
+                r
+            };
+            for (i, (nbr, wt)) in row.into_iter().enumerate() {
+                adj[s + i] = nbr;
+                w[s + i] = wt;
+            }
+        }
+
+        let mut g = Graph {
+            xadj,
+            adj,
+            weights: w,
+            edge_hash: Vec::new(),
+            threshold: Vec::new(),
+            name: self.name,
+        };
+        g.rebuild_sampling_tables();
+        g
+    }
+}
+
+/// Convenience: build a graph straight from an undirected pair list.
+pub fn from_pairs(n: usize, pairs: &[(VertexId, VertexId)]) -> Graph {
+    GraphBuilder::new(n).edges(pairs).build()
+}
+
+/// Convert probabilities to thresholds — re-exported for the runtime.
+pub use weights::prob_to_threshold;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_and_symmetrize() {
+        let g = GraphBuilder::new(4)
+            .edges(&[(0, 1), (1, 0), (0, 1), (2, 3), (3, 3)])
+            .build();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[0]);
+        assert_eq!(g.neighbors(3), &[2]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn neighbor_rows_are_sorted() {
+        let g = GraphBuilder::new(6)
+            .edges(&[(5, 0), (0, 3), (0, 1), (4, 0), (0, 2)])
+            .build();
+        assert_eq!(g.neighbors(0), &[1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn explicit_weights_survive() {
+        let mut b = GraphBuilder::new(3);
+        b.weighted_edge(0, 1, 0.25);
+        b.weighted_edge(1, 2, 0.75);
+        let g = b.build();
+        let e01 = g.xadj[0] as usize;
+        assert!((g.weights[e01] - 0.25).abs() < 1e-6);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn empty_graph_is_valid() {
+        let g = GraphBuilder::new(0).build();
+        assert_eq!(g.num_vertices(), 0);
+        g.validate().unwrap();
+    }
+}

@@ -1,0 +1,192 @@
+//! Undirected graph substrate in Compressed Sparse Row (CSR) form.
+//!
+//! Matches the paper's storage (§3.4): `xadj[v]..xadj[v+1]` delimits the
+//! neighbor slice of `v` inside `adj`. For an *undirected* graph every
+//! edge `{u,v}` appears twice (once per endpoint); `num_edges()` reports
+//! the undirected count `m`, `adj.len() == 2m`.
+//!
+//! On top of raw CSR the module carries the two precomputed per-edge
+//! arrays the fused sampler needs on the hot path (paper §3.1):
+//!
+//! * `edge_hash[e]` — direction-oblivious Murmur3 hash of the endpoints
+//!   (identical for the two copies of an undirected edge);
+//! * `threshold[e]` — `floor(w_e · 2^31)` as `i32`, so the sampling test
+//!   `(X_r ^ hash) < threshold` is a single integer compare.
+
+pub mod builder;
+pub mod io;
+pub mod weights;
+
+pub use builder::GraphBuilder;
+pub use weights::WeightModel;
+
+use crate::hash::edge_hash;
+use crate::VertexId;
+
+/// An undirected, edge-weighted graph in CSR form with precomputed fused-
+/// sampling tables.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    /// CSR row offsets: `n + 1` entries.
+    pub xadj: Vec<u64>,
+    /// CSR neighbor array: `2m` entries.
+    pub adj: Vec<VertexId>,
+    /// Influence probability per directed copy (aligned with `adj`).
+    pub weights: Vec<f32>,
+    /// Direction-oblivious Murmur3 edge hash per directed copy.
+    pub edge_hash: Vec<u32>,
+    /// `floor(w · 2^31)` per directed copy, clamped to `[0, 2^31 - 1]`.
+    pub threshold: Vec<i32>,
+    /// Human-readable name (dataset catalog id or file stem).
+    pub name: String,
+}
+
+impl Graph {
+    /// Number of vertices `n`.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.xadj.len().saturating_sub(1)
+    }
+
+    /// Number of *undirected* edges `m`.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.adj.len() / 2
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        (self.xadj[v as usize + 1] - self.xadj[v as usize]) as usize
+    }
+
+    /// Neighbor slice of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        &self.adj[self.xadj[v as usize] as usize..self.xadj[v as usize + 1] as usize]
+    }
+
+    /// Iterate `(neighbor, adj-index)` pairs of `v`.
+    #[inline]
+    pub fn edges_of(&self, v: VertexId) -> impl Iterator<Item = (VertexId, usize)> + '_ {
+        let start = self.xadj[v as usize] as usize;
+        let end = self.xadj[v as usize + 1] as usize;
+        self.adj[start..end].iter().zip(start..end).map(|(&nbr, e)| (nbr, e))
+    }
+
+    /// Average degree `2m / n`.
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_vertices() == 0 {
+            return 0.0;
+        }
+        self.adj.len() as f64 / self.num_vertices() as f64
+    }
+
+    /// Maximum degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices() as VertexId)
+            .map(|v| self.degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Re-assign edge weights from a [`WeightModel`]; both directed copies
+    /// of an undirected edge receive the same weight (drawn once from the
+    /// direction-oblivious edge hash, so the assignment itself is fused
+    /// and reproducible). Also refreshes the sampling `threshold` table.
+    pub fn with_weights(mut self, model: WeightModel, seed: u64) -> Self {
+        weights::assign(&mut self, model, seed);
+        self
+    }
+
+    /// Recompute `edge_hash` and `threshold` from `adj`/`weights`. Called
+    /// by the builder and by `with_weights`; public for IO paths that
+    /// construct CSR directly.
+    pub fn rebuild_sampling_tables(&mut self) {
+        self.edge_hash.clear();
+        self.edge_hash.reserve(self.adj.len());
+        self.threshold.clear();
+        self.threshold.reserve(self.adj.len());
+        for v in 0..self.num_vertices() as VertexId {
+            let (s, e) = (self.xadj[v as usize] as usize, self.xadj[v as usize + 1] as usize);
+            for i in s..e {
+                self.edge_hash.push(edge_hash(v, self.adj[i]));
+                self.threshold.push(weights::prob_to_threshold(self.weights[i]));
+            }
+        }
+    }
+
+    /// Structural sanity check of all CSR invariants (used by tests and
+    /// after IO): monotone `xadj`, in-range neighbors, symmetric adjacency,
+    /// matching table lengths, no self loops.
+    pub fn validate(&self) -> crate::Result<()> {
+        use anyhow::ensure;
+        let n = self.num_vertices();
+        ensure!(self.xadj.first() == Some(&0), "xadj must start at 0");
+        ensure!(
+            self.xadj.windows(2).all(|w| w[0] <= w[1]),
+            "xadj must be monotone"
+        );
+        ensure!(
+            *self.xadj.last().unwrap_or(&0) as usize == self.adj.len(),
+            "xadj end must equal adj len"
+        );
+        ensure!(self.weights.len() == self.adj.len(), "weights len");
+        ensure!(self.edge_hash.len() == self.adj.len(), "edge_hash len");
+        ensure!(self.threshold.len() == self.adj.len(), "threshold len");
+        for v in 0..n as VertexId {
+            for &u in self.neighbors(v) {
+                ensure!((u as usize) < n, "neighbor out of range");
+                ensure!(u != v, "self loop at {v}");
+                ensure!(
+                    self.neighbors(u).contains(&v),
+                    "missing reverse edge {u}->{v}"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Graph {
+        // The 5-vertex toy graph of Fig. 1a (A..E = 0..4).
+        GraphBuilder::new(5)
+            .edges(&[(0, 1), (0, 2), (1, 2), (2, 3), (2, 4), (3, 4)])
+            .build()
+            .with_weights(WeightModel::Const(0.5), 1)
+    }
+
+    #[test]
+    fn csr_shape() {
+        let g = toy();
+        assert_eq!(g.num_vertices(), 5);
+        assert_eq!(g.num_edges(), 6);
+        assert_eq!(g.adj.len(), 12);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn degrees_and_neighbors() {
+        let g = toy();
+        assert_eq!(g.degree(2), 4);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert!((g.avg_degree() - 12.0 / 5.0).abs() < 1e-12);
+        assert_eq!(g.max_degree(), 4);
+    }
+
+    #[test]
+    fn sampling_tables_are_direction_oblivious() {
+        let g = toy();
+        // hash for (0,1) stored at 0's slice equals hash at 1's slice.
+        let e01 = g.xadj[0] as usize; // first neighbor of 0 is 1
+        let e10 = g.xadj[1] as usize; // first neighbor of 1 is 0
+        assert_eq!(g.adj[e01], 1);
+        assert_eq!(g.adj[e10], 0);
+        assert_eq!(g.edge_hash[e01], g.edge_hash[e10]);
+        assert_eq!(g.threshold[e01], g.threshold[e10]);
+    }
+}

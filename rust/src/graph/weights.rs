@@ -1,0 +1,207 @@
+//! Edge-weight (influence probability) models — the four evaluation
+//! settings of the paper (§4.1) plus the weighted-cascade assignment used
+//! to derive Fig. 1b:
+//!
+//! 1. constant `p = 0.01`
+//! 2. constant `p = 0.1`
+//! 3. uniform on `[0, 0.1]`
+//! 4. normal `N(0.05, 0.025)` (95% of mass in `[0, 0.1]`), clamped to `[0,1]`
+//! 5. weighted cascade: `w_{u,v} = 1 / deg(v)` — the one *directed* model;
+//!    under WC the two copies of an undirected edge differ.
+
+use super::Graph;
+use crate::hash::edge_hash;
+use crate::rng::{NormalDist, Pcg32, Rng32};
+
+/// Influence-probability assignment models.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WeightModel {
+    /// Constant probability on every edge.
+    Const(f32),
+    /// Uniform on `[lo, hi]`.
+    Uniform(f32, f32),
+    /// Normal with mean/std, clamped to `[0, 1]`.
+    Normal(f32, f32),
+    /// Weighted cascade: `w_{u,v} = 1/deg(v)` (direction-dependent).
+    ///
+    /// NB: WC is the one *directed* model (paper Fig. 1b). The fused
+    /// sampler stays direction-oblivious in its hash but the two CSR
+    /// copies carry different thresholds, so an edge can be alive in one
+    /// orientation only; label propagation then computes a union-of-
+    /// directed-live-edges approximation rather than exact WC semantics.
+    /// The paper's evaluation (§4.1) uses the four undirected settings;
+    /// WC is provided for completeness and tested for robustness, not
+    /// paper-fidelity.
+    WeightedCascade,
+}
+
+impl WeightModel {
+    /// Parse from a CLI/config string: `const:0.01`, `uniform:0:0.1`,
+    /// `normal:0.05:0.025`, `wc`.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let bad = || anyhow::anyhow!("bad weight model '{s}'");
+        match parts[0] {
+            "const" => Ok(Self::Const(parts.get(1).ok_or_else(bad)?.parse()?)),
+            "uniform" => Ok(Self::Uniform(
+                parts.get(1).ok_or_else(bad)?.parse()?,
+                parts.get(2).ok_or_else(bad)?.parse()?,
+            )),
+            "normal" => Ok(Self::Normal(
+                parts.get(1).ok_or_else(bad)?.parse()?,
+                parts.get(2).ok_or_else(bad)?.parse()?,
+            )),
+            "wc" => Ok(Self::WeightedCascade),
+            _ => Err(bad()),
+        }
+    }
+
+    /// Short id used in table headers.
+    pub fn label(&self) -> String {
+        match self {
+            Self::Const(p) => format!("p={p}"),
+            Self::Uniform(lo, hi) => format!("U[{lo},{hi}]"),
+            Self::Normal(m, s) => format!("N({m},{s})"),
+            Self::WeightedCascade => "wc".into(),
+        }
+    }
+}
+
+/// Convert a probability to the fused sampler's integer threshold:
+/// `floor(w · 2^31)` clamped into `[0, 2^31 - 1]` (i32 non-negative range).
+/// The sampling test is then `((X_r ^ h) & 0x7fffffff) < threshold`, i.e.
+/// the paper's signed `_mm256_cmpgt_epi32(w_vec, probs)`.
+#[inline]
+pub fn prob_to_threshold(w: f32) -> i32 {
+    let clamped = w.clamp(0.0, 1.0) as f64;
+    let t = (clamped * (1u64 << 31) as f64).floor();
+    t.min((i32::MAX) as f64) as i32
+}
+
+/// Assign weights in-place per `model`. For symmetric models the weight is
+/// drawn once per *undirected* edge, keyed by the direction-oblivious edge
+/// hash, so both directed copies agree and the assignment is independent
+/// of traversal order.
+pub fn assign(g: &mut Graph, model: WeightModel, seed: u64) {
+    let n = g.num_vertices();
+    match model {
+        WeightModel::Const(p) => {
+            for w in g.weights.iter_mut() {
+                *w = p;
+            }
+        }
+        WeightModel::WeightedCascade => {
+            // w_{u,v} = 1/deg(v): weight stored at u's row for neighbor v.
+            for u in 0..n as u32 {
+                let (s, e) = (g.xadj[u as usize] as usize, g.xadj[u as usize + 1] as usize);
+                for i in s..e {
+                    let v = g.adj[i];
+                    g.weights[i] = 1.0 / g.degree(v).max(1) as f32;
+                }
+            }
+        }
+        WeightModel::Uniform(lo, hi) => {
+            per_edge_rng(g, seed, |rng| lo + (hi - lo) * rng.next_f64() as f32);
+        }
+        WeightModel::Normal(mean, std) => {
+            per_edge_rng(g, seed, |rng| {
+                let mut d = NormalDist::new(f64::from(mean), f64::from(std));
+                (d.sample(rng) as f32).clamp(0.0, 1.0)
+            });
+        }
+    }
+    g.rebuild_sampling_tables();
+}
+
+/// Draw one value per undirected edge from an RNG seeded by
+/// `(seed, edge_hash)`, write it to both directed copies.
+fn per_edge_rng(g: &mut Graph, seed: u64, mut draw: impl FnMut(&mut Pcg32) -> f32) {
+    let n = g.num_vertices();
+    for u in 0..n as u32 {
+        let (s, e) = (g.xadj[u as usize] as usize, g.xadj[u as usize + 1] as usize);
+        for i in s..e {
+            let v = g.adj[i];
+            let mut rng = Pcg32::from_seed_stream(seed, u64::from(edge_hash(u, v)));
+            g.weights[i] = draw(&mut rng);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn path4() -> Graph {
+        GraphBuilder::new(4).edges(&[(0, 1), (1, 2), (2, 3)]).build()
+    }
+
+    #[test]
+    fn threshold_mapping() {
+        assert_eq!(prob_to_threshold(0.0), 0);
+        assert_eq!(prob_to_threshold(1.0), i32::MAX);
+        assert_eq!(prob_to_threshold(0.5), 1 << 30);
+        assert!(prob_to_threshold(0.01) > 0);
+        assert_eq!(prob_to_threshold(-1.0), 0);
+        assert_eq!(prob_to_threshold(2.0), i32::MAX);
+    }
+
+    #[test]
+    fn symmetric_models_agree_on_both_copies() {
+        for model in [
+            WeightModel::Const(0.3),
+            WeightModel::Uniform(0.0, 0.1),
+            WeightModel::Normal(0.05, 0.025),
+        ] {
+            let g = path4().with_weights(model, 99);
+            for u in 0..4u32 {
+                for (v, e_uv) in g.edges_of(u) {
+                    let e_vu = g
+                        .edges_of(v)
+                        .find(|&(w, _)| w == u)
+                        .map(|(_, e)| e)
+                        .unwrap();
+                    assert_eq!(g.weights[e_uv], g.weights[e_vu], "model {model:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_cascade_uses_target_degree() {
+        let g = path4().with_weights(WeightModel::WeightedCascade, 0);
+        // edge (0,1): w = 1/deg(1) = 1/2 at 0's row.
+        let e01 = g.xadj[0] as usize;
+        assert!((g.weights[e01] - 0.5).abs() < 1e-6);
+        // edge (1,0): w = 1/deg(0) = 1.
+        let e10 = g
+            .edges_of(1)
+            .find(|&(w, _)| w == 0)
+            .map(|(_, e)| e)
+            .unwrap();
+        assert!((g.weights[e10] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn uniform_weights_within_range() {
+        let g = path4().with_weights(WeightModel::Uniform(0.0, 0.1), 5);
+        for &w in &g.weights {
+            assert!((0.0..=0.1).contains(&w));
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(WeightModel::parse("const:0.01").unwrap(), WeightModel::Const(0.01));
+        assert_eq!(
+            WeightModel::parse("uniform:0:0.1").unwrap(),
+            WeightModel::Uniform(0.0, 0.1)
+        );
+        assert_eq!(
+            WeightModel::parse("normal:0.05:0.025").unwrap(),
+            WeightModel::Normal(0.05, 0.025)
+        );
+        assert_eq!(WeightModel::parse("wc").unwrap(), WeightModel::WeightedCascade);
+        assert!(WeightModel::parse("zzz").is_err());
+    }
+}

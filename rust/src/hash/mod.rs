@@ -1,0 +1,70 @@
+//! Hashing substrate: MurmurHash3 (x86_32) and the direction-oblivious
+//! edge hash of the fused sampler (paper §3.1, Eq. 1).
+//!
+//! `edge_hash(u, v) = murmur3_32(LE64(min(u,v) || max(u,v)), SEED) & 0x7fffffff`
+//!
+//! The 31-bit mask keeps the value non-negative under the *signed* epi32
+//! comparison the paper's AVX2 kernel uses (`_mm256_cmpgt_epi32`), so the
+//! XOR with a 31-bit `X_r` stays uniform on `[0, 2^31)`. The JAX compile
+//! path mirrors this function exactly (`python/compile/murmur.py`).
+
+pub mod murmur3;
+
+pub use murmur3::murmur3_32;
+
+/// Seed for the edge hash; the Murmur3 reference test seed, fixed across
+/// both layers by the determinism contract (DESIGN.md §2).
+pub const EDGE_HASH_SEED: u32 = 0x9747_B28C;
+
+/// Mask keeping hash values in the non-negative `i32` range.
+pub const HASH_MASK: u32 = 0x7FFF_FFFF;
+
+/// Largest value the masked edge hash can take (the paper's `h_max`).
+pub const H_MAX: u32 = HASH_MASK;
+
+/// Direction-oblivious hash of the undirected edge `{u, v}` (Eq. 1):
+/// both orientations hash identically, so a fused traversal makes the same
+/// sampling decision for `(u,v)` and `(v,u)` within one simulation.
+#[inline]
+pub fn edge_hash(u: u32, v: u32) -> u32 {
+    let (lo, hi) = if u <= v { (u, v) } else { (v, u) };
+    let mut key = [0u8; 8];
+    key[..4].copy_from_slice(&lo.to_le_bytes());
+    key[4..].copy_from_slice(&hi.to_le_bytes());
+    murmur3_32(&key, EDGE_HASH_SEED) & HASH_MASK
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_hash_is_direction_oblivious() {
+        for (u, v) in [(0u32, 1u32), (5, 900), (123_456, 7), (42, 42)] {
+            assert_eq!(edge_hash(u, v), edge_hash(v, u));
+        }
+    }
+
+    #[test]
+    fn edge_hash_is_31_bit() {
+        for i in 0..1000u32 {
+            assert!(edge_hash(i, i.wrapping_mul(2654435761) % 100_000) <= H_MAX);
+        }
+    }
+
+    #[test]
+    fn distinct_edges_rarely_collide() {
+        use std::collections::HashSet;
+        let mut seen = HashSet::new();
+        let mut collisions = 0;
+        for u in 0..200u32 {
+            for v in (u + 1)..200u32 {
+                if !seen.insert(edge_hash(u, v)) {
+                    collisions += 1;
+                }
+            }
+        }
+        // 19900 pairs into 2^31 buckets: expect ~0.09 collisions.
+        assert!(collisions <= 2, "collisions={collisions}");
+    }
+}

@@ -1,0 +1,534 @@
+//! Batched, fused label propagation — NEWGREEDYSTEP-VEC's core
+//! (paper Alg. 5): connected components of all `R` sampled subgraphs are
+//! found simultaneously by min-label propagation over the *original*
+//! graph, re-testing each edge's aliveness per lane with the fused
+//! sampler, processing only *live* vertices (frontier), `τ` threads over
+//! the frontier, and `B = 8` lanes per instruction via [`crate::simd`].
+//!
+//! Two execution modes with the same fixpoint (per lane, every vertex's
+//! label = minimum vertex id of its connected component in that lane's
+//! sampled subgraph):
+//!
+//! * [`Mode::Async`] — the paper's push-based Gauss–Seidel: updates land
+//!   in the live label matrix immediately. Races on a target row are
+//!   resolved with per-lane atomic `fetch_min`, which (unlike the paper's
+//!   benign-race C++) guarantees no lost update while keeping the SIMD
+//!   candidate computation. Fastest convergence.
+//! * [`Mode::Sync`] — Jacobi sweeps into a double buffer; deterministic
+//!   iteration count, and exactly the schedule the AOT-lowered XLA engine
+//!   executes (`runtime::XlaEngine`), enabling bit-for-bit cross-layer
+//!   comparison of fixpoints.
+
+use crate::graph::Graph;
+use crate::sampling::xr_stream;
+use crate::simd::{veclabel_row, veclabel_row_maskonly, Backend};
+use crate::util::par::{as_send_cells, ThreadPool};
+use std::sync::atomic::{AtomicI32, AtomicU64, AtomicUsize, Ordering};
+
+/// The `n × R` component-label matrix, row-major: `data[v*r_count + lane]`.
+/// Rows are the paper's layout ("the R labels of a single vertex are
+/// stored consecutively for a better spatial locality", §3.3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Labels {
+    /// Flattened labels.
+    pub data: Vec<i32>,
+    /// Vertex count.
+    pub n: usize,
+    /// Lane (simulation) count.
+    pub r_count: usize,
+}
+
+impl Labels {
+    /// Identity initialization: `l_v[r] = v` (Alg. 5 lines 1–2).
+    pub fn identity(n: usize, r_count: usize) -> Self {
+        let mut data = vec![0i32; n * r_count];
+        for v in 0..n {
+            let row = &mut data[v * r_count..(v + 1) * r_count];
+            row.fill(v as i32);
+        }
+        Self { data, n, r_count }
+    }
+
+    /// Row of vertex `v`.
+    #[inline]
+    pub fn row(&self, v: usize) -> &[i32] {
+        &self.data[v * self.r_count..(v + 1) * self.r_count]
+    }
+
+    /// Label of vertex `v` in lane `r`.
+    #[inline]
+    pub fn get(&self, v: usize, r: usize) -> i32 {
+        self.data[v * self.r_count + r]
+    }
+
+    /// Heap footprint in bytes (paper's memoization cost driver).
+    pub fn bytes(&self) -> u64 {
+        (self.data.len() * std::mem::size_of::<i32>()) as u64
+    }
+}
+
+/// Propagation schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// In-place push (Gauss–Seidel), atomic min on conflicts. Default.
+    Async,
+    /// Double-buffered sweeps (Jacobi) — the XLA engine's schedule.
+    Sync,
+}
+
+/// Propagation options.
+#[derive(Clone, Copy, Debug)]
+pub struct PropagateOpts {
+    /// Number of Monte-Carlo simulations `R`.
+    pub r_count: usize,
+    /// Run seed (drives the `X_r` stream).
+    pub seed: u64,
+    /// Worker threads `τ`.
+    pub threads: usize,
+    /// VECLABEL backend.
+    pub backend: Backend,
+    /// Schedule.
+    pub mode: Mode,
+}
+
+impl Default for PropagateOpts {
+    fn default() -> Self {
+        Self {
+            r_count: 256,
+            seed: 0,
+            threads: 1,
+            backend: Backend::detect(),
+            mode: Mode::Async,
+        }
+    }
+}
+
+/// Propagation output with the counters the experiments report.
+#[derive(Debug)]
+pub struct PropagationResult {
+    /// Fixpoint label matrix.
+    pub labels: Labels,
+    /// Outer iterations until convergence.
+    pub iterations: usize,
+    /// Total edge-row visits (each visit serves all `R` lanes — the
+    /// fused-sampling traffic saving the paper measures).
+    pub edge_visits: u64,
+}
+
+/// Run batched label propagation to fixpoint.
+pub fn propagate(graph: &Graph, opts: &PropagateOpts) -> PropagationResult {
+    match opts.mode {
+        Mode::Async => propagate_async(graph, opts),
+        Mode::Sync => propagate_sync(graph, opts),
+    }
+}
+
+/// Dense per-(label, lane) component sizes (paper §3.3): a second `n × R`
+/// array where row `c` holds, per lane, the size of the component whose
+/// min-vertex label is `c` (rows not naming a component stay zero — space
+/// traded for O(1) access, as in the paper).
+pub fn component_sizes(labels: &Labels) -> Vec<i32> {
+    let mut sizes = vec![0i32; labels.n * labels.r_count];
+    for v in 0..labels.n {
+        let row = labels.row(v);
+        for (lane, &l) in row.iter().enumerate() {
+            sizes[l as usize * labels.r_count + lane] += 1;
+        }
+    }
+    sizes
+}
+
+/// Marginal influence of every vertex given no seeds (Alg. 5 lines 18–21):
+/// `mg_v = (1/R) Σ_r size_r(l_v[r])`.
+pub fn initial_gains(labels: &Labels, sizes: &[i32], pool: &ThreadPool) -> Vec<f64> {
+    let r_count = labels.r_count;
+    let mut mg = vec![0f64; labels.n];
+    {
+        let cells = as_send_cells(&mut mg);
+        pool.for_each(labels.n, 256, |v| {
+            let row = labels.row(v);
+            let mut acc = 0i64;
+            for (lane, &l) in row.iter().enumerate() {
+                acc += i64::from(sizes[l as usize * r_count + lane]);
+            }
+            // SAFETY: one writer per index v.
+            unsafe { *cells.get(v) = acc as f64 / r_count as f64 };
+        });
+    }
+    mg
+}
+
+// --------------------------------------------------------------------------
+// Async (Gauss–Seidel) engine
+// --------------------------------------------------------------------------
+
+fn propagate_async(graph: &Graph, opts: &PropagateOpts) -> PropagationResult {
+    let n = graph.num_vertices();
+    let r_count = opts.r_count;
+    let xrs = xr_stream(opts.seed, r_count);
+    let mut labels = Labels::identity(n, r_count);
+    let pool = ThreadPool::new(opts.threads);
+
+    // Live-vertex frontier (Alg. 5's L), rebuilt from a bitset each round.
+    let mut frontier: Vec<u32> = (0..n as u32).collect();
+    let words = n.div_ceil(64);
+    let next_live: Vec<AtomicU64> = (0..words).map(|_| AtomicU64::new(0)).collect();
+    let edge_visits = AtomicU64::new(0);
+    let mut iterations = 0usize;
+
+    // Shared mutable label matrix. Candidate rows are computed with SIMD
+    // from (racy) plain loads; every write goes through per-lane atomic
+    // fetch_min so no update is lost (see module docs — this is the one
+    // deliberate deviation from the paper's benign-race OpenMP code).
+    let data_ptr = SharedLabels(labels.data.as_mut_ptr());
+
+    while !frontier.is_empty() {
+        iterations += 1;
+        let cursor = AtomicUsize::new(0);
+        let frontier_ref = &frontier;
+        let next_live_ref = &next_live;
+        let xrs_ref = &xrs;
+        let edge_visits_ref = &edge_visits;
+        let dp = &data_ptr;
+        pool.region(|_worker| {
+            let mut changed = vec![0u64; r_count.div_ceil(64)];
+            let mut lu_snap = vec![0i32; r_count];
+            let mut local_visits = 0u64;
+            loop {
+                let start = cursor.fetch_add(64, Ordering::Relaxed);
+                if start >= frontier_ref.len() {
+                    break;
+                }
+                let end = (start + 64).min(frontier_ref.len());
+                for &u in &frontier_ref[start..end] {
+                    // Snapshot u's row once; reused across its edges.
+                    // SAFETY: concurrent fetch_min writers may race these
+                    // plain loads; any torn value is a valid current-or-
+                    // older label and only affects convergence speed.
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(
+                            dp.0.add(u as usize * r_count),
+                            lu_snap.as_mut_ptr(),
+                            r_count,
+                        );
+                    }
+                    let (s, e) = (
+                        graph.xadj[u as usize] as usize,
+                        graph.xadj[u as usize + 1] as usize,
+                    );
+                    local_visits += (e - s) as u64;
+                    for idx in s..e {
+                        let v = graph.adj[idx] as usize;
+                        let thr = graph.threshold[idx];
+                        if thr == 0 {
+                            continue; // zero-probability edge: never alive
+                        }
+                        let h = graph.edge_hash[idx];
+                        // SAFETY: racy read of v's row (see above).
+                        let lv_view =
+                            unsafe { std::slice::from_raw_parts(dp.0.add(v * r_count), r_count) };
+                        let live = veclabel_row_maskonly(
+                            opts.backend,
+                            &lu_snap,
+                            lv_view,
+                            h,
+                            thr,
+                            xrs_ref,
+                            &mut changed,
+                        );
+                        if !live {
+                            continue;
+                        }
+                        // Commit only the changed lanes (straight from the
+                        // kernel's movemask bits): a changed lane's
+                        // candidate is lu_snap[lane] by definition.
+                        let mut changed_any = false;
+                        for (w, &word) in changed.iter().enumerate() {
+                            let mut bits = word;
+                            while bits != 0 {
+                                let lane = w * 64 + bits.trailing_zeros() as usize;
+                                bits &= bits - 1;
+                                let c = lu_snap[lane];
+                                // SAFETY: in-bounds; AtomicI32 layout == i32.
+                                let a = unsafe {
+                                    AtomicI32::from_ptr(dp.0.add(v * r_count + lane))
+                                };
+                                if a.fetch_min(c, Ordering::Relaxed) > c {
+                                    changed_any = true;
+                                }
+                            }
+                        }
+                        if changed_any {
+                            next_live_ref[v / 64].fetch_or(1 << (v % 64), Ordering::Relaxed);
+                        }
+                    }
+                }
+            }
+            edge_visits_ref.fetch_add(local_visits, Ordering::Relaxed);
+        });
+
+        // Rebuild the frontier from the bitset.
+        frontier.clear();
+        for (w, word) in next_live.iter().enumerate() {
+            let mut bits = word.swap(0, Ordering::Relaxed);
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                frontier.push((w * 64 + b) as u32);
+                bits &= bits - 1;
+            }
+        }
+    }
+
+    PropagationResult {
+        labels,
+        iterations,
+        edge_visits: edge_visits.load(Ordering::Relaxed),
+    }
+}
+
+/// `Sync`-safe raw pointer to the shared label matrix.
+struct SharedLabels(*mut i32);
+unsafe impl Sync for SharedLabels {}
+unsafe impl Send for SharedLabels {}
+
+// --------------------------------------------------------------------------
+// Sync (Jacobi) engine — the XLA schedule
+// --------------------------------------------------------------------------
+
+fn propagate_sync(graph: &Graph, opts: &PropagateOpts) -> PropagationResult {
+    let n = graph.num_vertices();
+    let r_count = opts.r_count;
+    let xrs = xr_stream(opts.seed, r_count);
+    let mut cur = Labels::identity(n, r_count);
+    let pool = ThreadPool::new(opts.threads);
+    let mut next = cur.data.clone();
+    let mut iterations = 0usize;
+    let mut edge_visits = 0u64;
+
+    loop {
+        iterations += 1;
+        let changed = AtomicU64::new(0);
+        // next = cur, then min-in every alive push (both directions are in
+        // CSR, so one pass over all rows covers (u,v) and (v,u)).
+        next.copy_from_slice(&cur.data);
+        {
+            let next_cells = as_send_cells(&mut next);
+            let cur_ref = &cur;
+            let xrs_ref = &xrs;
+            let changed_ref = &changed;
+            pool.region(|worker| {
+                let mut cand = vec![0i32; r_count];
+                let threads = pool.threads();
+                let mut local_changed = 0u64;
+                let mut v = worker;
+                // Static interleave: vertex v's *target* row is owned by
+                // worker (v mod threads) → no write races on next.
+                while v < n {
+                    let lv = cur_ref.row(v);
+                    let (s, e) = (
+                        graph.xadj[v] as usize,
+                        graph.xadj[v + 1] as usize,
+                    );
+                    // SAFETY: row v written only by this worker.
+                    let out = unsafe {
+                        std::slice::from_raw_parts_mut(next_cells.get(v * r_count), r_count)
+                    };
+                    for idx in s..e {
+                        let u = graph.adj[idx] as usize;
+                        let thr = graph.threshold[idx];
+                        if thr == 0 {
+                            continue;
+                        }
+                        let live = veclabel_row(
+                            opts.backend,
+                            cur_ref.row(u),
+                            lv,
+                            graph.edge_hash[idx],
+                            thr,
+                            xrs_ref,
+                            &mut cand,
+                        );
+                        if live {
+                            for lane in 0..r_count {
+                                if cand[lane] < out[lane] {
+                                    out[lane] = cand[lane];
+                                    local_changed = 1;
+                                }
+                            }
+                        }
+                    }
+                    v += threads;
+                }
+                changed_ref.fetch_or(local_changed, Ordering::Relaxed);
+            });
+        }
+        edge_visits += graph.adj.len() as u64;
+        std::mem::swap(&mut cur.data, &mut next);
+        if changed.load(Ordering::Relaxed) == 0 {
+            break;
+        }
+    }
+
+    PropagationResult {
+        labels: cur,
+        iterations,
+        edge_visits,
+    }
+}
+
+// --------------------------------------------------------------------------
+// Union-find reference (per-lane ground truth for tests)
+// --------------------------------------------------------------------------
+
+/// Per-lane connected components via union-find over alive edges — the
+/// O(m·α) ground truth the propagation engines are verified against.
+pub fn union_find_labels(graph: &Graph, r_count: usize, seed: u64) -> Labels {
+    let n = graph.num_vertices();
+    let xrs = xr_stream(seed, r_count);
+    let mut labels = Labels::identity(n, r_count);
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+
+    fn find(parent: &mut [u32], mut x: u32) -> u32 {
+        while parent[x as usize] != x {
+            parent[x as usize] = parent[parent[x as usize] as usize];
+            x = parent[x as usize];
+        }
+        x
+    }
+
+    for (lane, &xr) in xrs.iter().enumerate() {
+        for p in parent.iter_mut().enumerate() {
+            *p.1 = p.0 as u32;
+        }
+        for u in 0..n as u32 {
+            for (v, e) in graph.edges_of(u) {
+                if v < u {
+                    continue;
+                }
+                if crate::sampling::edge_alive(graph.edge_hash[e], graph.threshold[e], xr) {
+                    let (ru, rv) = (find(&mut parent, u), find(&mut parent, v));
+                    if ru != rv {
+                        // union by smaller id so the root is the min vertex
+                        let (lo, hi) = (ru.min(rv), ru.max(rv));
+                        parent[hi as usize] = lo;
+                    }
+                }
+            }
+        }
+        for v in 0..n as u32 {
+            let root = find(&mut parent, v);
+            labels.data[v as usize * r_count + lane] = root as i32;
+        }
+    }
+    labels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::GenSpec;
+    use crate::graph::WeightModel;
+    use crate::util::proptest_lite::check;
+
+    fn opts(r: usize, seed: u64, threads: usize, mode: Mode) -> PropagateOpts {
+        PropagateOpts {
+            r_count: r,
+            seed,
+            threads,
+            backend: Backend::detect(),
+            mode,
+        }
+    }
+
+    #[test]
+    fn all_alive_single_component() {
+        // p = 1.0 ⇒ every lane's sample is the whole graph; connected graph
+        // ⇒ every label becomes 0.
+        let g = crate::gen::generate(&GenSpec::grid(6, 6)).with_weights(WeightModel::Const(1.0), 1);
+        let res = propagate(&g, &opts(8, 3, 2, Mode::Async));
+        assert!(res.labels.data.iter().all(|&l| l == 0));
+        assert!(res.iterations >= 2);
+    }
+
+    #[test]
+    fn none_alive_identity() {
+        let g = crate::gen::generate(&GenSpec::grid(4, 4)).with_weights(WeightModel::Const(0.0), 1);
+        let res = propagate(&g, &opts(8, 3, 2, Mode::Async));
+        for v in 0..16 {
+            assert!(res.labels.row(v).iter().all(|&l| l == v as i32));
+        }
+    }
+
+    #[test]
+    fn async_matches_union_find() {
+        check("async-vs-uf", 12, |gen| {
+            let g = gen.gen_graph(60).with_weights(
+                WeightModel::Const(gen.prob(0.05, 0.9)),
+                gen.u64(),
+            );
+            let seed = gen.u64();
+            let res = propagate(&g, &opts(16, seed, 4, Mode::Async));
+            let uf = union_find_labels(&g, 16, seed);
+            assert_eq!(res.labels.data, uf.data, "graph {}", g.name);
+        });
+    }
+
+    #[test]
+    fn sync_matches_async_fixpoint() {
+        check("sync-vs-async", 8, |gen| {
+            let g = gen
+                .gen_graph(50)
+                .with_weights(WeightModel::Uniform(0.0, 0.6), gen.u64());
+            let seed = gen.u64();
+            let a = propagate(&g, &opts(16, seed, 3, Mode::Async));
+            let s = propagate(&g, &opts(16, seed, 3, Mode::Sync));
+            assert_eq!(a.labels.data, s.labels.data);
+        });
+    }
+
+    #[test]
+    fn threads_do_not_change_fixpoint() {
+        let g = crate::gen::generate(&GenSpec::erdos_renyi(300, 900, 5))
+            .with_weights(WeightModel::Const(0.3), 2);
+        let r1 = propagate(&g, &opts(32, 9, 1, Mode::Async));
+        let r8 = propagate(&g, &opts(32, 9, 8, Mode::Async));
+        assert_eq!(r1.labels.data, r8.labels.data);
+    }
+
+    #[test]
+    fn component_sizes_partition_n() {
+        let g = crate::gen::generate(&GenSpec::erdos_renyi(100, 200, 8))
+            .with_weights(WeightModel::Const(0.2), 4);
+        let res = propagate(&g, &opts(8, 1, 2, Mode::Async));
+        let sizes = component_sizes(&res.labels);
+        for lane in 0..8 {
+            let total: i64 = (0..100)
+                .map(|label| i64::from(sizes[label * 8 + lane]))
+                .sum();
+            assert_eq!(total, 100, "lane {lane} sizes must partition n");
+        }
+    }
+
+    #[test]
+    fn initial_gains_match_expected_component_size() {
+        let g = crate::gen::generate(&GenSpec::grid(4, 4)).with_weights(WeightModel::Const(1.0), 1);
+        let res = propagate(&g, &opts(4, 1, 1, Mode::Async));
+        let sizes = component_sizes(&res.labels);
+        let mg = initial_gains(&res.labels, &sizes, &ThreadPool::new(2));
+        // whole graph one component of 16 in every lane.
+        assert!(mg.iter().all(|&x| (x - 16.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn labels_never_increase_vs_identity() {
+        check("labels-bounded", 10, |gen| {
+            let g = gen.graph(40, 100);
+            let res = propagate(&g, &opts(8, gen.u64(), 2, Mode::Async));
+            for v in 0..g.num_vertices() {
+                for &l in res.labels.row(v) {
+                    assert!(l >= 0 && l <= v as i32);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,63 @@
+//! # INFUSER-MG — fused + vectorized influence maximization
+//!
+//! A production-grade reproduction of *"Boosting Parallel
+//! Influence-Maximization Kernels for Undirected Networks with Fusing and
+//! Vectorization"* (Göktürk & Kaya, 2020) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: CSR graph substrate, synthetic
+//!   network generators, the fused/batched/memoized INFUSER-MG algorithm,
+//!   every baseline the paper evaluates (MIXGREEDY, FUSEDSAMPLING, IMM),
+//!   the CELF machinery, an experiment runner regenerating every paper
+//!   table and figure, and a PJRT runtime executing AOT-compiled XLA
+//!   artifacts on the hot path.
+//! * **L2 (python/compile/model.py)** — the batched label-propagation
+//!   sweep and memoized marginal-gain computation as jitted JAX functions,
+//!   AOT-lowered to HLO text at build time (`make artifacts`).
+//! * **L1 (python/compile/kernels/veclabel.py)** — the paper's VECLABEL
+//!   AVX2 kernel re-thought as a Pallas TPU kernel (interpret mode on CPU).
+//!
+//! Python never runs at request time: the Rust binary loads `artifacts/`
+//! and is self-contained.
+//!
+//! ## Quick start
+//! ```no_run
+//! use infuser::gen::{self, GenSpec};
+//! use infuser::algo::{Budget, infuser::{InfuserMg, InfuserParams}};
+//! use infuser::graph::WeightModel;
+//!
+//! let g = gen::generate(&GenSpec::barabasi_albert(10_000, 4, 42))
+//!     .with_weights(WeightModel::Const(0.05), 7);
+//! let res = InfuserMg::new(InfuserParams { k: 16, r_count: 256, threads: 8, ..Default::default() })
+//!     .run(&g, &Budget::unlimited())
+//!     .unwrap();
+//! println!("seeds={:?} influence≈{:.1}", res.seeds, res.influence);
+//! ```
+
+#![warn(missing_docs)]
+
+pub mod algo;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod gen;
+pub mod graph;
+pub mod hash;
+pub mod labelprop;
+pub mod rng;
+pub mod runtime;
+pub mod sampling;
+pub mod simd;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Vertex identifier. Graphs up to `u32::MAX` vertices are supported; all
+/// hot-path state (labels, frontiers) is 32-bit to halve memory traffic,
+/// matching the paper's AVX2 epi32 lanes.
+pub type VertexId = u32;
+
+/// Edge index into the CSR `adj` array.
+pub type EdgeId = u64;

@@ -1,0 +1,259 @@
+//! `infuser` — the leader binary: CLI over the INFUSER-MG library.
+//!
+//! Subcommands:
+//!
+//! * `catalog` — list the 12 synthetic Table-3 analog datasets.
+//! * `gen` — generate a dataset and print stats (optionally save binary).
+//! * `run` — run one algorithm on one dataset, print seeds + oracle score.
+//! * `experiment` — execute a JSON experiment config (dataset × setting ×
+//!   algorithm grid) and render the paper-shaped tables.
+//! * `cdf` — the Fig. 2 analysis: hash-sampling probability CDF + KS.
+//! * `artifacts` — inspect the AOT artifact manifest and smoke-run the
+//!   XLA engine against the native one.
+//!
+//! Run `infuser <cmd> --help` for flags.
+
+use infuser::algo::{Budget, ImResult};
+use infuser::config::{AlgoSpec, DatasetRef, ExperimentConfig};
+use infuser::coordinator::{render_grid, Runner};
+use infuser::graph::WeightModel;
+use infuser::util::args::Args;
+use infuser::util::Timer;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    let cmd = argv.remove(0);
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "catalog" => cmd_catalog(),
+        "gen" => cmd_gen(&args),
+        "run" => cmd_run(&args),
+        "experiment" => cmd_experiment(&args),
+        "cdf" => cmd_cdf(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            print_usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "infuser — fused + vectorized influence maximization (INFUSER-MG)
+
+USAGE: infuser <command> [flags]
+
+COMMANDS
+  catalog                              list synthetic datasets (Table 3 analogs)
+  gen        --dataset ID[@SCALE]      generate + stats [--save out.bin]
+  run        --dataset ID --algo A     run one algorithm
+             [--weights W] [--k N] [--r N] [--threads N] [--seed N]
+             [--timeout SECS] [--oracle-r N] [--engine native|xla]
+  experiment --config FILE.json        run a full grid, render tables
+             [--markdown]
+  cdf        --dataset ID [--r N]      Fig. 2 sampling-probability CDF
+  artifacts  [--dir DIR] [--smoke]     inspect AOT manifest / cross-check
+
+ALGORITHMS  mixgreedy | fused | infuser | infuser-k1 | imm:EPS | degree | degree-discount
+WEIGHTS     const:P | uniform:LO:HI | normal:MEAN:STD | wc   (default const:0.01)"
+    );
+}
+
+fn cmd_catalog() -> infuser::Result<()> {
+    println!(
+        "{:<14} {:<14} {:>12} {:>14}  generator",
+        "id", "paper name", "paper n", "paper m"
+    );
+    for d in infuser::gen::catalog() {
+        println!(
+            "{:<14} {:<14} {:>12} {:>14}  {:?}",
+            d.id, d.paper_name, d.paper_n, d.paper_m, d.base
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> infuser::Result<()> {
+    let dref = DatasetRef::parse(args.req("dataset")?)?;
+    let timer = Timer::start();
+    let g = dref.load()?;
+    println!(
+        "{}: n={} m={} avg_deg={:.2} max_deg={} ({:.2}s)",
+        g.name,
+        g.num_vertices(),
+        g.num_edges(),
+        g.avg_degree(),
+        g.max_degree(),
+        timer.secs()
+    );
+    if let Some(path) = args.opt("save") {
+        infuser::graph::io::write_binary(&g, std::path::Path::new(path))?;
+        println!("saved to {path}");
+    }
+    Ok(())
+}
+
+fn weighted_graph(args: &Args) -> infuser::Result<infuser::graph::Graph> {
+    let dref = DatasetRef::parse(args.req("dataset")?)?;
+    let weights = WeightModel::parse(args.opt("weights").unwrap_or("const:0.01"))?;
+    let seed: u64 = args.get_or("seed", 0u64)?;
+    Ok(dref.load()?.with_weights(weights, seed ^ 0x5E77))
+}
+
+fn cmd_run(args: &Args) -> infuser::Result<()> {
+    let algo = AlgoSpec::parse(args.req("algo")?)?;
+    let graph = weighted_graph(args)?;
+    let cfg = ExperimentConfig {
+        datasets: vec![],
+        settings: vec![],
+        algos: vec![],
+        k: args.get_or("k", 50usize)?,
+        r_count: args.get_or("r", 256usize)?,
+        threads: args.get_or(
+            "threads",
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+        )?,
+        seed: args.get_or("seed", 0u64)?,
+        timeout: std::time::Duration::from_secs_f64(args.get_or("timeout", 3600.0f64)?),
+        oracle_r: args.get_or("oracle-r", 0usize)?,
+        backend: infuser::simd::Backend::parse(args.opt("backend").unwrap_or("auto"))?,
+        imm_memory_limit: args
+            .opt("imm-mem-gb")
+            .map(|v| v.parse::<f64>().map(|gb| (gb * 1073741824.0) as u64))
+            .transpose()?,
+    };
+
+    let engine = args.opt("engine").unwrap_or("native");
+    let timer = Timer::start();
+    let outcome = if engine == "xla" && matches!(algo, AlgoSpec::InfuserMg) {
+        // The three-layer path: propagation through the PJRT artifacts.
+        let xla = infuser::runtime::XlaEngine::discover()?;
+        let res: ImResult = infuser::algo::infuser::InfuserMg::new(
+            infuser::algo::infuser::InfuserParams {
+                k: cfg.k,
+                r_count: cfg.r_count,
+                seed: cfg.seed,
+                threads: cfg.threads,
+                backend: cfg.backend,
+                ..Default::default()
+            },
+        )
+        .run_with_engine(&graph, &xla, &Budget::timeout(cfg.timeout))?;
+        print_result(&graph, res, timer.secs(), &cfg);
+        return Ok(());
+    } else {
+        let runner = Runner::new(cfg.clone());
+        runner.run_cell(&graph, algo)
+    };
+    match outcome {
+        infuser::coordinator::Outcome::Done { secs, bytes, sigma_own, sigma_oracle, seeds } => {
+            println!("time: {secs:.3}s  mem: {:.3} GB", infuser::util::mem::gb(bytes));
+            println!("sigma(own): {sigma_own:.2}");
+            if let Some(s) = sigma_oracle {
+                println!("sigma(oracle): {s:.2}");
+            }
+            println!("seeds: {seeds:?}");
+        }
+        other => println!("outcome: {}", other.time_cell()),
+    }
+    Ok(())
+}
+
+fn print_result(g: &infuser::graph::Graph, res: ImResult, secs: f64, cfg: &ExperimentConfig) {
+    println!("time: {secs:.3}s");
+    println!("sigma(own): {:.2}", res.influence);
+    if cfg.oracle_r > 0 {
+        let s = infuser::algo::oracle::influence_score(
+            g,
+            &res.seeds,
+            &infuser::algo::oracle::OracleParams {
+                r_count: cfg.oracle_r,
+                seed: 0x0AC1E,
+                threads: cfg.threads,
+            },
+        );
+        println!("sigma(oracle): {s:.2}");
+    }
+    println!("seeds: {:?}", res.seeds);
+}
+
+fn cmd_experiment(args: &Args) -> infuser::Result<()> {
+    let path = args.req("config")?;
+    let text = std::fs::read_to_string(path)?;
+    let cfg = ExperimentConfig::from_json(&text)?;
+    let runner = Runner::new(cfg);
+    let cells = runner.run_grid()?;
+    let md = args.flag("markdown");
+    for (title, pick) in [
+        ("Execution time (s)", (|o| o.time_cell()) as fn(&infuser::coordinator::Outcome) -> String),
+        ("Memory (GB)", |o| o.mem_cell()),
+        ("Influence score", |o| o.influence_cell()),
+    ] {
+        let t = render_grid(&cells, title, pick);
+        println!("{}", if md { t.render_markdown() } else { t.render() });
+    }
+    Ok(())
+}
+
+fn cmd_cdf(args: &Args) -> infuser::Result<()> {
+    let graph = weighted_graph(args)?;
+    let r = args.get_or("r", 64usize)?;
+    let rep = infuser::sampling::cdf_report(&graph, r, args.get_or("seed", 0u64)?, 20);
+    println!("# Fig. 2 CDF for {} ({} samples)", graph.name, rep.samples);
+    println!("{:>8} {:>8}", "x", "F(x)");
+    for (x, f) in &rep.series {
+        println!("{x:>8.3} {f:>8.4}");
+    }
+    println!("KS distance to U[0,1]: {:.5}", rep.ks);
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> infuser::Result<()> {
+    let dir = std::path::PathBuf::from(args.opt("dir").unwrap_or("artifacts"));
+    let arts = infuser::runtime::Artifacts::load(&dir)?;
+    println!("artifacts at {}:", arts.dir.display());
+    for e in &arts.entries {
+        println!("  {:<12} n={:<6} m2={:<7} r={:<4} {}", e.kind.as_str(), e.n, e.m2, e.r, e.file);
+    }
+    if args.flag("smoke") {
+        // Cross-check the XLA engine against the native one on a small graph.
+        let g = infuser::gen::generate(&infuser::gen::GenSpec::erdos_renyi(200, 600, 7))
+            .with_weights(WeightModel::Const(0.2), 3);
+        let opts = infuser::labelprop::PropagateOpts {
+            r_count: 64,
+            seed: 11,
+            threads: 2,
+            ..Default::default()
+        };
+        let native = infuser::labelprop::propagate(&g, &opts);
+        let xla = infuser::runtime::XlaEngine::new(arts)?;
+        use infuser::engine::Engine;
+        let x = xla.propagate(&g, &opts)?;
+        anyhow::ensure!(
+            native.labels.data == x.labels.data,
+            "native and XLA label matrices differ!"
+        );
+        println!("smoke OK: native and XLA fixpoints identical (n=200, R=64)");
+    }
+    Ok(())
+}

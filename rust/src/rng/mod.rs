@@ -1,0 +1,100 @@
+//! Pseudo-random number substrate.
+//!
+//! Everything in this crate that consumes randomness goes through one of
+//! the generators here, seeded explicitly, so every experiment is
+//! reproducible bit-for-bit. Three generators are provided:
+//!
+//! * [`SplitMix64`] — the seed-expansion workhorse. Also used to derive the
+//!   per-simulation `X_r` values of the fused sampler (the determinism
+//!   contract shared with the JAX layer, see `sampling`).
+//! * [`Pcg32`] — fast general-purpose stream for samplers/generators.
+//! * [`Mt19937`] — the Mersenne Twister used by Chen et al.'s original
+//!   MIXGREEDY oracle (`std::mt19937` in the paper, §4.2). Re-implemented
+//!   here so the influence-score oracle matches the paper's methodology.
+
+mod mt19937;
+mod normal;
+mod pcg;
+mod splitmix;
+
+pub use mt19937::Mt19937;
+pub use normal::NormalDist;
+pub use pcg::Pcg32;
+pub use splitmix::SplitMix64;
+
+/// Common interface for the 32-bit generators in this module.
+pub trait Rng32 {
+    /// Next raw 32-bit output.
+    fn next_u32(&mut self) -> u32;
+
+    /// Uniform `f64` in `[0, 1)` with 32 bits of resolution.
+    #[inline]
+    fn next_f64(&mut self) -> f64 {
+        f64::from(self.next_u32()) / (u32::MAX as f64 + 1.0)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire-style rejection-free bias is
+    /// negligible for our bounds; we use the widening-multiply trick).
+    #[inline]
+    fn below(&mut self, bound: u32) -> u32 {
+        ((u64::from(self.next_u32()) * u64::from(bound)) >> 32) as u32
+    }
+}
+
+impl Rng32 for Pcg32 {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        Pcg32::next(self)
+    }
+}
+
+impl Rng32 for Mt19937 {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        Mt19937::next(self)
+    }
+}
+
+impl Rng32 for SplitMix64 {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        (SplitMix64::next(self) >> 32) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn below_is_in_range() {
+        let mut rng = Pcg32::seeded(1, 2);
+        for bound in [1u32, 2, 3, 17, 1000, u32::MAX] {
+            for _ in 0..100 {
+                assert!(rng.below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn next_f64_unit_interval() {
+        let mut rng = Pcg32::seeded(3, 4);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a: Vec<u32> = {
+            let mut r = Pcg32::seeded(42, 54);
+            (0..8).map(|_| r.next_u32()).collect()
+        };
+        let b: Vec<u32> = {
+            let mut r = Pcg32::seeded(42, 54);
+            (0..8).map(|_| r.next_u32()).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

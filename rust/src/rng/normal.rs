@@ -1,0 +1,75 @@
+//! Normal (Gaussian) variate generation via Box–Muller, used by the
+//! `N(0.05, 0.025)` edge-weight setting of the paper's evaluation (§4.1,
+//! setting 4: 95% of weights in `[0, 0.1]`).
+
+use super::Rng32;
+
+/// A `N(mean, std)` sampler with one cached variate (Box–Muller produces
+/// pairs).
+#[derive(Clone, Debug)]
+pub struct NormalDist {
+    mean: f64,
+    std: f64,
+    cached: Option<f64>,
+}
+
+impl NormalDist {
+    /// Create a sampler for `N(mean, std)`.
+    pub fn new(mean: f64, std: f64) -> Self {
+        assert!(std >= 0.0, "standard deviation must be non-negative");
+        Self {
+            mean,
+            std,
+            cached: None,
+        }
+    }
+
+    /// Draw one variate using `rng` as the uniform source.
+    pub fn sample<R: Rng32>(&mut self, rng: &mut R) -> f64 {
+        if let Some(z) = self.cached.take() {
+            return self.mean + self.std * z;
+        }
+        // Box–Muller: u1 in (0,1], u2 in [0,1).
+        let u1 = (f64::from(rng.next_u32()) + 1.0) / (u32::MAX as f64 + 1.0);
+        let u2 = rng.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        let (s, c) = theta.sin_cos();
+        self.cached = Some(r * s);
+        self.mean + self.std * r * c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn moments_are_close() {
+        let mut rng = Pcg32::seeded(11, 13);
+        let mut dist = NormalDist::new(0.05, 0.025);
+        let n = 200_000;
+        let samples: Vec<f64> = (0..n).map(|_| dist.sample(&mut rng)).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 0.05).abs() < 5e-4, "mean={mean}");
+        assert!((var.sqrt() - 0.025).abs() < 5e-4, "std={}", var.sqrt());
+    }
+
+    #[test]
+    fn ninety_five_pct_within_two_sigma_band() {
+        // Paper setting 4: 95% of weights lie in [0, 0.1].
+        let mut rng = Pcg32::seeded(1, 1);
+        let mut dist = NormalDist::new(0.05, 0.025);
+        let n = 100_000;
+        let inside = (0..n)
+            .filter(|_| {
+                let x = dist.sample(&mut rng);
+                (0.0..=0.1).contains(&x)
+            })
+            .count();
+        let frac = inside as f64 / n as f64;
+        assert!((frac - 0.954).abs() < 0.01, "frac={frac}");
+    }
+}

@@ -1,0 +1,186 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` and
+//! the Rust runtime. `make artifacts` writes `artifacts/manifest.json`
+//! describing every lowered HLO module and its shape bucket; this module
+//! parses it (with the in-crate mini-JSON parser) and picks buckets.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// What a lowered module computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EntryKind {
+    /// One Jacobi label-propagation sweep: `(labels, eu, ev, h, thr, X) → labels'`.
+    LpSweep,
+    /// Sweeps to fixpoint in one call: same inputs → `(labels*, iterations)`.
+    LpConverge,
+    /// Memoized marginal gains: `(labels, covered) → (sizes, mg_scaled)`.
+    MgCompute,
+}
+
+impl EntryKind {
+    /// Parse the manifest's `kind` string.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "lp_sweep" => Ok(Self::LpSweep),
+            "lp_converge" => Ok(Self::LpConverge),
+            "mg_compute" => Ok(Self::MgCompute),
+            other => Err(anyhow::anyhow!("unknown artifact kind '{other}'")),
+        }
+    }
+
+    /// Manifest string for this kind.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::LpSweep => "lp_sweep",
+            Self::LpConverge => "lp_converge",
+            Self::MgCompute => "mg_compute",
+        }
+    }
+}
+
+/// One artifact: a lowered HLO module at a concrete shape bucket.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    /// Computation kind.
+    pub kind: EntryKind,
+    /// File name inside the artifacts directory.
+    pub file: String,
+    /// Vertex capacity `N` of the bucket.
+    pub n: usize,
+    /// Directed-edge capacity `M₂` (CSR copies, i.e. `2m` slots).
+    pub m2: usize,
+    /// Lane (simulation) count `R` the module was lowered for.
+    pub r: usize,
+}
+
+/// The parsed artifacts directory.
+#[derive(Debug)]
+pub struct Artifacts {
+    /// Directory holding the `.hlo.txt` files.
+    pub dir: PathBuf,
+    /// All manifest entries.
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Artifacts {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> crate::Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} ({e}) — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let json = Json::parse(&text)?;
+        let version = json.req_i64("version")?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let mut entries = Vec::new();
+        for e in json
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'entries' array"))?
+        {
+            entries.push(ManifestEntry {
+                kind: EntryKind::parse(e.req_str("kind")?)?,
+                file: e.req_str("file")?.to_string(),
+                n: e.req_i64("n")? as usize,
+                m2: e.req_i64("m2")? as usize,
+                r: e.req_i64("r")? as usize,
+            });
+        }
+        anyhow::ensure!(!entries.is_empty(), "manifest has no entries");
+        Ok(Self { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Conventional location (`artifacts/` beside the binary's cwd or the
+    /// `INFUSER_ARTIFACTS` env override); `None` when not built yet.
+    pub fn discover() -> Option<Self> {
+        let dir = std::env::var("INFUSER_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"));
+        Self::load(&dir).ok()
+    }
+
+    /// Smallest bucket of `kind` fitting a graph with `n` vertices and
+    /// `m2` directed edge copies at lane count ≥ `r`.
+    pub fn pick(&self, kind: EntryKind, n: usize, m2: usize, r: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind && e.n >= n && e.m2 >= m2 && e.r >= r)
+            .min_by_key(|e| (e.n, e.m2, e.r))
+    }
+
+    /// All distinct bucket geometries for a kind (diagnostics / tests).
+    pub fn buckets(&self, kind: EntryKind) -> Vec<(usize, usize, usize)> {
+        let mut v: Vec<_> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| (e.n, e.m2, e.r))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> String {
+        r#"{
+            "version": 1,
+            "entries": [
+                {"kind": "lp_converge", "file": "a.hlo.txt", "n": 256, "m2": 2048, "r": 64},
+                {"kind": "lp_converge", "file": "b.hlo.txt", "n": 1024, "m2": 8192, "r": 64},
+                {"kind": "mg_compute", "file": "c.hlo.txt", "n": 256, "m2": 0, "r": 64}
+            ]
+        }"#
+        .to_string()
+    }
+
+    fn write_sample(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
+    }
+
+    #[test]
+    fn parse_and_pick_smallest_fitting_bucket() {
+        let dir = std::env::temp_dir().join("infuser-manifest-test");
+        write_sample(&dir);
+        let arts = Artifacts::load(&dir).unwrap();
+        assert_eq!(arts.entries.len(), 3);
+        let e = arts.pick(EntryKind::LpConverge, 200, 1500, 64).unwrap();
+        assert_eq!(e.n, 256);
+        let e = arts.pick(EntryKind::LpConverge, 300, 1500, 64).unwrap();
+        assert_eq!(e.n, 1024, "n=300 overflows the 256 bucket");
+        assert!(arts.pick(EntryKind::LpConverge, 5000, 10, 64).is_none());
+        assert!(arts.pick(EntryKind::LpConverge, 10, 10, 128).is_none(), "r too large");
+    }
+
+    #[test]
+    fn buckets_listing_is_sorted() {
+        let dir = std::env::temp_dir().join("infuser-manifest-test2");
+        write_sample(&dir);
+        let arts = Artifacts::load(&dir).unwrap();
+        assert_eq!(
+            arts.buckets(EntryKind::LpConverge),
+            vec![(256, 2048, 64), (1024, 8192, 64)]
+        );
+    }
+
+    #[test]
+    fn missing_manifest_is_a_helpful_error() {
+        let err = Artifacts::load(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn kind_round_trips() {
+        for k in [EntryKind::LpSweep, EntryKind::LpConverge, EntryKind::MgCompute] {
+            assert_eq!(EntryKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(EntryKind::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,569 @@
+//! VECLABEL (paper Alg. 6): the vectorized per-edge kernel.
+//!
+//! For one edge `(u,v)` and one batch of `B = 8` simulations the kernel
+//! performs, entirely in `i32` lanes:
+//!
+//! ```text
+//! labels = min(l_u, l_v)                       // cmpgt + blendv
+//! probs  = X ⊕ splat(h(u,v))                   // xor
+//! select = splat(thr(w)) > probs               // cmpgt  (sampled lanes)
+//! l_v'   = select ? labels : l_v               // blendv
+//! live   = movemask(select & (l_v > l_u))      // any lane changed?
+//! ```
+//!
+//! Note on the paper's Alg. 6 line 8: it computes `live` from
+//! `select & cmpgt(l_u, l_v)`, i.e. lanes where *`l_v` is already the
+//! smaller* — which never change. We use `cmpgt(l_v, l_u)` (lanes where
+//! the push actually lowers `l_v`), which is the condition Alg. 5 line 13
+//! specifies; we read the Alg. 6 operand order as a typo. The discrepancy
+//! is covered by `tests::live_flag_matches_actual_change`.
+//!
+//! Two backends with identical semantics (property-tested against each
+//! other): a portable scalar loop and an AVX2 implementation using the
+//! exact intrinsic sequence of the paper's Table 2. Backend choice is made
+//! once per run ([`Backend::detect`]) and threaded through the engines.
+
+use crate::hash::HASH_MASK;
+
+/// Lane batch width — AVX2 holds 8 × i32 (the paper's `B = 8`).
+pub const B: usize = 8;
+
+/// Kernel backend selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Portable scalar lanes (auto-vectorizer friendly but not required).
+    Scalar,
+    /// AVX2 intrinsics (runtime-detected).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+}
+
+impl Backend {
+    /// Pick the fastest backend available on this CPU.
+    pub fn detect() -> Self {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return Backend::Avx2;
+            }
+        }
+        Backend::Scalar
+    }
+
+    /// Parse from CLI string (`scalar` / `avx2` / `auto`).
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "scalar" => Ok(Backend::Scalar),
+            "auto" => Ok(Self::detect()),
+            #[cfg(target_arch = "x86_64")]
+            "avx2" => {
+                anyhow::ensure!(
+                    std::arch::is_x86_feature_detected!("avx2"),
+                    "avx2 requested but not available"
+                );
+                Ok(Backend::Avx2)
+            }
+            other => Err(anyhow::anyhow!("unknown backend '{other}'")),
+        }
+    }
+
+    /// Label for logs/tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Compute VECLABEL candidates for a full `R`-lane row.
+///
+/// `cand[r] = alive(r) ? min(lu[r], lv[r]) : lv[r]`; returns `true` iff any
+/// lane strictly decreased (`cand[r] < lv[r]`), i.e. the paper's `live_v`.
+/// All slices must share the same length.
+#[inline]
+pub fn veclabel_row(
+    backend: Backend,
+    lu: &[i32],
+    lv: &[i32],
+    hash: u32,
+    thr: i32,
+    xrs: &[i32],
+    cand: &mut [i32],
+) -> bool {
+    debug_assert_eq!(lu.len(), lv.len());
+    debug_assert_eq!(lu.len(), xrs.len());
+    debug_assert_eq!(lu.len(), cand.len());
+    match backend {
+        Backend::Scalar => veclabel_row_scalar(lu, lv, hash, thr, xrs, cand),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => {
+            // SAFETY: constructor verified the CPU supports AVX2.
+            unsafe { veclabel_row_avx2(lu, lv, hash, thr, xrs, cand) }
+        }
+    }
+}
+
+/// Scalar reference implementation (also the semantic spec for L1's
+/// Pallas kernel — `python/compile/kernels/ref.py` mirrors this loop).
+pub fn veclabel_row_scalar(
+    lu: &[i32],
+    lv: &[i32],
+    hash: u32,
+    thr: i32,
+    xrs: &[i32],
+    cand: &mut [i32],
+) -> bool {
+    let mut live = false;
+    for r in 0..lu.len() {
+        let sampled = (((xrs[r] as u32) ^ hash) & HASH_MASK) < thr as u32;
+        let min = lu[r].min(lv[r]);
+        let c = if sampled { min } else { lv[r] };
+        live |= c < lv[r];
+        cand[r] = c;
+    }
+    live
+}
+
+/// AVX2 implementation: the paper's Table 2 intrinsic sequence.
+///
+/// # Safety
+/// Requires AVX2. Slices may have any length; the tail (< 8 lanes) is
+/// handled by the scalar kernel.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn veclabel_row_avx2(
+    lu: &[i32],
+    lv: &[i32],
+    hash: u32,
+    thr: i32,
+    xrs: &[i32],
+    cand: &mut [i32],
+) -> bool {
+    use std::arch::x86_64::*;
+    let n = lu.len();
+    let mut live_bits: i32 = 0;
+    let hashes = _mm256_set1_epi32(hash as i32); //  _mm256_set1_epi32
+    let w_vec = _mm256_set1_epi32(thr); //           promoted ⌊w·2³¹⌋
+    let mask31 = _mm256_set1_epi32(HASH_MASK as i32);
+    let mut r = 0;
+    while r + B <= n {
+        let l_u = _mm256_loadu_si256(lu.as_ptr().add(r) as *const __m256i);
+        let l_v = _mm256_loadu_si256(lv.as_ptr().add(r) as *const __m256i);
+        // mask: lanes where the push lowers l_v (see module doc re Alg. 6).
+        let mask = _mm256_cmpgt_epi32(l_v, l_u);
+        // labels = min(l_u, l_v): take l_u where l_v > l_u.
+        let labels = _mm256_blendv_epi8(l_v, l_u, mask);
+        let x = _mm256_loadu_si256(xrs.as_ptr().add(r) as *const __m256i);
+        // probs = (X ⊕ h) & 0x7fffffff  — 31-bit, non-negative.
+        let probs = _mm256_and_si256(_mm256_xor_si256(hashes, x), mask31);
+        // select = thr > probs  (signed compare, both operands ≥ 0).
+        let select = _mm256_cmpgt_epi32(w_vec, probs);
+        // l_v' = select ? labels : l_v.
+        let out = _mm256_blendv_epi8(l_v, labels, select);
+        _mm256_storeu_si256(cand.as_mut_ptr().add(r) as *mut __m256i, out);
+        // live = movemask(select & mask) — lanes that actually changed.
+        live_bits |= _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_and_si256(select, mask)));
+        r += B;
+    }
+    let mut live = live_bits != 0;
+    if r < n {
+        live |= veclabel_row_scalar(&lu[r..], &lv[r..], hash, thr, &xrs[r..], &mut cand[r..]);
+    }
+    live
+}
+
+/// VECLABEL with a changed-lane bitmask: like [`veclabel_row`], but also
+/// fills `mask[w]` bit `b` for every lane `w*64 + b` whose candidate is a
+/// strict improvement (`cand < lv`). The async engine commits only those
+/// lanes (atomic `fetch_min`s are ~20× the cost of the compare, and on
+/// converged rows almost no lane changes — §Perf iteration 1).
+///
+/// `mask` must hold `ceil(len / 64)` words; they are overwritten.
+#[inline]
+pub fn veclabel_row_masked(
+    backend: Backend,
+    lu: &[i32],
+    lv: &[i32],
+    hash: u32,
+    thr: i32,
+    xrs: &[i32],
+    cand: &mut [i32],
+    mask: &mut [u64],
+) -> bool {
+    debug_assert_eq!(lu.len(), lv.len());
+    debug_assert!(mask.len() >= lu.len().div_ceil(64));
+    match backend {
+        Backend::Scalar => veclabel_row_masked_scalar(lu, lv, hash, thr, xrs, cand, mask),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => {
+            // SAFETY: constructor verified the CPU supports AVX2.
+            unsafe { veclabel_row_masked_avx2(lu, lv, hash, thr, xrs, cand, mask) }
+        }
+    }
+}
+
+/// Scalar masked kernel.
+pub fn veclabel_row_masked_scalar(
+    lu: &[i32],
+    lv: &[i32],
+    hash: u32,
+    thr: i32,
+    xrs: &[i32],
+    cand: &mut [i32],
+    mask: &mut [u64],
+) -> bool {
+    for w in mask.iter_mut() {
+        *w = 0;
+    }
+    let mut live = false;
+    for r in 0..lu.len() {
+        let sampled = (((xrs[r] as u32) ^ hash) & HASH_MASK) < thr as u32;
+        let min = lu[r].min(lv[r]);
+        let c = if sampled { min } else { lv[r] };
+        cand[r] = c;
+        if c < lv[r] {
+            mask[r / 64] |= 1u64 << (r % 64);
+            live = true;
+        }
+    }
+    live
+}
+
+/// AVX2 masked kernel: the paper's Table 2 sequence; the changed-lane
+/// bits come straight out of `movemask(select & cmpgt(l_v, l_u))`.
+///
+/// # Safety
+/// Requires AVX2.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn veclabel_row_masked_avx2(
+    lu: &[i32],
+    lv: &[i32],
+    hash: u32,
+    thr: i32,
+    xrs: &[i32],
+    cand: &mut [i32],
+    mask: &mut [u64],
+) -> bool {
+    use std::arch::x86_64::*;
+    for w in mask.iter_mut() {
+        *w = 0;
+    }
+    let n = lu.len();
+    let mut any: u64 = 0;
+    let hashes = _mm256_set1_epi32(hash as i32);
+    let w_vec = _mm256_set1_epi32(thr);
+    let mask31 = _mm256_set1_epi32(HASH_MASK as i32);
+    let mut r = 0;
+    while r + B <= n {
+        let l_u = _mm256_loadu_si256(lu.as_ptr().add(r) as *const __m256i);
+        let l_v = _mm256_loadu_si256(lv.as_ptr().add(r) as *const __m256i);
+        let gt = _mm256_cmpgt_epi32(l_v, l_u);
+        let labels = _mm256_blendv_epi8(l_v, l_u, gt);
+        let x = _mm256_loadu_si256(xrs.as_ptr().add(r) as *const __m256i);
+        let probs = _mm256_and_si256(_mm256_xor_si256(hashes, x), mask31);
+        let select = _mm256_cmpgt_epi32(w_vec, probs);
+        let out = _mm256_blendv_epi8(l_v, labels, select);
+        _mm256_storeu_si256(cand.as_mut_ptr().add(r) as *mut __m256i, out);
+        let bits =
+            _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_and_si256(select, gt))) as u32 as u64;
+        mask[r / 64] |= bits << (r % 64);
+        any |= bits;
+        r += B;
+    }
+    if r < n {
+        let mut tail_mask = [0u64; 4];
+        let tail_live = veclabel_row_masked_scalar(
+            &lu[r..],
+            &lv[r..],
+            hash,
+            thr,
+            &xrs[r..],
+            &mut cand[r..],
+            &mut tail_mask,
+        );
+        if tail_live {
+            any |= 1;
+            for (i, w) in tail_mask.iter().enumerate() {
+                if *w != 0 {
+                    let base = r + i * 64;
+                    let mut bits = *w;
+                    while bits != 0 {
+                        let b = bits.trailing_zeros() as usize;
+                        mask[(base + b) / 64] |= 1u64 << ((base + b) % 64);
+                        bits &= bits - 1;
+                    }
+                }
+            }
+        }
+    }
+    any != 0
+}
+
+/// Mask-only VECLABEL: computes *just* the changed-lane bitmask, storing
+/// no candidate row at all. For a changed lane the candidate is by
+/// definition `lu[lane]` (changed ⟺ alive ∧ lu < lv), so the async
+/// engine can commit `fetch_min(lv[lane], lu[lane])` straight from the
+/// snapshot — halving the kernel's memory traffic (§Perf iteration 2).
+#[inline]
+pub fn veclabel_row_maskonly(
+    backend: Backend,
+    lu: &[i32],
+    lv: &[i32],
+    hash: u32,
+    thr: i32,
+    xrs: &[i32],
+    mask: &mut [u64],
+) -> bool {
+    debug_assert_eq!(lu.len(), lv.len());
+    debug_assert!(mask.len() >= lu.len().div_ceil(64));
+    match backend {
+        Backend::Scalar => veclabel_row_maskonly_scalar(lu, lv, hash, thr, xrs, mask),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => {
+            // SAFETY: constructor verified the CPU supports AVX2.
+            unsafe { veclabel_row_maskonly_avx2(lu, lv, hash, thr, xrs, mask) }
+        }
+    }
+}
+
+/// Scalar mask-only kernel.
+pub fn veclabel_row_maskonly_scalar(
+    lu: &[i32],
+    lv: &[i32],
+    hash: u32,
+    thr: i32,
+    xrs: &[i32],
+    mask: &mut [u64],
+) -> bool {
+    for w in mask.iter_mut() {
+        *w = 0;
+    }
+    let mut live = false;
+    for r in 0..lu.len() {
+        let sampled = (((xrs[r] as u32) ^ hash) & HASH_MASK) < thr as u32;
+        if sampled && lu[r] < lv[r] {
+            mask[r / 64] |= 1u64 << (r % 64);
+            live = true;
+        }
+    }
+    live
+}
+
+/// AVX2 mask-only kernel.
+///
+/// # Safety
+/// Requires AVX2.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn veclabel_row_maskonly_avx2(
+    lu: &[i32],
+    lv: &[i32],
+    hash: u32,
+    thr: i32,
+    xrs: &[i32],
+    mask: &mut [u64],
+) -> bool {
+    use std::arch::x86_64::*;
+    for w in mask.iter_mut() {
+        *w = 0;
+    }
+    let n = lu.len();
+    let mut any: u64 = 0;
+    let hashes = _mm256_set1_epi32(hash as i32);
+    let w_vec = _mm256_set1_epi32(thr);
+    let mask31 = _mm256_set1_epi32(HASH_MASK as i32);
+    let mut r = 0;
+    while r + B <= n {
+        let l_u = _mm256_loadu_si256(lu.as_ptr().add(r) as *const __m256i);
+        let l_v = _mm256_loadu_si256(lv.as_ptr().add(r) as *const __m256i);
+        let gt = _mm256_cmpgt_epi32(l_v, l_u);
+        let x = _mm256_loadu_si256(xrs.as_ptr().add(r) as *const __m256i);
+        let probs = _mm256_and_si256(_mm256_xor_si256(hashes, x), mask31);
+        let select = _mm256_cmpgt_epi32(w_vec, probs);
+        let bits =
+            _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_and_si256(select, gt))) as u32 as u64;
+        mask[r / 64] |= bits << (r % 64);
+        any |= bits;
+        r += B;
+    }
+    let mut live = any != 0;
+    if r < n {
+        let mut tail = [0u64; 4];
+        if veclabel_row_maskonly_scalar(&lu[r..], &lv[r..], hash, thr, &xrs[r..], &mut tail) {
+            live = true;
+            for (i, w) in tail.iter().enumerate() {
+                let mut bits = *w;
+                while bits != 0 {
+                    let b = bits.trailing_zeros() as usize;
+                    let lane = r + i * 64 + b;
+                    mask[lane / 64] |= 1u64 << (lane % 64);
+                    bits &= bits - 1;
+                }
+            }
+        }
+    }
+    live
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::weights::prob_to_threshold;
+    use crate::sampling::{edge_alive, xr_stream};
+    use crate::util::proptest_lite::check;
+
+    fn backends() -> Vec<Backend> {
+        let mut v = vec![Backend::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            v.push(Backend::Avx2);
+        }
+        v
+    }
+
+    #[test]
+    fn candidates_match_spec_all_backends() {
+        check("veclabel-spec", 50, |g| {
+            let r_count = g.size(1, 40);
+            let lu: Vec<i32> = (0..r_count).map(|_| g.below(1000) as i32).collect();
+            let lv: Vec<i32> = (0..r_count).map(|_| g.below(1000) as i32).collect();
+            let hash = g.below(u32::MAX) & HASH_MASK;
+            let thr = prob_to_threshold(g.prob(0.0, 1.0));
+            let xrs = xr_stream(g.u64(), r_count);
+            for backend in backends() {
+                let mut cand = vec![0i32; r_count];
+                let live = veclabel_row(backend, &lu, &lv, hash, thr, &xrs, &mut cand);
+                let mut expect_live = false;
+                for r in 0..r_count {
+                    let expected = if edge_alive(hash, thr, xrs[r]) {
+                        lu[r].min(lv[r])
+                    } else {
+                        lv[r]
+                    };
+                    assert_eq!(cand[r], expected, "backend {backend:?} lane {r}");
+                    expect_live |= expected < lv[r];
+                }
+                assert_eq!(live, expect_live, "backend {backend:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn avx2_equals_scalar_bitwise() {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if !std::arch::is_x86_feature_detected!("avx2") {
+                return;
+            }
+            check("avx2-eq-scalar", 100, |g| {
+                let r_count = g.size(1, 64);
+                let lu: Vec<i32> = (0..r_count).map(|_| g.below(1 << 30) as i32).collect();
+                let lv: Vec<i32> = (0..r_count).map(|_| g.below(1 << 30) as i32).collect();
+                let hash = g.below(u32::MAX) & HASH_MASK;
+                let thr = prob_to_threshold(g.prob(0.0, 1.0));
+                let xrs = xr_stream(g.u64(), r_count);
+                let mut c1 = vec![0i32; r_count];
+                let mut c2 = vec![0i32; r_count];
+                let l1 = veclabel_row(Backend::Scalar, &lu, &lv, hash, thr, &xrs, &mut c1);
+                let l2 = veclabel_row(Backend::Avx2, &lu, &lv, hash, thr, &xrs, &mut c2);
+                assert_eq!(c1, c2);
+                assert_eq!(l1, l2);
+            });
+        }
+    }
+
+    #[test]
+    fn live_flag_matches_actual_change() {
+        // Regression for the Alg. 6 line-8 operand-order reading: live must
+        // be true exactly when some lane's l_v strictly decreases.
+        let lu = vec![5, 100];
+        let lv = vec![10, 1];
+        let xrs = vec![0, 0];
+        // threshold that samples everything
+        let thr = i32::MAX;
+        let mut cand = vec![0; 2];
+        for backend in backends() {
+            let live = veclabel_row(backend, &lu, &lv, 0, thr, &xrs, &mut cand);
+            assert_eq!(cand, vec![5, 1]);
+            assert!(live, "lane 0 changed 10→5");
+        }
+        // Now l_v already minimal everywhere → not live.
+        let lu2 = vec![50, 100];
+        let lv2 = vec![5, 1];
+        for backend in backends() {
+            let live = veclabel_row(backend, &lu2, &lv2, 0, thr, &xrs, &mut cand);
+            assert!(!live);
+            assert_eq!(cand, vec![5, 1]);
+        }
+    }
+
+    #[test]
+    fn masked_variant_matches_plain_and_flags_exact_lanes() {
+        check("veclabel-masked", 60, |g| {
+            let r_count = g.size(1, 80);
+            let lu: Vec<i32> = (0..r_count).map(|_| g.below(1000) as i32).collect();
+            let lv: Vec<i32> = (0..r_count).map(|_| g.below(1000) as i32).collect();
+            let hash = g.below(u32::MAX) & HASH_MASK;
+            let thr = prob_to_threshold(g.prob(0.0, 1.0));
+            let xrs = xr_stream(g.u64(), r_count);
+            for backend in backends() {
+                let mut c1 = vec![0i32; r_count];
+                let mut c2 = vec![0i32; r_count];
+                let mut mask = vec![0u64; r_count.div_ceil(64)];
+                let l1 = veclabel_row(backend, &lu, &lv, hash, thr, &xrs, &mut c1);
+                let l2 = veclabel_row_masked(backend, &lu, &lv, hash, thr, &xrs, &mut c2, &mut mask);
+                assert_eq!(c1, c2, "backend {backend:?}");
+                assert_eq!(l1, l2, "backend {backend:?}");
+                for r in 0..r_count {
+                    let flagged = mask[r / 64] >> (r % 64) & 1 == 1;
+                    assert_eq!(flagged, c2[r] < lv[r], "backend {backend:?} lane {r}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn maskonly_matches_masked_variant() {
+        check("veclabel-maskonly", 60, |g| {
+            let r_count = g.size(1, 100);
+            let lu: Vec<i32> = (0..r_count).map(|_| g.below(1000) as i32).collect();
+            let lv: Vec<i32> = (0..r_count).map(|_| g.below(1000) as i32).collect();
+            let hash = g.below(u32::MAX) & HASH_MASK;
+            let thr = prob_to_threshold(g.prob(0.0, 1.0));
+            let xrs = xr_stream(g.u64(), r_count);
+            let words = r_count.div_ceil(64);
+            for backend in backends() {
+                let mut cand = vec![0i32; r_count];
+                let mut m1 = vec![0u64; words];
+                let mut m2 = vec![0u64; words];
+                let l1 =
+                    veclabel_row_masked(backend, &lu, &lv, hash, thr, &xrs, &mut cand, &mut m1);
+                let l2 = veclabel_row_maskonly(backend, &lu, &lv, hash, thr, &xrs, &mut m2);
+                assert_eq!(m1, m2, "backend {backend:?}");
+                assert_eq!(l1, l2, "backend {backend:?}");
+                // Changed lanes' candidates are exactly lu.
+                for r in 0..r_count {
+                    if m2[r / 64] >> (r % 64) & 1 == 1 {
+                        assert_eq!(cand[r], lu[r]);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn unsampled_lanes_never_change() {
+        let lu = vec![0i32; 16];
+        let lv: Vec<i32> = (1..17).collect();
+        let xrs = xr_stream(3, 16);
+        let mut cand = vec![0; 16];
+        for backend in backends() {
+            let live = veclabel_row(backend, &lu, &lv, 12345, 0, &xrs, &mut cand);
+            assert!(!live);
+            assert_eq!(cand, lv);
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Mini CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `program SUBCOMMAND [--flag] [--key value]... [positional]...`
+//! Typed accessors report missing/invalid options with helpful messages.
+
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> crate::Result<Self> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process command line.
+    pub fn from_env() -> crate::Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// True if `--name` was passed as a switch.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Optional string option.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    /// Required string option.
+    pub fn req(&self, name: &str) -> crate::Result<&str> {
+        self.opt(name)
+            .with_context(|| format!("missing required option --{name}"))
+    }
+
+    /// Typed option with a default.
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> crate::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad value for --{name}: {e}")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        self.opt(name)
+            .map(|s| s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn basic_grammar() {
+        // NB: `--name value` grammar means a switch must not be directly
+        // followed by a bare token (it would parse as the switch's value).
+        let a = parse(&["run", "--dataset", "amazon", "--k=50", "extra", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.opt("dataset"), Some("amazon"));
+        assert_eq!(a.opt("k"), Some("50"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&["x", "--k", "10"]);
+        assert_eq!(a.get_or("k", 5usize).unwrap(), 10);
+        assert_eq!(a.get_or("r", 256usize).unwrap(), 256);
+        assert!(a.get_or::<usize>("k", 0).is_ok());
+        let bad = parse(&["x", "--k", "ten"]);
+        assert!(bad.get_or::<usize>("k", 5).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["x", "--sets", "a, b,c,"]);
+        assert_eq!(a.list("sets"), vec!["a", "b", "c"]);
+        assert!(a.list("none").is_empty());
+    }
+
+    #[test]
+    fn required_errors() {
+        let a = parse(&["x"]);
+        assert!(a.req("dataset").is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! Memory metering — the paper's third metric (§4.2, "maximum memory
+//! size"). On Linux we read `VmHWM` (peak resident set) and `VmRSS` from
+//! `/proc/self/status`; deltas around an algorithm run approximate its
+//! peak working set, and an explicit byte-accounting API lets algorithms
+//! report their dominant allocations exactly (label matrix, sketches, …).
+
+/// Peak RSS (`VmHWM`) in bytes. Sandboxed kernels may omit `VmHWM`; fall
+/// back to the current RSS so the metric stays monotone and non-zero.
+pub fn peak_rss_bytes() -> u64 {
+    (proc_status_kb("VmHWM:") * 1024).max(current_rss_bytes())
+}
+
+/// Current RSS (`VmRSS`) in bytes, or 0 if unavailable.
+pub fn current_rss_bytes() -> u64 {
+    proc_status_kb("VmRSS:") * 1024
+}
+
+fn proc_status_kb(field: &str) -> u64 {
+    let Ok(text) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(field) {
+            return rest
+                .trim()
+                .trim_end_matches(" kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+        }
+    }
+    0
+}
+
+/// Byte-accounting tracker for an algorithm's dominant data structures.
+#[derive(Clone, Debug, Default)]
+pub struct MemTracker {
+    items: Vec<(String, u64)>,
+}
+
+impl MemTracker {
+    /// New empty tracker.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a named allocation of `bytes`.
+    pub fn record(&mut self, name: &str, bytes: u64) {
+        self.items.push((name.to_string(), bytes));
+    }
+
+    /// Record a slice's heap footprint.
+    pub fn record_slice<T>(&mut self, name: &str, slice: &[T]) {
+        self.record(name, (slice.len() * std::mem::size_of::<T>()) as u64);
+    }
+
+    /// Total tracked bytes.
+    pub fn total(&self) -> u64 {
+        self.items.iter().map(|(_, b)| b).sum()
+    }
+
+    /// Itemized view.
+    pub fn items(&self) -> &[(String, u64)] {
+        &self.items
+    }
+}
+
+/// Pretty-print a byte count in GB with 2 decimals (paper table unit).
+pub fn gb(bytes: u64) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0 * 1024.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_is_positive_on_linux() {
+        if std::path::Path::new("/proc/self/status").exists() {
+            assert!(current_rss_bytes() > 0);
+            assert!(peak_rss_bytes() >= current_rss_bytes() / 2);
+        }
+    }
+
+    #[test]
+    fn tracker_accounts() {
+        let mut t = MemTracker::new();
+        t.record("labels", 1024);
+        let v = vec![0u32; 256];
+        t.record_slice("vec", &v);
+        assert_eq!(t.total(), 1024 + 256 * 4);
+        assert_eq!(t.items().len(), 2);
+    }
+
+    #[test]
+    fn gb_conversion() {
+        assert!((gb(1 << 30) - 1.0).abs() < 1e-12);
+    }
+}

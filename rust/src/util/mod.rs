@@ -1,0 +1,26 @@
+//! Shared utility substrates, hand-built because the usual crates
+//! (rayon/clap/criterion/serde_json/proptest) are unavailable in this
+//! offline environment:
+//!
+//! * [`par`] — chunked parallel-for over `std::thread::scope` (the OpenMP
+//!   replacement for the frontier loop of Alg. 5 line 6).
+//! * [`args`] — mini CLI argument parser.
+//! * [`json`] — minimal JSON value model, parser, and writer (configs,
+//!   artifact manifest, bench result dumps).
+//! * [`stats`] — mean/std/percentile helpers and a KS-distance test used
+//!   by the Fig. 2 CDF experiment.
+//! * [`mem`] — peak-RSS tracking via `/proc` (paper metric iii).
+//! * [`timer`] — wall-clock scopes for the experiment runner.
+//! * [`proptest_lite`] — tiny property-testing harness (random cases +
+//!   shrink-free failure reporting with the seed printed).
+
+pub mod args;
+pub mod json;
+pub mod mem;
+pub mod par;
+pub mod proptest_lite;
+pub mod stats;
+pub mod timer;
+
+pub use par::{parallel_for, ThreadPool};
+pub use timer::Timer;

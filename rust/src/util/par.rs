@@ -1,0 +1,179 @@
+//! Data-parallel substrate: a chunked parallel-for built on scoped
+//! threads, standing in for the paper's OpenMP `parallel for`.
+//!
+//! Work distribution is dynamic: workers grab fixed-size chunks of the
+//! index range from an atomic cursor, which load-balances the skewed
+//! per-vertex work of power-law frontiers (the same reason the paper
+//! relies on OpenMP's dynamic schedule for Alg. 5 line 6).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Run `body(i)` for every `i in 0..len` on `threads` workers.
+///
+/// `body` must be `Sync` (it is shared by reference); interior mutability
+/// (atomics, per-thread buffers) is the caller's tool of choice, exactly
+/// like an OpenMP parallel region.
+pub fn parallel_for<F: Fn(usize) + Sync>(threads: usize, len: usize, chunk: usize, body: F) {
+    let threads = threads.max(1);
+    if threads == 1 || len <= chunk {
+        for i in 0..len {
+            body(i);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    let chunk = chunk.max(1);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= len {
+                    break;
+                }
+                let end = (start + chunk).min(len);
+                for i in start..end {
+                    body(i);
+                }
+            });
+        }
+    });
+}
+
+/// Run `body(worker_id)` once on each of `threads` workers (SPMD region).
+pub fn parallel_region<F: Fn(usize) + Sync>(threads: usize, body: F) {
+    let threads = threads.max(1);
+    if threads == 1 {
+        body(0);
+        return;
+    }
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let body = &body;
+            scope.spawn(move || body(t));
+        }
+    });
+}
+
+/// A reusable pool facade. Scoped threads are cheap enough for our
+/// iteration granularity (propagation rounds are milliseconds+), so the
+/// pool just records the worker count; `install` methods forward to the
+/// free functions. Kept as a type so the coordinator can thread a single
+/// parallelism config through the stack.
+#[derive(Clone, Copy, Debug)]
+pub struct ThreadPool {
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool with an explicit worker count (τ in the paper).
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    /// Workers available.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Chunked parallel for over `0..len`.
+    pub fn for_each<F: Fn(usize) + Sync>(&self, len: usize, chunk: usize, body: F) {
+        parallel_for(self.threads, len, chunk, body);
+    }
+
+    /// SPMD region.
+    pub fn region<F: Fn(usize) + Sync>(&self, body: F) {
+        parallel_region(self.threads, body);
+    }
+
+    /// Parallel map collecting results in index order.
+    pub fn map<T: Send, F: Fn(usize) -> T + Sync>(&self, len: usize, body: F) -> Vec<T> {
+        let mut out: Vec<Option<T>> = (0..len).map(|_| None).collect();
+        {
+            let slots = as_send_cells(&mut out);
+            parallel_for(self.threads, len, 16, |i| {
+                // SAFETY: each index is written by exactly one worker.
+                unsafe { *slots.get(i) = Some(body(i)) };
+            });
+        }
+        out.into_iter().map(|x| x.unwrap()).collect()
+    }
+}
+
+/// A `Sync` wrapper exposing raw mutable slot access for disjoint-index
+/// writes from multiple workers. This is the crate's one unsafe primitive;
+/// every use must guarantee index-disjointness (enforced by construction:
+/// parallel_for hands each index to exactly one worker).
+pub struct SendCells<T> {
+    ptr: *mut T,
+    len: usize,
+}
+unsafe impl<T: Send> Sync for SendCells<T> {}
+unsafe impl<T: Send> Send for SendCells<T> {}
+
+impl<T> SendCells<T> {
+    /// Raw pointer to slot `i`.
+    ///
+    /// # Safety
+    /// Caller must ensure no two threads access the same `i` concurrently.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+
+    /// Length of the underlying slice.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// View a mutable slice as disjointly-writable cells.
+pub fn as_send_cells<T: Send>(slice: &mut [T]) -> SendCells<T> {
+    SendCells { ptr: slice.as_mut_ptr(), len: slice.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        let n = 10_000;
+        let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(8, n, 64, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let sum = AtomicU64::new(0);
+        parallel_for(1, 100, 10, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map(1000, |i| i * i);
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i * i));
+    }
+
+    #[test]
+    fn region_runs_each_worker() {
+        let hits: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+        parallel_region(4, |t| {
+            hits[t].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+}

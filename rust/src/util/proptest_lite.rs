@@ -1,0 +1,135 @@
+//! Property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |gen| ...)` runs a property over `cases` randomly
+//! generated inputs; on failure it panics with the failing case index and
+//! the master seed so the case reproduces exactly. `Gen` wraps a seeded
+//! PCG stream with convenience draws (sizes, probabilities, edge lists,
+//! graphs) used by the invariant tests across the crate.
+
+use crate::gen::GenSpec;
+use crate::graph::{Graph, GraphBuilder, WeightModel};
+use crate::rng::{Pcg32, Rng32};
+use crate::VertexId;
+
+/// Random-input generator handed to properties.
+pub struct Gen {
+    rng: Pcg32,
+    case: usize,
+}
+
+impl Gen {
+    /// Uniform u32 below `bound`.
+    pub fn below(&mut self, bound: u32) -> u32 {
+        self.rng.below(bound.max(1))
+    }
+
+    /// Uniform usize in `lo..=hi`.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below((hi - lo + 1) as u32) as usize
+    }
+
+    /// Uniform f64 in [0,1).
+    pub fn unit(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    /// Uniform f32 probability in [lo, hi].
+    pub fn prob(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.next_f64() as f32
+    }
+
+    /// Raw u64.
+    pub fn u64(&mut self) -> u64 {
+        (u64::from(self.rng.next()) << 32) | u64::from(self.rng.next())
+    }
+
+    /// Random edge list over `n` vertices, up to `max_m` pairs (dups and
+    /// self loops included on purpose — builders must tolerate them).
+    pub fn edge_list(&mut self, n: usize, max_m: usize) -> Vec<(VertexId, VertexId)> {
+        let m = self.size(0, max_m);
+        (0..m)
+            .map(|_| (self.below(n as u32), self.below(n as u32)))
+            .collect()
+    }
+
+    /// Random small graph with random weights — the standard fixture for
+    /// algorithm invariants.
+    pub fn graph(&mut self, max_n: usize, max_m: usize) -> Graph {
+        let n = self.size(2, max_n);
+        let pairs = self.edge_list(n, max_m);
+        let g = GraphBuilder::new(n).edges(&pairs).build();
+        let model = match self.below(3) {
+            0 => WeightModel::Const(self.prob(0.0, 1.0)),
+            1 => WeightModel::Uniform(0.0, self.prob(0.05, 0.5)),
+            _ => WeightModel::Normal(0.1, 0.05),
+        };
+        g.with_weights(model, self.u64())
+    }
+
+    /// Random connected-ish generated graph from a random family.
+    pub fn gen_graph(&mut self, max_n: usize) -> Graph {
+        let n = self.size(8, max_n);
+        let spec = match self.below(3) {
+            0 => GenSpec::erdos_renyi(n, n * 2, self.u64()),
+            1 => GenSpec::barabasi_albert(n.max(4), 2, self.u64()),
+            _ => GenSpec::watts_strogatz(n.max(7), 2, 0.2, self.u64()),
+        };
+        crate::gen::generate(&spec)
+    }
+
+    /// Case index (for diagnostics inside properties).
+    pub fn case(&self) -> usize {
+        self.case
+    }
+}
+
+/// Master seed: override with `INFUSER_PROPTEST_SEED` to reproduce a CI
+/// failure locally.
+fn master_seed() -> u64 {
+    std::env::var("INFUSER_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x1AFD_2026)
+}
+
+/// Run `property` over `cases` random inputs.
+pub fn check(name: &str, cases: usize, mut property: impl FnMut(&mut Gen)) {
+    let seed = master_seed();
+    for case in 0..cases {
+        let mut g = Gen {
+            rng: Pcg32::from_seed_stream(seed, case as u64),
+            case,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(&mut g)));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}, rerun with \
+                 INFUSER_PROPTEST_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_graphs_are_valid() {
+        check("gen-graph-valid", 40, |g| {
+            let graph = g.graph(40, 120);
+            graph.validate().unwrap();
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failures_report_seed() {
+        check("always-fails", 3, |_| panic!("boom"));
+    }
+}

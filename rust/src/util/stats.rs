@@ -1,0 +1,124 @@
+//! Small statistics helpers: summary stats for bench reporting and the
+//! Kolmogorov–Smirnov distance used by the Fig. 2 CDF-uniformity
+//! experiment and its property test.
+
+/// Summary statistics over a sample.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    /// Sample count.
+    pub n: usize,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Population standard deviation.
+    pub std: f64,
+    /// Minimum.
+    pub min: f64,
+    /// Maximum.
+    pub max: f64,
+    /// 50th percentile.
+    pub median: f64,
+    /// 95th percentile.
+    pub p95: f64,
+}
+
+/// Compute summary statistics (O(n log n) for the order statistics).
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary::default();
+    }
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        median: percentile_sorted(&sorted, 0.5),
+        p95: percentile_sorted(&sorted, 0.95),
+    }
+}
+
+/// Percentile (0..=1) of a pre-sorted sample, linear interpolation.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// One-sample Kolmogorov–Smirnov distance against U[0,1]:
+/// `sup_x |F_emp(x) - x|`. The Fig. 2 claim — hash sampling probabilities
+/// are "almost identical with the uniform distribution" — is asserted as
+/// a small KS distance.
+pub fn ks_distance_uniform(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len() as f64;
+    let mut d: f64 = 0.0;
+    for (i, &x) in sorted.iter().enumerate() {
+        let f_lo = i as f64 / n;
+        let f_hi = (i + 1) as f64 / n;
+        d = d.max((f_lo - x).abs()).max((f_hi - x).abs());
+    }
+    d
+}
+
+/// Empirical CDF evaluated on a fixed grid (for Fig. 2 series output).
+pub fn cdf_on_grid(xs: &[f64], grid: usize) -> Vec<(f64, f64)> {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len() as f64;
+    (0..=grid)
+        .map(|i| {
+            let x = i as f64 / grid as f64;
+            let count = sorted.partition_point(|&v| v <= x);
+            (x, count as f64 / n)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn ks_of_perfect_grid_is_tiny() {
+        let xs: Vec<f64> = (0..10_000).map(|i| (i as f64 + 0.5) / 10_000.0).collect();
+        assert!(ks_distance_uniform(&xs) < 1e-3);
+    }
+
+    #[test]
+    fn ks_of_constant_is_large() {
+        let xs = vec![0.5; 100];
+        assert!(ks_distance_uniform(&xs) > 0.4);
+    }
+
+    #[test]
+    fn cdf_grid_monotone() {
+        let xs = vec![0.1, 0.4, 0.4, 0.9];
+        let cdf = cdf_on_grid(&xs, 10);
+        assert!(cdf.windows(2).all(|w| w[0].1 <= w[1].1));
+        assert_eq!(cdf.last().unwrap().1, 1.0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Cross-algorithm integration: the whole point of INFUSER-MG is being a
+//! *restructuring* of MIXGREEDY, not a different algorithm — so on graphs
+//! small enough for the baseline, the two must pick seed sets of
+//! statistically indistinguishable quality (the paper's Table 4 claim:
+//! "the influence scores of the proposed approach are comparable").
+
+use infuser::algo::fused::{FusedParams, FusedSampling};
+use infuser::algo::imm::{Imm, ImmParams};
+use infuser::algo::infuser::{InfuserMg, InfuserParams};
+use infuser::algo::mixgreedy::{MixGreedy, MixGreedyParams};
+use infuser::algo::{oracle, Budget};
+use infuser::gen::{self, GenSpec};
+use infuser::graph::{Graph, WeightModel};
+
+fn oracle_score(g: &Graph, seeds: &[u32]) -> f64 {
+    oracle::influence_score(
+        g,
+        seeds,
+        &oracle::OracleParams { r_count: 3000, seed: 0xBEEF, threads: 2 },
+    )
+}
+
+fn test_graph() -> Graph {
+    gen::generate(&GenSpec::barabasi_albert(500, 3, 7)).with_weights(WeightModel::Const(0.08), 3)
+}
+
+#[test]
+fn all_four_algorithms_reach_comparable_quality() {
+    let g = test_graph();
+    let k = 8;
+    // R large enough that the greedy family's sample-limited selection
+    // noise does not eclipse real quality differences: IMM draws tens of
+    // thousands of RR sets, so it effectively plays with a much larger
+    // sample budget than an R=256 greedy.
+    let r = 2048;
+    let budget = Budget::unlimited();
+
+    let mix = MixGreedy::new(MixGreedyParams { k, r_count: r, seed: 1 }).run(&g, &budget).unwrap();
+    let fus = FusedSampling::new(FusedParams { k, r_count: r, seed: 1 }).run(&g, &budget).unwrap();
+    let inf = InfuserMg::new(InfuserParams { k, r_count: r, seed: 1, threads: 2, ..Default::default() })
+        .run(&g, &budget)
+        .unwrap();
+    let imm = Imm::new(ImmParams { k, epsilon: 0.2, seed: 1, threads: 2, ..Default::default() })
+        .run(&g, &budget)
+        .unwrap();
+
+    let scores = [
+        ("mixgreedy", oracle_score(&g, &mix.seeds)),
+        ("fused", oracle_score(&g, &fus.seeds)),
+        ("infuser", oracle_score(&g, &inf.seeds)),
+        ("imm", oracle_score(&g, &imm.seeds)),
+    ];
+    let best = scores.iter().map(|s| s.1).fold(0.0, f64::max);
+    for (name, s) in scores {
+        // 90%: the greedy family optimizes its own MC estimate, so each
+        // algorithm carries an independent winner's-curse bias of a few
+        // percent at R=256; the paper's Table 7 gaps are similarly small.
+        assert!(
+            s > best * 0.90,
+            "{name} quality {s:.1} below 90% of best {best:.1}"
+        );
+    }
+}
+
+#[test]
+fn greedy_beats_random_and_tracks_degree_heuristic() {
+    // Quality sanity: greedy must clearly beat random seed sets, and stay
+    // within noise of the degree heuristic even on a near-regular graph
+    // where degree carries little signal (worst case for greedy's
+    // fixed-sample winner's curse).
+    let g = gen::generate(&GenSpec::watts_strogatz(600, 3, 0.1, 5))
+        .with_weights(WeightModel::Const(0.12), 9);
+    let k = 10;
+    let inf = InfuserMg::new(InfuserParams { k, r_count: 512, seed: 2, threads: 2, ..Default::default() })
+        .run(&g, &Budget::unlimited())
+        .unwrap();
+    let s_inf = oracle_score(&g, &inf.seeds);
+
+    // Mean of 8 random seed sets.
+    let mut rng = infuser::rng::Pcg32::seeded(42, 1);
+    use infuser::rng::Rng32;
+    let mut rand_total = 0.0;
+    for _ in 0..8 {
+        let mut seeds: Vec<u32> = Vec::new();
+        while seeds.len() < k {
+            let v = rng.below(g.num_vertices() as u32);
+            if !seeds.contains(&v) {
+                seeds.push(v);
+            }
+        }
+        rand_total += oracle_score(&g, &seeds);
+    }
+    let s_rand = rand_total / 8.0;
+    assert!(s_inf > s_rand * 1.02, "greedy {s_inf:.1} must beat random {s_rand:.1}");
+
+    let mut by_degree: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    by_degree.sort_by_key(|&v| std::cmp::Reverse(g.degree(v)));
+    let s_deg = oracle_score(&g, &by_degree[..k]);
+    assert!(
+        s_inf >= s_deg * 0.85,
+        "greedy {s_inf:.1} more than 15% below degree heuristic {s_deg:.1}"
+    );
+}
+
+#[test]
+fn seed_sets_monotone_in_k() {
+    // INFUSER-MG's CELF is deterministic: the K=4 prefix of a K=8 run is
+    // the K=4 run (lazy greedy is prefix-stable for a fixed memo).
+    let g = test_graph();
+    let mk = |k| {
+        InfuserMg::new(InfuserParams { k, r_count: 128, seed: 5, threads: 2, ..Default::default() })
+            .run(&g, &Budget::unlimited())
+            .unwrap()
+            .seeds
+    };
+    let s8 = mk(8);
+    let s4 = mk(4);
+    assert_eq!(&s8[..4], &s4[..]);
+}
+
+#[test]
+fn influence_estimates_agree_with_oracle_within_noise() {
+    let g = test_graph();
+    let inf = InfuserMg::new(InfuserParams {
+        k: 6,
+        r_count: 512,
+        seed: 8,
+        threads: 2,
+        ..Default::default()
+    })
+    .run(&g, &Budget::unlimited())
+    .unwrap();
+    let oracle_s = oracle_score(&g, &inf.seeds);
+
+    // The selection-time estimate is evaluated on the samples the greedy
+    // optimized over, so it carries winner's-curse inflation by design;
+    // assert only a loose sanity band on it.
+    let rel_sel = (inf.influence - oracle_s).abs() / oracle_s;
+    assert!(rel_sel < 0.20, "selection estimate wildly off: rel {rel_sel:.3}");
+
+    // Unbiased selection-free check #1: classical RANDCAS (independent
+    // per-edge coins) on the chosen seeds must track the mt19937 oracle
+    // tightly — both are plain independent-coin MC estimators.
+    let mut rng = infuser::rng::Pcg32::seeded(0x0DD, 5);
+    let classic =
+        infuser::algo::mixgreedy::randcas(&g, &inf.seeds, 4096, &mut rng, &Budget::unlimited())
+            .unwrap();
+    let rel_classic = (classic - oracle_s).abs() / oracle_s;
+    assert!(
+        rel_classic < 0.04,
+        "classical estimate {classic:.1} vs oracle {oracle_s:.1} (rel {rel_classic:.3})"
+    );
+
+    // Check #2: the paper's fused XOR sampler on a fresh run seed. The
+    // XOR scheme reuses one X_r per simulation, so within-simulation edge
+    // decisions are block-correlated (an XOR interval in hash space) —
+    // at constant p there are only ~1/p effectively distinct samples,
+    // which inflates reachability estimates by a few percent regardless
+    // of R. This is a property of the paper's Eq. 2, quantified by
+    // `cargo bench --bench estimator_bias`; we assert the documented
+    // envelope rather than pretending it is unbiased.
+    let fresh = infuser::algo::fused::randcas_fused(&g, &inf.seeds, 2048, 0x0DD, 0, &Budget::unlimited()).unwrap();
+    let rel_fused = (fresh - oracle_s).abs() / oracle_s;
+    assert!(
+        rel_fused < 0.12,
+        "fused estimate {fresh:.1} vs oracle {oracle_s:.1} (rel {rel_fused:.3})"
+    );
+}
+
+#[test]
+fn timeout_injection_trips_every_algorithm() {
+    // Failure injection: an already-expired budget must surface as a
+    // TimedOut error (not a panic, not a wrong result) in every algorithm.
+    let g = gen::generate(&GenSpec::erdos_renyi(3000, 12_000, 1))
+        .with_weights(WeightModel::Const(0.2), 1);
+    let budget = Budget::timeout(std::time::Duration::ZERO);
+    let k = 10;
+    let r = 2048;
+
+    let outs: Vec<anyhow::Error> = vec![
+        MixGreedy::new(MixGreedyParams { k, r_count: r, seed: 1 }).run(&g, &budget).unwrap_err(),
+        FusedSampling::new(FusedParams { k, r_count: r, seed: 1 }).run(&g, &budget).unwrap_err(),
+        InfuserMg::new(InfuserParams { k, r_count: r, seed: 1, threads: 2, ..Default::default() })
+            .run(&g, &budget)
+            .unwrap_err(),
+        Imm::new(ImmParams { k, epsilon: 0.13, seed: 1, threads: 2, ..Default::default() })
+            .run(&g, &budget)
+            .unwrap_err(),
+    ];
+    for e in outs {
+        assert!(infuser::algo::is_timeout(&e), "expected timeout, got {e}");
+    }
+}
+
+#[test]
+fn weighted_cascade_model_runs_end_to_end() {
+    // The WC model gives direction-dependent weights; the direction-
+    // oblivious hash still samples consistently per *orientation* — the
+    // algorithms must run and produce sane output.
+    let g = gen::generate(&GenSpec::barabasi_albert(300, 3, 4))
+        .with_weights(WeightModel::WeightedCascade, 6);
+    let res = InfuserMg::new(InfuserParams { k: 5, r_count: 128, seed: 3, threads: 2, ..Default::default() })
+        .run(&g, &Budget::unlimited())
+        .unwrap();
+    assert_eq!(res.seeds.len(), 5);
+    assert!(res.influence >= 5.0, "seeds influence at least themselves");
+}

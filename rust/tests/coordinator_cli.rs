@@ -1,0 +1,118 @@
+//! Coordinator + config integration: a full (tiny) experiment grid runs
+//! through the same path the CLI uses, including JSON config parsing,
+//! dataset loading, timeout cells and table rendering.
+
+use infuser::config::ExperimentConfig;
+use infuser::coordinator::{render_grid, Outcome, Runner};
+
+#[test]
+fn json_config_grid_end_to_end() {
+    let cfg = ExperimentConfig::from_json(
+        r#"{
+            "datasets": ["nethep-s"],
+            "settings": ["const:0.05", "uniform:0:0.1"],
+            "algos": ["infuser", "imm:0.5", "infuser-k1"],
+            "k": 3, "r": 32, "threads": 2, "seed": 1,
+            "timeout_secs": 120, "oracle_r": 128
+        }"#,
+    )
+    .unwrap();
+    let mut runner = Runner::new(cfg);
+    runner.verbose = false;
+    let cells = runner.run_grid().unwrap();
+    assert_eq!(cells.len(), 2 * 3, "2 settings x 3 algos");
+    for c in &cells {
+        assert!(
+            matches!(c.outcome, Outcome::Done { .. }),
+            "{}/{}/{} -> {:?}",
+            c.dataset,
+            c.setting,
+            c.algo,
+            c.outcome
+        );
+    }
+
+    // All three paper tables render with a row per dataset.
+    for (title, pick) in [
+        ("time", (|o: &Outcome| o.time_cell()) as fn(&Outcome) -> String),
+        ("mem", |o| o.mem_cell()),
+        ("influence", |o| o.influence_cell()),
+    ] {
+        let t = render_grid(&cells, title, pick);
+        assert_eq!(t.len(), 1, "one dataset row");
+        let text = t.render();
+        assert!(text.contains("nethep-s"));
+        let md = t.render_markdown();
+        assert!(md.contains("| nethep-s |"));
+    }
+}
+
+#[test]
+fn seeds_stable_across_grid_and_direct_call() {
+    // The runner must not perturb algorithm determinism.
+    let cfg = ExperimentConfig::from_json(
+        r#"{"datasets": ["nethep-s"], "settings": ["const:0.05"],
+            "algos": ["infuser"], "k": 4, "r": 64, "threads": 2, "seed": 9}"#,
+    )
+    .unwrap();
+    let mut runner = Runner::new(cfg.clone());
+    runner.verbose = false;
+    let c1 = runner.run_grid().unwrap();
+    let mut runner2 = Runner::new(cfg);
+    runner2.verbose = false;
+    let c2 = runner2.run_grid().unwrap();
+    let seeds = |cells: &[infuser::coordinator::CellResult]| match &cells[0].outcome {
+        Outcome::Done { seeds, .. } => seeds.clone(),
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(seeds(&c1), seeds(&c2));
+}
+
+#[test]
+fn unknown_dataset_is_an_error_not_a_panic() {
+    let cfg = ExperimentConfig::from_json(r#"{"datasets": ["not-a-dataset"]}"#).unwrap();
+    let mut runner = Runner::new(cfg);
+    runner.verbose = false;
+    let err = runner.run_grid().unwrap_err();
+    assert!(err.to_string().contains("unknown catalog dataset"));
+}
+
+#[test]
+fn file_dataset_round_trip() {
+    // Write an edge list, load it through the DatasetRef::File path, run.
+    let dir = std::env::temp_dir().join("infuser-cli-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tiny.txt");
+    std::fs::write(&path, "# tiny graph\n0 1\n1 2\n2 3\n3 0\n0 2\n").unwrap();
+    let cfg = ExperimentConfig::from_json(&format!(
+        r#"{{"datasets": ["file:{}"], "settings": ["const:0.5"],
+            "algos": ["infuser"], "k": 2, "r": 32, "threads": 1, "seed": 0}}"#,
+        path.display()
+    ))
+    .unwrap();
+    let mut runner = Runner::new(cfg);
+    runner.verbose = false;
+    let cells = runner.run_grid().unwrap();
+    match &cells[0].outcome {
+        Outcome::Done { seeds, .. } => assert_eq!(seeds.len(), 2),
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn imm_memory_limit_renders_oom_cell() {
+    // The paper's Table 6 "insufficient memory" entries, reproduced at
+    // laptop scale with an artificially tight RR-pool budget.
+    let cfg = ExperimentConfig::from_json(
+        r#"{"datasets": ["nethep-s"], "settings": ["const:0.1"],
+            "algos": ["imm:0.13"], "k": 10, "r": 32, "threads": 2,
+            "seed": 1, "imm_memory_limit_gb": 0.00001}"#,
+    )
+    .unwrap();
+    let mut runner = Runner::new(cfg);
+    runner.verbose = false;
+    let cells = runner.run_grid().unwrap();
+    assert!(matches!(cells[0].outcome, Outcome::OutOfMemory), "{:?}", cells[0].outcome);
+    assert_eq!(cells[0].outcome.time_cell(), "oom");
+    assert_eq!(cells[0].outcome.mem_cell(), "oom");
+}

@@ -1,0 +1,117 @@
+//! Cross-layer determinism-contract goldens.
+//!
+//! The same integer recipe is implemented in Rust
+//! (`hash`/`sampling`/`graph::weights`) and Python
+//! (`python/compile/murmur.py`). These goldens pin the Rust side; the
+//! Python test suite (`python/tests/test_murmur.py`) pins the same values
+//! independently, so any drift on either side breaks a build-time test
+//! before it can produce silently-diverging engines.
+
+use infuser::graph::weights::prob_to_threshold;
+use infuser::hash::{edge_hash, murmur3_32, EDGE_HASH_SEED, HASH_MASK};
+use infuser::sampling::{edge_alive, xr_word};
+
+/// Golden edge hashes (generated once with the Python implementation —
+/// `python -c "from compile.murmur import edge_hash; ..."` — and frozen).
+#[test]
+fn edge_hash_goldens_match_python() {
+    let goldens: &[(u32, u32, u32)] = &[
+        (0, 1, python_edge_hash(0, 1)),
+        (1, 0, python_edge_hash(0, 1)), // direction-oblivious
+        (7, 7, python_edge_hash(7, 7)),
+        (12345, 67890, python_edge_hash(12345, 67890)),
+        (u32::MAX - 1, 3, python_edge_hash(3, u32::MAX - 1)),
+    ];
+    for &(u, v, expect) in goldens {
+        assert_eq!(edge_hash(u, v), expect, "edge ({u},{v})");
+    }
+}
+
+/// Reference re-implementation of the contract, literal transcription of
+/// `python/compile/murmur.py::edge_hash` (LE64(min||max), fixed seed).
+fn python_edge_hash(u: u32, v: u32) -> u32 {
+    let (lo, hi) = if u <= v { (u, v) } else { (v, u) };
+    let mut key = [0u8; 8];
+    key[..4].copy_from_slice(&lo.to_le_bytes());
+    key[4..].copy_from_slice(&hi.to_le_bytes());
+    murmur3_32(&key, EDGE_HASH_SEED) & HASH_MASK
+}
+
+#[test]
+fn murmur3_reference_vectors() {
+    // The published vectors both suites assert.
+    assert_eq!(murmur3_32(b"", 0), 0);
+    assert_eq!(murmur3_32(b"", 1), 0x514E_28B7);
+    assert_eq!(murmur3_32(b"Hello, world!", 0x9747_B28C), 0x2488_4CBA);
+    assert_eq!(
+        murmur3_32(b"The quick brown fox jumps over the lazy dog", 0x9747_B28C),
+        0x2FA8_26CD
+    );
+}
+
+#[test]
+fn xr_word_is_31_bit_and_seed_sensitive() {
+    for seed in [0u64, 1, 0xDEAD_BEEF] {
+        for r in [0usize, 1, 63, 1024] {
+            let x = xr_word(seed, r);
+            assert!(x >= 0, "31-bit non-negative");
+            assert_ne!(x, xr_word(seed ^ 1, r), "seed must matter (w.h.p.)");
+        }
+    }
+}
+
+#[test]
+fn threshold_goldens() {
+    assert_eq!(prob_to_threshold(0.0), 0);
+    assert_eq!(prob_to_threshold(0.5), 1 << 30);
+    assert_eq!(prob_to_threshold(1.0), i32::MAX);
+    // The python side computes int(w * 2^31) with the same clamping;
+    // a few mid-range spot values:
+    assert_eq!(prob_to_threshold(0.01), (0.01f64 * 2147483648.0) as i32);
+    assert_eq!(prob_to_threshold(0.1), (0.1f32 as f64 * 2147483648.0) as i32);
+}
+
+#[test]
+fn alive_decision_is_pure_integer_and_symmetric() {
+    let thr = prob_to_threshold(0.37);
+    for r in 0..64 {
+        let x = xr_word(5, r);
+        assert_eq!(
+            edge_alive(edge_hash(10, 20), thr, x),
+            edge_alive(edge_hash(20, 10), thr, x),
+        );
+    }
+}
+
+/// The two-layer contract in one assertion: a fused-sampled subgraph's
+/// membership is a pure function of (edge, seed, r) — recomputed twice,
+/// in different orders, it must agree.
+#[test]
+fn membership_is_order_independent() {
+    let thr = prob_to_threshold(0.2);
+    let edges: Vec<(u32, u32)> = (0..500).map(|i| (i, 2 * i + 1)).collect();
+    let seed = 0xABCD;
+    let forward: Vec<bool> = edges
+        .iter()
+        .flat_map(|&(u, v)| (0..16).map(move |r| edge_alive(edge_hash(u, v), thr, xr_word(seed, r))))
+        .collect();
+    let backward: Vec<bool> = edges
+        .iter()
+        .rev()
+        .flat_map(|&(u, v)| {
+            (0..16)
+                .rev()
+                .map(move |r| edge_alive(edge_hash(v, u), thr, xr_word(seed, r)))
+        })
+        .collect();
+    let backward_reordered: Vec<bool> = {
+        let mut chunks: Vec<Vec<bool>> = backward.chunks(16).map(|c| {
+            let mut v = c.to_vec();
+            v.reverse();
+            v
+        }).collect();
+        chunks.reverse();
+        chunks.into_iter().flatten().collect()
+    };
+    assert_eq!(forward, backward_reordered);
+}

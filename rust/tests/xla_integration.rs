@@ -1,0 +1,139 @@
+//! Integration tests for the AOT/PJRT path. They need `artifacts/` (built
+//! by `make artifacts`); when absent they SKIP (print and return) so
+//! `cargo test` stays green on a fresh checkout.
+
+use infuser::algo::infuser::{InfuserMg, InfuserParams, Memo};
+use infuser::algo::Budget;
+use infuser::engine::{Engine, NativeEngine};
+use infuser::gen::{self, GenSpec};
+use infuser::graph::WeightModel;
+use infuser::labelprop::{Mode, PropagateOpts};
+use infuser::runtime::{Artifacts, XlaEngine};
+use infuser::util::ThreadPool;
+
+fn xla() -> Option<XlaEngine> {
+    match Artifacts::discover() {
+        Some(a) => Some(XlaEngine::new(a).expect("PJRT client")),
+        None => {
+            eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn opts(r: usize, seed: u64) -> PropagateOpts {
+    PropagateOpts { r_count: r, seed, threads: 2, ..Default::default() }
+}
+
+#[test]
+fn fixpoints_identical_across_engines_on_random_graphs() {
+    let Some(engine) = xla() else { return };
+    for (i, spec) in [
+        GenSpec::erdos_renyi(150, 400, 1),
+        GenSpec::barabasi_albert(200, 3, 2),
+        GenSpec::watts_strogatz(180, 2, 0.3, 3),
+        GenSpec::grid(12, 12),
+    ]
+    .iter()
+    .enumerate()
+    {
+        for p in [0.05f32, 0.3, 0.9] {
+            let g = gen::generate(spec).with_weights(WeightModel::Const(p), i as u64);
+            let o = opts(64, 7 + i as u64);
+            let native = NativeEngine.propagate(&g, &o).unwrap();
+            let x = engine.propagate(&g, &o).unwrap();
+            assert_eq!(
+                native.labels.data, x.labels.data,
+                "fixpoint mismatch on {} p={p}",
+                g.name
+            );
+        }
+    }
+}
+
+#[test]
+fn lane_slicing_works_for_smaller_r() {
+    // Artifacts are built for R=64; requesting fewer lanes must slice.
+    let Some(engine) = xla() else { return };
+    let g = gen::generate(&GenSpec::erdos_renyi(100, 300, 9))
+        .with_weights(WeightModel::Const(0.2), 4);
+    let full = engine.propagate(&g, &opts(64, 5)).unwrap();
+    let some = engine.propagate(&g, &opts(16, 5)).unwrap();
+    assert_eq!(some.labels.r_count, 16);
+    for v in 0..g.num_vertices() {
+        assert_eq!(some.labels.row(v), &full.labels.row(v)[..16], "vertex {v}");
+    }
+}
+
+#[test]
+fn oversized_request_is_a_clean_error() {
+    let Some(engine) = xla() else { return };
+    let g = gen::generate(&GenSpec::erdos_renyi(60, 100, 2)).with_weights(WeightModel::Const(0.1), 1);
+    // r larger than any bucket
+    let err = engine.propagate(&g, &opts(4096, 1)).unwrap_err();
+    assert!(err.to_string().contains("bucket"), "{err}");
+}
+
+#[test]
+fn mg_compute_artifact_matches_native_memo() {
+    let Some(engine) = xla() else { return };
+    let g = gen::generate(&GenSpec::barabasi_albert(220, 2, 8))
+        .with_weights(WeightModel::Const(0.15), 2);
+    let prop = NativeEngine.propagate(&g, &opts(64, 3)).unwrap();
+    let memo = Memo::new(prop.labels);
+    let n = g.num_vertices();
+
+    // Empty coverage.
+    let covered = vec![0i32; n * 64];
+    let (sizes, mg) = engine.mg_compute(&memo.labels, &covered).unwrap();
+    assert_eq!(sizes, memo.sizes);
+    let pool = ThreadPool::new(2);
+    let native_mg = memo.initial_gains(&pool);
+    for v in 0..n {
+        assert!((mg[v] - native_mg[v]).abs() < 1e-9, "v={v}");
+    }
+
+    // Non-trivial coverage: commit a few seeds natively, rebuild the
+    // label-indexed bitmap, and compare per-vertex gains.
+    let mut memo2 = Memo::new(memo.labels.clone());
+    let mut covered2 = vec![0i32; n * 64];
+    for &s in &[0usize, 5, 17] {
+        memo2.commit(s);
+        for (lane, &l) in memo2.labels.row(s).iter().enumerate() {
+            covered2[l as usize * 64 + lane] = 1;
+        }
+    }
+    let (_, mg2) = engine.mg_compute(&memo2.labels, &covered2).unwrap();
+    for v in 0..n {
+        let native = memo2.marginal_gain(v, &pool);
+        assert!((mg2[v] - native).abs() < 1e-9, "v={v}: xla={} native={native}", mg2[v]);
+    }
+}
+
+#[test]
+fn full_infuser_run_identical_on_both_engines() {
+    let Some(engine) = xla() else { return };
+    let g = gen::generate(&GenSpec::rmat(10, 3000, 6)).with_weights(WeightModel::Const(0.08), 5);
+    let params = InfuserParams {
+        k: 8,
+        r_count: 64,
+        seed: 11,
+        threads: 2,
+        mode: Mode::Async,
+        ..Default::default()
+    };
+    let a = InfuserMg::new(params).run_with_engine(&g, &NativeEngine, &Budget::unlimited()).unwrap();
+    let b = InfuserMg::new(params).run_with_engine(&g, &engine, &Budget::unlimited()).unwrap();
+    assert_eq!(a.seeds, b.seeds);
+    assert!((a.influence - b.influence).abs() < 1e-9);
+}
+
+#[test]
+fn xla_runs_are_deterministic() {
+    let Some(engine) = xla() else { return };
+    let g = gen::generate(&GenSpec::erdos_renyi(120, 350, 3)).with_weights(WeightModel::Const(0.25), 9);
+    let a = engine.propagate(&g, &opts(64, 1)).unwrap();
+    let b = engine.propagate(&g, &opts(64, 1)).unwrap();
+    assert_eq!(a.labels.data, b.labels.data);
+    assert_eq!(a.iterations, b.iterations);
+}
