@@ -21,6 +21,7 @@ fn main() -> infuser::Result<()> {
             AlgoSpec::MixGreedy,
             AlgoSpec::FusedSampling,
             AlgoSpec::InfuserMg,
+            AlgoSpec::InfuserSketch,
             AlgoSpec::Imm { epsilon: 0.5 },
             AlgoSpec::Imm { epsilon: 0.13 },
         ],
@@ -34,6 +35,7 @@ fn main() -> infuser::Result<()> {
         timeout: std::time::Duration::from_secs(args.get_or("timeout", 300u64)?),
         oracle_r: 1024,
         backend: infuser::simd::Backend::detect(),
+        memo: infuser::algo::infuser::MemoKind::Dense,
         imm_memory_limit: None,
     };
     println!(

@@ -16,7 +16,7 @@
 //!
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
-use infuser::algo::infuser::{InfuserMg, InfuserParams, Memo};
+use infuser::algo::infuser::{DenseMemo, InfuserMg, InfuserParams};
 use infuser::algo::{oracle, Budget};
 use infuser::engine::{Engine, NativeEngine};
 use infuser::gen::{self, GenSpec};
@@ -63,7 +63,7 @@ fn main() -> infuser::Result<()> {
 
     // ---- Stage B: memoized marginal gains through the mg_compute
     // artifact vs the native Memo.
-    let memo = Memo::new(native.labels);
+    let memo = DenseMemo::new(native.labels);
     let covered = vec![0i32; n * 64];
     let (sizes_xla, mg_xla) = xla.mg_compute(&memo.labels, &covered)?;
     anyhow::ensure!(sizes_xla == memo.sizes, "component-size tables differ");

@@ -28,6 +28,7 @@ fn main() -> infuser::Result<()> {
             AlgoSpec::Imm { epsilon: 0.13 },
             AlgoSpec::Imm { epsilon: 0.5 },
             AlgoSpec::InfuserMg,
+            AlgoSpec::InfuserSketch,
         ],
         ..env.base_config()
     };
@@ -36,24 +37,40 @@ fn main() -> infuser::Result<()> {
     let t = render_grid(&cells, "Table 6 — tracked memory (GB)", |o| o.mem_cell());
     env.emit("table6_memory", &[&t]);
 
+    let bytes_of = |d: &str, algo: &str, setting: &str| {
+        cells
+            .iter()
+            .find(|c| c.dataset == d && c.algo == algo && c.setting == setting)
+            .and_then(|c| match &c.outcome {
+                Outcome::Done { bytes, .. } => Some(*bytes as f64),
+                _ => None,
+            })
+    };
+
     // Flatness / growth checks.
     println!("per-dataset memory ratios (p=0.1 / p=0.01):");
     for d in env.dataset_ids() {
-        let bytes = |algo: &str, setting: &str| {
-            cells
-                .iter()
-                .find(|c| c.dataset == d && c.algo == algo && c.setting == setting)
-                .and_then(|c| match &c.outcome {
-                    Outcome::Done { bytes, .. } => Some(*bytes as f64),
-                    _ => None,
-                })
-        };
-        let imm = infuser::bench::ratio_cell(bytes("IMM(e=0.5)", "p=0.1"), bytes("IMM(e=0.5)", "p=0.01"));
+        let imm = infuser::bench::ratio_cell(
+            bytes_of(d, "IMM(e=0.5)", "p=0.1"),
+            bytes_of(d, "IMM(e=0.5)", "p=0.01"),
+        );
         let inf = infuser::bench::ratio_cell(
-            bytes("Infuser-MG", "p=0.1"),
-            bytes("Infuser-MG", "p=0.01"),
+            bytes_of(d, "Infuser-MG", "p=0.1"),
+            bytes_of(d, "Infuser-MG", "p=0.01"),
         );
         println!("  {d:<16} IMM(e=0.5) {imm:>8}   Infuser-MG {inf:>8}  (paper: IMM grows, Infuser 1.0x)");
+    }
+
+    // Sketch-backend saving: retained bytes relative to the dense memo on
+    // the same graph/params (~0.68x expected: labels kept, memo-only
+    // structures compressed 5 bytes/slot -> 2.125 bytes/slot).
+    println!("per-dataset sketch/dense retained-memory ratios (p=0.1):");
+    for d in env.dataset_ids() {
+        let ratio = infuser::bench::ratio_cell(
+            bytes_of(d, "Infuser-MG(sk)", "p=0.1"),
+            bytes_of(d, "Infuser-MG", "p=0.1"),
+        );
+        println!("  {d:<16} sketch/dense {ratio:>8}");
     }
     Ok(())
 }

@@ -113,9 +113,12 @@ fn fused_initial_gains(
     for r in 0..r_count {
         budget.check()?;
         let xr = xr_word(seed, r);
-        for (p, s) in parent.iter_mut().zip(size.iter_mut()).enumerate() {
-            *s.0 = p as u32;
-            *s.1 = 1;
+        // Reset the union-find to singletons before every round — stale
+        // parents or sizes from round r-1 would silently inflate gains
+        // (covered by `consecutive_rounds_use_independent_components`).
+        for v in 0..n {
+            parent[v] = v as u32;
+            size[v] = 1;
         }
         for u in 0..n as u32 {
             let (a, b) = (
@@ -269,5 +272,38 @@ mod tests {
             .run(&g, &Budget::unlimited())
             .unwrap();
         assert_eq!(res.seeds[0], 0);
+    }
+
+    #[test]
+    fn consecutive_rounds_use_independent_components() {
+        // Regression for the per-round union-find reset: every round must
+        // start from singletons. The per-lane union-find oracle
+        // (`labelprop::union_find_labels`) computes each lane's components
+        // independently; with two rounds whose alive sets genuinely differ
+        // (p = 0.5), any state leaking from round 0 into round 1 shifts
+        // the two-round average away from the oracle's.
+        let g = crate::gen::generate(&crate::gen::GenSpec::erdos_renyi(70, 180, 11))
+            .with_weights(WeightModel::Const(0.5), 13);
+        let seed = 21;
+        let mg = fused_initial_gains(&g, 2, seed, &Budget::unlimited()).unwrap();
+        let labels = crate::labelprop::union_find_labels(&g, 2, seed);
+        let sizes = crate::labelprop::component_sizes(&labels);
+        // The two lanes must not be identical, or the test can't detect
+        // a stale reset.
+        let n = g.num_vertices();
+        assert!(
+            (0..n).any(|v| labels.get(v, 0) != labels.get(v, 1)),
+            "lanes coincide; pick a different seed"
+        );
+        for v in 0..n {
+            let expect = (f64::from(sizes[labels.get(v, 0) as usize * 2])
+                + f64::from(sizes[labels.get(v, 1) as usize * 2 + 1]))
+                / 2.0;
+            assert!(
+                (mg[v] - expect).abs() < 1e-9,
+                "v={v}: fused={} oracle={expect}",
+                mg[v]
+            );
+        }
     }
 }

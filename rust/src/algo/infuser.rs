@@ -26,7 +26,134 @@ use crate::engine::Engine;
 use crate::graph::Graph;
 use crate::labelprop::{self, Labels, Mode, PropagateOpts};
 use crate::simd::Backend;
+use crate::sketch::SketchMemo;
 use crate::util::ThreadPool;
+
+/// Which memoization backend the CELF phase retains between seed commits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MemoKind {
+    /// The paper's dense arrays ([`DenseMemo`]): exact, `~9·n·R` bytes.
+    #[default]
+    Dense,
+    /// Count-distinct registers ([`crate::sketch::SketchMemo`]):
+    /// error-adaptive, `~6.1·n·R` bytes retained (labels included),
+    /// exact until a component outgrows the register's exact range.
+    Sketch,
+}
+
+impl MemoKind {
+    /// Parse from a CLI/config string (`dense` / `sketch`).
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "dense" => Ok(Self::Dense),
+            "sketch" => Ok(Self::Sketch),
+            other => Err(anyhow::anyhow!("unknown memo backend '{other}' (dense|sketch)")),
+        }
+    }
+
+    /// Short id for logs and table headers.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Dense => "dense",
+            Self::Sketch => "sketch",
+        }
+    }
+}
+
+/// The state NEWGREEDYSTEP-VEC hands to the CELF phase, abstracted over
+/// its storage: dense exact arrays ([`DenseMemo`], the paper's design) or
+/// compressed count-distinct registers ([`crate::sketch::SketchMemo`]).
+/// All implementations honor the same determinism contract: integer
+/// accumulation, so gains are identical across thread counts.
+pub trait MemoBackend {
+    /// Memoized marginal gain of `v` against the committed coverage
+    /// (Alg. 7 line 16).
+    fn marginal_gain(&self, v: usize, pool: &ThreadPool) -> f64;
+
+    /// Commit `v` as a seed: mark its component label covered per lane
+    /// (Alg. 7 line 11).
+    fn commit(&mut self, v: usize);
+
+    /// Initial (empty-seed-set) gains for every vertex.
+    fn initial_gains(&self, pool: &ThreadPool) -> Vec<f64>;
+
+    /// Memoized σ(S) for an arbitrary seed set (tests / verification).
+    fn sigma_of(&self, seeds: &[u32]) -> f64;
+
+    /// Tracked heap bytes of the retained structures.
+    fn bytes(&self) -> u64;
+
+    /// The retained label matrix.
+    fn labels(&self) -> &Labels;
+
+    /// Backend id for logs.
+    fn name(&self) -> &'static str;
+}
+
+/// Construct the memo backend selected by `kind` from a propagation
+/// fixpoint.
+pub fn make_memo(kind: MemoKind, labels: Labels) -> Box<dyn MemoBackend> {
+    match kind {
+        MemoKind::Dense => Box::new(DenseMemo::new(labels)),
+        MemoKind::Sketch => Box::new(SketchMemo::new(labels)),
+    }
+}
+
+/// Shared lane scan of both memo backends: average over lanes of
+/// `slot_value(l_v[lane] * R + lane)` — serial under 4096 lanes, chunked
+/// parallel reduce above (Alg. 7 line 15). Slot values are integers, so
+/// the sum is exact and thread-count independent.
+pub(crate) fn lane_scan(
+    labels: &Labels,
+    v: usize,
+    pool: &ThreadPool,
+    slot_value: &(dyn Fn(usize) -> i64 + Sync),
+) -> f64 {
+    let r = labels.r_count;
+    let row = labels.row(v);
+    if r < 4096 || pool.threads() == 1 {
+        let mut acc = 0i64;
+        for (lane, &l) in row.iter().enumerate() {
+            acc += slot_value(l as usize * r + lane);
+        }
+        return acc as f64 / r as f64;
+    }
+    let chunk = r.div_ceil(pool.threads());
+    let partials = pool.map(pool.threads(), |t| {
+        let lo = t * chunk;
+        let hi = ((t + 1) * chunk).min(r);
+        let mut acc = 0i64;
+        for lane in lo..hi {
+            acc += slot_value(row[lane] as usize * r + lane);
+        }
+        acc
+    });
+    partials.into_iter().sum::<i64>() as f64 / r as f64
+}
+
+/// Shared σ(S) of both memo backends: average over lanes of the union of
+/// the seeds' per-slot values, each distinct `(label, lane)` slot counted
+/// once.
+pub(crate) fn union_sigma(
+    labels: &Labels,
+    seeds: &[u32],
+    slot_value: &dyn Fn(usize) -> i64,
+) -> f64 {
+    let r = labels.r_count;
+    let mut seen = vec![0u64; (labels.n * r).div_ceil(64)];
+    let mut total = 0i64;
+    for &s in seeds {
+        for (lane, &l) in labels.row(s as usize).iter().enumerate() {
+            let slot = l as usize * r + lane;
+            let (word, bit) = (slot / 64, 1u64 << (slot % 64));
+            if seen[word] & bit == 0 {
+                seen[word] |= bit;
+                total += slot_value(slot);
+            }
+        }
+    }
+    total as f64 / r as f64
+}
 
 /// INFUSER-MG parameters.
 #[derive(Clone, Copy, Debug)]
@@ -43,6 +170,8 @@ pub struct InfuserParams {
     pub backend: Backend,
     /// Propagation schedule (async Gauss–Seidel / sync Jacobi).
     pub mode: Mode,
+    /// Memoization backend for the CELF phase (dense / sketch).
+    pub memo: MemoKind,
 }
 
 impl Default for InfuserParams {
@@ -54,6 +183,7 @@ impl Default for InfuserParams {
             threads: 1,
             backend: Backend::detect(),
             mode: Mode::Async,
+            memo: MemoKind::Dense,
         }
     }
 }
@@ -63,11 +193,16 @@ pub struct InfuserMg {
     params: InfuserParams,
 }
 
-/// The memoized state NEWGREEDYSTEP-VEC hands to the CELF phase: labels,
-/// per-(label, lane) component sizes, and the covered-label bitmap that
-/// grows as seeds are committed. This is the paper's "high memory usage"
-/// trade (§4.4) — two `n × R` i32 arrays plus an `n × R` bit array.
-pub struct Memo {
+/// Backwards-compatible name for [`DenseMemo`] (pre-`MemoBackend` API).
+pub type Memo = DenseMemo;
+
+/// The dense memoized state NEWGREEDYSTEP-VEC hands to the CELF phase:
+/// labels, per-(label, lane) component sizes, and the covered-label
+/// bitmap that grows as seeds are committed. This is the paper's "high
+/// memory usage" trade (§4.4) — two `n × R` i32 arrays plus an `n × R`
+/// byte array. See [`crate::sketch::SketchMemo`] for the compressed
+/// alternative.
+pub struct DenseMemo {
     /// Fixpoint `n × R` component-label matrix.
     pub labels: Labels,
     /// `sizes[l * R + r]` = size of the component labelled `l` in lane `r`
@@ -77,7 +212,7 @@ pub struct Memo {
     covered: Vec<u8>,
 }
 
-impl Memo {
+impl DenseMemo {
     /// Build from a propagation fixpoint.
     pub fn new(labels: Labels) -> Self {
         let sizes = labelprop::component_sizes(&labels);
@@ -86,35 +221,15 @@ impl Memo {
     }
 
     /// Memoized marginal gain of `v` given the committed coverage
-    /// (Alg. 7 line 16), optionally parallelized over lanes.
+    /// (Alg. 7 line 16), parallelized over lane blocks at large R.
     pub fn marginal_gain(&self, v: usize, pool: &ThreadPool) -> f64 {
-        let r = self.labels.r_count;
-        let row = self.labels.row(v);
-        if r < 4096 || pool.threads() == 1 {
-            let mut acc = 0i64;
-            for (lane, &l) in row.iter().enumerate() {
-                let idx = l as usize * r + lane;
-                if self.covered[idx] == 0 {
-                    acc += i64::from(self.sizes[idx]);
-                }
+        lane_scan(&self.labels, v, pool, &|idx| {
+            if self.covered[idx] == 0 {
+                i64::from(self.sizes[idx])
+            } else {
+                0
             }
-            return acc as f64 / r as f64;
-        }
-        // Large-R path: parallel reduce over lane blocks (Alg. 7 line 15).
-        let chunk = r.div_ceil(pool.threads());
-        let partials = pool.map(pool.threads(), |t| {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(r);
-            let mut acc = 0i64;
-            for lane in lo..hi {
-                let idx = row[lane] as usize * r + lane;
-                if self.covered[idx] == 0 {
-                    acc += i64::from(self.sizes[idx]);
-                }
-            }
-            acc
-        });
-        partials.into_iter().sum::<i64>() as f64 / r as f64
+        })
     }
 
     /// Commit `v` as a seed: mark its component label covered in every lane
@@ -140,19 +255,31 @@ impl Memo {
     /// cross-check against RANDCAS over the same samples): average over
     /// lanes of the union of the seeds' component sizes.
     pub fn sigma_of(&self, seeds: &[u32]) -> f64 {
-        let r = self.labels.r_count;
-        let mut seen: Vec<u8> = vec![0; self.labels.n * r];
-        let mut total = 0i64;
-        for &s in seeds {
-            for (lane, &l) in self.labels.row(s as usize).iter().enumerate() {
-                let idx = l as usize * r + lane;
-                if seen[idx] == 0 {
-                    seen[idx] = 1;
-                    total += i64::from(self.sizes[idx]);
-                }
-            }
-        }
-        total as f64 / r as f64
+        union_sigma(&self.labels, seeds, &|idx| i64::from(self.sizes[idx]))
+    }
+}
+
+impl MemoBackend for DenseMemo {
+    fn marginal_gain(&self, v: usize, pool: &ThreadPool) -> f64 {
+        DenseMemo::marginal_gain(self, v, pool)
+    }
+    fn commit(&mut self, v: usize) {
+        DenseMemo::commit(self, v)
+    }
+    fn initial_gains(&self, pool: &ThreadPool) -> Vec<f64> {
+        DenseMemo::initial_gains(self, pool)
+    }
+    fn sigma_of(&self, seeds: &[u32]) -> f64 {
+        DenseMemo::sigma_of(self, seeds)
+    }
+    fn bytes(&self) -> u64 {
+        DenseMemo::bytes(self)
+    }
+    fn labels(&self) -> &Labels {
+        &self.labels
+    }
+    fn name(&self) -> &'static str {
+        "dense"
     }
 }
 
@@ -196,7 +323,7 @@ impl InfuserMg {
         budget.check()?;
         let iterations = prop.iterations;
         let edge_visits = prop.edge_visits;
-        let mut memo = Memo::new(prop.labels);
+        let mut memo = make_memo(p.memo, prop.labels);
         let mg0 = memo.initial_gains(&pool);
         budget.check()?;
         let tracked = memo.bytes() + (mg0.len() * 8) as u64;
@@ -239,14 +366,20 @@ impl InfuserMg {
         };
         let prop = labelprop::propagate(graph, &opts);
         budget.check()?;
-        let memo = Memo::new(prop.labels);
+        let memo = make_memo(p.memo, prop.labels);
         let mg = memo.initial_gains(&pool);
-        let (best, gain) = mg
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
-            .map(|(v, &g)| (v as u32, g))
-            .unwrap_or((0, 0.0));
+        // Argmax with the CELF heap's tie-break: on equal gains the
+        // smallest vertex id wins (`Entry::cmp` in `celf.rs` makes the
+        // smallest id the greatest entry), so a K=1 run picks exactly the
+        // first seed the full run pops. Covered by
+        // `first_seed_tiebreak_matches_celf_on_exact_ties`.
+        let (mut best, mut gain) = (0u32, mg.first().copied().unwrap_or(0.0));
+        for (v, &g) in mg.iter().enumerate().skip(1) {
+            if g > gain {
+                best = v as u32;
+                gain = g;
+            }
+        }
         Ok(ImResult {
             seeds: vec![best],
             influence: gain,
@@ -373,6 +506,66 @@ mod tests {
         let full = InfuserMg::new(p).run(&g, &Budget::unlimited()).unwrap();
         let first = InfuserMg::new(p).run_first_seed(&g, &Budget::unlimited()).unwrap();
         assert_eq!(full.seeds[0], first.seeds[0]);
+    }
+
+    #[test]
+    fn first_seed_tiebreak_matches_celf_on_exact_ties() {
+        // Two disjoint triangles at p = 1.0: every vertex's gain is
+        // exactly 3.0 in every lane, so the argmax is decided purely by
+        // the tie-break. Both paths must pick the smallest vertex id.
+        let mut b = GraphBuilder::new(6);
+        for (u, v) in [(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)] {
+            b.edge(u, v);
+        }
+        let g = b.build().with_weights(WeightModel::Const(1.0), 1);
+        let p = params(2, 32, 5);
+        let full = InfuserMg::new(p).run(&g, &Budget::unlimited()).unwrap();
+        let first = InfuserMg::new(p).run_first_seed(&g, &Budget::unlimited()).unwrap();
+        assert_eq!(full.seeds[0], 0, "CELF pops the smallest id on ties");
+        assert_eq!(first.seeds[0], 0, "K=1 argmax must use the same tie-break");
+    }
+
+    #[test]
+    fn sketch_backend_selects_identical_seeds_on_sparse_graphs() {
+        // At the default exact cap every component on these graphs is
+        // counted exactly, so the sketch backend's gains equal the dense
+        // ones and the whole CELF trajectory is identical.
+        let g = crate::gen::generate(&GenSpec::barabasi_albert(400, 2, 3))
+            .with_weights(WeightModel::Const(0.08), 5);
+        let dense = InfuserMg::new(params(5, 64, 7)).run(&g, &Budget::unlimited()).unwrap();
+        let sketch =
+            InfuserMg::new(InfuserParams { memo: MemoKind::Sketch, ..params(5, 64, 7) })
+                .run(&g, &Budget::unlimited())
+                .unwrap();
+        assert_eq!(dense.seeds, sketch.seeds);
+        assert!((dense.influence - sketch.influence).abs() < 1e-9);
+        assert!(
+            sketch.tracked_bytes < dense.tracked_bytes,
+            "sketch {} must undercut dense {}",
+            sketch.tracked_bytes,
+            dense.tracked_bytes
+        );
+    }
+
+    #[test]
+    fn run_first_seed_honors_memo_kind() {
+        let g = crate::gen::generate(&GenSpec::erdos_renyi(150, 400, 4))
+            .with_weights(WeightModel::Const(0.2), 6);
+        let p = InfuserParams { memo: MemoKind::Sketch, ..params(1, 64, 3) };
+        let dense_first =
+            InfuserMg::new(params(1, 64, 3)).run_first_seed(&g, &Budget::unlimited()).unwrap();
+        let sketch_first = InfuserMg::new(p).run_first_seed(&g, &Budget::unlimited()).unwrap();
+        assert_eq!(dense_first.seeds, sketch_first.seeds);
+        assert!(sketch_first.tracked_bytes < dense_first.tracked_bytes);
+    }
+
+    #[test]
+    fn memo_kind_parses() {
+        assert_eq!(MemoKind::parse("dense").unwrap(), MemoKind::Dense);
+        assert_eq!(MemoKind::parse("sketch").unwrap(), MemoKind::Sketch);
+        assert!(MemoKind::parse("bogus").is_err());
+        assert_eq!(MemoKind::default(), MemoKind::Dense);
+        assert_eq!(MemoKind::Sketch.label(), "sketch");
     }
 
     #[test]

@@ -77,17 +77,28 @@ impl Budget {
 }
 
 /// Algorithm failure modes.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum AlgoError {
     /// The run exceeded its wall-clock budget (rendered as "-" in tables,
     /// like the paper's 302,400 s timeout entries).
-    #[error("run exceeded its time budget")]
     TimedOut,
     /// The run exceeded its memory budget (IMM(ε=0.13) on the large
     /// graphs in Table 6 — "cannot run ... due to insufficient memory").
-    #[error("run exceeded its memory budget ({0} bytes tracked)")]
     OutOfMemory(u64),
 }
+
+impl std::fmt::Display for AlgoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AlgoError::TimedOut => write!(f, "run exceeded its time budget"),
+            AlgoError::OutOfMemory(bytes) => {
+                write!(f, "run exceeded its memory budget ({bytes} bytes tracked)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AlgoError {}
 
 /// Convenience: did an error mean "timed out"?
 pub fn is_timeout(err: &anyhow::Error) -> bool {

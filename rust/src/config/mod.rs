@@ -7,6 +7,7 @@
 //! coordinator crosses them into a scenario grid, exactly like the paper's
 //! Tables 5–7 (12 graphs × 4 settings × 3 algorithms).
 
+use crate::algo::infuser::MemoKind;
 use crate::graph::WeightModel;
 use crate::simd::Backend;
 use crate::util::json::Json;
@@ -21,6 +22,9 @@ pub enum AlgoSpec {
     FusedSampling,
     /// The paper's contribution.
     InfuserMg,
+    /// INFUSER-MG with the sketch-compressed memoization backend
+    /// ([`crate::sketch::SketchMemo`]) — the large-graph memory mode.
+    InfuserSketch,
     /// INFUSER-MG but only the first seed (Table 4's K=1 column).
     InfuserK1,
     /// IMM with an ε.
@@ -35,12 +39,14 @@ pub enum AlgoSpec {
 }
 
 impl AlgoSpec {
-    /// Parse `mixgreedy` / `fused` / `infuser` / `infuser-k1` / `imm:0.13`.
+    /// Parse `mixgreedy` / `fused` / `infuser` / `infuser-sketch` /
+    /// `infuser-k1` / `imm:0.13`.
     pub fn parse(s: &str) -> crate::Result<Self> {
         match s {
             "mixgreedy" => Ok(Self::MixGreedy),
             "fused" => Ok(Self::FusedSampling),
             "infuser" => Ok(Self::InfuserMg),
+            "infuser-sketch" => Ok(Self::InfuserSketch),
             "infuser-k1" => Ok(Self::InfuserK1),
             "degree" => Ok(Self::Degree),
             "degree-discount" => Ok(Self::DegreeDiscount),
@@ -60,6 +66,7 @@ impl AlgoSpec {
             Self::MixGreedy => "MixGreedy".into(),
             Self::FusedSampling => "FusedSampling".into(),
             Self::InfuserMg => "Infuser-MG".into(),
+            Self::InfuserSketch => "Infuser-MG(sk)".into(),
             Self::InfuserK1 => "Infuser(K=1)".into(),
             Self::Imm { epsilon } => format!("IMM(e={epsilon})"),
             Self::Degree => "Degree".into(),
@@ -139,6 +146,9 @@ pub struct ExperimentConfig {
     pub oracle_r: usize,
     /// VECLABEL backend.
     pub backend: Backend,
+    /// Memoization backend for the INFUSER-MG cells (`infuser-sketch`
+    /// cells always use the sketch regardless of this default).
+    pub memo: MemoKind,
     /// Memory budget for IMM's RR pool in bytes (None = unlimited). The
     /// paper's Table 6 shows IMM(ε=0.13) failing with "insufficient
     /// memory" on the largest graphs; this knob reproduces those "oom"
@@ -159,6 +169,7 @@ impl Default for ExperimentConfig {
             timeout: Duration::from_secs(600),
             oracle_r: 0,
             backend: Backend::detect(),
+            memo: MemoKind::Dense,
             imm_memory_limit: None,
         }
     }
@@ -230,6 +241,9 @@ impl ExperimentConfig {
         if let Some(b) = json.get("backend").and_then(|v| v.as_str()) {
             cfg.backend = Backend::parse(b)?;
         }
+        if let Some(m) = json.get("memo").and_then(|v| v.as_str()) {
+            cfg.memo = MemoKind::parse(m)?;
+        }
         if let Some(gb) = json.get("imm_memory_limit_gb").and_then(|v| v.as_f64()) {
             cfg.imm_memory_limit = Some((gb * 1024.0 * 1024.0 * 1024.0) as u64);
         }
@@ -284,8 +298,18 @@ mod tests {
     fn algo_spec_parse_and_label() {
         assert_eq!(AlgoSpec::parse("imm:0.5").unwrap(), AlgoSpec::Imm { epsilon: 0.5 });
         assert_eq!(AlgoSpec::parse("infuser-k1").unwrap(), AlgoSpec::InfuserK1);
+        assert_eq!(AlgoSpec::parse("infuser-sketch").unwrap(), AlgoSpec::InfuserSketch);
         assert!(AlgoSpec::parse("bogus").is_err());
         assert_eq!(AlgoSpec::Imm { epsilon: 0.13 }.label(), "IMM(e=0.13)");
+        assert_eq!(AlgoSpec::InfuserSketch.label(), "Infuser-MG(sk)");
+    }
+
+    #[test]
+    fn memo_backend_parses_from_json() {
+        let cfg = ExperimentConfig::from_json(r#"{"memo": "sketch"}"#).unwrap();
+        assert_eq!(cfg.memo, MemoKind::Sketch);
+        assert_eq!(ExperimentConfig::from_json("{}").unwrap().memo, MemoKind::Dense);
+        assert!(ExperimentConfig::from_json(r#"{"memo": "zip"}"#).is_err());
     }
 
     #[test]

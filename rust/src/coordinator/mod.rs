@@ -143,12 +143,17 @@ impl Runner {
                 seed: cfg.seed,
             })
             .run(graph, &budget),
-            AlgoSpec::InfuserMg => InfuserMg::new(InfuserParams {
+            AlgoSpec::InfuserMg | AlgoSpec::InfuserSketch => InfuserMg::new(InfuserParams {
                 k: cfg.k,
                 r_count: cfg.r_count,
                 seed: cfg.seed,
                 threads: cfg.threads,
                 backend: cfg.backend,
+                memo: if algo == AlgoSpec::InfuserSketch {
+                    crate::algo::infuser::MemoKind::Sketch
+                } else {
+                    cfg.memo
+                },
                 ..Default::default()
             })
             .run(graph, &budget),
@@ -158,6 +163,7 @@ impl Runner {
                 seed: cfg.seed,
                 threads: cfg.threads,
                 backend: cfg.backend,
+                memo: cfg.memo,
                 ..Default::default()
             })
             .run_first_seed(graph, &budget),
@@ -322,6 +328,7 @@ mod tests {
             timeout: Duration::from_secs(120),
             oracle_r: 64,
             backend: crate::simd::Backend::detect(),
+            memo: crate::algo::infuser::MemoKind::Dense,
             imm_memory_limit: None,
         }
     }
@@ -338,6 +345,27 @@ mod tests {
                 assert!(sigma_oracle.is_some(), "oracle_r > 0 must rescore");
             }
         }
+    }
+
+    #[test]
+    fn sketch_cell_runs_and_undercuts_dense_memory() {
+        let mut cfg = tiny_cfg();
+        cfg.algos = vec![AlgoSpec::InfuserMg, AlgoSpec::InfuserSketch];
+        cfg.oracle_r = 0;
+        let mut runner = Runner::new(cfg);
+        runner.verbose = false;
+        let cells = runner.run_grid().unwrap();
+        assert_eq!(cells.len(), 2);
+        let bytes = |i: usize| match &cells[i].outcome {
+            Outcome::Done { bytes, .. } => *bytes,
+            other => panic!("{other:?}"),
+        };
+        assert!(
+            bytes(1) < bytes(0),
+            "sketch cell {} must undercut dense cell {}",
+            bytes(1),
+            bytes(0)
+        );
     }
 
     #[test]

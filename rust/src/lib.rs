@@ -49,6 +49,7 @@ pub mod rng;
 pub mod runtime;
 pub mod sampling;
 pub mod simd;
+pub mod sketch;
 pub mod util;
 
 /// Crate-wide result type.

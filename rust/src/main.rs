@@ -69,12 +69,13 @@ COMMANDS
   run        --dataset ID --algo A     run one algorithm
              [--weights W] [--k N] [--r N] [--threads N] [--seed N]
              [--timeout SECS] [--oracle-r N] [--engine native|xla]
+             [--memo dense|sketch]     CELF memoization backend (infuser)
   experiment --config FILE.json        run a full grid, render tables
              [--markdown]
   cdf        --dataset ID [--r N]      Fig. 2 sampling-probability CDF
   artifacts  [--dir DIR] [--smoke]     inspect AOT manifest / cross-check
 
-ALGORITHMS  mixgreedy | fused | infuser | infuser-k1 | imm:EPS | degree | degree-discount
+ALGORITHMS  mixgreedy | fused | infuser | infuser-sketch | infuser-k1 | imm:EPS | degree | degree-discount
 WEIGHTS     const:P | uniform:LO:HI | normal:MEAN:STD | wc   (default const:0.01)"
     );
 }
@@ -137,6 +138,7 @@ fn cmd_run(args: &Args) -> infuser::Result<()> {
         timeout: std::time::Duration::from_secs_f64(args.get_or("timeout", 3600.0f64)?),
         oracle_r: args.get_or("oracle-r", 0usize)?,
         backend: infuser::simd::Backend::parse(args.opt("backend").unwrap_or("auto"))?,
+        memo: infuser::algo::infuser::MemoKind::parse(args.opt("memo").unwrap_or("dense"))?,
         imm_memory_limit: args
             .opt("imm-mem-gb")
             .map(|v| v.parse::<f64>().map(|gb| (gb * 1073741824.0) as u64))
@@ -145,7 +147,9 @@ fn cmd_run(args: &Args) -> infuser::Result<()> {
 
     let engine = args.opt("engine").unwrap_or("native");
     let timer = Timer::start();
-    let outcome = if engine == "xla" && matches!(algo, AlgoSpec::InfuserMg) {
+    let outcome = if engine == "xla"
+        && matches!(algo, AlgoSpec::InfuserMg | AlgoSpec::InfuserSketch)
+    {
         // The three-layer path: propagation through the PJRT artifacts.
         let xla = infuser::runtime::XlaEngine::discover()?;
         let res: ImResult = infuser::algo::infuser::InfuserMg::new(
@@ -155,6 +159,11 @@ fn cmd_run(args: &Args) -> infuser::Result<()> {
                 seed: cfg.seed,
                 threads: cfg.threads,
                 backend: cfg.backend,
+                memo: if matches!(algo, AlgoSpec::InfuserSketch) {
+                    infuser::algo::infuser::MemoKind::Sketch
+                } else {
+                    cfg.memo
+                },
                 ..Default::default()
             },
         )
@@ -167,7 +176,10 @@ fn cmd_run(args: &Args) -> infuser::Result<()> {
     };
     match outcome {
         infuser::coordinator::Outcome::Done { secs, bytes, sigma_own, sigma_oracle, seeds } => {
-            println!("time: {secs:.3}s  mem: {:.3} GB", infuser::util::mem::gb(bytes));
+            println!(
+                "time: {secs:.3}s  mem: {:.3} GB ({bytes} bytes tracked)",
+                infuser::util::mem::gb(bytes)
+            );
             println!("sigma(own): {sigma_own:.2}");
             if let Some(s) = sigma_oracle {
                 println!("sigma(oracle): {s:.2}");

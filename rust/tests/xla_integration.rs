@@ -2,7 +2,7 @@
 //! by `make artifacts`); when absent they SKIP (print and return) so
 //! `cargo test` stays green on a fresh checkout.
 
-use infuser::algo::infuser::{InfuserMg, InfuserParams, Memo};
+use infuser::algo::infuser::{DenseMemo, InfuserMg, InfuserParams};
 use infuser::algo::Budget;
 use infuser::engine::{Engine, NativeEngine};
 use infuser::gen::{self, GenSpec};
@@ -80,7 +80,7 @@ fn mg_compute_artifact_matches_native_memo() {
     let g = gen::generate(&GenSpec::barabasi_albert(220, 2, 8))
         .with_weights(WeightModel::Const(0.15), 2);
     let prop = NativeEngine.propagate(&g, &opts(64, 3)).unwrap();
-    let memo = Memo::new(prop.labels);
+    let memo = DenseMemo::new(prop.labels);
     let n = g.num_vertices();
 
     // Empty coverage.
@@ -95,7 +95,7 @@ fn mg_compute_artifact_matches_native_memo() {
 
     // Non-trivial coverage: commit a few seeds natively, rebuild the
     // label-indexed bitmap, and compare per-vertex gains.
-    let mut memo2 = Memo::new(memo.labels.clone());
+    let mut memo2 = DenseMemo::new(memo.labels.clone());
     let mut covered2 = vec![0i32; n * 64];
     for &s in &[0usize, 5, 17] {
         memo2.commit(s);
