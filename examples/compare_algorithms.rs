@@ -35,6 +35,7 @@ fn main() -> infuser::Result<()> {
         timeout: std::time::Duration::from_secs(args.get_or("timeout", 300u64)?),
         oracle_r: 1024,
         backend: infuser::simd::Backend::detect(),
+        lanes: infuser::simd::LaneWidth::parse(args.opt("lanes").unwrap_or("8"))?,
         memo: infuser::algo::infuser::MemoKind::Dense,
         imm_memory_limit: None,
     };

@@ -57,11 +57,19 @@ fn main() -> infuser::Result<()> {
         });
         let mix_secs = mix.ok().map(|_| mix_s);
         let (fus, fus_s) = time_it(|| {
-            FusedSampling::new(FusedParams { k, r_count: r, seed: 1 }).run(&g, &budget())
+            FusedSampling::new(FusedParams { k, r_count: r, seed: 1, lanes: env.lanes })
+                .run(&g, &budget())
         });
         let fus_secs = fus.ok().map(|_| fus_s);
 
-        let base = InfuserParams { k, r_count: r, seed: 1, threads: env.threads, ..Default::default() };
+        let base = InfuserParams {
+            k,
+            r_count: r,
+            seed: 1,
+            threads: env.threads,
+            lanes: env.lanes,
+            ..Default::default()
+        };
         let scalar = InfuserParams { backend: Backend::Scalar, ..base };
         let (rs, scalar_s) = time_it(|| InfuserMg::new(scalar).run(&g, &budget()));
         rs?;

@@ -1,77 +1,125 @@
 //! Kernel microbenchmarks (§Perf): the VECLABEL inner loop and the
 //! propagation engines, isolated from the algorithmic layers.
 //!
-//! * `veclabel` — candidate computation per edge-row: scalar vs AVX2
-//!   backend, lanes/ns and effective GB/s of label traffic.
+//! * `veclabel` — candidate computation per edge-row, swept over the full
+//!   (backend × lane width) grid: `B ∈ {8, 16, 32}` via scalar blocked
+//!   twins and 1/2/4-register AVX2 unrolls. Reports ns/row, lanes/ns and
+//!   edges/sec (one row = one edge visit serving all `R` lanes), and
+//!   dumps the per-width throughput to `BENCH_kernels.json`.
 //! * `propagate` — full fixpoint propagation: native async (frontier)
 //!   vs native sync (Jacobi) vs the XLA engine (warm executable),
 //!   same graph, same seed; fixpoint equality is asserted while timing.
+//!
+//! `INFUSER_BENCH_SMOKE=1` shrinks everything to CI-smoke scale.
 
 use infuser::bench::{time_it, BenchEnv};
+use infuser::coordinator::Table;
 use infuser::engine::{Engine, NativeEngine};
 use infuser::gen::{self, GenSpec};
 use infuser::graph::weights::prob_to_threshold;
 use infuser::graph::WeightModel;
 use infuser::labelprop::{Mode, PropagateOpts};
-use infuser::sampling::xr_stream;
-use infuser::simd::{veclabel_row, Backend};
-use infuser::coordinator::Table;
+use infuser::sampling::xr_stream_padded;
+use infuser::simd::{Backend, LaneEngine, LaneWidth};
+use infuser::util::json::Json;
+use std::collections::BTreeMap;
 
-fn bench_veclabel(_env: &BenchEnv) -> Table {
-    let mut t = Table::new("VECLABEL row kernel — ns/row and lanes/ns");
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn backends() -> Vec<Backend> {
+    let mut v = vec![Backend::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        v.push(Backend::Avx2);
+    }
+    v
+}
+
+/// The lane sweep: every (backend × width) engine over a fixed row count.
+fn bench_veclabel(env: &BenchEnv) -> (Table, Json) {
+    let mut t = Table::new("VECLABEL row kernel — lane-width sweep");
     t.header(vec![
         "R".into(),
+        "B".into(),
         "backend".into(),
         "ns/row".into(),
         "lanes/ns".into(),
+        "edges/s".into(),
         "GB/s".into(),
     ]);
-    let rows = 200_000usize;
-    for r_count in [8usize, 64, 256, 1024] {
-        let xrs = xr_stream(7, r_count);
-        let lu: Vec<i32> = (0..r_count as i32).collect();
-        let mut lv: Vec<i32> = (0..r_count as i32).rev().collect();
-        let mut cand = vec![0i32; r_count];
-        let thr = prob_to_threshold(0.3);
-        let mut backends = vec![Backend::Scalar];
-        #[cfg(target_arch = "x86_64")]
-        if std::arch::is_x86_feature_detected!("avx2") {
-            backends.push(Backend::Avx2);
-        }
-        for backend in backends {
-            // Warmup + measure.
-            for _ in 0..1000 {
-                std::hint::black_box(veclabel_row(backend, &lu, &lv, 12345, thr, &xrs, &mut cand));
-            }
-            let (_, secs) = time_it(|| {
-                for i in 0..rows {
-                    // vary the hash so the branch predictor sees real data
-                    let h = (i as u32).wrapping_mul(2654435761) & 0x7fffffff;
-                    std::hint::black_box(veclabel_row(
-                        backend,
-                        &lu,
-                        std::hint::black_box(&lv),
-                        h,
-                        thr,
-                        &xrs,
-                        &mut cand,
-                    ));
-                    lv[0] ^= 1; // defeat value memoization
+    let rows = if env.smoke { 2_000usize } else { 200_000 };
+    // 100 is deliberately ragged: padding rounds it to 104/112/128 per
+    // width, so the sweep also shows the padded-batch trade-off.
+    let r_counts: &[usize] = if env.smoke { &[64] } else { &[100, 256, 1024] };
+    let mut entries: Vec<Json> = Vec::new();
+    for &r_count in r_counts {
+        for width in LaneWidth::ALL {
+            // Padded geometry: the row buffers are extended to a whole
+            // number of `B`-lane batches and the kernel runs full-width
+            // over the padded tail (no scalar remainder); the padded
+            // lanes' candidates are simply never read back.
+            let padded = width.padded(r_count);
+            let xrs = xr_stream_padded(7, r_count, width);
+            let lu: Vec<i32> = (0..padded as i32).collect();
+            let mut lv: Vec<i32> = (0..padded as i32).rev().collect();
+            let mut cand = vec![0i32; padded];
+            let thr = prob_to_threshold(0.3);
+            for backend in backends() {
+                let engine = LaneEngine::new(backend, width);
+                // Warmup + measure.
+                for _ in 0..1000 {
+                    std::hint::black_box(engine.row(&lu, &lv, 12345, thr, &xrs, &mut cand));
                 }
-            });
-            let ns_per_row = secs * 1e9 / rows as f64;
-            // label traffic: read lu+lv+xrs, write cand = 4 arrays * 4B * R
-            let gbs = (rows as f64 * 4.0 * 4.0 * r_count as f64) / secs / 1e9;
-            t.row(vec![
-                r_count.to_string(),
-                backend.label().into(),
-                format!("{ns_per_row:.1}"),
-                format!("{:.2}", r_count as f64 / ns_per_row),
-                format!("{gbs:.1}"),
-            ]);
+                let (_, secs) = time_it(|| {
+                    for i in 0..rows {
+                        // vary the hash so the branch predictor sees real data
+                        let h = (i as u32).wrapping_mul(2654435761) & 0x7fffffff;
+                        std::hint::black_box(engine.row(
+                            &lu,
+                            std::hint::black_box(&lv),
+                            h,
+                            thr,
+                            &xrs,
+                            &mut cand,
+                        ));
+                        lv[0] ^= 1; // defeat value memoization
+                    }
+                });
+                let ns_per_row = secs * 1e9 / rows as f64;
+                let edges_per_sec = rows as f64 / secs;
+                // label traffic: read lu+lv+xrs, write cand = 4 arrays * 4B
+                // per *processed* (padded) lane
+                let gbs = (rows as f64 * 4.0 * 4.0 * padded as f64) / secs / 1e9;
+                t.row(vec![
+                    r_count.to_string(),
+                    width.label().into(),
+                    backend.label().into(),
+                    format!("{ns_per_row:.1}"),
+                    format!("{:.2}", r_count as f64 / ns_per_row),
+                    format!("{edges_per_sec:.3e}"),
+                    format!("{gbs:.1}"),
+                ]);
+                entries.push(obj(vec![
+                    ("r", Json::Num(r_count as f64)),
+                    ("r_padded", Json::Num(padded as f64)),
+                    ("width", Json::Num(width.lanes() as f64)),
+                    ("backend", Json::Str(backend.label().into())),
+                    ("ns_per_row", Json::Num(ns_per_row)),
+                    ("edges_per_sec", Json::Num(edges_per_sec)),
+                    ("gb_per_sec", Json::Num(gbs)),
+                ]));
+            }
         }
     }
-    t
+    let json = obj(vec![
+        ("bench", Json::Str("veclabel_lane_sweep".into())),
+        ("rows_per_measurement", Json::Num(rows as f64)),
+        ("smoke", Json::Bool(env.smoke)),
+        ("sweep", Json::Arr(entries)),
+    ]);
+    (t, json)
 }
 
 fn bench_propagate(env: &BenchEnv) -> infuser::Result<Table> {
@@ -79,22 +127,29 @@ fn bench_propagate(env: &BenchEnv) -> infuser::Result<Table> {
     t.header(vec![
         "graph".into(),
         "R".into(),
+        "B".into(),
         "async (s)".into(),
         "sync (s)".into(),
         "xla warm (s)".into(),
         "fixpoint".into(),
     ]);
     let xla = infuser::runtime::XlaEngine::discover().ok();
-    for (name, spec) in [
-        ("er-4k", GenSpec::erdos_renyi(4_000, 16_000, 3)),
-        ("rmat-14", GenSpec::rmat(14, 60_000, 77)),
-    ] {
+    let specs: Vec<(&str, GenSpec)> = if env.smoke {
+        vec![("er-500", GenSpec::erdos_renyi(500, 2_000, 3))]
+    } else {
+        vec![
+            ("er-4k", GenSpec::erdos_renyi(4_000, 16_000, 3)),
+            ("rmat-14", GenSpec::rmat(14, 60_000, 77)),
+        ]
+    };
+    for (name, spec) in specs {
         let g = gen::generate(&spec).with_weights(WeightModel::Const(0.05), 3);
         let r_count = 64usize; // artifact lane count
         let mk = |mode| PropagateOpts {
             r_count,
             seed: 9,
             threads: env.threads,
+            lanes: env.lanes,
             mode,
             ..Default::default()
         };
@@ -113,6 +168,7 @@ fn bench_propagate(env: &BenchEnv) -> infuser::Result<Table> {
         t.row(vec![
             name.into(),
             r_count.to_string(),
+            env.lanes.label().into(),
             format!("{async_s:.3}"),
             format!("{sync_s:.3}"),
             xla_s.map_or("-".into(), |x| format!("{x:.3}")),
@@ -125,11 +181,12 @@ fn bench_propagate(env: &BenchEnv) -> infuser::Result<Table> {
 fn main() -> infuser::Result<()> {
     let env = BenchEnv::load();
     env.banner(
-        "Kernel microbenches — VECLABEL + propagation engines",
-        "AVX2 processes B=8 lanes/instruction; fused batching serves all R per edge visit",
+        "Kernel microbenches — VECLABEL lane sweep + propagation engines",
+        "AVX2 processes B lanes/step (8/16/32 = 1/2/4 registers); fused batching serves all R per edge visit",
     );
-    let t1 = bench_veclabel(&env);
+    let (t1, sweep_json) = bench_veclabel(&env);
     let t2 = bench_propagate(&env)?;
     env.emit("kernels", &[&t1, &t2]);
+    env.emit_json("kernels", &sweep_json);
     Ok(())
 }

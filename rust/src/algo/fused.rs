@@ -13,6 +13,7 @@ use super::celf::celf_select;
 use super::{Budget, ImResult};
 use crate::graph::Graph;
 use crate::sampling::{edge_alive, xr_word};
+use crate::simd::LaneWidth;
 use crate::VertexId;
 
 /// FUSEDSAMPLING parameters.
@@ -24,11 +25,16 @@ pub struct FusedParams {
     pub r_count: usize,
     /// Run seed (drives the X_r stream — same contract as INFUSER-MG).
     pub seed: u64,
+    /// Lane batch width for the CELF phase's RANDCAS traversals: `B`
+    /// simulations share one BFS via per-vertex lane bitmasks
+    /// ([`randcas_fused_batched`]). σ estimates are identical for every
+    /// width (per-lane reachability is batch-invariant).
+    pub lanes: LaneWidth,
 }
 
 impl Default for FusedParams {
     fn default() -> Self {
-        Self { k: 50, r_count: 100, seed: 0 }
+        Self { k: 50, r_count: 100, seed: 0, lanes: LaneWidth::default() }
     }
 }
 
@@ -84,6 +90,96 @@ pub fn randcas_fused(
             }
         }
         total += queue.len() as u64;
+    }
+    Ok(total as f64 / r_count as f64)
+}
+
+/// Lane-batched fused RANDCAS: like [`randcas_fused`], but `width.lanes()`
+/// simulations share one traversal. Each vertex carries a bitmask of the
+/// lanes that reached it; an edge is expanded once per *batch* (its `B`
+/// aliveness tests run together over the batch's `X_r` words) instead of
+/// once per simulation, so hub regions reached in most lanes are walked
+/// `B`× less often. Per-lane reachability — and therefore σ, a pure
+/// per-lane count — is bit-identical to the serial traversal for every
+/// width (covered by `batched_randcas_matches_serial_for_all_widths`).
+pub fn randcas_fused_batched(
+    graph: &Graph,
+    seeds: &[VertexId],
+    r_count: usize,
+    seed: u64,
+    xr_offset: usize,
+    width: LaneWidth,
+    budget: &Budget,
+) -> Result<f64, super::AlgoError> {
+    let n = graph.num_vertices();
+    let lanes_per_batch = width.lanes(); // 8 | 16 | 32 — masks fit in u32
+    // `reached` starts all-zero and is re-zeroed sparsely: the per-batch
+    // count-and-clear pass below touches only queued vertices, so there
+    // is no O(n) reset between batches (the epoch trick's moral
+    // equivalent for masks).
+    let mut reached = vec![0u32; n];
+    let mut in_queue = vec![false; n];
+    let mut queue: Vec<VertexId> = Vec::new();
+    let mut xrs = [0i32; 32];
+    let mut total = 0u64;
+    let mut batch_start = 0usize;
+    while batch_start < r_count {
+        budget.check()?;
+        let lanes = lanes_per_batch.min(r_count - batch_start);
+        let full: u32 = if lanes == 32 { u32::MAX } else { (1u32 << lanes) - 1 };
+        for (j, xr) in xrs[..lanes].iter_mut().enumerate() {
+            *xr = xr_word(seed, xr_offset + batch_start + j);
+        }
+        queue.clear();
+        for &s in seeds {
+            if reached[s as usize] == 0 {
+                queue.push(s);
+                in_queue[s as usize] = true;
+            }
+            reached[s as usize] = full;
+        }
+        // Monotone worklist: a vertex re-enters the queue whenever its
+        // lane mask grows, so every lane's closure completes regardless
+        // of the order lanes reach a vertex.
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            in_queue[u as usize] = false;
+            let mu = reached[u as usize];
+            let (a, b) = (
+                graph.xadj[u as usize] as usize,
+                graph.xadj[u as usize + 1] as usize,
+            );
+            for idx in a..b {
+                let v = graph.adj[idx] as usize;
+                let pending = mu & !reached[v];
+                if pending == 0 {
+                    continue;
+                }
+                let (h, thr) = (graph.edge_hash[idx], graph.threshold[idx]);
+                let mut alive = 0u32;
+                for (j, &xr) in xrs[..lanes].iter().enumerate() {
+                    alive |= (edge_alive(h, thr, xr) as u32) << j;
+                }
+                let add = pending & alive;
+                if add != 0 {
+                    reached[v] |= add;
+                    if !in_queue[v] {
+                        in_queue[v] = true;
+                        queue.push(v as VertexId);
+                    }
+                }
+            }
+        }
+        // Count and clear in one pass over the queue: every vertex with a
+        // nonzero mask was enqueued at least once, and a duplicate entry
+        // contributes 0 because its first visit already cleared the slot.
+        for &v in &queue {
+            total += u64::from(reached[v as usize].count_ones());
+            reached[v as usize] = 0;
+        }
+        batch_start += lanes;
     }
     Ok(total as f64 / r_count as f64)
 }
@@ -177,7 +273,8 @@ impl FusedSampling {
                 // mirrors MIXGREEDY consuming fresh randomness per RANDCAS.
                 reeval_counter += 1;
                 let off = p.r_count * reeval_counter;
-                match randcas_fused(graph, &trial, p.r_count, p.seed, off, budget) {
+                match randcas_fused_batched(graph, &trial, p.r_count, p.seed, off, p.lanes, budget)
+                {
                     Ok(s) => s - sigma_s.get(),
                     Err(e) => {
                         err = Some(e);
@@ -268,10 +365,62 @@ mod tests {
     #[test]
     fn hub_first_on_star() {
         let g = star(24, 0.5);
-        let res = FusedSampling::new(FusedParams { k: 2, r_count: 128, seed: 3 })
+        let res = FusedSampling::new(FusedParams { k: 2, r_count: 128, seed: 3, ..Default::default() })
             .run(&g, &Budget::unlimited())
             .unwrap();
         assert_eq!(res.seeds[0], 0);
+    }
+
+    #[test]
+    fn batched_randcas_matches_serial_for_all_widths() {
+        use crate::util::proptest_lite::check;
+        check("randcas-batched", 15, |gen| {
+            let g = gen
+                .gen_graph(70)
+                .with_weights(WeightModel::Uniform(0.05, 0.6), gen.u64());
+            let n = g.num_vertices();
+            let seed = gen.u64();
+            let r_count = gen.size(1, 40); // ragged batch tails included
+            let offset = gen.size(0, 1000);
+            let seeds: Vec<u32> = (0..gen.size(1, 5.min(n)))
+                .map(|_| gen.below(n as u32))
+                .collect();
+            let serial =
+                randcas_fused(&g, &seeds, r_count, seed, offset, &Budget::unlimited()).unwrap();
+            for width in LaneWidth::ALL {
+                let batched = randcas_fused_batched(
+                    &g,
+                    &seeds,
+                    r_count,
+                    seed,
+                    offset,
+                    width,
+                    &Budget::unlimited(),
+                )
+                .unwrap();
+                assert!(
+                    (batched - serial).abs() < 1e-12,
+                    "width {width}: batched={batched} serial={serial} g={}",
+                    g.name
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn lane_width_does_not_change_fused_seeds() {
+        let g = crate::gen::generate(&crate::gen::GenSpec::erdos_renyi(80, 240, 9))
+            .with_weights(WeightModel::Const(0.15), 4);
+        let reference = FusedSampling::new(FusedParams { k: 3, r_count: 64, seed: 5, ..Default::default() })
+            .run(&g, &Budget::unlimited())
+            .unwrap();
+        for lanes in LaneWidth::ALL {
+            let res = FusedSampling::new(FusedParams { k: 3, r_count: 64, seed: 5, lanes })
+                .run(&g, &Budget::unlimited())
+                .unwrap();
+            assert_eq!(res.seeds, reference.seeds, "lanes {lanes}");
+            assert!((res.influence - reference.influence).abs() < 1e-12, "lanes {lanes}");
+        }
     }
 
     #[test]

@@ -25,7 +25,7 @@ use super::{Budget, ImResult};
 use crate::engine::Engine;
 use crate::graph::Graph;
 use crate::labelprop::{self, Labels, Mode, PropagateOpts};
-use crate::simd::Backend;
+use crate::simd::{Backend, LaneWidth};
 use crate::sketch::SketchMemo;
 use crate::util::ThreadPool;
 
@@ -168,6 +168,12 @@ pub struct InfuserParams {
     pub threads: usize,
     /// VECLABEL backend (scalar / AVX2).
     pub backend: Backend,
+    /// VECLABEL lane batch width `B ∈ {8, 16, 32}`. Result-invariant: the
+    /// memo label layout is the same row-major `n × R` matrix for every
+    /// width (both [`DenseMemo`] and [`crate::sketch::SketchMemo`] index
+    /// it as `l·R + lane`), so seeds are identical — only kernel
+    /// throughput moves.
+    pub lanes: LaneWidth,
     /// Propagation schedule (async Gauss–Seidel / sync Jacobi).
     pub mode: Mode,
     /// Memoization backend for the CELF phase (dense / sketch).
@@ -182,6 +188,7 @@ impl Default for InfuserParams {
             seed: 0,
             threads: 1,
             backend: Backend::detect(),
+            lanes: LaneWidth::default(),
             mode: Mode::Async,
             memo: MemoKind::Dense,
         }
@@ -317,6 +324,7 @@ impl InfuserMg {
             seed: p.seed,
             threads: p.threads,
             backend: p.backend,
+            lanes: p.lanes,
             mode: p.mode,
         };
         let prop = engine.propagate(graph, &opts)?;
@@ -362,6 +370,7 @@ impl InfuserMg {
             seed: p.seed,
             threads: p.threads,
             backend: p.backend,
+            lanes: p.lanes,
             mode: p.mode,
         };
         let prop = labelprop::propagate(graph, &opts);

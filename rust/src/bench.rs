@@ -15,9 +15,15 @@
 //!   paper's is 302,400 — timeouts render as "-" either way).
 //! * `INFUSER_BENCH_OUT` — directory for markdown dumps (default
 //!   `bench_results/`).
+//! * `INFUSER_BENCH_LANES` — VECLABEL lane batch width `B` (8/16/32,
+//!   default 8) used by the grid benches' algorithm cells.
+//! * `INFUSER_BENCH_SMOKE=1` — shrink inputs to seconds-scale sizes so CI
+//!   can assert the bench binaries still run (no meaningful numbers).
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::Table;
+use crate::simd::LaneWidth;
+use crate::util::json::Json;
 use std::time::Duration;
 
 /// Environment-derived bench geometry.
@@ -33,6 +39,10 @@ pub struct BenchEnv {
     pub timeout: Duration,
     /// Threads available.
     pub threads: usize,
+    /// VECLABEL lane batch width for the algorithm cells.
+    pub lanes: LaneWidth,
+    /// CI smoke mode: tiny inputs, just prove the bench still runs.
+    pub smoke: bool,
     /// Markdown output directory.
     pub out_dir: String,
 }
@@ -49,6 +59,14 @@ impl BenchEnv {
                 get("INFUSER_BENCH_TIMEOUT").and_then(|v| v.parse().ok()).unwrap_or(60),
             ),
             threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2),
+            // Loud on bad input: a typo'd width must not silently measure
+            // (and get recorded as) B=8.
+            lanes: match get("INFUSER_BENCH_LANES") {
+                Some(v) => LaneWidth::parse(&v)
+                    .unwrap_or_else(|e| panic!("INFUSER_BENCH_LANES: {e}")),
+                None => LaneWidth::default(),
+            },
+            smoke: get("INFUSER_BENCH_SMOKE").is_some_and(|v| v == "1"),
             out_dir: get("INFUSER_BENCH_OUT").unwrap_or_else(|| "bench_results".into()),
         }
     }
@@ -92,6 +110,7 @@ impl BenchEnv {
             timeout: self.timeout,
             seed: 0,
             oracle_r: 0,
+            lanes: self.lanes,
             ..Default::default()
         }
     }
@@ -112,16 +131,29 @@ impl BenchEnv {
         }
     }
 
+    /// Write a JSON dump to `{out_dir}/BENCH_{name}.json` (the trajectory
+    /// entries the perf tracking consumes) and echo the path to stderr.
+    pub fn emit_json(&self, name: &str, json: &Json) {
+        if std::fs::create_dir_all(&self.out_dir).is_ok() {
+            let path = format!("{}/BENCH_{name}.json", self.out_dir);
+            if std::fs::write(&path, json.to_pretty()).is_ok() {
+                eprintln!("[bench] wrote {path}");
+            }
+        }
+    }
+
     /// Banner with the geometry, printed at the top of every bench.
     pub fn banner(&self, what: &str, paper_ref: &str) {
         println!("### {what}");
         println!(
-            "(paper: {paper_ref}; this run: K={} R={} tau={} timeout={:?} datasets={})",
+            "(paper: {paper_ref}; this run: K={} R={} tau={} lanes=B{} timeout={:?} datasets={}{})",
             self.k,
             self.r,
             self.threads,
+            self.lanes.label(),
             self.timeout,
             if self.full { "all-12" } else { "subset-6" },
+            if self.smoke { " [SMOKE]" } else { "" },
         );
         println!();
     }

@@ -9,7 +9,7 @@
 
 use crate::algo::infuser::MemoKind;
 use crate::graph::WeightModel;
-use crate::simd::Backend;
+use crate::simd::{Backend, LaneWidth};
 use crate::util::json::Json;
 use std::time::Duration;
 
@@ -146,6 +146,9 @@ pub struct ExperimentConfig {
     pub oracle_r: usize,
     /// VECLABEL backend.
     pub backend: Backend,
+    /// VECLABEL lane batch width `B ∈ {8, 16, 32}` (JSON key `"lanes"`).
+    /// Result-invariant across widths; throughput knob only.
+    pub lanes: LaneWidth,
     /// Memoization backend for the INFUSER-MG cells (`infuser-sketch`
     /// cells always use the sketch regardless of this default).
     pub memo: MemoKind,
@@ -169,6 +172,7 @@ impl Default for ExperimentConfig {
             timeout: Duration::from_secs(600),
             oracle_r: 0,
             backend: Backend::detect(),
+            lanes: LaneWidth::default(),
             memo: MemoKind::Dense,
             imm_memory_limit: None,
         }
@@ -184,7 +188,8 @@ impl ExperimentConfig {
     ///   "settings": ["const:0.01", "const:0.1", "uniform:0:0.1", "normal:0.05:0.025"],
     ///   "algos": ["infuser", "imm:0.13", "imm:0.5"],
     ///   "k": 50, "r": 256, "threads": 16, "seed": 0,
-    ///   "timeout_secs": 600, "oracle_r": 1024
+    ///   "timeout_secs": 600, "oracle_r": 1024,
+    ///   "backend": "auto", "lanes": 16, "memo": "dense"
     /// }
     /// ```
     pub fn from_json(text: &str) -> crate::Result<Self> {
@@ -240,6 +245,15 @@ impl ExperimentConfig {
         }
         if let Some(b) = json.get("backend").and_then(|v| v.as_str()) {
             cfg.backend = Backend::parse(b)?;
+        }
+        if let Some(l) = json.get("lanes") {
+            cfg.lanes = match (l.as_i64(), l.as_str()) {
+                (Some(b), _) => LaneWidth::from_lanes(b as usize)?,
+                (None, Some(s)) => LaneWidth::parse(s)?,
+                (None, None) => {
+                    anyhow::bail!("'lanes' must be a number or string (8, 16, or 32)")
+                }
+            };
         }
         if let Some(m) = json.get("memo").and_then(|v| v.as_str()) {
             cfg.memo = MemoKind::parse(m)?;
@@ -302,6 +316,18 @@ mod tests {
         assert!(AlgoSpec::parse("bogus").is_err());
         assert_eq!(AlgoSpec::Imm { epsilon: 0.13 }.label(), "IMM(e=0.13)");
         assert_eq!(AlgoSpec::InfuserSketch.label(), "Infuser-MG(sk)");
+    }
+
+    #[test]
+    fn lanes_parse_from_json_number_or_string() {
+        let cfg = ExperimentConfig::from_json(r#"{"lanes": 16}"#).unwrap();
+        assert_eq!(cfg.lanes, LaneWidth::W16);
+        let cfg = ExperimentConfig::from_json(r#"{"lanes": "32"}"#).unwrap();
+        assert_eq!(cfg.lanes, LaneWidth::W32);
+        assert_eq!(ExperimentConfig::from_json("{}").unwrap().lanes, LaneWidth::W8);
+        for bad in [r#"{"lanes": 12}"#, r#"{"lanes": "wide"}"#, r#"{"lanes": true}"#] {
+            assert!(ExperimentConfig::from_json(bad).is_err(), "{bad}");
+        }
     }
 
     #[test]

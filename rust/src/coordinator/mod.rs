@@ -141,6 +141,7 @@ impl Runner {
                 k: cfg.k,
                 r_count: cfg.r_count,
                 seed: cfg.seed,
+                lanes: cfg.lanes,
             })
             .run(graph, &budget),
             AlgoSpec::InfuserMg | AlgoSpec::InfuserSketch => InfuserMg::new(InfuserParams {
@@ -149,6 +150,7 @@ impl Runner {
                 seed: cfg.seed,
                 threads: cfg.threads,
                 backend: cfg.backend,
+                lanes: cfg.lanes,
                 memo: if algo == AlgoSpec::InfuserSketch {
                     crate::algo::infuser::MemoKind::Sketch
                 } else {
@@ -163,6 +165,7 @@ impl Runner {
                 seed: cfg.seed,
                 threads: cfg.threads,
                 backend: cfg.backend,
+                lanes: cfg.lanes,
                 memo: cfg.memo,
                 ..Default::default()
             })
@@ -227,6 +230,14 @@ impl Runner {
     /// dataset-major order (like the paper's tables).
     pub fn run_grid(&self) -> crate::Result<Vec<CellResult>> {
         let cfg = &self.cfg;
+        self.log(&format!(
+            "grid geometry: K={} R={} tau={} backend={} lanes=B{}",
+            cfg.k,
+            cfg.r_count,
+            cfg.threads,
+            cfg.backend.label(),
+            cfg.lanes.label()
+        ));
         let mut cells = Vec::new();
         for dref in &cfg.datasets {
             let base = self.load(dref)?;
@@ -328,6 +339,7 @@ mod tests {
             timeout: Duration::from_secs(120),
             oracle_r: 64,
             backend: crate::simd::Backend::detect(),
+            lanes: crate::simd::LaneWidth::default(),
             memo: crate::algo::infuser::MemoKind::Dense,
             imm_memory_limit: None,
         }
@@ -365,6 +377,33 @@ mod tests {
             "sketch cell {} must undercut dense cell {}",
             bytes(1),
             bytes(0)
+        );
+    }
+
+    #[test]
+    fn lane_width_is_result_invariant_across_the_grid() {
+        // Table-5 cells must not depend on the throughput knob: the same
+        // grid at B=8 and B=32 selects identical seeds.
+        let seeds_at = |lanes| {
+            let mut cfg = tiny_cfg();
+            cfg.algos = vec![AlgoSpec::InfuserMg, AlgoSpec::FusedSampling];
+            cfg.oracle_r = 0;
+            cfg.lanes = lanes;
+            let mut runner = Runner::new(cfg);
+            runner.verbose = false;
+            runner
+                .run_grid()
+                .unwrap()
+                .into_iter()
+                .map(|c| match c.outcome {
+                    Outcome::Done { seeds, .. } => seeds,
+                    other => panic!("{other:?}"),
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(
+            seeds_at(crate::simd::LaneWidth::W8),
+            seeds_at(crate::simd::LaneWidth::W32)
         );
     }
 

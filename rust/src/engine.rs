@@ -5,8 +5,10 @@
 //! architecture:
 //!
 //! * [`NativeEngine`] — the in-crate Rust engine ([`crate::labelprop`]):
-//!   frontier-driven, push-based, AVX2 VECLABEL. This reproduces the
-//!   paper's CPU design and is what the paper-scale benchmarks run.
+//!   frontier-driven, push-based, VECLABEL via a runtime-selected
+//!   [`crate::simd::LaneEngine`] (scalar or AVX2 backend × lane width
+//!   `B ∈ {8, 16, 32}`). This reproduces the paper's CPU design and is
+//!   what the paper-scale benchmarks run.
 //! * [`crate::runtime::XlaEngine`] — the AOT path: the same computation
 //!   authored in JAX (L2) around a Pallas VECLABEL kernel (L1), lowered at
 //!   build time to HLO text and executed from Rust through the PJRT C API.
@@ -55,5 +57,20 @@ mod tests {
         let direct = labelprop::propagate(&g, &opts);
         assert_eq!(via_engine.labels.data, direct.labels.data);
         assert_eq!(NativeEngine.name(), "native");
+    }
+
+    #[test]
+    fn native_engine_honors_lane_width() {
+        use crate::simd::LaneWidth;
+        let g = crate::gen::generate(&GenSpec::erdos_renyi(120, 360, 4))
+            .with_weights(WeightModel::Const(0.2), 2);
+        let base = PropagateOpts { r_count: 24, seed: 3, threads: 2, ..Default::default() };
+        let reference = NativeEngine.propagate(&g, &base).unwrap();
+        for lanes in LaneWidth::ALL {
+            let res = NativeEngine
+                .propagate(&g, &PropagateOpts { lanes, ..base })
+                .unwrap();
+            assert_eq!(res.labels.data, reference.labels.data, "lanes {lanes}");
+        }
     }
 }

@@ -3,7 +3,9 @@
 //! found simultaneously by min-label propagation over the *original*
 //! graph, re-testing each edge's aliveness per lane with the fused
 //! sampler, processing only *live* vertices (frontier), `τ` threads over
-//! the frontier, and `B = 8` lanes per instruction via [`crate::simd`].
+//! the frontier, and a runtime-selected batch of `B ∈ {8, 16, 32}` lanes
+//! per kernel step via [`crate::simd::LaneEngine`] (the paper's `B = 8`
+//! is the default; every width yields a bit-identical fixpoint).
 //!
 //! Two execution modes with the same fixpoint (per lane, every vertex's
 //! label = minimum vertex id of its connected component in that lane's
@@ -21,7 +23,7 @@
 
 use crate::graph::Graph;
 use crate::sampling::xr_stream;
-use crate::simd::{veclabel_row, veclabel_row_maskonly, Backend};
+use crate::simd::{Backend, LaneEngine, LaneWidth};
 use crate::util::par::{as_send_cells, ThreadPool};
 use std::sync::atomic::{AtomicI32, AtomicU64, AtomicUsize, Ordering};
 
@@ -87,6 +89,8 @@ pub struct PropagateOpts {
     pub threads: usize,
     /// VECLABEL backend.
     pub backend: Backend,
+    /// VECLABEL lane batch width `B` (result-invariant; throughput knob).
+    pub lanes: LaneWidth,
     /// Schedule.
     pub mode: Mode,
 }
@@ -98,8 +102,17 @@ impl Default for PropagateOpts {
             seed: 0,
             threads: 1,
             backend: Backend::detect(),
+            lanes: LaneWidth::default(),
             mode: Mode::Async,
         }
+    }
+}
+
+impl PropagateOpts {
+    /// The resolved kernel engine for these options.
+    #[inline]
+    pub fn engine(&self) -> LaneEngine {
+        LaneEngine::new(self.backend, self.lanes)
     }
 }
 
@@ -165,6 +178,7 @@ pub fn initial_gains(labels: &Labels, sizes: &[i32], pool: &ThreadPool) -> Vec<f
 fn propagate_async(graph: &Graph, opts: &PropagateOpts) -> PropagationResult {
     let n = graph.num_vertices();
     let r_count = opts.r_count;
+    let engine = opts.engine();
     let xrs = xr_stream(opts.seed, r_count);
     let mut labels = Labels::identity(n, r_count);
     let pool = ThreadPool::new(opts.threads);
@@ -227,15 +241,8 @@ fn propagate_async(graph: &Graph, opts: &PropagateOpts) -> PropagationResult {
                         // SAFETY: racy read of v's row (see above).
                         let lv_view =
                             unsafe { std::slice::from_raw_parts(dp.0.add(v * r_count), r_count) };
-                        let live = veclabel_row_maskonly(
-                            opts.backend,
-                            &lu_snap,
-                            lv_view,
-                            h,
-                            thr,
-                            xrs_ref,
-                            &mut changed,
-                        );
+                        let live =
+                            engine.row_maskonly(&lu_snap, lv_view, h, thr, xrs_ref, &mut changed);
                         if !live {
                             continue;
                         }
@@ -298,6 +305,7 @@ unsafe impl Send for SharedLabels {}
 fn propagate_sync(graph: &Graph, opts: &PropagateOpts) -> PropagationResult {
     let n = graph.num_vertices();
     let r_count = opts.r_count;
+    let engine = opts.engine();
     let xrs = xr_stream(opts.seed, r_count);
     let mut cur = Labels::identity(n, r_count);
     let pool = ThreadPool::new(opts.threads);
@@ -339,8 +347,7 @@ fn propagate_sync(graph: &Graph, opts: &PropagateOpts) -> PropagationResult {
                         if thr == 0 {
                             continue;
                         }
-                        let live = veclabel_row(
-                            opts.backend,
+                        let live = engine.row(
                             cur_ref.row(u),
                             lv,
                             graph.edge_hash[idx],
@@ -436,6 +443,7 @@ mod tests {
             seed,
             threads,
             backend: Backend::detect(),
+            lanes: LaneWidth::default(),
             mode,
         }
     }
@@ -484,6 +492,25 @@ mod tests {
             let s = propagate(&g, &opts(16, seed, 3, Mode::Sync));
             assert_eq!(a.labels.data, s.labels.data);
         });
+    }
+
+    #[test]
+    fn lane_width_does_not_change_fixpoint() {
+        // B is a throughput knob only: every (width, mode) pair must land
+        // on the bit-identical label matrix. The full cross-product lives
+        // in `tests/lane_equivalence.rs`; this is the in-module guard.
+        let g = crate::gen::generate(&GenSpec::erdos_renyi(200, 600, 2))
+            .with_weights(WeightModel::Const(0.25), 7);
+        let reference = propagate(&g, &opts(40, 5, 2, Mode::Async));
+        for lanes in LaneWidth::ALL {
+            for mode in [Mode::Async, Mode::Sync] {
+                let res = propagate(&g, &PropagateOpts { lanes, ..opts(40, 5, 2, mode) });
+                assert_eq!(
+                    res.labels.data, reference.labels.data,
+                    "lanes {lanes} mode {mode:?}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -69,6 +69,9 @@ COMMANDS
   run        --dataset ID --algo A     run one algorithm
              [--weights W] [--k N] [--r N] [--threads N] [--seed N]
              [--timeout SECS] [--oracle-r N] [--engine native|xla]
+             [--backend scalar|avx2|auto]  VECLABEL kernel backend
+             [--lanes 8|16|32]         VECLABEL lane batch width B (default 8;
+                                       seeds are identical for every width)
              [--memo dense|sketch]     CELF memoization backend (infuser)
   experiment --config FILE.json        run a full grid, render tables
              [--markdown]
@@ -138,6 +141,7 @@ fn cmd_run(args: &Args) -> infuser::Result<()> {
         timeout: std::time::Duration::from_secs_f64(args.get_or("timeout", 3600.0f64)?),
         oracle_r: args.get_or("oracle-r", 0usize)?,
         backend: infuser::simd::Backend::parse(args.opt("backend").unwrap_or("auto"))?,
+        lanes: infuser::simd::LaneWidth::parse(args.opt("lanes").unwrap_or("8"))?,
         memo: infuser::algo::infuser::MemoKind::parse(args.opt("memo").unwrap_or("dense"))?,
         imm_memory_limit: args
             .opt("imm-mem-gb")
@@ -159,6 +163,7 @@ fn cmd_run(args: &Args) -> infuser::Result<()> {
                 seed: cfg.seed,
                 threads: cfg.threads,
                 backend: cfg.backend,
+                lanes: cfg.lanes,
                 memo: if matches!(algo, AlgoSpec::InfuserSketch) {
                     infuser::algo::infuser::MemoKind::Sketch
                 } else {

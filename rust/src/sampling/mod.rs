@@ -31,9 +31,24 @@ use crate::util::stats;
 ///
 /// `X_r = splitmix64_mix(seed + (r+1)·φ) & 0x7fffffff` where φ is the
 /// 64-bit golden-ratio constant. Stateless, so any simulation's word can
-/// be recomputed independently — the property the XLA layer relies on.
+/// be recomputed independently — the property the XLA layer relies on,
+/// and the reason the lane batch width ([`crate::simd::LaneWidth`]) can
+/// be chosen freely at runtime: however the stream is cut into batches,
+/// lane `r` always carries the same word.
 pub fn xr_stream(seed: u64, r_count: usize) -> Vec<i32> {
     (0..r_count).map(|r| xr_word(seed, r)).collect()
+}
+
+/// [`xr_stream`] padded up to a whole number of `width`-lane batches.
+///
+/// The first `r_count` words are exactly `xr_stream(seed, r_count)`; the
+/// padding words are the stream's continuation (`r >= r_count`), so a
+/// batched kernel can run full-width over the padded tail as long as the
+/// caller discards the padded lanes' results. Used by the lane-sweep
+/// bench; the propagation engines keep exact-length streams and let the
+/// kernels' scalar tails handle ragged `R`.
+pub fn xr_stream_padded(seed: u64, r_count: usize, width: crate::simd::LaneWidth) -> Vec<i32> {
+    xr_stream(seed, width.padded(r_count))
 }
 
 /// Single `X_r` word (31-bit, non-negative).
@@ -142,6 +157,23 @@ mod tests {
         assert_eq!(a, b);
         assert!(a.iter().all(|&x| x >= 0));
         assert_ne!(xr_stream(43, 64), a);
+    }
+
+    #[test]
+    fn padded_stream_extends_the_exact_stream() {
+        use crate::simd::LaneWidth;
+        for width in LaneWidth::ALL {
+            for r_count in [1usize, 7, 8, 17, 32, 100] {
+                let exact = xr_stream(9, r_count);
+                let padded = xr_stream_padded(9, r_count, width);
+                assert_eq!(padded.len(), width.padded(r_count));
+                assert_eq!(&padded[..r_count], &exact[..], "width {width}");
+                // padding is the stream continuation, not repeats/zeros
+                for (i, &w) in padded.iter().enumerate().skip(r_count) {
+                    assert_eq!(w, xr_word(9, i));
+                }
+            }
+        }
     }
 
     #[test]

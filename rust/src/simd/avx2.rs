@@ -1,0 +1,206 @@
+//! AVX2 VECLABEL kernels: the paper's Table 2 intrinsic sequence, plus
+//! multi-register unrolled variants for the wider lane batches.
+//!
+//! One 256-bit register holds 8 × i32 lanes — the paper's `B = 8`. The
+//! wider widths are implemented as *unrolled* register groups inside one
+//! kernel step: `B = 16` issues the Table 2 sequence over two registers
+//! per step, `B = 32` over four. Unrolling exposes more independent
+//! load→compare→blend chains to the out-of-order core (the chains share
+//! no data), which is where the wider widths' throughput comes from; the
+//! per-lane arithmetic is exactly the 8-lane sequence, so every output
+//! bit is identical across widths.
+//!
+//! Lane counts that are not a multiple of the width fall back to the
+//! scalar reference loop for the tail (< `B` lanes), preserving
+//! bit-equality with [`super::scalar::veclabel_row_scalar`].
+
+use super::scalar;
+use crate::hash::HASH_MASK;
+
+/// Generates an AVX2 candidate-row kernel unrolled over `$regs` 256-bit
+/// registers per step (`B = 8 * $regs` lanes).
+macro_rules! avx2_row {
+    ($name:ident, $regs:expr, $doc:expr) => {
+        #[doc = $doc]
+        ///
+        /// # Safety
+        /// Requires AVX2. Slices may have any length; the tail is handled
+        /// by the scalar reference kernel.
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn $name(
+            lu: &[i32],
+            lv: &[i32],
+            hash: u32,
+            thr: i32,
+            xrs: &[i32],
+            cand: &mut [i32],
+        ) -> bool {
+            use std::arch::x86_64::*;
+            let n = lu.len();
+            let step = 8 * $regs;
+            let mut live_bits: i32 = 0;
+            let hashes = _mm256_set1_epi32(hash as i32);
+            let w_vec = _mm256_set1_epi32(thr); // promoted ⌊w·2³¹⌋
+            let mask31 = _mm256_set1_epi32(HASH_MASK as i32);
+            let mut r = 0;
+            while r + step <= n {
+                for k in 0..$regs {
+                    let o = r + 8 * k;
+                    let l_u = _mm256_loadu_si256(lu.as_ptr().add(o) as *const __m256i);
+                    let l_v = _mm256_loadu_si256(lv.as_ptr().add(o) as *const __m256i);
+                    // lanes where the push lowers l_v (see module doc in
+                    // `super` re the Alg. 6 line-8 operand order).
+                    let gt = _mm256_cmpgt_epi32(l_v, l_u);
+                    // labels = min(l_u, l_v): take l_u where l_v > l_u.
+                    let labels = _mm256_blendv_epi8(l_v, l_u, gt);
+                    let x = _mm256_loadu_si256(xrs.as_ptr().add(o) as *const __m256i);
+                    // probs = (X ⊕ h) & 0x7fffffff — 31-bit, non-negative.
+                    let probs = _mm256_and_si256(_mm256_xor_si256(hashes, x), mask31);
+                    // select = thr > probs (signed compare, operands ≥ 0).
+                    let select = _mm256_cmpgt_epi32(w_vec, probs);
+                    // l_v' = select ? labels : l_v.
+                    let out = _mm256_blendv_epi8(l_v, labels, select);
+                    _mm256_storeu_si256(cand.as_mut_ptr().add(o) as *mut __m256i, out);
+                    // live = movemask(select & gt) — lanes that changed.
+                    live_bits |=
+                        _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_and_si256(select, gt)));
+                }
+                r += step;
+            }
+            let mut live = live_bits != 0;
+            if r < n {
+                live |= scalar::veclabel_row_scalar(
+                    &lu[r..],
+                    &lv[r..],
+                    hash,
+                    thr,
+                    &xrs[r..],
+                    &mut cand[r..],
+                );
+            }
+            live
+        }
+    };
+}
+
+avx2_row!(row_w8, 1, "Candidate-row kernel, one register per step (B = 8).");
+avx2_row!(row_w16, 2, "Candidate-row kernel, two registers per step (B = 16).");
+avx2_row!(row_w32, 4, "Candidate-row kernel, four registers per step (B = 32).");
+
+/// Generates an AVX2 masked kernel (candidates + changed-lane bitmask)
+/// unrolled over `$regs` registers per step.
+macro_rules! avx2_masked {
+    ($name:ident, $regs:expr, $doc:expr) => {
+        #[doc = $doc]
+        ///
+        /// # Safety
+        /// Requires AVX2.
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn $name(
+            lu: &[i32],
+            lv: &[i32],
+            hash: u32,
+            thr: i32,
+            xrs: &[i32],
+            cand: &mut [i32],
+            mask: &mut [u64],
+        ) -> bool {
+            use std::arch::x86_64::*;
+            mask.fill(0);
+            let n = lu.len();
+            let step = 8 * $regs;
+            let mut any: u64 = 0;
+            let hashes = _mm256_set1_epi32(hash as i32);
+            let w_vec = _mm256_set1_epi32(thr);
+            let mask31 = _mm256_set1_epi32(HASH_MASK as i32);
+            let mut r = 0;
+            while r + step <= n {
+                for k in 0..$regs {
+                    let o = r + 8 * k;
+                    let l_u = _mm256_loadu_si256(lu.as_ptr().add(o) as *const __m256i);
+                    let l_v = _mm256_loadu_si256(lv.as_ptr().add(o) as *const __m256i);
+                    let gt = _mm256_cmpgt_epi32(l_v, l_u);
+                    let labels = _mm256_blendv_epi8(l_v, l_u, gt);
+                    let x = _mm256_loadu_si256(xrs.as_ptr().add(o) as *const __m256i);
+                    let probs = _mm256_and_si256(_mm256_xor_si256(hashes, x), mask31);
+                    let select = _mm256_cmpgt_epi32(w_vec, probs);
+                    let out = _mm256_blendv_epi8(l_v, labels, select);
+                    _mm256_storeu_si256(cand.as_mut_ptr().add(o) as *mut __m256i, out);
+                    // 8 movemask bits per register; `o` is a multiple of 8,
+                    // so the group never straddles a mask word.
+                    let bits = _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_and_si256(
+                        select, gt,
+                    ))) as u32 as u64;
+                    mask[o / 64] |= bits << (o % 64);
+                    any |= bits;
+                }
+                r += step;
+            }
+            let mut live = any != 0;
+            if r < n {
+                live |= scalar::masked_tail(lu, lv, hash, thr, xrs, cand, mask, r);
+            }
+            live
+        }
+    };
+}
+
+avx2_masked!(masked_w8, 1, "Masked kernel, one register per step (B = 8).");
+avx2_masked!(masked_w16, 2, "Masked kernel, two registers per step (B = 16).");
+avx2_masked!(masked_w32, 4, "Masked kernel, four registers per step (B = 32).");
+
+/// Generates an AVX2 mask-only kernel (no candidate row stored) unrolled
+/// over `$regs` registers per step.
+macro_rules! avx2_maskonly {
+    ($name:ident, $regs:expr, $doc:expr) => {
+        #[doc = $doc]
+        ///
+        /// # Safety
+        /// Requires AVX2.
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn $name(
+            lu: &[i32],
+            lv: &[i32],
+            hash: u32,
+            thr: i32,
+            xrs: &[i32],
+            mask: &mut [u64],
+        ) -> bool {
+            use std::arch::x86_64::*;
+            mask.fill(0);
+            let n = lu.len();
+            let step = 8 * $regs;
+            let mut any: u64 = 0;
+            let hashes = _mm256_set1_epi32(hash as i32);
+            let w_vec = _mm256_set1_epi32(thr);
+            let mask31 = _mm256_set1_epi32(HASH_MASK as i32);
+            let mut r = 0;
+            while r + step <= n {
+                for k in 0..$regs {
+                    let o = r + 8 * k;
+                    let l_u = _mm256_loadu_si256(lu.as_ptr().add(o) as *const __m256i);
+                    let l_v = _mm256_loadu_si256(lv.as_ptr().add(o) as *const __m256i);
+                    let gt = _mm256_cmpgt_epi32(l_v, l_u);
+                    let x = _mm256_loadu_si256(xrs.as_ptr().add(o) as *const __m256i);
+                    let probs = _mm256_and_si256(_mm256_xor_si256(hashes, x), mask31);
+                    let select = _mm256_cmpgt_epi32(w_vec, probs);
+                    let bits = _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_and_si256(
+                        select, gt,
+                    ))) as u32 as u64;
+                    mask[o / 64] |= bits << (o % 64);
+                    any |= bits;
+                }
+                r += step;
+            }
+            let mut live = any != 0;
+            if r < n {
+                live |= scalar::maskonly_tail(lu, lv, hash, thr, xrs, mask, r);
+            }
+            live
+        }
+    };
+}
+
+avx2_maskonly!(maskonly_w8, 1, "Mask-only kernel, one register per step (B = 8).");
+avx2_maskonly!(maskonly_w16, 2, "Mask-only kernel, two registers per step (B = 16).");
+avx2_maskonly!(maskonly_w32, 4, "Mask-only kernel, four registers per step (B = 32).");

@@ -1,6 +1,7 @@
-//! VECLABEL (paper Alg. 6): the vectorized per-edge kernel.
+//! VECLABEL (paper Alg. 6): the vectorized per-edge kernel, generalized
+//! to runtime-selected lane batch widths.
 //!
-//! For one edge `(u,v)` and one batch of `B = 8` simulations the kernel
+//! For one edge `(u,v)` and one batch of `B` simulations the kernel
 //! performs, entirely in `i32` lanes:
 //!
 //! ```text
@@ -18,14 +19,44 @@
 //! specifies; we read the Alg. 6 operand order as a typo. The discrepancy
 //! is covered by `tests::live_flag_matches_actual_change`.
 //!
-//! Two backends with identical semantics (property-tested against each
-//! other): a portable scalar loop and an AVX2 implementation using the
-//! exact intrinsic sequence of the paper's Table 2. Backend choice is made
-//! once per run ([`Backend::detect`]) and threaded through the engines.
+//! ## Lane engines
+//!
+//! The paper fixes `B = 8` — one AVX2 register of i32 lanes. Here the
+//! batch width is a first-class runtime parameter ([`LaneWidth`],
+//! `B ∈ {8, 16, 32}`): an engine ([`LaneEngine`]) is a `(backend, width)`
+//! pair chosen once per run and threaded through the propagation engines,
+//! the algorithms, the `"lanes"` config key and the `--lanes` CLI flag.
+//!
+//! * [`Backend::Scalar`] — portable per-lane loops, blocked in fixed
+//!   `W`-lane chunks ([`scalar`]) so the auto-vectorizer sees the batch
+//!   geometry (vectorization is an optimization, never a requirement).
+//! * [`Backend::Avx2`] — the paper's Table 2 intrinsic sequence, unrolled
+//!   over 1/2/4 registers per step for `B = 8/16/32` ([`avx2`]). `B = 8`
+//!   (the default) matches the paper exactly; the wider widths trade
+//!   register pressure for more independent dependency chains in flight.
+//!
+//! Because the fused sampler's `X_r` words are stateless per simulation
+//! ([`crate::sampling::xr_word`]), every `(backend, width)` pair computes
+//! the *same per-lane function* — candidates, live flags and changed-lane
+//! masks are bit-identical across engines, and therefore so are fixpoint
+//! label matrices, marginal gains and final seed sets. This is enforced
+//! by `rust/tests/lane_equivalence.rs` and the property tests below.
 
-use crate::hash::HASH_MASK;
+pub mod scalar;
 
-/// Lane batch width — AVX2 holds 8 × i32 (the paper's `B = 8`).
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+pub use scalar::{veclabel_row_masked_scalar, veclabel_row_maskonly_scalar, veclabel_row_scalar};
+
+#[cfg(target_arch = "x86_64")]
+pub use avx2::{
+    masked_w8 as veclabel_row_masked_avx2, maskonly_w8 as veclabel_row_maskonly_avx2,
+    row_w8 as veclabel_row_avx2,
+};
+
+/// Native AVX2 lane count — 8 × i32 per 256-bit register (the paper's
+/// `B = 8`, and the default [`LaneWidth`]).
 pub const B: usize = 8;
 
 /// Kernel backend selector.
@@ -51,6 +82,10 @@ impl Backend {
     }
 
     /// Parse from CLI string (`scalar` / `avx2` / `auto`).
+    ///
+    /// `avx2` is recognized on every target: on x86_64 it fails only when
+    /// the CPU lacks the feature; elsewhere it fails with an explicit
+    /// wrong-architecture message rather than an unknown-token error.
     pub fn parse(s: &str) -> crate::Result<Self> {
         match s {
             "scalar" => Ok(Backend::Scalar),
@@ -59,11 +94,17 @@ impl Backend {
             "avx2" => {
                 anyhow::ensure!(
                     std::arch::is_x86_feature_detected!("avx2"),
-                    "avx2 requested but not available"
+                    "avx2 requested but not available on this CPU"
                 );
                 Ok(Backend::Avx2)
             }
-            other => Err(anyhow::anyhow!("unknown backend '{other}'")),
+            #[cfg(not(target_arch = "x86_64"))]
+            "avx2" => Err(anyhow::anyhow!(
+                "backend 'avx2' requires an x86_64 CPU (this build targets {}); \
+                 use 'scalar' or 'auto'",
+                std::env::consts::ARCH
+            )),
+            other => Err(anyhow::anyhow!("unknown backend '{other}' (scalar|avx2|auto)")),
         }
     }
 
@@ -77,11 +118,235 @@ impl Backend {
     }
 }
 
-/// Compute VECLABEL candidates for a full `R`-lane row.
-///
-/// `cand[r] = alive(r) ? min(lu[r], lv[r]) : lv[r]`; returns `true` iff any
-/// lane strictly decreased (`cand[r] < lv[r]`), i.e. the paper's `live_v`.
-/// All slices must share the same length.
+/// Runtime-selected lane batch width `B`: how many simulations one kernel
+/// step advances. Every width computes bit-identical results; the choice
+/// only moves throughput (see the module docs and `benches/kernels.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum LaneWidth {
+    /// 8 lanes — one AVX2 register per step (the paper's `B = 8`).
+    #[default]
+    W8,
+    /// 16 lanes — two AVX2 registers unrolled per step.
+    W16,
+    /// 32 lanes — four AVX2 registers unrolled per step.
+    W32,
+}
+
+impl LaneWidth {
+    /// Every supported width, narrowest first.
+    pub const ALL: [LaneWidth; 3] = [LaneWidth::W8, LaneWidth::W16, LaneWidth::W32];
+
+    /// The width as a lane count.
+    #[inline]
+    pub fn lanes(self) -> usize {
+        match self {
+            LaneWidth::W8 => 8,
+            LaneWidth::W16 => 16,
+            LaneWidth::W32 => 32,
+        }
+    }
+
+    /// Construct from a lane count (`8`, `16` or `32`).
+    pub fn from_lanes(b: usize) -> crate::Result<Self> {
+        match b {
+            8 => Ok(LaneWidth::W8),
+            16 => Ok(LaneWidth::W16),
+            32 => Ok(LaneWidth::W32),
+            other => Err(anyhow::anyhow!(
+                "invalid lane width {other}: supported widths are 8, 16, 32"
+            )),
+        }
+    }
+
+    /// Parse from a CLI/config string (`"8"` / `"16"` / `"32"`).
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        let b: usize = s.parse().map_err(|_| {
+            anyhow::anyhow!("invalid lane width '{s}': supported widths are 8, 16, 32")
+        })?;
+        Self::from_lanes(b)
+    }
+
+    /// Label for logs and table headers.
+    pub fn label(self) -> &'static str {
+        match self {
+            LaneWidth::W8 => "8",
+            LaneWidth::W16 => "16",
+            LaneWidth::W32 => "32",
+        }
+    }
+
+    /// Round `r_count` up to a whole number of lane batches (the geometry
+    /// [`crate::sampling::xr_stream_padded`] materializes).
+    #[inline]
+    pub fn padded(self, r_count: usize) -> usize {
+        r_count.div_ceil(self.lanes()) * self.lanes()
+    }
+}
+
+impl std::fmt::Display for LaneWidth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// A fully resolved kernel engine: `(backend, lane width)`, chosen once
+/// per run and threaded through the propagation engines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaneEngine {
+    backend: Backend,
+    width: LaneWidth,
+}
+
+impl Default for LaneEngine {
+    fn default() -> Self {
+        Self::detect()
+    }
+}
+
+impl LaneEngine {
+    /// Engine from explicit parts.
+    pub fn new(backend: Backend, width: LaneWidth) -> Self {
+        Self { backend, width }
+    }
+
+    /// Fastest detected backend at the default width (`B = 8`).
+    pub fn detect() -> Self {
+        Self { backend: Backend::detect(), width: LaneWidth::default() }
+    }
+
+    /// The backend half.
+    pub fn backend(self) -> Backend {
+        self.backend
+    }
+
+    /// The lane-width half.
+    pub fn width(self) -> LaneWidth {
+        self.width
+    }
+
+    /// Label for logs/tables, e.g. `avx2xB16`.
+    pub fn label(self) -> String {
+        format!("{}xB{}", self.backend.label(), self.width.label())
+    }
+
+    /// Compute VECLABEL candidates for a full `R`-lane row.
+    ///
+    /// `cand[r] = alive(r) ? min(lu[r], lv[r]) : lv[r]`; returns `true`
+    /// iff any lane strictly decreased (`cand[r] < lv[r]`), i.e. the
+    /// paper's `live_v`. All slices must share the same length.
+    #[inline]
+    pub fn row(
+        self,
+        lu: &[i32],
+        lv: &[i32],
+        hash: u32,
+        thr: i32,
+        xrs: &[i32],
+        cand: &mut [i32],
+    ) -> bool {
+        debug_assert_eq!(lu.len(), lv.len());
+        debug_assert_eq!(lu.len(), xrs.len());
+        debug_assert_eq!(lu.len(), cand.len());
+        match self.backend {
+            Backend::Scalar => match self.width {
+                LaneWidth::W8 => scalar::row_blocked::<8>(lu, lv, hash, thr, xrs, cand),
+                LaneWidth::W16 => scalar::row_blocked::<16>(lu, lv, hash, thr, xrs, cand),
+                LaneWidth::W32 => scalar::row_blocked::<32>(lu, lv, hash, thr, xrs, cand),
+            },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Backend::Avx2 is only constructed after detection.
+            Backend::Avx2 => unsafe {
+                match self.width {
+                    LaneWidth::W8 => avx2::row_w8(lu, lv, hash, thr, xrs, cand),
+                    LaneWidth::W16 => avx2::row_w16(lu, lv, hash, thr, xrs, cand),
+                    LaneWidth::W32 => avx2::row_w32(lu, lv, hash, thr, xrs, cand),
+                }
+            },
+        }
+    }
+
+    /// VECLABEL with a changed-lane bitmask: like [`LaneEngine::row`], but
+    /// also fills `mask[w]` bit `b` for every lane `w*64 + b` whose
+    /// candidate is a strict improvement (`cand < lv`). The async engine
+    /// commits only those lanes (atomic `fetch_min`s are ~20× the cost of
+    /// the compare, and on converged rows almost no lane changes — §Perf
+    /// iteration 1).
+    ///
+    /// `mask` must hold `ceil(len / 64)` words; they are overwritten.
+    #[inline]
+    pub fn row_masked(
+        self,
+        lu: &[i32],
+        lv: &[i32],
+        hash: u32,
+        thr: i32,
+        xrs: &[i32],
+        cand: &mut [i32],
+        mask: &mut [u64],
+    ) -> bool {
+        debug_assert_eq!(lu.len(), lv.len());
+        debug_assert!(mask.len() >= lu.len().div_ceil(64));
+        match self.backend {
+            Backend::Scalar => match self.width {
+                LaneWidth::W8 => scalar::row_masked_blocked::<8>(lu, lv, hash, thr, xrs, cand, mask),
+                LaneWidth::W16 => {
+                    scalar::row_masked_blocked::<16>(lu, lv, hash, thr, xrs, cand, mask)
+                }
+                LaneWidth::W32 => {
+                    scalar::row_masked_blocked::<32>(lu, lv, hash, thr, xrs, cand, mask)
+                }
+            },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Backend::Avx2 is only constructed after detection.
+            Backend::Avx2 => unsafe {
+                match self.width {
+                    LaneWidth::W8 => avx2::masked_w8(lu, lv, hash, thr, xrs, cand, mask),
+                    LaneWidth::W16 => avx2::masked_w16(lu, lv, hash, thr, xrs, cand, mask),
+                    LaneWidth::W32 => avx2::masked_w32(lu, lv, hash, thr, xrs, cand, mask),
+                }
+            },
+        }
+    }
+
+    /// Mask-only VECLABEL: computes *just* the changed-lane bitmask,
+    /// storing no candidate row at all. For a changed lane the candidate
+    /// is by definition `lu[lane]` (changed ⟺ alive ∧ lu < lv), so the
+    /// async engine can commit `fetch_min(lv[lane], lu[lane])` straight
+    /// from the snapshot — halving the kernel's memory traffic (§Perf
+    /// iteration 2).
+    #[inline]
+    pub fn row_maskonly(
+        self,
+        lu: &[i32],
+        lv: &[i32],
+        hash: u32,
+        thr: i32,
+        xrs: &[i32],
+        mask: &mut [u64],
+    ) -> bool {
+        debug_assert_eq!(lu.len(), lv.len());
+        debug_assert!(mask.len() >= lu.len().div_ceil(64));
+        match self.backend {
+            Backend::Scalar => match self.width {
+                LaneWidth::W8 => scalar::row_maskonly_blocked::<8>(lu, lv, hash, thr, xrs, mask),
+                LaneWidth::W16 => scalar::row_maskonly_blocked::<16>(lu, lv, hash, thr, xrs, mask),
+                LaneWidth::W32 => scalar::row_maskonly_blocked::<32>(lu, lv, hash, thr, xrs, mask),
+            },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Backend::Avx2 is only constructed after detection.
+            Backend::Avx2 => unsafe {
+                match self.width {
+                    LaneWidth::W8 => avx2::maskonly_w8(lu, lv, hash, thr, xrs, mask),
+                    LaneWidth::W16 => avx2::maskonly_w16(lu, lv, hash, thr, xrs, mask),
+                    LaneWidth::W32 => avx2::maskonly_w32(lu, lv, hash, thr, xrs, mask),
+                }
+            },
+        }
+    }
+}
+
+/// Compute VECLABEL candidates for a full `R`-lane row at the default
+/// width (`B = 8`). See [`LaneEngine::row`].
 #[inline]
 pub fn veclabel_row(
     backend: Backend,
@@ -92,95 +357,10 @@ pub fn veclabel_row(
     xrs: &[i32],
     cand: &mut [i32],
 ) -> bool {
-    debug_assert_eq!(lu.len(), lv.len());
-    debug_assert_eq!(lu.len(), xrs.len());
-    debug_assert_eq!(lu.len(), cand.len());
-    match backend {
-        Backend::Scalar => veclabel_row_scalar(lu, lv, hash, thr, xrs, cand),
-        #[cfg(target_arch = "x86_64")]
-        Backend::Avx2 => {
-            // SAFETY: constructor verified the CPU supports AVX2.
-            unsafe { veclabel_row_avx2(lu, lv, hash, thr, xrs, cand) }
-        }
-    }
+    LaneEngine::new(backend, LaneWidth::default()).row(lu, lv, hash, thr, xrs, cand)
 }
 
-/// Scalar reference implementation (also the semantic spec for L1's
-/// Pallas kernel — `python/compile/kernels/ref.py` mirrors this loop).
-pub fn veclabel_row_scalar(
-    lu: &[i32],
-    lv: &[i32],
-    hash: u32,
-    thr: i32,
-    xrs: &[i32],
-    cand: &mut [i32],
-) -> bool {
-    let mut live = false;
-    for r in 0..lu.len() {
-        let sampled = (((xrs[r] as u32) ^ hash) & HASH_MASK) < thr as u32;
-        let min = lu[r].min(lv[r]);
-        let c = if sampled { min } else { lv[r] };
-        live |= c < lv[r];
-        cand[r] = c;
-    }
-    live
-}
-
-/// AVX2 implementation: the paper's Table 2 intrinsic sequence.
-///
-/// # Safety
-/// Requires AVX2. Slices may have any length; the tail (< 8 lanes) is
-/// handled by the scalar kernel.
-#[cfg(target_arch = "x86_64")]
-#[target_feature(enable = "avx2")]
-pub unsafe fn veclabel_row_avx2(
-    lu: &[i32],
-    lv: &[i32],
-    hash: u32,
-    thr: i32,
-    xrs: &[i32],
-    cand: &mut [i32],
-) -> bool {
-    use std::arch::x86_64::*;
-    let n = lu.len();
-    let mut live_bits: i32 = 0;
-    let hashes = _mm256_set1_epi32(hash as i32); //  _mm256_set1_epi32
-    let w_vec = _mm256_set1_epi32(thr); //           promoted ⌊w·2³¹⌋
-    let mask31 = _mm256_set1_epi32(HASH_MASK as i32);
-    let mut r = 0;
-    while r + B <= n {
-        let l_u = _mm256_loadu_si256(lu.as_ptr().add(r) as *const __m256i);
-        let l_v = _mm256_loadu_si256(lv.as_ptr().add(r) as *const __m256i);
-        // mask: lanes where the push lowers l_v (see module doc re Alg. 6).
-        let mask = _mm256_cmpgt_epi32(l_v, l_u);
-        // labels = min(l_u, l_v): take l_u where l_v > l_u.
-        let labels = _mm256_blendv_epi8(l_v, l_u, mask);
-        let x = _mm256_loadu_si256(xrs.as_ptr().add(r) as *const __m256i);
-        // probs = (X ⊕ h) & 0x7fffffff  — 31-bit, non-negative.
-        let probs = _mm256_and_si256(_mm256_xor_si256(hashes, x), mask31);
-        // select = thr > probs  (signed compare, both operands ≥ 0).
-        let select = _mm256_cmpgt_epi32(w_vec, probs);
-        // l_v' = select ? labels : l_v.
-        let out = _mm256_blendv_epi8(l_v, labels, select);
-        _mm256_storeu_si256(cand.as_mut_ptr().add(r) as *mut __m256i, out);
-        // live = movemask(select & mask) — lanes that actually changed.
-        live_bits |= _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_and_si256(select, mask)));
-        r += B;
-    }
-    let mut live = live_bits != 0;
-    if r < n {
-        live |= veclabel_row_scalar(&lu[r..], &lv[r..], hash, thr, &xrs[r..], &mut cand[r..]);
-    }
-    live
-}
-
-/// VECLABEL with a changed-lane bitmask: like [`veclabel_row`], but also
-/// fills `mask[w]` bit `b` for every lane `w*64 + b` whose candidate is a
-/// strict improvement (`cand < lv`). The async engine commits only those
-/// lanes (atomic `fetch_min`s are ~20× the cost of the compare, and on
-/// converged rows almost no lane changes — §Perf iteration 1).
-///
-/// `mask` must hold `ceil(len / 64)` words; they are overwritten.
+/// Masked VECLABEL at the default width. See [`LaneEngine::row_masked`].
 #[inline]
 pub fn veclabel_row_masked(
     backend: Backend,
@@ -192,121 +372,11 @@ pub fn veclabel_row_masked(
     cand: &mut [i32],
     mask: &mut [u64],
 ) -> bool {
-    debug_assert_eq!(lu.len(), lv.len());
-    debug_assert!(mask.len() >= lu.len().div_ceil(64));
-    match backend {
-        Backend::Scalar => veclabel_row_masked_scalar(lu, lv, hash, thr, xrs, cand, mask),
-        #[cfg(target_arch = "x86_64")]
-        Backend::Avx2 => {
-            // SAFETY: constructor verified the CPU supports AVX2.
-            unsafe { veclabel_row_masked_avx2(lu, lv, hash, thr, xrs, cand, mask) }
-        }
-    }
+    LaneEngine::new(backend, LaneWidth::default()).row_masked(lu, lv, hash, thr, xrs, cand, mask)
 }
 
-/// Scalar masked kernel.
-pub fn veclabel_row_masked_scalar(
-    lu: &[i32],
-    lv: &[i32],
-    hash: u32,
-    thr: i32,
-    xrs: &[i32],
-    cand: &mut [i32],
-    mask: &mut [u64],
-) -> bool {
-    for w in mask.iter_mut() {
-        *w = 0;
-    }
-    let mut live = false;
-    for r in 0..lu.len() {
-        let sampled = (((xrs[r] as u32) ^ hash) & HASH_MASK) < thr as u32;
-        let min = lu[r].min(lv[r]);
-        let c = if sampled { min } else { lv[r] };
-        cand[r] = c;
-        if c < lv[r] {
-            mask[r / 64] |= 1u64 << (r % 64);
-            live = true;
-        }
-    }
-    live
-}
-
-/// AVX2 masked kernel: the paper's Table 2 sequence; the changed-lane
-/// bits come straight out of `movemask(select & cmpgt(l_v, l_u))`.
-///
-/// # Safety
-/// Requires AVX2.
-#[cfg(target_arch = "x86_64")]
-#[target_feature(enable = "avx2")]
-pub unsafe fn veclabel_row_masked_avx2(
-    lu: &[i32],
-    lv: &[i32],
-    hash: u32,
-    thr: i32,
-    xrs: &[i32],
-    cand: &mut [i32],
-    mask: &mut [u64],
-) -> bool {
-    use std::arch::x86_64::*;
-    for w in mask.iter_mut() {
-        *w = 0;
-    }
-    let n = lu.len();
-    let mut any: u64 = 0;
-    let hashes = _mm256_set1_epi32(hash as i32);
-    let w_vec = _mm256_set1_epi32(thr);
-    let mask31 = _mm256_set1_epi32(HASH_MASK as i32);
-    let mut r = 0;
-    while r + B <= n {
-        let l_u = _mm256_loadu_si256(lu.as_ptr().add(r) as *const __m256i);
-        let l_v = _mm256_loadu_si256(lv.as_ptr().add(r) as *const __m256i);
-        let gt = _mm256_cmpgt_epi32(l_v, l_u);
-        let labels = _mm256_blendv_epi8(l_v, l_u, gt);
-        let x = _mm256_loadu_si256(xrs.as_ptr().add(r) as *const __m256i);
-        let probs = _mm256_and_si256(_mm256_xor_si256(hashes, x), mask31);
-        let select = _mm256_cmpgt_epi32(w_vec, probs);
-        let out = _mm256_blendv_epi8(l_v, labels, select);
-        _mm256_storeu_si256(cand.as_mut_ptr().add(r) as *mut __m256i, out);
-        let bits =
-            _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_and_si256(select, gt))) as u32 as u64;
-        mask[r / 64] |= bits << (r % 64);
-        any |= bits;
-        r += B;
-    }
-    if r < n {
-        let mut tail_mask = [0u64; 4];
-        let tail_live = veclabel_row_masked_scalar(
-            &lu[r..],
-            &lv[r..],
-            hash,
-            thr,
-            &xrs[r..],
-            &mut cand[r..],
-            &mut tail_mask,
-        );
-        if tail_live {
-            any |= 1;
-            for (i, w) in tail_mask.iter().enumerate() {
-                if *w != 0 {
-                    let base = r + i * 64;
-                    let mut bits = *w;
-                    while bits != 0 {
-                        let b = bits.trailing_zeros() as usize;
-                        mask[(base + b) / 64] |= 1u64 << ((base + b) % 64);
-                        bits &= bits - 1;
-                    }
-                }
-            }
-        }
-    }
-    any != 0
-}
-
-/// Mask-only VECLABEL: computes *just* the changed-lane bitmask, storing
-/// no candidate row at all. For a changed lane the candidate is by
-/// definition `lu[lane]` (changed ⟺ alive ∧ lu < lv), so the async
-/// engine can commit `fetch_min(lv[lane], lu[lane])` straight from the
-/// snapshot — halving the kernel's memory traffic (§Perf iteration 2).
+/// Mask-only VECLABEL at the default width. See
+/// [`LaneEngine::row_maskonly`].
 #[inline]
 pub fn veclabel_row_maskonly(
     backend: Backend,
@@ -317,101 +387,14 @@ pub fn veclabel_row_maskonly(
     xrs: &[i32],
     mask: &mut [u64],
 ) -> bool {
-    debug_assert_eq!(lu.len(), lv.len());
-    debug_assert!(mask.len() >= lu.len().div_ceil(64));
-    match backend {
-        Backend::Scalar => veclabel_row_maskonly_scalar(lu, lv, hash, thr, xrs, mask),
-        #[cfg(target_arch = "x86_64")]
-        Backend::Avx2 => {
-            // SAFETY: constructor verified the CPU supports AVX2.
-            unsafe { veclabel_row_maskonly_avx2(lu, lv, hash, thr, xrs, mask) }
-        }
-    }
-}
-
-/// Scalar mask-only kernel.
-pub fn veclabel_row_maskonly_scalar(
-    lu: &[i32],
-    lv: &[i32],
-    hash: u32,
-    thr: i32,
-    xrs: &[i32],
-    mask: &mut [u64],
-) -> bool {
-    for w in mask.iter_mut() {
-        *w = 0;
-    }
-    let mut live = false;
-    for r in 0..lu.len() {
-        let sampled = (((xrs[r] as u32) ^ hash) & HASH_MASK) < thr as u32;
-        if sampled && lu[r] < lv[r] {
-            mask[r / 64] |= 1u64 << (r % 64);
-            live = true;
-        }
-    }
-    live
-}
-
-/// AVX2 mask-only kernel.
-///
-/// # Safety
-/// Requires AVX2.
-#[cfg(target_arch = "x86_64")]
-#[target_feature(enable = "avx2")]
-pub unsafe fn veclabel_row_maskonly_avx2(
-    lu: &[i32],
-    lv: &[i32],
-    hash: u32,
-    thr: i32,
-    xrs: &[i32],
-    mask: &mut [u64],
-) -> bool {
-    use std::arch::x86_64::*;
-    for w in mask.iter_mut() {
-        *w = 0;
-    }
-    let n = lu.len();
-    let mut any: u64 = 0;
-    let hashes = _mm256_set1_epi32(hash as i32);
-    let w_vec = _mm256_set1_epi32(thr);
-    let mask31 = _mm256_set1_epi32(HASH_MASK as i32);
-    let mut r = 0;
-    while r + B <= n {
-        let l_u = _mm256_loadu_si256(lu.as_ptr().add(r) as *const __m256i);
-        let l_v = _mm256_loadu_si256(lv.as_ptr().add(r) as *const __m256i);
-        let gt = _mm256_cmpgt_epi32(l_v, l_u);
-        let x = _mm256_loadu_si256(xrs.as_ptr().add(r) as *const __m256i);
-        let probs = _mm256_and_si256(_mm256_xor_si256(hashes, x), mask31);
-        let select = _mm256_cmpgt_epi32(w_vec, probs);
-        let bits =
-            _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_and_si256(select, gt))) as u32 as u64;
-        mask[r / 64] |= bits << (r % 64);
-        any |= bits;
-        r += B;
-    }
-    let mut live = any != 0;
-    if r < n {
-        let mut tail = [0u64; 4];
-        if veclabel_row_maskonly_scalar(&lu[r..], &lv[r..], hash, thr, &xrs[r..], &mut tail) {
-            live = true;
-            for (i, w) in tail.iter().enumerate() {
-                let mut bits = *w;
-                while bits != 0 {
-                    let b = bits.trailing_zeros() as usize;
-                    let lane = r + i * 64 + b;
-                    mask[lane / 64] |= 1u64 << (lane % 64);
-                    bits &= bits - 1;
-                }
-            }
-        }
-    }
-    live
+    LaneEngine::new(backend, LaneWidth::default()).row_maskonly(lu, lv, hash, thr, xrs, mask)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::weights::prob_to_threshold;
+    use crate::hash::HASH_MASK;
     use crate::sampling::{edge_alive, xr_stream};
     use crate::util::proptest_lite::check;
 
@@ -424,18 +407,28 @@ mod tests {
         v
     }
 
+    fn engines() -> Vec<LaneEngine> {
+        let mut v = Vec::new();
+        for backend in backends() {
+            for width in LaneWidth::ALL {
+                v.push(LaneEngine::new(backend, width));
+            }
+        }
+        v
+    }
+
     #[test]
-    fn candidates_match_spec_all_backends() {
+    fn candidates_match_spec_all_engines() {
         check("veclabel-spec", 50, |g| {
-            let r_count = g.size(1, 40);
+            let r_count = g.size(1, 70);
             let lu: Vec<i32> = (0..r_count).map(|_| g.below(1000) as i32).collect();
             let lv: Vec<i32> = (0..r_count).map(|_| g.below(1000) as i32).collect();
             let hash = g.below(u32::MAX) & HASH_MASK;
             let thr = prob_to_threshold(g.prob(0.0, 1.0));
             let xrs = xr_stream(g.u64(), r_count);
-            for backend in backends() {
+            for engine in engines() {
                 let mut cand = vec![0i32; r_count];
-                let live = veclabel_row(backend, &lu, &lv, hash, thr, &xrs, &mut cand);
+                let live = engine.row(&lu, &lv, hash, thr, &xrs, &mut cand);
                 let mut expect_live = false;
                 for r in 0..r_count {
                     let expected = if edge_alive(hash, thr, xrs[r]) {
@@ -443,10 +436,48 @@ mod tests {
                     } else {
                         lv[r]
                     };
-                    assert_eq!(cand[r], expected, "backend {backend:?} lane {r}");
+                    assert_eq!(cand[r], expected, "engine {} lane {r}", engine.label());
                     expect_live |= expected < lv[r];
                 }
-                assert_eq!(live, expect_live, "backend {backend:?}");
+                assert_eq!(live, expect_live, "engine {}", engine.label());
+            }
+        });
+    }
+
+    #[test]
+    fn all_widths_equal_the_b8_scalar_reference_bitwise() {
+        // The tentpole invariant: every (backend × width) pair is
+        // bit-identical to the scalar B=8 reference on all three kernel
+        // flavors, including ragged tails.
+        let reference = LaneEngine::new(Backend::Scalar, LaneWidth::W8);
+        check("lanes-eq-reference", 80, |g| {
+            let r_count = g.size(1, 130);
+            let lu: Vec<i32> = (0..r_count).map(|_| g.below(1 << 30) as i32).collect();
+            let lv: Vec<i32> = (0..r_count).map(|_| g.below(1 << 30) as i32).collect();
+            let hash = g.below(u32::MAX) & HASH_MASK;
+            let thr = prob_to_threshold(g.prob(0.0, 1.0));
+            let xrs = xr_stream(g.u64(), r_count);
+            let words = r_count.div_ceil(64);
+            let mut c_ref = vec![0i32; r_count];
+            let mut m_ref = vec![0u64; words];
+            let live_ref = reference.row(&lu, &lv, hash, thr, &xrs, &mut c_ref);
+            let masked_ref =
+                reference.row_masked(&lu, &lv, hash, thr, &xrs, &mut c_ref.clone(), &mut m_ref);
+            for engine in engines() {
+                let mut cand = vec![0i32; r_count];
+                let mut cand2 = vec![0i32; r_count];
+                let mut m1 = vec![0u64; words];
+                let mut m2 = vec![0u64; words];
+                let l1 = engine.row(&lu, &lv, hash, thr, &xrs, &mut cand);
+                let l2 = engine.row_masked(&lu, &lv, hash, thr, &xrs, &mut cand2, &mut m1);
+                let l3 = engine.row_maskonly(&lu, &lv, hash, thr, &xrs, &mut m2);
+                assert_eq!(cand, c_ref, "row: engine {}", engine.label());
+                assert_eq!(l1, live_ref, "live: engine {}", engine.label());
+                assert_eq!(cand2, c_ref, "masked cand: engine {}", engine.label());
+                assert_eq!(m1, m_ref, "mask: engine {}", engine.label());
+                assert_eq!(m2, m_ref, "maskonly: engine {}", engine.label());
+                assert_eq!(l2, masked_ref, "masked live: engine {}", engine.label());
+                assert_eq!(l3, masked_ref, "maskonly live: engine {}", engine.label());
             }
         });
     }
@@ -485,16 +516,16 @@ mod tests {
         // threshold that samples everything
         let thr = i32::MAX;
         let mut cand = vec![0; 2];
-        for backend in backends() {
-            let live = veclabel_row(backend, &lu, &lv, 0, thr, &xrs, &mut cand);
+        for engine in engines() {
+            let live = engine.row(&lu, &lv, 0, thr, &xrs, &mut cand);
             assert_eq!(cand, vec![5, 1]);
             assert!(live, "lane 0 changed 10→5");
         }
         // Now l_v already minimal everywhere → not live.
         let lu2 = vec![50, 100];
         let lv2 = vec![5, 1];
-        for backend in backends() {
-            let live = veclabel_row(backend, &lu2, &lv2, 0, thr, &xrs, &mut cand);
+        for engine in engines() {
+            let live = engine.row(&lu2, &lv2, 0, thr, &xrs, &mut cand);
             assert!(!live);
             assert_eq!(cand, vec![5, 1]);
         }
@@ -509,17 +540,17 @@ mod tests {
             let hash = g.below(u32::MAX) & HASH_MASK;
             let thr = prob_to_threshold(g.prob(0.0, 1.0));
             let xrs = xr_stream(g.u64(), r_count);
-            for backend in backends() {
+            for engine in engines() {
                 let mut c1 = vec![0i32; r_count];
                 let mut c2 = vec![0i32; r_count];
                 let mut mask = vec![0u64; r_count.div_ceil(64)];
-                let l1 = veclabel_row(backend, &lu, &lv, hash, thr, &xrs, &mut c1);
-                let l2 = veclabel_row_masked(backend, &lu, &lv, hash, thr, &xrs, &mut c2, &mut mask);
-                assert_eq!(c1, c2, "backend {backend:?}");
-                assert_eq!(l1, l2, "backend {backend:?}");
+                let l1 = engine.row(&lu, &lv, hash, thr, &xrs, &mut c1);
+                let l2 = engine.row_masked(&lu, &lv, hash, thr, &xrs, &mut c2, &mut mask);
+                assert_eq!(c1, c2, "engine {}", engine.label());
+                assert_eq!(l1, l2, "engine {}", engine.label());
                 for r in 0..r_count {
                     let flagged = mask[r / 64] >> (r % 64) & 1 == 1;
-                    assert_eq!(flagged, c2[r] < lv[r], "backend {backend:?} lane {r}");
+                    assert_eq!(flagged, c2[r] < lv[r], "engine {} lane {r}", engine.label());
                 }
             }
         });
@@ -535,15 +566,14 @@ mod tests {
             let thr = prob_to_threshold(g.prob(0.0, 1.0));
             let xrs = xr_stream(g.u64(), r_count);
             let words = r_count.div_ceil(64);
-            for backend in backends() {
+            for engine in engines() {
                 let mut cand = vec![0i32; r_count];
                 let mut m1 = vec![0u64; words];
                 let mut m2 = vec![0u64; words];
-                let l1 =
-                    veclabel_row_masked(backend, &lu, &lv, hash, thr, &xrs, &mut cand, &mut m1);
-                let l2 = veclabel_row_maskonly(backend, &lu, &lv, hash, thr, &xrs, &mut m2);
-                assert_eq!(m1, m2, "backend {backend:?}");
-                assert_eq!(l1, l2, "backend {backend:?}");
+                let l1 = engine.row_masked(&lu, &lv, hash, thr, &xrs, &mut cand, &mut m1);
+                let l2 = engine.row_maskonly(&lu, &lv, hash, thr, &xrs, &mut m2);
+                assert_eq!(m1, m2, "engine {}", engine.label());
+                assert_eq!(l1, l2, "engine {}", engine.label());
                 // Changed lanes' candidates are exactly lu.
                 for r in 0..r_count {
                     if m2[r / 64] >> (r % 64) & 1 == 1 {
@@ -556,14 +586,65 @@ mod tests {
 
     #[test]
     fn unsampled_lanes_never_change() {
-        let lu = vec![0i32; 16];
-        let lv: Vec<i32> = (1..17).collect();
-        let xrs = xr_stream(3, 16);
-        let mut cand = vec![0; 16];
-        for backend in backends() {
-            let live = veclabel_row(backend, &lu, &lv, 12345, 0, &xrs, &mut cand);
+        let lu = vec![0i32; 48];
+        let lv: Vec<i32> = (1..49).collect();
+        let xrs = xr_stream(3, 48);
+        let mut cand = vec![0; 48];
+        for engine in engines() {
+            let live = engine.row(&lu, &lv, 12345, 0, &xrs, &mut cand);
             assert!(!live);
             assert_eq!(cand, lv);
+        }
+    }
+
+    #[test]
+    fn lane_width_parses_and_rounds() {
+        assert_eq!(LaneWidth::parse("8").unwrap(), LaneWidth::W8);
+        assert_eq!(LaneWidth::parse("16").unwrap(), LaneWidth::W16);
+        assert_eq!(LaneWidth::parse("32").unwrap(), LaneWidth::W32);
+        assert_eq!(LaneWidth::from_lanes(16).unwrap(), LaneWidth::W16);
+        for bad in ["0", "7", "64", "eight", ""] {
+            let err = LaneWidth::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("lane width"), "{err}");
+        }
+        assert_eq!(LaneWidth::default(), LaneWidth::W8);
+        assert_eq!(LaneWidth::default().lanes(), B);
+        assert_eq!(LaneWidth::W16.padded(17), 32);
+        assert_eq!(LaneWidth::W16.padded(32), 32);
+        assert_eq!(LaneWidth::W32.padded(1), 32);
+        assert_eq!(LaneWidth::W8.padded(0), 0);
+        assert_eq!(LaneWidth::W32.to_string(), "32");
+    }
+
+    #[test]
+    fn lane_engine_labels_and_parts() {
+        let e = LaneEngine::new(Backend::Scalar, LaneWidth::W16);
+        assert_eq!(e.backend(), Backend::Scalar);
+        assert_eq!(e.width(), LaneWidth::W16);
+        assert_eq!(e.label(), "scalarxB16");
+        assert_eq!(LaneEngine::detect().width(), LaneWidth::W8);
+        assert_eq!(LaneEngine::default(), LaneEngine::detect());
+    }
+
+    #[test]
+    fn backend_parse_covers_all_tokens() {
+        assert_eq!(Backend::parse("scalar").unwrap(), Backend::Scalar);
+        assert!(Backend::parse("auto").is_ok());
+        let unknown = Backend::parse("neon").unwrap_err().to_string();
+        assert!(unknown.contains("unknown backend"), "{unknown}");
+        // `avx2` must never fall through to the unknown-token error: it is
+        // either accepted (CPU has it), rejected as unavailable (x86_64
+        // without the feature), or rejected as wrong-architecture.
+        #[cfg(target_arch = "x86_64")]
+        match Backend::parse("avx2") {
+            Ok(b) => assert_eq!(b, Backend::Avx2),
+            Err(e) => assert!(e.to_string().contains("not available"), "{e}"),
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            let err = Backend::parse("avx2").unwrap_err().to_string();
+            assert!(err.contains("x86_64"), "{err}");
+            assert!(!err.contains("unknown backend"), "{err}");
         }
     }
 }

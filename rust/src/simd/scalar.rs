@@ -1,0 +1,206 @@
+//! Portable scalar twins of the VECLABEL kernels.
+//!
+//! [`veclabel_row_scalar`] is the canonical per-lane reference loop — the
+//! semantic spec every other implementation (blocked scalar, unrolled
+//! AVX2, and L1's Pallas kernel via `python/compile/kernels/ref.py`) must
+//! match bit-for-bit. [`row_blocked`] & friends are the width-`W` twins:
+//! they process lanes in fixed-size blocks of `W ∈ {8, 16, 32}` so the
+//! auto-vectorizer sees the same batch geometry as the hand-written AVX2
+//! kernels, while the per-lane arithmetic (and therefore every output
+//! bit) stays identical for every width.
+
+use crate::hash::HASH_MASK;
+
+/// One VECLABEL lane: returns `(candidate, changed)` for a single
+/// simulation. `changed` is true iff the candidate strictly lowers `lv`.
+#[inline(always)]
+fn lane(lu: i32, lv: i32, hash: u32, thr: i32, xr: i32) -> (i32, bool) {
+    let sampled = (((xr as u32) ^ hash) & HASH_MASK) < thr as u32;
+    let c = if sampled { lu.min(lv) } else { lv };
+    (c, c < lv)
+}
+
+/// Scalar reference implementation (also the semantic spec for L1's
+/// Pallas kernel — `python/compile/kernels/ref.py` mirrors this loop).
+pub fn veclabel_row_scalar(
+    lu: &[i32],
+    lv: &[i32],
+    hash: u32,
+    thr: i32,
+    xrs: &[i32],
+    cand: &mut [i32],
+) -> bool {
+    let mut live = false;
+    for r in 0..lu.len() {
+        let (c, changed) = lane(lu[r], lv[r], hash, thr, xrs[r]);
+        cand[r] = c;
+        live |= changed;
+    }
+    live
+}
+
+/// Scalar masked reference kernel: candidates plus a changed-lane bitmask.
+pub fn veclabel_row_masked_scalar(
+    lu: &[i32],
+    lv: &[i32],
+    hash: u32,
+    thr: i32,
+    xrs: &[i32],
+    cand: &mut [i32],
+    mask: &mut [u64],
+) -> bool {
+    mask.fill(0);
+    masked_tail(lu, lv, hash, thr, xrs, cand, mask, 0)
+}
+
+/// Scalar mask-only reference kernel: just the changed-lane bitmask.
+pub fn veclabel_row_maskonly_scalar(
+    lu: &[i32],
+    lv: &[i32],
+    hash: u32,
+    thr: i32,
+    xrs: &[i32],
+    mask: &mut [u64],
+) -> bool {
+    mask.fill(0);
+    maskonly_tail(lu, lv, hash, thr, xrs, mask, 0)
+}
+
+/// Per-lane tail shared by every blocked/unrolled kernel: processes lanes
+/// `start..`, writing candidates and *absolute* mask bits into `mask`
+/// (which is not cleared here). Returns true iff any lane changed.
+pub(super) fn masked_tail(
+    lu: &[i32],
+    lv: &[i32],
+    hash: u32,
+    thr: i32,
+    xrs: &[i32],
+    cand: &mut [i32],
+    mask: &mut [u64],
+    start: usize,
+) -> bool {
+    let mut live = false;
+    for r in start..lu.len() {
+        let (c, changed) = lane(lu[r], lv[r], hash, thr, xrs[r]);
+        cand[r] = c;
+        if changed {
+            mask[r / 64] |= 1u64 << (r % 64);
+            live = true;
+        }
+    }
+    live
+}
+
+/// Mask-only twin of [`masked_tail`]: no candidate row is stored.
+pub(super) fn maskonly_tail(
+    lu: &[i32],
+    lv: &[i32],
+    hash: u32,
+    thr: i32,
+    xrs: &[i32],
+    mask: &mut [u64],
+    start: usize,
+) -> bool {
+    let mut live = false;
+    for r in start..lu.len() {
+        let (_, changed) = lane(lu[r], lv[r], hash, thr, xrs[r]);
+        if changed {
+            mask[r / 64] |= 1u64 << (r % 64);
+            live = true;
+        }
+    }
+    live
+}
+
+/// Width-`W` blocked scalar kernel: fixed-size blocks of `W` lanes (the
+/// auto-vectorizer's target shape), per-lane tail. Output is bit-identical
+/// to [`veclabel_row_scalar`] for every `W`.
+pub fn row_blocked<const W: usize>(
+    lu: &[i32],
+    lv: &[i32],
+    hash: u32,
+    thr: i32,
+    xrs: &[i32],
+    cand: &mut [i32],
+) -> bool {
+    let n = lu.len();
+    let mut live = false;
+    let mut r = 0;
+    while r + W <= n {
+        for k in 0..W {
+            let (c, changed) = lane(lu[r + k], lv[r + k], hash, thr, xrs[r + k]);
+            cand[r + k] = c;
+            live |= changed;
+        }
+        r += W;
+    }
+    if r < n {
+        live |= veclabel_row_scalar(&lu[r..], &lv[r..], hash, thr, &xrs[r..], &mut cand[r..]);
+    }
+    live
+}
+
+/// Width-`W` blocked masked kernel. `W` must divide 64 (8, 16, and 32 all
+/// do), so a block's bits never straddle a mask word.
+pub fn row_masked_blocked<const W: usize>(
+    lu: &[i32],
+    lv: &[i32],
+    hash: u32,
+    thr: i32,
+    xrs: &[i32],
+    cand: &mut [i32],
+    mask: &mut [u64],
+) -> bool {
+    mask.fill(0);
+    let n = lu.len();
+    let mut live = false;
+    let mut r = 0;
+    while r + W <= n {
+        let mut bits: u64 = 0;
+        for k in 0..W {
+            let (c, changed) = lane(lu[r + k], lv[r + k], hash, thr, xrs[r + k]);
+            cand[r + k] = c;
+            bits |= (changed as u64) << k;
+        }
+        if bits != 0 {
+            mask[r / 64] |= bits << (r % 64);
+            live = true;
+        }
+        r += W;
+    }
+    if r < n {
+        live |= masked_tail(lu, lv, hash, thr, xrs, cand, mask, r);
+    }
+    live
+}
+
+/// Width-`W` blocked mask-only kernel.
+pub fn row_maskonly_blocked<const W: usize>(
+    lu: &[i32],
+    lv: &[i32],
+    hash: u32,
+    thr: i32,
+    xrs: &[i32],
+    mask: &mut [u64],
+) -> bool {
+    mask.fill(0);
+    let n = lu.len();
+    let mut live = false;
+    let mut r = 0;
+    while r + W <= n {
+        let mut bits: u64 = 0;
+        for k in 0..W {
+            let (_, changed) = lane(lu[r + k], lv[r + k], hash, thr, xrs[r + k]);
+            bits |= (changed as u64) << k;
+        }
+        if bits != 0 {
+            mask[r / 64] |= bits << (r % 64);
+            live = true;
+        }
+        r += W;
+    }
+    if r < n {
+        live |= maskonly_tail(lu, lv, hash, thr, xrs, mask, r);
+    }
+    live
+}

@@ -36,7 +36,9 @@ fn all_four_algorithms_reach_comparable_quality() {
     let budget = Budget::unlimited();
 
     let mix = MixGreedy::new(MixGreedyParams { k, r_count: r, seed: 1 }).run(&g, &budget).unwrap();
-    let fus = FusedSampling::new(FusedParams { k, r_count: r, seed: 1 }).run(&g, &budget).unwrap();
+    let fus = FusedSampling::new(FusedParams { k, r_count: r, seed: 1, ..Default::default() })
+        .run(&g, &budget)
+        .unwrap();
     let inf = InfuserMg::new(InfuserParams { k, r_count: r, seed: 1, threads: 2, ..Default::default() })
         .run(&g, &budget)
         .unwrap();
@@ -179,7 +181,9 @@ fn timeout_injection_trips_every_algorithm() {
 
     let outs: Vec<anyhow::Error> = vec![
         MixGreedy::new(MixGreedyParams { k, r_count: r, seed: 1 }).run(&g, &budget).unwrap_err(),
-        FusedSampling::new(FusedParams { k, r_count: r, seed: 1 }).run(&g, &budget).unwrap_err(),
+        FusedSampling::new(FusedParams { k, r_count: r, seed: 1, ..Default::default() })
+            .run(&g, &budget)
+            .unwrap_err(),
         InfuserMg::new(InfuserParams { k, r_count: r, seed: 1, threads: 2, ..Default::default() })
             .run(&g, &budget)
             .unwrap_err(),

@@ -1,9 +1,20 @@
 //! Coordinator + config integration: a full (tiny) experiment grid runs
 //! through the same path the CLI uses, including JSON config parsing,
-//! dataset loading, timeout cells and table rendering.
+//! dataset loading, timeout cells and table rendering — plus true
+//! end-to-end invocations of the built `infuser` binary covering the
+//! `--lanes` / `--backend` / `--memo` flag grid and its error paths.
 
 use infuser::config::ExperimentConfig;
 use infuser::coordinator::{render_grid, Outcome, Runner};
+use std::process::{Command, Output};
+
+/// Run the built `infuser` binary with `args`.
+fn infuser_bin(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_infuser"))
+        .args(args)
+        .output()
+        .expect("failed to spawn the infuser binary")
+}
 
 #[test]
 fn json_config_grid_end_to_end() {
@@ -97,6 +108,120 @@ fn file_dataset_round_trip() {
         Outcome::Done { seeds, .. } => assert_eq!(seeds.len(), 2),
         other => panic!("{other:?}"),
     }
+}
+
+#[test]
+fn cli_run_lanes_backend_memo_grid_end_to_end() {
+    // `infuser run` through the real binary: every --lanes × --memo
+    // combination (and --backend auto) must print the identical seed set
+    // for a fixed (dataset, seed, R, K) — the acceptance criterion at the
+    // outermost layer.
+    let base = [
+        "run", "--dataset", "nethep-s", "--algo", "infuser", "--k", "3", "--r", "32",
+        "--threads", "2", "--seed", "1",
+    ];
+    let seeds_line = |extra: &[&str]| -> String {
+        let mut args: Vec<&str> = base.to_vec();
+        args.extend_from_slice(extra);
+        let out = infuser_bin(&args);
+        assert!(
+            out.status.success(),
+            "args {extra:?} failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+        stdout
+            .lines()
+            .find(|l| l.starts_with("seeds:"))
+            .unwrap_or_else(|| panic!("no seeds line in output:\n{stdout}"))
+            .to_string()
+    };
+    let reference = seeds_line(&["--lanes", "8", "--backend", "scalar", "--memo", "dense"]);
+    for lanes in ["16", "32"] {
+        for memo in ["dense", "sketch"] {
+            assert_eq!(
+                seeds_line(&["--lanes", lanes, "--backend", "scalar", "--memo", memo]),
+                reference,
+                "lanes {lanes} memo {memo}"
+            );
+        }
+    }
+    // auto backend (AVX2 where available) at the widest batch.
+    assert_eq!(
+        seeds_line(&["--lanes", "32", "--backend", "auto"]),
+        reference,
+        "auto backend"
+    );
+}
+
+#[test]
+fn cli_rejects_invalid_lane_width() {
+    for bad in ["7", "0", "64", "wide"] {
+        let out = infuser_bin(&[
+            "run", "--dataset", "nethep-s", "--algo", "infuser", "--k", "2", "--r", "8",
+            "--lanes", bad,
+        ]);
+        assert!(!out.status.success(), "--lanes {bad} must fail");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("lane width"), "--lanes {bad}: {err}");
+        assert!(err.contains("8, 16, 32"), "--lanes {bad} should list widths: {err}");
+    }
+}
+
+#[test]
+fn cli_rejects_unknown_and_unavailable_backends() {
+    let run = |backend: &str| {
+        infuser_bin(&[
+            "run", "--dataset", "nethep-s", "--algo", "infuser", "--k", "2", "--r", "8",
+            "--backend", backend,
+        ])
+    };
+    let out = run("neon");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown backend"));
+
+    // `avx2` must fail with a *clear* error (never "unknown backend")
+    // whenever the CPU or target can't execute it.
+    #[cfg(target_arch = "x86_64")]
+    if !std::arch::is_x86_feature_detected!("avx2") {
+        let out = run("avx2");
+        assert!(!out.status.success());
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("not available"), "{err}");
+        assert!(!err.contains("unknown backend"), "{err}");
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let out = run("avx2");
+        assert!(!out.status.success());
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("x86_64"), "{err}");
+        assert!(!err.contains("unknown backend"), "{err}");
+    }
+}
+
+#[test]
+fn json_config_lanes_key_reaches_the_grid() {
+    // "lanes" in an experiment config must produce the same cells as the
+    // default width (result-invariance through the config path).
+    let cfg_at = |lanes_json: &str| {
+        let cfg = ExperimentConfig::from_json(&format!(
+            r#"{{"datasets": ["nethep-s"], "settings": ["const:0.05"],
+                "algos": ["infuser"], "k": 3, "r": 32, "threads": 2,
+                "seed": 4{lanes_json}}}"#
+        ))
+        .unwrap();
+        let mut runner = Runner::new(cfg);
+        runner.verbose = false;
+        let cells = runner.run_grid().unwrap();
+        match &cells[0].outcome {
+            Outcome::Done { seeds, .. } => seeds.clone(),
+            other => panic!("{other:?}"),
+        }
+    };
+    let reference = cfg_at("");
+    assert_eq!(cfg_at(r#", "lanes": 16"#), reference);
+    assert_eq!(cfg_at(r#", "lanes": "32""#), reference);
 }
 
 #[test]

@@ -1,0 +1,253 @@
+//! Cross-backend × lane-width equivalence suite (the tentpole contract).
+//!
+//! Because the fused sampler's `X_r` words are stateless per simulation,
+//! the lane batch width `B ∈ {8, 16, 32}` and the kernel backend
+//! (scalar / AVX2) are pure throughput knobs: every combination must
+//! produce **bit-identical** kernel outputs, fixpoint label matrices,
+//! memoized marginal gains, and final seed sets against the scalar
+//! `B = 8` reference. These properties are what make the multi-register
+//! refactor machine-checkable.
+
+use infuser::algo::infuser::{make_memo, InfuserMg, InfuserParams, MemoKind};
+use infuser::algo::Budget;
+use infuser::graph::weights::prob_to_threshold;
+use infuser::graph::WeightModel;
+use infuser::hash::HASH_MASK;
+use infuser::labelprop::{propagate, union_find_labels, Mode, PropagateOpts};
+use infuser::sampling::xr_stream;
+use infuser::simd::{Backend, LaneEngine, LaneWidth};
+use infuser::util::proptest_lite::check;
+use infuser::util::ThreadPool;
+
+fn backends() -> Vec<Backend> {
+    let mut v = vec![Backend::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        v.push(Backend::Avx2);
+    }
+    v
+}
+
+fn engines() -> Vec<LaneEngine> {
+    let mut v = Vec::new();
+    for backend in backends() {
+        for width in LaneWidth::ALL {
+            v.push(LaneEngine::new(backend, width));
+        }
+    }
+    v
+}
+
+const REFERENCE: (Backend, LaneWidth) = (Backend::Scalar, LaneWidth::W8);
+
+#[test]
+fn kernel_rows_bit_identical_across_all_engines() {
+    let reference = LaneEngine::new(REFERENCE.0, REFERENCE.1);
+    check("lane-eq-kernel", 120, |g| {
+        // Ragged lengths on purpose: tails of every width are exercised.
+        let r_count = g.size(1, 150);
+        let lu: Vec<i32> = (0..r_count).map(|_| g.below(1 << 30) as i32).collect();
+        let lv: Vec<i32> = (0..r_count).map(|_| g.below(1 << 30) as i32).collect();
+        let hash = g.below(u32::MAX) & HASH_MASK;
+        let thr = prob_to_threshold(g.prob(0.0, 1.0));
+        let xrs = xr_stream(g.u64(), r_count);
+        let words = r_count.div_ceil(64);
+
+        let mut c_ref = vec![0i32; r_count];
+        let mut m_ref = vec![0u64; words];
+        let live_ref = reference.row(&lu, &lv, hash, thr, &xrs, &mut c_ref);
+        reference.row_maskonly(&lu, &lv, hash, thr, &xrs, &mut m_ref);
+
+        for engine in engines() {
+            let mut cand = vec![0i32; r_count];
+            let mut cand2 = vec![0i32; r_count];
+            let mut mask = vec![0u64; words];
+            let mut mask2 = vec![0u64; words];
+            let l1 = engine.row(&lu, &lv, hash, thr, &xrs, &mut cand);
+            let l2 = engine.row_masked(&lu, &lv, hash, thr, &xrs, &mut cand2, &mut mask);
+            let l3 = engine.row_maskonly(&lu, &lv, hash, thr, &xrs, &mut mask2);
+            assert_eq!(cand, c_ref, "candidates: {}", engine.label());
+            assert_eq!(cand2, c_ref, "masked candidates: {}", engine.label());
+            assert_eq!(mask, m_ref, "mask: {}", engine.label());
+            assert_eq!(mask2, m_ref, "maskonly: {}", engine.label());
+            assert_eq!(l1, live_ref, "live: {}", engine.label());
+            assert_eq!(l2, live_ref, "masked live: {}", engine.label());
+            assert_eq!(l3, live_ref, "maskonly live: {}", engine.label());
+        }
+    });
+}
+
+#[test]
+fn fixpoint_labels_identical_across_engines_and_schedules() {
+    check("lane-eq-fixpoint", 10, |g| {
+        let graph = g
+            .gen_graph(60)
+            .with_weights(WeightModel::Uniform(0.05, 0.6), g.u64());
+        let seed = g.u64();
+        // R deliberately not a multiple of 16/32.
+        let r_count = g.size(1, 50);
+        let base = PropagateOpts {
+            r_count,
+            seed,
+            threads: 3,
+            backend: REFERENCE.0,
+            lanes: REFERENCE.1,
+            mode: Mode::Async,
+        };
+        let reference = propagate(&graph, &base);
+        // ... and the per-lane union-find oracle agrees with the reference.
+        let uf = union_find_labels(&graph, r_count, seed);
+        assert_eq!(reference.labels.data, uf.data, "reference vs union-find");
+        for backend in backends() {
+            for lanes in LaneWidth::ALL {
+                for mode in [Mode::Async, Mode::Sync] {
+                    let res = propagate(&graph, &PropagateOpts { backend, lanes, mode, ..base });
+                    assert_eq!(
+                        res.labels.data,
+                        reference.labels.data,
+                        "{}xB{} {mode:?} on {}",
+                        backend.label(),
+                        lanes.label(),
+                        graph.name
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn marginal_gains_identical_across_engines_and_memo_backends() {
+    check("lane-eq-gains", 6, |g| {
+        let graph = g
+            .gen_graph(50)
+            .with_weights(WeightModel::Const(g.prob(0.05, 0.4)), g.u64());
+        let n = graph.num_vertices();
+        let seed = g.u64();
+        let pool = ThreadPool::new(2);
+        let base = PropagateOpts {
+            r_count: 24,
+            seed,
+            threads: 2,
+            backend: REFERENCE.0,
+            lanes: REFERENCE.1,
+            mode: Mode::Async,
+        };
+        let ref_labels = propagate(&graph, &base).labels;
+        let ref_memo = make_memo(MemoKind::Dense, ref_labels);
+        let ref_gains = ref_memo.initial_gains(&pool);
+        let probe = g.below(n as u32) as usize;
+        let committed = g.below(n as u32) as usize;
+
+        for backend in backends() {
+            for lanes in LaneWidth::ALL {
+                let labels = propagate(&graph, &PropagateOpts { backend, lanes, ..base }).labels;
+                for kind in [MemoKind::Dense, MemoKind::Sketch] {
+                    let mut memo = make_memo(kind, labels.clone());
+                    let gains = memo.initial_gains(&pool);
+                    for v in 0..n {
+                        assert!(
+                            (gains[v] - ref_gains[v]).abs() < 1e-9,
+                            "{}xB{} {kind:?} v={v}: {} vs {}",
+                            backend.label(),
+                            lanes.label(),
+                            gains[v],
+                            ref_gains[v]
+                        );
+                    }
+                    // Post-commit marginal gains stay aligned too.
+                    memo.commit(committed);
+                    let mut ref_after = make_memo(kind, ref_memo.labels().clone());
+                    ref_after.commit(committed);
+                    let a = memo.marginal_gain(probe, &pool);
+                    let b = ref_after.marginal_gain(probe, &pool);
+                    assert!(
+                        (a - b).abs() < 1e-9,
+                        "{}xB{} {kind:?} post-commit: {a} vs {b}",
+                        backend.label(),
+                        lanes.label()
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn seed_sets_identical_for_fixed_seed_r_k() {
+    // The acceptance criterion verbatim: for a fixed (seed, R, K), every
+    // (backend × lane width × memo × thread count) combination returns the
+    // identical seed set and influence estimate.
+    let graph = infuser::gen::generate(&infuser::gen::GenSpec::barabasi_albert(400, 2, 3))
+        .with_weights(WeightModel::Const(0.08), 5);
+    let (k, r_count, seed) = (5usize, 64usize, 7u64);
+    let base = InfuserParams {
+        k,
+        r_count,
+        seed,
+        threads: 2,
+        backend: REFERENCE.0,
+        lanes: REFERENCE.1,
+        ..Default::default()
+    };
+    let reference = InfuserMg::new(base).run(&graph, &Budget::unlimited()).unwrap();
+    assert_eq!(reference.seeds.len(), k);
+    for backend in backends() {
+        for lanes in LaneWidth::ALL {
+            for memo in [MemoKind::Dense, MemoKind::Sketch] {
+                for threads in [1usize, 4] {
+                    let res = InfuserMg::new(InfuserParams {
+                        backend,
+                        lanes,
+                        memo,
+                        threads,
+                        ..base
+                    })
+                    .run(&graph, &Budget::unlimited())
+                    .unwrap();
+                    assert_eq!(
+                        res.seeds,
+                        reference.seeds,
+                        "{}xB{} {memo:?} tau={threads}",
+                        backend.label(),
+                        lanes.label()
+                    );
+                    assert!(
+                        (res.influence - reference.influence).abs() < 1e-9,
+                        "{}xB{} {memo:?} tau={threads}: {} vs {}",
+                        backend.label(),
+                        lanes.label(),
+                        res.influence,
+                        reference.influence
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn first_seed_path_is_width_invariant_too() {
+    let graph = infuser::gen::generate(&infuser::gen::GenSpec::erdos_renyi(200, 600, 6))
+        .with_weights(WeightModel::Const(0.15), 9);
+    let base = InfuserParams {
+        k: 1,
+        r_count: 48,
+        seed: 13,
+        threads: 2,
+        backend: REFERENCE.0,
+        lanes: REFERENCE.1,
+        ..Default::default()
+    };
+    let reference = InfuserMg::new(base)
+        .run_first_seed(&graph, &Budget::unlimited())
+        .unwrap();
+    for backend in backends() {
+        for lanes in LaneWidth::ALL {
+            let res = InfuserMg::new(InfuserParams { backend, lanes, ..base })
+                .run_first_seed(&graph, &Budget::unlimited())
+                .unwrap();
+            assert_eq!(res.seeds, reference.seeds, "{}xB{}", backend.label(), lanes.label());
+        }
+    }
+}
