@@ -37,6 +37,9 @@ fn main() -> infuser::Result<()> {
         backend: infuser::simd::Backend::detect(),
         lanes: infuser::simd::LaneWidth::parse(args.opt("lanes").unwrap_or("8"))?,
         memo: infuser::algo::infuser::MemoKind::Dense,
+        orders: vec![infuser::graph::OrderStrategy::parse(
+            args.opt("order").unwrap_or("identity"),
+        )?],
         imm_memory_limit: None,
     };
     println!(

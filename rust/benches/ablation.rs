@@ -23,7 +23,7 @@ use infuser::labelprop::Mode;
 use infuser::simd::Backend;
 
 fn main() -> infuser::Result<()> {
-    let env = BenchEnv::load();
+    let env = BenchEnv::load()?;
     env.banner(
         "Ablation — fusing / vectorization / memoization / schedule",
         "fusing alone gives 3-21x (Table 4); the rest comes from batching+memoization",
@@ -53,11 +53,12 @@ fn main() -> infuser::Result<()> {
         let r = env.r;
 
         let (mix, mix_s) = time_it(|| {
-            MixGreedy::new(MixGreedyParams { k, r_count: r, seed: 1 }).run(&g, &budget())
+            MixGreedy::new(MixGreedyParams { k, r_count: r, seed: 1, ..Default::default() })
+                .run(&g, &budget())
         });
         let mix_secs = mix.ok().map(|_| mix_s);
         let (fus, fus_s) = time_it(|| {
-            FusedSampling::new(FusedParams { k, r_count: r, seed: 1, lanes: env.lanes })
+            FusedSampling::new(FusedParams { k, r_count: r, seed: 1, lanes: env.lanes, ..Default::default() })
                 .run(&g, &budget())
         });
         let fus_secs = fus.ok().map(|_| fus_s);

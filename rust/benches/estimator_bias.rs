@@ -70,7 +70,7 @@ fn randcas_with(
 }
 
 fn main() -> infuser::Result<()> {
-    let env = BenchEnv::load();
+    let env = BenchEnv::load()?;
     env.banner(
         "Estimator bias — XOR (paper Eq. 2) vs strong-mix vs independent coins",
         "not in the paper; explains why internal fused estimates sit above the oracle",

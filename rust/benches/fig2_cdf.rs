@@ -12,7 +12,7 @@ use infuser::coordinator::Table;
 use infuser::sampling::cdf_report;
 
 fn main() -> infuser::Result<()> {
-    let env = BenchEnv::load();
+    let env = BenchEnv::load()?;
     env.banner(
         "Fig. 2 — CDF of hash-based sampling probabilities",
         "CDFs visually indistinguishable from U[0,1] on all 12 networks",

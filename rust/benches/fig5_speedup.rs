@@ -10,7 +10,7 @@ use infuser::config::{AlgoSpec, DatasetRef, ExperimentConfig};
 use infuser::coordinator::{Runner, Table};
 
 fn main() -> infuser::Result<()> {
-    let env = BenchEnv::load();
+    let env = BenchEnv::load()?;
     env.banner(
         "Fig. 5 — INFUSER-MG speedup over IMM(eps=0.13)",
         "2.3x - 173.8x across datasets x settings",

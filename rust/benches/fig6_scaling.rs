@@ -15,7 +15,7 @@ use infuser::coordinator::Table;
 use infuser::graph::WeightModel;
 
 fn main() -> infuser::Result<()> {
-    let env = BenchEnv::load();
+    let env = BenchEnv::load()?;
     env.banner(
         "Fig. 6 — multi-thread scaling, tau in {1,2,4,8,16}",
         "3-5x speedup at tau=16; p=0.1 scales worse than p=0.01",

@@ -9,6 +9,9 @@
 //! * `propagate` — full fixpoint propagation: native async (frontier)
 //!   vs native sync (Jacobi) vs the XLA engine (warm executable),
 //!   same graph, same seed; fixpoint equality is asserted while timing.
+//! * `ordering` — the vertex-layout sweep: async propagation over every
+//!   [`OrderStrategy`], reporting reorder cost and per-ordering edges/sec
+//!   (dumped to `BENCH_kernels.json` under `"order_sweep"`).
 //!
 //! `INFUSER_BENCH_SMOKE=1` shrinks everything to CI-smoke scale.
 
@@ -17,7 +20,7 @@ use infuser::coordinator::Table;
 use infuser::engine::{Engine, NativeEngine};
 use infuser::gen::{self, GenSpec};
 use infuser::graph::weights::prob_to_threshold;
-use infuser::graph::WeightModel;
+use infuser::graph::{OrderStrategy, WeightModel};
 use infuser::labelprop::{Mode, PropagateOpts};
 use infuser::sampling::xr_stream_padded;
 use infuser::simd::{Backend, LaneEngine, LaneWidth};
@@ -178,15 +181,78 @@ fn bench_propagate(env: &BenchEnv) -> infuser::Result<Table> {
     Ok(t)
 }
 
+/// The vertex-layout sweep: async propagation to fixpoint on the same
+/// graph under every ordering strategy. The reorder itself is timed
+/// separately, and propagation runs directly on the relabeled graph, so
+/// `edges/s` isolates the pure layout effect on the hot loop.
+fn bench_order(env: &BenchEnv) -> (Table, Json) {
+    let mut t = Table::new("Vertex-ordering sweep — propagation locality");
+    t.header(vec![
+        "order".into(),
+        "n".into(),
+        "m".into(),
+        "reorder (s)".into(),
+        "propagate (s)".into(),
+        "iters".into(),
+        "edges/s".into(),
+    ]);
+    let spec = if env.smoke {
+        GenSpec::erdos_renyi(500, 2_000, 3)
+    } else {
+        GenSpec::rmat(15, 120_000, 77)
+    };
+    let g = gen::generate(&spec).with_weights(WeightModel::Const(0.05), 3);
+    let r_count = 64usize;
+    let mut entries: Vec<Json> = Vec::new();
+    for order in OrderStrategy::ALL {
+        let ((rg, _perm), reorder_secs) = time_it(|| g.reordered(order));
+        let opts = PropagateOpts {
+            r_count,
+            seed: 9,
+            threads: env.threads,
+            lanes: env.lanes,
+            mode: Mode::Async,
+            ..Default::default()
+        };
+        let (res, secs) = time_it(|| infuser::labelprop::propagate(&rg, &opts));
+        let edges_per_sec = res.edge_visits as f64 / secs;
+        t.row(vec![
+            order.label().into(),
+            rg.num_vertices().to_string(),
+            rg.num_edges().to_string(),
+            format!("{reorder_secs:.3}"),
+            format!("{secs:.3}"),
+            res.iterations.to_string(),
+            format!("{edges_per_sec:.3e}"),
+        ]);
+        entries.push(obj(vec![
+            ("order", Json::Str(order.label().into())),
+            ("n", Json::Num(rg.num_vertices() as f64)),
+            ("m", Json::Num(rg.num_edges() as f64)),
+            ("reorder_secs", Json::Num(reorder_secs)),
+            ("propagate_secs", Json::Num(secs)),
+            ("iterations", Json::Num(res.iterations as f64)),
+            ("edges_per_sec", Json::Num(edges_per_sec)),
+        ]));
+    }
+    (t, Json::Arr(entries))
+}
+
 fn main() -> infuser::Result<()> {
-    let env = BenchEnv::load();
+    let env = BenchEnv::load()?;
     env.banner(
-        "Kernel microbenches — VECLABEL lane sweep + propagation engines",
+        "Kernel microbenches — VECLABEL lane sweep + propagation engines + ordering sweep",
         "AVX2 processes B lanes/step (8/16/32 = 1/2/4 registers); fused batching serves all R per edge visit",
     );
     let (t1, sweep_json) = bench_veclabel(&env);
     let t2 = bench_propagate(&env)?;
-    env.emit("kernels", &[&t1, &t2]);
-    env.emit_json("kernels", &sweep_json);
+    let (t3, order_json) = bench_order(&env);
+    env.emit("kernels", &[&t1, &t2, &t3]);
+    let mut combined = match sweep_json {
+        Json::Obj(map) => map,
+        other => BTreeMap::from([("veclabel".to_string(), other)]),
+    };
+    combined.insert("order_sweep".to_string(), order_json);
+    env.emit_json("kernels", &Json::Obj(combined));
     Ok(())
 }

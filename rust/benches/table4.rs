@@ -14,7 +14,7 @@ use infuser::coordinator::{render_grid, CellResult, Runner};
 use infuser::graph::WeightModel;
 
 fn main() -> infuser::Result<()> {
-    let env = BenchEnv::load();
+    let env = BenchEnv::load()?;
     env.banner(
         "Table 4 — baseline vs fused vs vectorized (p = 0.01, K, K=1)",
         "MIXGREEDY finishes 3/12 graphs in 3.5 days; INFUSER-MG all 12 in ~1200 s",

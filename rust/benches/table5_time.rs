@@ -11,7 +11,7 @@ use infuser::config::{AlgoSpec, DatasetRef, ExperimentConfig};
 use infuser::coordinator::{render_grid, Runner};
 
 fn main() -> infuser::Result<()> {
-    let env = BenchEnv::load();
+    let env = BenchEnv::load()?;
     env.banner(
         "Table 5 — execution time vs state-of-the-art, 4 weight settings",
         "INFUSER-MG 2.3-173.8x faster than IMM(eps=0.13)",

@@ -12,7 +12,7 @@ use infuser::config::{AlgoSpec, DatasetRef, ExperimentConfig};
 use infuser::coordinator::{render_grid, Outcome, Runner};
 
 fn main() -> infuser::Result<()> {
-    let env = BenchEnv::load();
+    let env = BenchEnv::load()?;
     env.banner(
         "Table 6 — memory vs state-of-the-art, 4 weight settings",
         "IMM grows with p and 1/eps (OOM at eps=0.13 on the largest); INFUSER flat in p",

@@ -11,7 +11,7 @@ use infuser::config::{AlgoSpec, DatasetRef, ExperimentConfig};
 use infuser::coordinator::{render_grid, Outcome, Runner};
 
 fn main() -> infuser::Result<()> {
-    let env = BenchEnv::load();
+    let env = BenchEnv::load()?;
     env.banner(
         "Table 7 — influence scores (common mt19937 oracle)",
         "INFUSER-MG always >= IMM variants (marginally)",

@@ -11,7 +11,7 @@
 
 use super::celf::celf_select;
 use super::{Budget, ImResult};
-use crate::graph::Graph;
+use crate::graph::{Graph, OrderStrategy, Permutation};
 use crate::sampling::{edge_alive, xr_word};
 use crate::simd::LaneWidth;
 use crate::VertexId;
@@ -30,11 +30,23 @@ pub struct FusedParams {
     /// ([`randcas_fused_batched`]). σ estimates are identical for every
     /// width (per-lane reachability is batch-invariant).
     pub lanes: LaneWidth,
+    /// Vertex-reordering strategy for the traversal layout
+    /// ([`crate::graph::order`]). The hash-based sampler keys aliveness
+    /// to original endpoint ids and the CELF phase ranks and tie-breaks
+    /// in original id space, so σ and seeds are bit-identical for every
+    /// strategy — only traversal locality moves.
+    pub order: OrderStrategy,
 }
 
 impl Default for FusedParams {
     fn default() -> Self {
-        Self { k: 50, r_count: 100, seed: 0, lanes: LaneWidth::default() }
+        Self {
+            k: 50,
+            r_count: 100,
+            seed: 0,
+            lanes: LaneWidth::default(),
+            order: OrderStrategy::Identity,
+        }
     }
 }
 
@@ -254,10 +266,37 @@ impl FusedSampling {
     }
 
     /// Run FUSEDSAMPLING: NEWGREEDY init + CELF with fused RANDCAS.
+    ///
+    /// A non-identity `order` relabels the graph for traversal locality;
+    /// the CELF phase stays in **original** id space (gains gathered back
+    /// through the permutation, trial seed sets mapped forward per
+    /// re-evaluation), so ranking and tie-breaks — and therefore seeds
+    /// and σ — are bit-identical to the identity layout.
     pub fn run(&self, graph: &Graph, budget: &Budget) -> crate::Result<ImResult> {
+        if self.params.order.is_identity() {
+            return self.run_on(graph, None, budget);
+        }
+        let (rg, perm) = graph.reordered(self.params.order);
+        self.run_on(&rg, Some(&perm), budget)
+    }
+
+    /// The algorithm proper, over a possibly relabeled `graph`; `perm`
+    /// maps original ids (the CELF space) to `graph`'s row space.
+    fn run_on(
+        &self,
+        graph: &Graph,
+        perm: Option<&Permutation>,
+        budget: &Budget,
+    ) -> crate::Result<ImResult> {
         let p = self.params;
         let n = graph.num_vertices();
-        let mg = fused_initial_gains(graph, p.r_count, p.seed, budget)?;
+        let to_row = |v: VertexId| perm.map_or(v, |pm| pm.apply(v));
+        let mg_rows = fused_initial_gains(graph, p.r_count, p.seed, budget)?;
+        // Gains indexed by original id (a pure gather — values untouched).
+        let mg: Vec<f64> = match perm {
+            None => mg_rows,
+            Some(pm) => (0..n as VertexId).map(|v| mg_rows[pm.apply(v) as usize]).collect(),
+        };
 
         let current_seeds: std::cell::RefCell<Vec<VertexId>> = std::cell::RefCell::new(Vec::new());
         let sigma_s = std::cell::Cell::new(0.0f64);
@@ -267,8 +306,14 @@ impl FusedSampling {
             &mg,
             p.k,
             |v, _| {
-                let mut trial = current_seeds.borrow().clone();
-                trial.push(v);
+                // Original-id seed set, mapped to row space for traversal.
+                let trial: Vec<VertexId> = current_seeds
+                    .borrow()
+                    .iter()
+                    .copied()
+                    .chain(std::iter::once(v))
+                    .map(to_row)
+                    .collect();
                 // Fresh X_r block per re-evaluation (disjoint offsets) —
                 // mirrors MIXGREEDY consuming fresh randomness per RANDCAS.
                 reeval_counter += 1;
@@ -415,9 +460,10 @@ mod tests {
             .run(&g, &Budget::unlimited())
             .unwrap();
         for lanes in LaneWidth::ALL {
-            let res = FusedSampling::new(FusedParams { k: 3, r_count: 64, seed: 5, lanes })
-                .run(&g, &Budget::unlimited())
-                .unwrap();
+            let res =
+                FusedSampling::new(FusedParams { k: 3, r_count: 64, seed: 5, lanes, ..Default::default() })
+                    .run(&g, &Budget::unlimited())
+                    .unwrap();
             assert_eq!(res.seeds, reference.seeds, "lanes {lanes}");
             assert!((res.influence - reference.influence).abs() < 1e-12, "lanes {lanes}");
         }

@@ -23,7 +23,7 @@
 use super::celf::celf_select;
 use super::{Budget, ImResult};
 use crate::engine::Engine;
-use crate::graph::Graph;
+use crate::graph::{Graph, OrderStrategy};
 use crate::labelprop::{self, Labels, Mode, PropagateOpts};
 use crate::simd::{Backend, LaneWidth};
 use crate::sketch::SketchMemo;
@@ -178,6 +178,11 @@ pub struct InfuserParams {
     pub mode: Mode,
     /// Memoization backend for the CELF phase (dense / sketch).
     pub memo: MemoKind,
+    /// Vertex-reordering strategy for the propagation stage's memory
+    /// layout ([`crate::graph::order`]). Result-invariant: labels come
+    /// back in original row order and sampling hashes original endpoint
+    /// ids, so σ, gains, and seeds are bit-identical for every strategy.
+    pub order: OrderStrategy,
 }
 
 impl Default for InfuserParams {
@@ -191,6 +196,7 @@ impl Default for InfuserParams {
             lanes: LaneWidth::default(),
             mode: Mode::Async,
             memo: MemoKind::Dense,
+            order: OrderStrategy::Identity,
         }
     }
 }
@@ -326,6 +332,7 @@ impl InfuserMg {
             backend: p.backend,
             lanes: p.lanes,
             mode: p.mode,
+            order: p.order,
         };
         let prop = engine.propagate(graph, &opts)?;
         budget.check()?;
@@ -372,6 +379,7 @@ impl InfuserMg {
             backend: p.backend,
             lanes: p.lanes,
             mode: p.mode,
+            order: p.order,
         };
         let prop = labelprop::propagate(graph, &opts);
         budget.check()?;

@@ -16,7 +16,7 @@
 
 use super::celf::celf_select;
 use super::{Budget, ImResult};
-use crate::graph::Graph;
+use crate::graph::{Graph, OrderStrategy};
 use crate::rng::{Pcg32, Rng32};
 use crate::VertexId;
 
@@ -29,11 +29,22 @@ pub struct MixGreedyParams {
     pub r_count: usize,
     /// Run seed.
     pub seed: u64,
+    /// Vertex-reordering strategy for the traversal layout
+    /// ([`crate::graph::order`]). Seeds are mapped back to original ids.
+    ///
+    /// Unlike the hash-fused family (FUSEDSAMPLING, INFUSER-MG), the
+    /// classical baseline consumes its RNG stream *positionally* — one
+    /// draw per edge in CSR iteration order — so a relabeled graph pairs
+    /// different draws with different edges: the estimate is
+    /// statistically equivalent but **not** bit-identical across
+    /// layouts. That contrast is the point of the orig-id hashing
+    /// invariant the fused sampler gets for free.
+    pub order: OrderStrategy,
 }
 
 impl Default for MixGreedyParams {
     fn default() -> Self {
-        Self { k: 50, r_count: 100, seed: 0 }
+        Self { k: 50, r_count: 100, seed: 0, order: OrderStrategy::Identity }
     }
 }
 
@@ -171,8 +182,22 @@ impl MixGreedy {
         Self { params }
     }
 
-    /// Run MIXGREEDY (Alg. 3).
+    /// Run MIXGREEDY (Alg. 3). A non-identity `order` relabels the graph
+    /// for traversal locality; seeds are mapped back to original ids (see
+    /// [`MixGreedyParams::order`] for the bit-determinism caveat).
     pub fn run(&self, graph: &Graph, budget: &Budget) -> crate::Result<ImResult> {
+        if !self.params.order.is_identity() {
+            let (rg, _perm) = graph.reordered(self.params.order);
+            let identity = MixGreedy::new(MixGreedyParams {
+                order: OrderStrategy::Identity,
+                ..self.params
+            });
+            let mut res = identity.run(&rg, budget)?;
+            for s in res.seeds.iter_mut() {
+                *s = rg.orig(*s);
+            }
+            return Ok(res);
+        }
         let p = self.params;
         let n = graph.num_vertices();
         let mut rng = Pcg32::from_seed_stream(p.seed, 0x317);
@@ -294,7 +319,7 @@ mod tests {
     fn hub_is_first_seed_on_star() {
         // p = 0.5 star: hub strictly dominates.
         let g = star(20).with_weights(WeightModel::Const(0.5), 2);
-        let res = MixGreedy::new(MixGreedyParams { k: 3, r_count: 200, seed: 1 })
+        let res = MixGreedy::new(MixGreedyParams { k: 3, r_count: 200, seed: 1, ..Default::default() })
             .run(&g, &Budget::unlimited())
             .unwrap();
         assert_eq!(res.seeds[0], 0, "hub must be picked first");
@@ -303,12 +328,33 @@ mod tests {
     }
 
     #[test]
+    fn reordered_run_reports_original_ids() {
+        // p = 0.5 star under every layout: the hub must come back as its
+        // *original* id 0 even though degree/bfs/hybrid relabel it.
+        use crate::graph::OrderStrategy;
+        let g = star(20).with_weights(WeightModel::Const(0.5), 2);
+        for order in OrderStrategy::ALL {
+            let res = MixGreedy::new(MixGreedyParams { k: 3, r_count: 200, seed: 1, order })
+                .run(&g, &Budget::unlimited())
+                .unwrap();
+            assert_eq!(res.seeds[0], 0, "{order}: hub must be picked first");
+            assert_eq!(res.seeds.len(), 3, "{order}");
+            let mut unique = res.seeds.clone();
+            unique.sort_unstable();
+            unique.dedup();
+            assert_eq!(unique.len(), 3, "{order}: seeds must be distinct originals");
+            assert!(res.seeds.iter().all(|&s| (s as usize) < 20), "{order}");
+        }
+    }
+
+    #[test]
     fn budget_timeout_propagates() {
         let g = crate::gen::generate(&GenSpec::erdos_renyi(2000, 8000, 1))
             .with_weights(WeightModel::Const(0.1), 1);
         let budget = Budget::timeout(std::time::Duration::from_millis(1));
         std::thread::sleep(std::time::Duration::from_millis(2));
-        let out = MixGreedy::new(MixGreedyParams { k: 5, r_count: 500, seed: 1 }).run(&g, &budget);
+        let out = MixGreedy::new(MixGreedyParams { k: 5, r_count: 500, seed: 1, ..Default::default() })
+            .run(&g, &budget);
         assert!(out.is_err());
         assert!(super::super::is_timeout(&out.unwrap_err()));
     }

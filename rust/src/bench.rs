@@ -17,11 +17,20 @@
 //!   `bench_results/`).
 //! * `INFUSER_BENCH_LANES` — VECLABEL lane batch width `B` (8/16/32,
 //!   default 8) used by the grid benches' algorithm cells.
+//! * `INFUSER_BENCH_ORDER` — vertex memory layout
+//!   (identity/degree/bfs/hybrid, default identity) used by the grid
+//!   benches' algorithm cells; the kernels bench additionally sweeps all
+//!   four orderings regardless.
 //! * `INFUSER_BENCH_SMOKE=1` — shrink inputs to seconds-scale sizes so CI
 //!   can assert the bench binaries still run (no meaningful numbers).
+//!
+//! Malformed knob values are reported as errors from [`BenchEnv::load`]
+//! (`INFUSER_BENCH_<KNOB>: <why>`), so a typo'd sweep fails the bench run
+//! loudly instead of silently measuring — and recording — the default.
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::Table;
+use crate::graph::OrderStrategy;
 use crate::simd::LaneWidth;
 use crate::util::json::Json;
 use std::time::Duration;
@@ -41,6 +50,8 @@ pub struct BenchEnv {
     pub threads: usize,
     /// VECLABEL lane batch width for the algorithm cells.
     pub lanes: LaneWidth,
+    /// Vertex memory layout for the algorithm cells.
+    pub order: OrderStrategy,
     /// CI smoke mode: tiny inputs, just prove the bench still runs.
     pub smoke: bool,
     /// Markdown output directory.
@@ -48,10 +59,13 @@ pub struct BenchEnv {
 }
 
 impl BenchEnv {
-    /// Read the knobs.
-    pub fn load() -> Self {
+    /// Read the knobs. Malformed values for the typed knobs
+    /// (`INFUSER_BENCH_LANES`, `INFUSER_BENCH_ORDER`) are errors — loud
+    /// on bad input, because a typo'd sweep must not silently measure
+    /// (and get recorded as) the default geometry.
+    pub fn load() -> crate::Result<Self> {
         let get = |k: &str| std::env::var(k).ok();
-        Self {
+        Ok(Self {
             full: get("INFUSER_BENCH_FULL").is_some_and(|v| v == "1"),
             k: get("INFUSER_BENCH_K").and_then(|v| v.parse().ok()).unwrap_or(10),
             r: get("INFUSER_BENCH_R").and_then(|v| v.parse().ok()).unwrap_or(128),
@@ -59,16 +73,19 @@ impl BenchEnv {
                 get("INFUSER_BENCH_TIMEOUT").and_then(|v| v.parse().ok()).unwrap_or(60),
             ),
             threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(2),
-            // Loud on bad input: a typo'd width must not silently measure
-            // (and get recorded as) B=8.
             lanes: match get("INFUSER_BENCH_LANES") {
                 Some(v) => LaneWidth::parse(&v)
-                    .unwrap_or_else(|e| panic!("INFUSER_BENCH_LANES: {e}")),
+                    .map_err(|e| anyhow::anyhow!("INFUSER_BENCH_LANES: {e}"))?,
                 None => LaneWidth::default(),
+            },
+            order: match get("INFUSER_BENCH_ORDER") {
+                Some(v) => OrderStrategy::parse(&v)
+                    .map_err(|e| anyhow::anyhow!("INFUSER_BENCH_ORDER: {e}"))?,
+                None => OrderStrategy::Identity,
             },
             smoke: get("INFUSER_BENCH_SMOKE").is_some_and(|v| v == "1"),
             out_dir: get("INFUSER_BENCH_OUT").unwrap_or_else(|| "bench_results".into()),
-        }
+        })
     }
 
     /// Dataset ids for this run: a fast subset by default, all 12 under
@@ -111,6 +128,7 @@ impl BenchEnv {
             seed: 0,
             oracle_r: 0,
             lanes: self.lanes,
+            orders: vec![self.order],
             ..Default::default()
         }
     }
@@ -146,11 +164,12 @@ impl BenchEnv {
     pub fn banner(&self, what: &str, paper_ref: &str) {
         println!("### {what}");
         println!(
-            "(paper: {paper_ref}; this run: K={} R={} tau={} lanes=B{} timeout={:?} datasets={}{})",
+            "(paper: {paper_ref}; this run: K={} R={} tau={} lanes=B{} order={} timeout={:?} datasets={}{})",
             self.k,
             self.r,
             self.threads,
             self.lanes.label(),
+            self.order.label(),
             self.timeout,
             if self.full { "all-12" } else { "subset-6" },
             if self.smoke { " [SMOKE]" } else { "" },
@@ -180,10 +199,11 @@ mod tests {
 
     #[test]
     fn env_defaults() {
-        let env = BenchEnv::load();
+        let env = BenchEnv::load().unwrap();
         assert!(env.k >= 1);
         assert!(!env.dataset_ids().is_empty());
         assert!(env.dataset_ids().len() == 6 || env.dataset_ids().len() == 12);
+        assert_eq!(env.base_config().order(), env.order);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! Tables 5–7 (12 graphs × 4 settings × 3 algorithms).
 
 use crate::algo::infuser::MemoKind;
-use crate::graph::WeightModel;
+use crate::graph::{OrderStrategy, WeightModel};
 use crate::simd::{Backend, LaneWidth};
 use crate::util::json::Json;
 use std::time::Duration;
@@ -152,6 +152,12 @@ pub struct ExperimentConfig {
     /// Memoization backend for the INFUSER-MG cells (`infuser-sketch`
     /// cells always use the sketch regardless of this default).
     pub memo: MemoKind,
+    /// Vertex-reordering strategies to sweep (JSON key `"order"`: a
+    /// string or an array of strings). The grid gets one table row per
+    /// (dataset, ordering); a single entry — the default `identity` —
+    /// keeps the pre-refactor shape. Result-invariant for the hash-fused
+    /// algorithms ([`crate::graph::order`]); throughput knob only.
+    pub orders: Vec<OrderStrategy>,
     /// Memory budget for IMM's RR pool in bytes (None = unlimited). The
     /// paper's Table 6 shows IMM(ε=0.13) failing with "insufficient
     /// memory" on the largest graphs; this knob reproduces those "oom"
@@ -174,6 +180,7 @@ impl Default for ExperimentConfig {
             backend: Backend::detect(),
             lanes: LaneWidth::default(),
             memo: MemoKind::Dense,
+            orders: vec![OrderStrategy::Identity],
             imm_memory_limit: None,
         }
     }
@@ -189,7 +196,8 @@ impl ExperimentConfig {
     ///   "algos": ["infuser", "imm:0.13", "imm:0.5"],
     ///   "k": 50, "r": 256, "threads": 16, "seed": 0,
     ///   "timeout_secs": 600, "oracle_r": 1024,
-    ///   "backend": "auto", "lanes": 16, "memo": "dense"
+    ///   "backend": "auto", "lanes": 16, "memo": "dense",
+    ///   "order": ["identity", "degree", "bfs", "hybrid"]
     /// }
     /// ```
     pub fn from_json(text: &str) -> crate::Result<Self> {
@@ -258,12 +266,35 @@ impl ExperimentConfig {
         if let Some(m) = json.get("memo").and_then(|v| v.as_str()) {
             cfg.memo = MemoKind::parse(m)?;
         }
+        if let Some(o) = json.get("order") {
+            cfg.orders = match (o.as_str(), o.as_arr()) {
+                (Some(s), _) => vec![OrderStrategy::parse(s)?],
+                (None, Some(arr)) => arr
+                    .iter()
+                    .map(|x| {
+                        x.as_str()
+                            .ok_or_else(|| anyhow::anyhow!("'order' entries must be strings"))
+                            .and_then(OrderStrategy::parse)
+                    })
+                    .collect::<crate::Result<_>>()?,
+                (None, None) => anyhow::bail!(
+                    "'order' must be a string or array (identity|degree|bfs|hybrid)"
+                ),
+            };
+            anyhow::ensure!(!cfg.orders.is_empty(), "'order' must not be empty");
+        }
         if let Some(gb) = json.get("imm_memory_limit_gb").and_then(|v| v.as_f64()) {
             cfg.imm_memory_limit = Some((gb * 1024.0 * 1024.0 * 1024.0) as u64);
         }
         anyhow::ensure!(cfg.k >= 1, "k must be >= 1");
         anyhow::ensure!(cfg.r_count >= 1, "r must be >= 1");
         Ok(cfg)
+    }
+
+    /// The primary ordering (first of [`ExperimentConfig::orders`]) —
+    /// what single-run entry points like `infuser run` use.
+    pub fn order(&self) -> OrderStrategy {
+        self.orders.first().copied().unwrap_or_default()
     }
 
     /// The paper's four weight settings (§4.1).
@@ -336,6 +367,26 @@ mod tests {
         assert_eq!(cfg.memo, MemoKind::Sketch);
         assert_eq!(ExperimentConfig::from_json("{}").unwrap().memo, MemoKind::Dense);
         assert!(ExperimentConfig::from_json(r#"{"memo": "zip"}"#).is_err());
+    }
+
+    #[test]
+    fn order_parses_from_json_string_or_array() {
+        let cfg = ExperimentConfig::from_json(r#"{"order": "degree"}"#).unwrap();
+        assert_eq!(cfg.orders, vec![OrderStrategy::Degree]);
+        assert_eq!(cfg.order(), OrderStrategy::Degree);
+        let cfg =
+            ExperimentConfig::from_json(r#"{"order": ["identity", "bfs", "hybrid"]}"#).unwrap();
+        assert_eq!(
+            cfg.orders,
+            vec![OrderStrategy::Identity, OrderStrategy::Bfs, OrderStrategy::Hybrid]
+        );
+        assert_eq!(
+            ExperimentConfig::from_json("{}").unwrap().orders,
+            vec![OrderStrategy::Identity]
+        );
+        for bad in [r#"{"order": "zigzag"}"#, r#"{"order": 3}"#, r#"{"order": []}"#] {
+            assert!(ExperimentConfig::from_json(bad).is_err(), "{bad}");
+        }
     }
 
     #[test]

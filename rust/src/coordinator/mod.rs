@@ -125,8 +125,24 @@ impl Runner {
         }
     }
 
-    /// Run one algorithm on one weighted graph under the config's budget.
+    /// Run one algorithm on one weighted graph under the config's budget,
+    /// with the config's primary ordering ([`ExperimentConfig::order`]).
     pub fn run_cell(&self, graph: &Graph, algo: AlgoSpec) -> Outcome {
+        self.run_cell_ordered(graph, algo, self.cfg.order())
+    }
+
+    /// Run one algorithm on one weighted graph under the config's budget
+    /// with an explicit vertex-reordering strategy. The graph is passed in
+    /// its original layout; algorithms that honor `order` relabel
+    /// internally and report seeds in original ids, so oracle rescoring
+    /// below always runs on the original graph. Proxy heuristics and IMM
+    /// have no label-matrix hot path and ignore the strategy.
+    pub fn run_cell_ordered(
+        &self,
+        graph: &Graph,
+        algo: AlgoSpec,
+        order: crate::graph::OrderStrategy,
+    ) -> Outcome {
         let cfg = &self.cfg;
         let budget = Budget::timeout(cfg.timeout);
         let timer = Timer::start();
@@ -135,6 +151,7 @@ impl Runner {
                 k: cfg.k,
                 r_count: cfg.r_count,
                 seed: cfg.seed,
+                order,
             })
             .run(graph, &budget),
             AlgoSpec::FusedSampling => FusedSampling::new(FusedParams {
@@ -142,6 +159,7 @@ impl Runner {
                 r_count: cfg.r_count,
                 seed: cfg.seed,
                 lanes: cfg.lanes,
+                order,
             })
             .run(graph, &budget),
             AlgoSpec::InfuserMg | AlgoSpec::InfuserSketch => InfuserMg::new(InfuserParams {
@@ -156,6 +174,7 @@ impl Runner {
                 } else {
                     cfg.memo
                 },
+                order,
                 ..Default::default()
             })
             .run(graph, &budget),
@@ -167,6 +186,7 @@ impl Runner {
                 backend: cfg.backend,
                 lanes: cfg.lanes,
                 memo: cfg.memo,
+                order,
                 ..Default::default()
             })
             .run_first_seed(graph, &budget),
@@ -227,37 +247,51 @@ impl Runner {
     }
 
     /// Run the full grid; cells stream to the returned vector in
-    /// dataset-major order (like the paper's tables).
+    /// dataset-major order (like the paper's tables). When the config
+    /// sweeps several vertex orderings, each (dataset, ordering) pair
+    /// becomes its own table row, labelled `dataset [ordering]`.
     pub fn run_grid(&self) -> crate::Result<Vec<CellResult>> {
         let cfg = &self.cfg;
         self.log(&format!(
-            "grid geometry: K={} R={} tau={} backend={} lanes=B{}",
+            "grid geometry: K={} R={} tau={} backend={} lanes=B{} orders={}",
             cfg.k,
             cfg.r_count,
             cfg.threads,
             cfg.backend.label(),
-            cfg.lanes.label()
+            cfg.lanes.label(),
+            cfg.orders.iter().map(|o| o.label()).collect::<Vec<_>>().join(",")
         ));
+        let sweep_orders = cfg.orders.len() > 1;
         let mut cells = Vec::new();
         for dref in &cfg.datasets {
             let base = self.load(dref)?;
             for &setting in &cfg.settings {
+                // One weighted build per (dataset, setting): the weighted
+                // graph is layout-independent (algorithms relabel
+                // internally), so the ordering sweep must not repeat the
+                // O(n + m) clone + per-edge weight draw.
                 let graph = base.clone().with_weights(setting, cfg.seed ^ 0x5E77);
-                for &algo in &cfg.algos {
-                    self.log(&format!(
-                        "{} / {} / {}",
-                        dref.name(),
-                        setting.label(),
-                        algo.label()
-                    ));
-                    let outcome = self.run_cell(&graph, algo);
-                    self.log(&format!("  -> {}", outcome.time_cell()));
-                    cells.push(CellResult {
-                        dataset: dref.name(),
-                        setting: setting.label(),
-                        algo: algo.label(),
-                        outcome,
-                    });
+                for &order in &cfg.orders {
+                    let row_label = if sweep_orders {
+                        format!("{} [{}]", dref.name(), order.label())
+                    } else {
+                        dref.name()
+                    };
+                    for &algo in &cfg.algos {
+                        self.log(&format!(
+                            "{row_label} / {} / {}",
+                            setting.label(),
+                            algo.label()
+                        ));
+                        let outcome = self.run_cell_ordered(&graph, algo, order);
+                        self.log(&format!("  -> {}", outcome.time_cell()));
+                        cells.push(CellResult {
+                            dataset: row_label.clone(),
+                            setting: setting.label(),
+                            algo: algo.label(),
+                            outcome,
+                        });
+                    }
                 }
             }
         }
@@ -341,6 +375,7 @@ mod tests {
             backend: crate::simd::Backend::detect(),
             lanes: crate::simd::LaneWidth::default(),
             memo: crate::algo::infuser::MemoKind::Dense,
+            orders: vec![crate::graph::OrderStrategy::Identity],
             imm_memory_limit: None,
         }
     }
@@ -405,6 +440,39 @@ mod tests {
             seeds_at(crate::simd::LaneWidth::W8),
             seeds_at(crate::simd::LaneWidth::W32)
         );
+    }
+
+    #[test]
+    fn order_sweep_makes_a_row_per_ordering_with_identical_seeds() {
+        use crate::graph::OrderStrategy;
+        let mut cfg = tiny_cfg();
+        cfg.algos = vec![AlgoSpec::InfuserMg];
+        cfg.oracle_r = 0;
+        cfg.orders = OrderStrategy::ALL.to_vec();
+        let mut runner = Runner::new(cfg);
+        runner.verbose = false;
+        let cells = runner.run_grid().unwrap();
+        assert_eq!(cells.len(), 4, "one cell per ordering");
+        let t = render_grid(&cells, "times", |o| o.time_cell());
+        assert_eq!(t.len(), 4, "one table row per ordering");
+        for (cell, order) in cells.iter().zip(OrderStrategy::ALL) {
+            assert!(
+                cell.dataset.ends_with(&format!("[{}]", order.label())),
+                "row label {} must name ordering {}",
+                cell.dataset,
+                order.label()
+            );
+        }
+        // The refactor's load-bearing invariant at the coordinator layer:
+        // identical seeds in every layout.
+        let seeds = |c: &CellResult| match &c.outcome {
+            Outcome::Done { seeds, .. } => seeds.clone(),
+            other => panic!("{other:?}"),
+        };
+        let reference = seeds(&cells[0]);
+        for c in &cells[1..] {
+            assert_eq!(seeds(c), reference, "{}", c.dataset);
+        }
     }
 
     #[test]

@@ -147,6 +147,7 @@ impl GraphBuilder {
             weights: w,
             edge_hash: Vec::new(),
             threshold: Vec::new(),
+            orig_id: Vec::new(),
             name: self.name,
         };
         g.rebuild_sampling_tables();

@@ -66,14 +66,93 @@ pub fn parse_edge_list<R: Read>(reader: BufReader<R>, name: &str) -> crate::Resu
     Ok(b.build())
 }
 
+/// Parse a SNAP-style edge list against a **declared** vertex count:
+/// every id must be `< n` and is used as-is (no compaction). Unlike the
+/// lenient [`parse_edge_list`], malformed input is rejected eagerly with
+/// a line-numbered error instead of surfacing as an index panic (or a
+/// silently remapped id) later:
+///
+/// * an endpoint `>= n` is an error naming the line and the declared `n`;
+/// * a self loop is an error (the lenient path silently drops them);
+/// * a duplicate edge is an error when its weight conflicts with the
+///   first occurrence (exact duplicates are merged).
+pub fn parse_edge_list_declared<R: Read>(
+    reader: BufReader<R>,
+    name: &str,
+    n: usize,
+) -> crate::Result<Graph> {
+    let mut b = GraphBuilder::new(n).name(name);
+    let mut first_weight = std::collections::HashMap::<(VertexId, VertexId), (f32, usize)>::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let lineno = lineno + 1;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (Some(a), Some(bs)) = (it.next(), it.next()) else {
+            bail!("line {lineno}: expected 'u v [w]'");
+        };
+        let u: u64 = a.parse().with_context(|| format!("line {lineno}: bad vertex"))?;
+        let v: u64 = bs.parse().with_context(|| format!("line {lineno}: bad vertex"))?;
+        for id in [u, v] {
+            if id >= n as u64 {
+                bail!("line {lineno}: vertex id {id} out of range (declared n = {n})");
+            }
+        }
+        if u == v {
+            bail!("line {lineno}: self loop at vertex {u}");
+        }
+        let w: f32 = match it.next() {
+            Some(ws) => ws.parse().with_context(|| format!("line {lineno}: bad weight"))?,
+            None => 1.0,
+        };
+        let (u, v) = (u as VertexId, v as VertexId);
+        let key = (u.min(v), u.max(v));
+        if let Some(&(w0, line0)) = first_weight.get(&key) {
+            if w0 != w {
+                bail!(
+                    "line {lineno}: duplicate edge {}-{} with conflicting weight \
+                     {w} (first declared {w0} on line {line0})",
+                    key.0,
+                    key.1
+                );
+            }
+            continue; // exact duplicate: merge
+        }
+        first_weight.insert(key, (w, lineno));
+        b.weighted_edge(u, v, w);
+    }
+    Ok(b.build())
+}
+
+/// [`parse_edge_list_declared`] from a file path.
+pub fn read_edge_list_declared(path: &Path, n: usize) -> crate::Result<Graph> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open edge list {}", path.display()))?;
+    parse_edge_list_declared(
+        BufReader::new(file),
+        path.file_stem().and_then(|s| s.to_str()).unwrap_or("graph"),
+        n,
+    )
+}
+
+/// Format v1: CSR without a vertex-order section (identity layout).
 const BIN_MAGIC: &[u8; 8] = b"INFUSER1";
+/// Format v2: v1 plus a trailing `orig_id` section — written for
+/// reordered graphs ([`Graph::reordered`](crate::graph::Graph::reordered))
+/// so a reload keeps hashing original endpoint ids.
+const BIN_MAGIC_V2: &[u8; 8] = b"INFUSER2";
 
 /// Write the compact binary CSR format (little-endian, self-describing).
+/// Graphs in their input layout use the v1 format; reordered graphs add
+/// their `orig_id` map under the v2 magic.
 pub fn write_binary(g: &Graph, path: &Path) -> crate::Result<()> {
     let file = std::fs::File::create(path)
         .with_context(|| format!("create {}", path.display()))?;
     let mut w = BufWriter::new(file);
-    w.write_all(BIN_MAGIC)?;
+    w.write_all(if g.orig_id.is_empty() { BIN_MAGIC } else { BIN_MAGIC_V2 })?;
     w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
     w.write_all(&(g.adj.len() as u64).to_le_bytes())?;
     for &x in &g.xadj {
@@ -88,6 +167,9 @@ pub fn write_binary(g: &Graph, path: &Path) -> crate::Result<()> {
     let name = g.name.as_bytes();
     w.write_all(&(name.len() as u64).to_le_bytes())?;
     w.write_all(name)?;
+    for &o in &g.orig_id {
+        w.write_all(&o.to_le_bytes())?;
+    }
     Ok(())
 }
 
@@ -98,20 +180,36 @@ pub fn read_binary(path: &Path) -> crate::Result<Graph> {
     let mut r = BufReader::new(file);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
-    if &magic != BIN_MAGIC {
-        bail!("not an INFUSER binary graph: {}", path.display());
-    }
+    let has_orig = match &magic {
+        m if m == BIN_MAGIC => false,
+        m if m == BIN_MAGIC_V2 => true,
+        _ => bail!("not an INFUSER binary graph: {}", path.display()),
+    };
     let n = read_u64(&mut r)? as usize;
     let adj_len = read_u64(&mut r)? as usize;
     let mut xadj = vec![0u64; n + 1];
     for x in xadj.iter_mut() {
         *x = read_u64(&mut r)?;
     }
+    // Structural checks *before* any CSR indexing, so a corrupt file is a
+    // clean error, never a downstream index panic.
+    if xadj.first() != Some(&0) || *xadj.last().unwrap_or(&0) as usize != adj_len {
+        bail!("corrupt binary graph (xadj bounds): {}", path.display());
+    }
+    if xadj.windows(2).any(|w| w[0] > w[1]) {
+        bail!("corrupt binary graph (xadj not monotone): {}", path.display());
+    }
     let mut adj = vec![0 as VertexId; adj_len];
     for a in adj.iter_mut() {
         let mut b4 = [0u8; 4];
         r.read_exact(&mut b4)?;
         *a = VertexId::from_le_bytes(b4);
+    }
+    if let Some(&bad) = adj.iter().find(|&&v| v as usize >= n) {
+        bail!(
+            "corrupt binary graph (neighbor id {bad} out of range, n = {n}): {}",
+            path.display()
+        );
     }
     let mut weights = vec![0f32; adj_len];
     for wt in weights.iter_mut() {
@@ -122,12 +220,22 @@ pub fn read_binary(path: &Path) -> crate::Result<Graph> {
     let name_len = read_u64(&mut r)? as usize;
     let mut name_bytes = vec![0u8; name_len];
     r.read_exact(&mut name_bytes)?;
+    let mut orig_id = Vec::new();
+    if has_orig {
+        orig_id.reserve(n);
+        for _ in 0..n {
+            let mut b4 = [0u8; 4];
+            r.read_exact(&mut b4)?;
+            orig_id.push(VertexId::from_le_bytes(b4));
+        }
+    }
     let mut g = Graph {
         xadj,
         adj,
         weights,
         edge_hash: Vec::new(),
         threshold: Vec::new(),
+        orig_id,
         name: String::from_utf8_lossy(&name_bytes).into_owned(),
     };
     g.rebuild_sampling_tables();
@@ -168,6 +276,90 @@ mod tests {
     fn parse_rejects_garbage() {
         let text = "0 x\n";
         assert!(parse_edge_list(BufReader::new(text.as_bytes()), "bad").is_err());
+    }
+
+    #[test]
+    fn declared_parse_accepts_well_formed_input() {
+        let text = "# declared n = 4\n0 1 0.25\n1 2 0.5\n2 3 0.5\n2 3 0.5\n";
+        let g = parse_edge_list_declared(BufReader::new(text.as_bytes()), "ok", 4).unwrap();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 3, "exact duplicate merges");
+        let e01 = g.xadj[0] as usize;
+        assert!((g.weights[e01] - 0.25).abs() < 1e-6);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn declared_parse_rejects_out_of_range_id_with_line_number() {
+        let text = "0 1\n1 7\n";
+        let err = parse_edge_list_declared(BufReader::new(text.as_bytes()), "bad", 4)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("out of range"), "{err}");
+        assert!(err.contains("n = 4"), "{err}");
+    }
+
+    #[test]
+    fn declared_parse_rejects_self_loop_with_line_number() {
+        let text = "# c\n0 1\n\n2 2\n";
+        let err = parse_edge_list_declared(BufReader::new(text.as_bytes()), "bad", 4)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 4"), "{err}");
+        assert!(err.contains("self loop"), "{err}");
+    }
+
+    #[test]
+    fn declared_parse_rejects_conflicting_duplicate_weights() {
+        let text = "0 1 0.25\n1 2 0.5\n1 0 0.75\n";
+        let err = parse_edge_list_declared(BufReader::new(text.as_bytes()), "bad", 3)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 3"), "{err}");
+        assert!(err.contains("conflicting weight"), "{err}");
+        assert!(err.contains("line 1"), "must name the first occurrence: {err}");
+    }
+
+    #[test]
+    fn corrupt_binary_is_an_error_not_a_panic() {
+        let dir = std::env::temp_dir().join("infuser_io_corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        // Header declares n=1, adj_len=1, then a neighbor id far out of
+        // range — must be rejected before any CSR indexing.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(BIN_MAGIC);
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // n
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // adj_len
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // xadj[0]
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // xadj[1]
+        bytes.extend_from_slice(&99u32.to_le_bytes()); // adj[0] out of range
+        bytes.extend_from_slice(&1.0f32.to_le_bytes()); // weights[0]
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // name len
+        std::fs::write(&path, bytes).unwrap();
+        let err = read_binary(&path).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn binary_roundtrip_preserves_orig_ids_of_reordered_graphs() {
+        let g = crate::gen::generate(&crate::gen::GenSpec::erdos_renyi(100, 300, 5))
+            .with_weights(WeightModel::Uniform(0.0, 0.2), 3);
+        let (rg, _) = g.reordered(crate::graph::OrderStrategy::Degree);
+        let dir = std::env::temp_dir().join("infuser_io_test_v2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rg.bin");
+        write_binary(&rg, &path).unwrap();
+        let rg2 = read_binary(&path).unwrap();
+        assert_eq!(rg.orig_id, rg2.orig_id);
+        assert_eq!(rg.adj, rg2.adj);
+        assert_eq!(
+            rg.edge_hash, rg2.edge_hash,
+            "reload must keep hashing original endpoint ids"
+        );
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -15,9 +15,11 @@
 
 pub mod builder;
 pub mod io;
+pub mod order;
 pub mod weights;
 
 pub use builder::GraphBuilder;
+pub use order::{OrderStrategy, Permutation};
 pub use weights::WeightModel;
 
 use crate::hash::edge_hash;
@@ -37,6 +39,13 @@ pub struct Graph {
     pub edge_hash: Vec<u32>,
     /// `floor(w · 2^31)` per directed copy, clamped to `[0, 2^31 - 1]`.
     pub threshold: Vec<i32>,
+    /// Original (pre-reordering) id per vertex. Empty for graphs in their
+    /// input layout (identity mapping); populated by
+    /// [`Graph::reordered`]. The sampling tables and per-edge weight RNG
+    /// hash **these** ids, which is what makes a reordered graph sample
+    /// the bit-identical subgraphs as the original (see
+    /// [`order`](crate::graph::order) module docs).
+    pub orig_id: Vec<VertexId>,
     /// Human-readable name (dataset catalog id or file stem).
     pub name: String,
 }
@@ -58,6 +67,17 @@ impl Graph {
     #[inline]
     pub fn degree(&self, v: VertexId) -> usize {
         (self.xadj[v as usize + 1] - self.xadj[v as usize]) as usize
+    }
+
+    /// Original (pre-reordering) id of vertex `v` — `v` itself for graphs
+    /// in their input layout.
+    #[inline]
+    pub fn orig(&self, v: VertexId) -> VertexId {
+        if self.orig_id.is_empty() {
+            v
+        } else {
+            self.orig_id[v as usize]
+        }
     }
 
     /// Neighbor slice of `v`.
@@ -102,6 +122,10 @@ impl Graph {
     /// Recompute `edge_hash` and `threshold` from `adj`/`weights`. Called
     /// by the builder and by `with_weights`; public for IO paths that
     /// construct CSR directly.
+    ///
+    /// Hashes are computed from **original** endpoint ids ([`Graph::orig`])
+    /// so that a reordered graph draws the bit-identical per-edge coin
+    /// flips as the identity layout.
     pub fn rebuild_sampling_tables(&mut self) {
         self.edge_hash.clear();
         self.edge_hash.reserve(self.adj.len());
@@ -110,7 +134,7 @@ impl Graph {
         for v in 0..self.num_vertices() as VertexId {
             let (s, e) = (self.xadj[v as usize] as usize, self.xadj[v as usize + 1] as usize);
             for i in s..e {
-                self.edge_hash.push(edge_hash(v, self.adj[i]));
+                self.edge_hash.push(edge_hash(self.orig(v), self.orig(self.adj[i])));
                 self.threshold.push(weights::prob_to_threshold(self.weights[i]));
             }
         }
@@ -134,6 +158,18 @@ impl Graph {
         ensure!(self.weights.len() == self.adj.len(), "weights len");
         ensure!(self.edge_hash.len() == self.adj.len(), "edge_hash len");
         ensure!(self.threshold.len() == self.adj.len(), "threshold len");
+        ensure!(
+            self.orig_id.is_empty() || self.orig_id.len() == n,
+            "orig_id must be empty (identity) or one entry per vertex"
+        );
+        if !self.orig_id.is_empty() {
+            let mut seen = vec![false; n];
+            for &o in &self.orig_id {
+                ensure!((o as usize) < n, "orig id {o} out of range");
+                ensure!(!seen[o as usize], "orig id {o} repeated");
+                seen[o as usize] = true;
+            }
+        }
         for v in 0..n as VertexId {
             for &u in self.neighbors(v) {
                 ensure!((u as usize) < n, "neighbor out of range");

@@ -1,0 +1,365 @@
+//! Cache-aware vertex reordering — memory layout as a first-class,
+//! benchmarkable axis.
+//!
+//! The IM kernels are memory-bound (paper §1: fusing wins by "reducing
+//! the amount of data brought from the memory"), yet a CSR built straight
+//! from an input edge list inherits whatever vertex order the file
+//! happened to use, so the hot `labels[v * R ..]` row accesses during
+//! frontier propagation stride arbitrarily through the label matrix. This
+//! module makes the layout a runtime choice: three deterministic
+//! reordering strategies ([`OrderStrategy`]), a [`Permutation`] type
+//! carrying both directions of the relabeling, and
+//! [`Graph::reordered`](crate::graph::Graph::reordered), which rebuilds
+//! CSR (and the fused-sampling tables) in the new layout.
+//!
+//! ## The orig-id hashing invariant
+//!
+//! Reordering must be a pure throughput knob: σ estimates, marginal
+//! gains, and seed sets have to be **bit-identical** to the identity
+//! layout, or a layout sweep would silently compare different random
+//! experiments. The fused sampler decides edge aliveness from
+//! `(X_r ⊕ h(u, v)) < thr(w)`, so the one way relabeling could leak into
+//! results is through the endpoint ids fed to `h` (and to the per-edge
+//! weight RNG). To close that hole, a reordered [`Graph`] carries
+//! `orig_id` — the pre-reordering id of every vertex — and
+//! [`Graph::rebuild_sampling_tables`](crate::graph::Graph::rebuild_sampling_tables)
+//! hashes **original** endpoint ids (`h(orig(u), orig(v))`), as does the
+//! weight assignment in [`crate::graph::weights`]. Every lane's sampled
+//! subgraph is therefore the same set of (original) edges in any layout,
+//! and the downstream label/σ machinery is permutation-invariant by
+//! construction — enforced across backends × lane widths × memo backends
+//! by `tests/order_invariance.rs`.
+//!
+//! Seed sets are reported in original ids: the propagation engines gather
+//! label rows back into original row order before anything ranks or
+//! tie-breaks, so CELF's smallest-id tie-break sees original ids too.
+
+mod permutation;
+
+pub use permutation::Permutation;
+
+use super::Graph;
+use crate::VertexId;
+
+/// Vertex-reordering strategy for the CSR/label-matrix memory layout.
+///
+/// Every strategy is deterministic (ties broken by ascending vertex id)
+/// and result-invariant: only throughput moves, never σ, gains, or seeds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum OrderStrategy {
+    /// Keep the input order (the pre-refactor behavior).
+    #[default]
+    Identity,
+    /// Descending-degree: hubs — the rows frontier propagation touches
+    /// most — are packed together at the front of the label matrix.
+    Degree,
+    /// Cuthill–McKee-style BFS from the max-degree vertex (neighbors
+    /// enqueued by ascending degree): topological neighbors get nearby
+    /// rows, so a push `u → v` usually lands close by in memory.
+    Bfs,
+    /// Degree-bucketed BFS: BFS order, stably re-bucketed so high-degree
+    /// bands come first — hub packing at the macro scale, BFS locality
+    /// within each band.
+    Hybrid,
+}
+
+impl OrderStrategy {
+    /// Every strategy, identity first (the reference layout).
+    pub const ALL: [OrderStrategy; 4] = [
+        OrderStrategy::Identity,
+        OrderStrategy::Degree,
+        OrderStrategy::Bfs,
+        OrderStrategy::Hybrid,
+    ];
+
+    /// Parse from a CLI/config string
+    /// (`identity` / `degree` / `bfs` / `hybrid`).
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "identity" => Ok(Self::Identity),
+            "degree" => Ok(Self::Degree),
+            "bfs" => Ok(Self::Bfs),
+            "hybrid" => Ok(Self::Hybrid),
+            other => Err(anyhow::anyhow!(
+                "unknown ordering '{other}' (identity|degree|bfs|hybrid)"
+            )),
+        }
+    }
+
+    /// Short id for logs and table headers.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Identity => "identity",
+            Self::Degree => "degree",
+            Self::Bfs => "bfs",
+            Self::Hybrid => "hybrid",
+        }
+    }
+
+    /// True for the no-op layout.
+    #[inline]
+    pub fn is_identity(&self) -> bool {
+        matches!(self, Self::Identity)
+    }
+
+    /// Compute this strategy's permutation for `graph` (no CSR rebuild).
+    pub fn permutation(&self, graph: &Graph) -> Permutation {
+        let n = graph.num_vertices();
+        let order = match self {
+            Self::Identity => return Permutation::identity(n),
+            Self::Degree => degree_order(graph),
+            Self::Bfs => bfs_order(graph),
+            Self::Hybrid => hybrid_order(graph),
+        };
+        debug_assert_eq!(order.len(), n);
+        Permutation::from_order(order).expect("strategy orders are bijections")
+    }
+}
+
+impl std::fmt::Display for OrderStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Vertices by descending degree, ties by ascending id (new → old list).
+fn degree_order(graph: &Graph) -> Vec<VertexId> {
+    let n = graph.num_vertices();
+    let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+    order.sort_unstable_by_key(|&v| (std::cmp::Reverse(graph.degree(v)), v));
+    order
+}
+
+/// Cuthill–McKee-style BFS order: components are seeded by descending
+/// degree (ties: smallest id); within the BFS, a vertex's unvisited
+/// neighbors are enqueued by ascending degree (ties: smallest id).
+fn bfs_order(graph: &Graph) -> Vec<VertexId> {
+    let n = graph.num_vertices();
+    let seeds = degree_order(graph); // max-degree-first seed scan
+    let mut visited = vec![false; n];
+    let mut order: Vec<VertexId> = Vec::with_capacity(n);
+    let mut nbrs: Vec<VertexId> = Vec::new();
+    let mut seed_cursor = 0usize;
+    while order.len() < n {
+        // Next unvisited seed, max degree first.
+        while visited[seeds[seed_cursor] as usize] {
+            seed_cursor += 1;
+        }
+        let s = seeds[seed_cursor];
+        visited[s as usize] = true;
+        let frontier_start = order.len();
+        order.push(s);
+        let mut head = frontier_start;
+        while head < order.len() {
+            let u = order[head];
+            head += 1;
+            nbrs.clear();
+            nbrs.extend(
+                graph
+                    .neighbors(u)
+                    .iter()
+                    .copied()
+                    .filter(|&v| !visited[v as usize]),
+            );
+            nbrs.sort_unstable_by_key(|&v| (graph.degree(v), v));
+            for &v in &nbrs {
+                // `nbrs` may hold duplicates only if the CSR did — the
+                // builder dedups, but stay robust for hand-built graphs.
+                if !visited[v as usize] {
+                    visited[v as usize] = true;
+                    order.push(v);
+                }
+            }
+        }
+    }
+    order
+}
+
+/// Degree-bucketed BFS: the BFS order, stably re-sorted by descending
+/// `ilog2`-degree bucket, so hub bands pack first while each band keeps
+/// its BFS-local sub-order.
+fn hybrid_order(graph: &Graph) -> Vec<VertexId> {
+    let mut order = bfs_order(graph);
+    let bucket = |v: VertexId| {
+        let d = graph.degree(v) as u64;
+        64 - (d + 1).leading_zeros() // monotone in degree, log-banded
+    };
+    order.sort_by_key(|&v| std::cmp::Reverse(bucket(v)));
+    order
+}
+
+impl Graph {
+    /// Rebuild this graph's CSR in the vertex order chosen by `strategy`,
+    /// returning the relabeled graph plus the [`Permutation`] that maps
+    /// old ids to new ones.
+    ///
+    /// The returned graph carries `orig_id` (the original id of every new
+    /// vertex, composed through any prior reordering), so its
+    /// fused-sampling tables hash **original** endpoint ids — see the
+    /// module docs for why that makes reordering result-invariant.
+    pub fn reordered(&self, strategy: OrderStrategy) -> (Graph, Permutation) {
+        let perm = strategy.permutation(self);
+        let n = self.num_vertices();
+        if perm.is_identity() {
+            return (self.clone(), perm);
+        }
+
+        let mut xadj = Vec::with_capacity(n + 1);
+        let mut adj = Vec::with_capacity(self.adj.len());
+        let mut weights = Vec::with_capacity(self.weights.len());
+        let mut orig_id = Vec::with_capacity(n);
+        let mut row: Vec<(VertexId, f32)> = Vec::new();
+        xadj.push(0u64);
+        for p in 0..n as VertexId {
+            let old = perm.apply_inv(p);
+            orig_id.push(self.orig(old));
+            row.clear();
+            for (nbr, e) in self.edges_of(old) {
+                row.push((perm.apply(nbr), self.weights[e]));
+            }
+            // Deterministic layout: rows sorted by new neighbor id, like
+            // the builder's canonical form.
+            row.sort_unstable_by_key(|&(nbr, _)| nbr);
+            for &(nbr, w) in &row {
+                adj.push(nbr);
+                weights.push(w);
+            }
+            xadj.push(adj.len() as u64);
+        }
+
+        let mut g = Graph {
+            xadj,
+            adj,
+            weights,
+            edge_hash: Vec::new(),
+            threshold: Vec::new(),
+            orig_id,
+            name: self.name.clone(),
+        };
+        g.rebuild_sampling_tables();
+        (g, perm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::GenSpec;
+    use crate::graph::{GraphBuilder, WeightModel};
+
+    fn star_plus_path() -> Graph {
+        // Hub 4 with 3 spokes, plus the edge 0-1; degrees: 4:3, 0:2, 1:1, 2:1, 3:1.
+        GraphBuilder::new(5)
+            .edges(&[(4, 2), (4, 3), (4, 0), (0, 1)])
+            .build()
+            .with_weights(WeightModel::Const(0.5), 1)
+    }
+
+    #[test]
+    fn strategy_parse_and_labels() {
+        for s in OrderStrategy::ALL {
+            assert_eq!(OrderStrategy::parse(s.label()).unwrap(), s);
+        }
+        assert!(OrderStrategy::parse("zigzag").is_err());
+        assert_eq!(OrderStrategy::default(), OrderStrategy::Identity);
+        assert!(OrderStrategy::Identity.is_identity());
+        assert!(!OrderStrategy::Degree.is_identity());
+    }
+
+    #[test]
+    fn identity_reorder_is_a_clone() {
+        let g = star_plus_path();
+        let (rg, perm) = g.reordered(OrderStrategy::Identity);
+        assert!(perm.is_identity());
+        assert_eq!(rg.adj, g.adj);
+        assert_eq!(rg.edge_hash, g.edge_hash);
+    }
+
+    #[test]
+    fn degree_order_packs_hubs_first() {
+        let g = star_plus_path();
+        let (rg, perm) = g.reordered(OrderStrategy::Degree);
+        rg.validate().unwrap();
+        // New vertex 0 is the old hub 4; next the two degree-2 vertices.
+        assert_eq!(perm.apply(4), 0);
+        assert_eq!(rg.degree(0), 3);
+        assert_eq!(rg.degree(1), 2);
+        assert_eq!(rg.orig(0), 4);
+    }
+
+    #[test]
+    fn bfs_order_starts_at_max_degree_vertex() {
+        let g = star_plus_path();
+        let (rg, perm) = g.reordered(OrderStrategy::Bfs);
+        rg.validate().unwrap();
+        assert_eq!(perm.apply(4), 0, "BFS must start at the hub");
+    }
+
+    #[test]
+    fn all_strategies_preserve_structure_and_sampling_tables() {
+        let g = crate::gen::generate(&GenSpec::erdos_renyi(120, 360, 7))
+            .with_weights(WeightModel::Uniform(0.0, 0.4), 3);
+        for strategy in OrderStrategy::ALL {
+            let (rg, perm) = g.reordered(strategy);
+            rg.validate().unwrap();
+            assert_eq!(rg.num_vertices(), g.num_vertices());
+            assert_eq!(rg.num_edges(), g.num_edges());
+            for v in 0..g.num_vertices() as VertexId {
+                let p = perm.apply(v);
+                assert_eq!(rg.degree(p), g.degree(v), "{strategy}: degree of {v}");
+                assert_eq!(rg.orig(p), v, "{strategy}: orig id of {v}");
+                // Every edge keeps its hash/threshold/weight under the
+                // orig-id invariant.
+                for (nbr, e) in g.edges_of(v) {
+                    let (_, re) = rg
+                        .edges_of(p)
+                        .find(|&(w, _)| w == perm.apply(nbr))
+                        .expect("edge must survive reordering");
+                    assert_eq!(rg.edge_hash[re], g.edge_hash[e], "{strategy}");
+                    assert_eq!(rg.threshold[re], g.threshold[e], "{strategy}");
+                    assert_eq!(rg.weights[re], g.weights[e], "{strategy}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_puts_top_bucket_before_bottom() {
+        let g = crate::gen::generate(&GenSpec::barabasi_albert(200, 3, 5))
+            .with_weights(WeightModel::Const(0.1), 1);
+        let (rg, _) = g.reordered(OrderStrategy::Hybrid);
+        rg.validate().unwrap();
+        // The first row must be from the highest degree band.
+        assert!(rg.degree(0) * 2 >= rg.max_degree());
+    }
+
+    #[test]
+    fn reordering_composes_orig_ids() {
+        let g = star_plus_path();
+        let (rg, _) = g.reordered(OrderStrategy::Degree);
+        let (rrg, _) = rg.reordered(OrderStrategy::Bfs);
+        rrg.validate().unwrap();
+        // orig ids still point at the *original* graph's ids.
+        let mut seen: Vec<VertexId> = (0..5).map(|p| rrg.orig(p)).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+        assert_eq!(rrg.edge_hash.len(), g.edge_hash.len());
+        let mut a = rrg.edge_hash.clone();
+        let mut b = g.edge_hash.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "hash multiset survives stacked reorders");
+    }
+
+    #[test]
+    fn empty_and_singleton_graphs_reorder() {
+        for n in [0usize, 1] {
+            let g = GraphBuilder::new(n).build();
+            for strategy in OrderStrategy::ALL {
+                let (rg, perm) = g.reordered(strategy);
+                assert_eq!(rg.num_vertices(), n);
+                assert_eq!(perm.len(), n);
+            }
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Vertex permutations: the bookkeeping half of the reordering layer.
+//!
+//! A [`Permutation`] carries both directions of a vertex relabeling —
+//! `forward[old] = new` and `inverse[new] = old` — so callers never
+//! rebuild one map from the other on a hot path. Composition and
+//! inversion are provided for stacking reorderings (e.g. a BFS pass over
+//! an already degree-sorted layout); round-trip and composition laws are
+//! property-tested in `tests/order_invariance.rs`.
+
+use crate::VertexId;
+use anyhow::ensure;
+
+/// A bijection on `0..n` vertex ids, stored in both directions.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Permutation {
+    /// `forward[old] = new`.
+    forward: Vec<VertexId>,
+    /// `inverse[new] = old`.
+    inverse: Vec<VertexId>,
+}
+
+impl Permutation {
+    /// The identity permutation on `n` vertices.
+    pub fn identity(n: usize) -> Self {
+        let forward: Vec<VertexId> = (0..n as VertexId).collect();
+        Self { inverse: forward.clone(), forward }
+    }
+
+    /// Build from a forward map (`forward[old] = new`), validating that it
+    /// is a bijection on `0..n`.
+    pub fn from_forward(forward: Vec<VertexId>) -> crate::Result<Self> {
+        let n = forward.len();
+        let mut inverse = vec![VertexId::MAX; n];
+        for (old, &new) in forward.iter().enumerate() {
+            ensure!(
+                (new as usize) < n,
+                "permutation image {new} out of range (n = {n})"
+            );
+            ensure!(
+                inverse[new as usize] == VertexId::MAX,
+                "permutation maps two vertices to {new}"
+            );
+            inverse[new as usize] = old as VertexId;
+        }
+        Ok(Self { forward, inverse })
+    }
+
+    /// Build from an inverse map (`inverse[new] = old`, i.e. the new
+    /// vertex order as a list of old ids), validating bijectivity.
+    pub fn from_order(inverse: Vec<VertexId>) -> crate::Result<Self> {
+        let p = Self::from_forward(inverse)?;
+        Ok(p.inverted())
+    }
+
+    /// Number of vertices.
+    pub fn len(&self) -> usize {
+        self.forward.len()
+    }
+
+    /// True for the zero-vertex permutation.
+    pub fn is_empty(&self) -> bool {
+        self.forward.is_empty()
+    }
+
+    /// True when this is the identity map.
+    pub fn is_identity(&self) -> bool {
+        self.forward.iter().enumerate().all(|(v, &p)| v == p as usize)
+    }
+
+    /// New id of old vertex `v`.
+    #[inline]
+    pub fn apply(&self, v: VertexId) -> VertexId {
+        self.forward[v as usize]
+    }
+
+    /// Old id of new vertex `p`.
+    #[inline]
+    pub fn apply_inv(&self, p: VertexId) -> VertexId {
+        self.inverse[p as usize]
+    }
+
+    /// The forward map (`forward[old] = new`).
+    pub fn forward(&self) -> &[VertexId] {
+        &self.forward
+    }
+
+    /// The inverse map (`inverse[new] = old`).
+    pub fn inverse(&self) -> &[VertexId] {
+        &self.inverse
+    }
+
+    /// The inverse permutation as its own value.
+    pub fn inverted(&self) -> Self {
+        Self {
+            forward: self.inverse.clone(),
+            inverse: self.forward.clone(),
+        }
+    }
+
+    /// Composition `self` then `other`: the permutation mapping
+    /// `v ↦ other.apply(self.apply(v))`.
+    pub fn then(&self, other: &Permutation) -> crate::Result<Self> {
+        ensure!(
+            self.len() == other.len(),
+            "composing permutations of different sizes ({} vs {})",
+            self.len(),
+            other.len()
+        );
+        Self::from_forward(self.forward.iter().map(|&p| other.apply(p)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_roundtrip() {
+        let p = Permutation::identity(5);
+        assert!(p.is_identity());
+        assert_eq!(p.len(), 5);
+        for v in 0..5 {
+            assert_eq!(p.apply(v), v);
+            assert_eq!(p.apply_inv(v), v);
+        }
+    }
+
+    #[test]
+    fn from_forward_validates_bijection() {
+        assert!(Permutation::from_forward(vec![0, 1, 1]).is_err());
+        assert!(Permutation::from_forward(vec![0, 3]).is_err());
+        let p = Permutation::from_forward(vec![2, 0, 1]).unwrap();
+        assert_eq!(p.apply(0), 2);
+        assert_eq!(p.apply_inv(2), 0);
+        assert!(!p.is_identity());
+    }
+
+    #[test]
+    fn from_order_is_the_inverse_direction() {
+        // New order [2, 0, 1]: new vertex 0 is old vertex 2.
+        let p = Permutation::from_order(vec![2, 0, 1]).unwrap();
+        assert_eq!(p.apply_inv(0), 2);
+        assert_eq!(p.apply(2), 0);
+    }
+
+    #[test]
+    fn compose_with_inverse_is_identity() {
+        let p = Permutation::from_forward(vec![3, 1, 0, 2]).unwrap();
+        assert!(p.then(&p.inverted()).unwrap().is_identity());
+        assert!(p.inverted().then(&p).unwrap().is_identity());
+    }
+
+    #[test]
+    fn compose_mismatched_sizes_errors() {
+        let a = Permutation::identity(3);
+        let b = Permutation::identity(4);
+        assert!(a.then(&b).is_err());
+    }
+}

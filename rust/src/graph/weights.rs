@@ -114,14 +114,19 @@ pub fn assign(g: &mut Graph, model: WeightModel, seed: u64) {
 }
 
 /// Draw one value per undirected edge from an RNG seeded by
-/// `(seed, edge_hash)`, write it to both directed copies.
+/// `(seed, edge_hash)`, write it to both directed copies. The hash is
+/// taken over **original** endpoint ids ([`Graph::orig`]), so weight
+/// assignment commutes with vertex reordering
+/// ([`Graph::reordered`](crate::graph::Graph::reordered)) — the same
+/// undirected edge draws the same weight in any layout.
 fn per_edge_rng(g: &mut Graph, seed: u64, mut draw: impl FnMut(&mut Pcg32) -> f32) {
     let n = g.num_vertices();
     for u in 0..n as u32 {
         let (s, e) = (g.xadj[u as usize] as usize, g.xadj[u as usize + 1] as usize);
         for i in s..e {
             let v = g.adj[i];
-            let mut rng = Pcg32::from_seed_stream(seed, u64::from(edge_hash(u, v)));
+            let mut rng =
+                Pcg32::from_seed_stream(seed, u64::from(edge_hash(g.orig(u), g.orig(v))));
             g.weights[i] = draw(&mut rng);
         }
     }

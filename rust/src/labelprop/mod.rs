@@ -21,10 +21,11 @@
 //!   executes (`runtime::XlaEngine`), enabling bit-for-bit cross-layer
 //!   comparison of fixpoints.
 
-use crate::graph::Graph;
+use crate::graph::{Graph, OrderStrategy};
 use crate::sampling::xr_stream;
 use crate::simd::{Backend, LaneEngine, LaneWidth};
 use crate::util::par::{as_send_cells, ThreadPool};
+use crate::VertexId;
 use std::sync::atomic::{AtomicI32, AtomicU64, AtomicUsize, Ordering};
 
 /// The `n × R` component-label matrix, row-major: `data[v*r_count + lane]`.
@@ -63,6 +64,19 @@ impl Labels {
         self.data[v * self.r_count + r]
     }
 
+    /// Gather rows into a new matrix: output row `v` is `self.row(src[v])`.
+    /// Used by the reordering layer to hand labels back in original vertex
+    /// order after propagating on a relabeled graph.
+    pub fn gather_rows(&self, src: &[VertexId]) -> Labels {
+        debug_assert_eq!(src.len(), self.n);
+        let r = self.r_count;
+        let mut data = vec![0i32; self.data.len()];
+        for (v, &s) in src.iter().enumerate() {
+            data[v * r..(v + 1) * r].copy_from_slice(self.row(s as usize));
+        }
+        Labels { data, n: self.n, r_count: r }
+    }
+
     /// Heap footprint in bytes (paper's memoization cost driver).
     pub fn bytes(&self) -> u64 {
         (self.data.len() * std::mem::size_of::<i32>()) as u64
@@ -93,6 +107,11 @@ pub struct PropagateOpts {
     pub lanes: LaneWidth,
     /// Schedule.
     pub mode: Mode,
+    /// Vertex-reordering strategy for the CSR/label-matrix layout.
+    /// Result-invariant by the orig-id hashing contract
+    /// ([`crate::graph::order`]); labels are returned in **original** row
+    /// order regardless of the strategy.
+    pub order: OrderStrategy,
 }
 
 impl Default for PropagateOpts {
@@ -104,6 +123,7 @@ impl Default for PropagateOpts {
             backend: Backend::detect(),
             lanes: LaneWidth::default(),
             mode: Mode::Async,
+            order: OrderStrategy::Identity,
         }
     }
 }
@@ -129,7 +149,42 @@ pub struct PropagationResult {
 }
 
 /// Run batched label propagation to fixpoint.
+///
+/// When `opts.order` selects a non-identity layout, the graph is
+/// relabeled ([`Graph::reordered`]) before the fixpoint loop and the
+/// label matrix is gathered back into **original** row order afterwards,
+/// so callers index rows by original vertex id no matter the layout.
+/// Label *values* are component representatives in the reordered id
+/// space; everything downstream (component sizes, σ, marginal gains)
+/// depends only on the component partition, which the orig-id sampling
+/// contract makes bit-identical across layouts.
 pub fn propagate(graph: &Graph, opts: &PropagateOpts) -> PropagationResult {
+    if opts.order.is_identity() {
+        return propagate_core(graph, opts);
+    }
+    run_reordered(graph, opts, |g, o| Ok(propagate_core(g, o)))
+        .expect("native propagation is infallible")
+}
+
+/// Reorder `graph` per `opts.order`, run `run` with an identity-order
+/// copy of `opts` on the relabeled graph, and gather the fixpoint's
+/// label rows back into original vertex order. The single home of the
+/// reorder→run→gather contract, shared by the native engine above and
+/// [`crate::runtime::XlaEngine`] — keep it that way, or the
+/// bit-identical-across-engines guarantee can drift.
+pub fn run_reordered(
+    graph: &Graph,
+    opts: &PropagateOpts,
+    run: impl FnOnce(&Graph, &PropagateOpts) -> crate::Result<PropagationResult>,
+) -> crate::Result<PropagationResult> {
+    let (rg, perm) = graph.reordered(opts.order);
+    let inner = PropagateOpts { order: OrderStrategy::Identity, ..*opts };
+    let mut res = run(&rg, &inner)?;
+    res.labels = res.labels.gather_rows(perm.forward());
+    Ok(res)
+}
+
+fn propagate_core(graph: &Graph, opts: &PropagateOpts) -> PropagationResult {
     match opts.mode {
         Mode::Async => propagate_async(graph, opts),
         Mode::Sync => propagate_sync(graph, opts),
@@ -199,6 +254,10 @@ fn propagate_async(graph: &Graph, opts: &PropagateOpts) -> PropagationResult {
     while !frontier.is_empty() {
         iterations += 1;
         let cursor = AtomicUsize::new(0);
+        // Adaptive dynamic-schedule grain: aim for ~8 chunks per worker so
+        // load still balances, with a floor of 64 so tiny frontiers don't
+        // thrash the shared cursor and huge ones aren't over-chunked.
+        let chunk = (frontier.len() / (pool.threads() * 8)).max(64);
         let frontier_ref = &frontier;
         let next_live_ref = &next_live;
         let xrs_ref = &xrs;
@@ -209,11 +268,11 @@ fn propagate_async(graph: &Graph, opts: &PropagateOpts) -> PropagationResult {
             let mut lu_snap = vec![0i32; r_count];
             let mut local_visits = 0u64;
             loop {
-                let start = cursor.fetch_add(64, Ordering::Relaxed);
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
                 if start >= frontier_ref.len() {
                     break;
                 }
-                let end = (start + 64).min(frontier_ref.len());
+                let end = (start + chunk).min(frontier_ref.len());
                 for &u in &frontier_ref[start..end] {
                     // Snapshot u's row once; reused across its edges.
                     // SAFETY: concurrent fetch_min writers may race these
@@ -445,6 +504,7 @@ mod tests {
             backend: Backend::detect(),
             lanes: LaneWidth::default(),
             mode,
+            order: OrderStrategy::Identity,
         }
     }
 
@@ -510,6 +570,30 @@ mod tests {
                     "lanes {lanes} mode {mode:?}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn ordering_does_not_change_gains() {
+        // The in-module guard for the reordering layer: every strategy must
+        // yield bit-identical component sizes per original vertex, hence
+        // bit-identical initial gains. The full backend × lanes × memo
+        // cross-product lives in `tests/order_invariance.rs`.
+        let g = crate::gen::generate(&GenSpec::erdos_renyi(150, 450, 6))
+            .with_weights(WeightModel::Const(0.2), 3);
+        let pool = ThreadPool::new(2);
+        let gains_at = |order| {
+            let res = propagate(&g, &PropagateOpts { order, ..opts(24, 9, 2, Mode::Async) });
+            let sizes = component_sizes(&res.labels);
+            initial_gains(&res.labels, &sizes, &pool)
+        };
+        let reference = gains_at(OrderStrategy::Identity);
+        for order in OrderStrategy::ALL {
+            let gains = gains_at(order);
+            assert!(
+                gains.iter().zip(&reference).all(|(a, b)| a == b),
+                "gains must be bit-identical under {order}"
+            );
         }
     }
 

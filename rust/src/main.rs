@@ -73,6 +73,9 @@ COMMANDS
              [--lanes 8|16|32]         VECLABEL lane batch width B (default 8;
                                        seeds are identical for every width)
              [--memo dense|sketch]     CELF memoization backend (infuser)
+             [--order identity|degree|bfs|hybrid]
+                                       vertex memory layout (default identity;
+                                       seeds are identical for every ordering)
   experiment --config FILE.json        run a full grid, render tables
              [--markdown]
   cdf        --dataset ID [--r N]      Fig. 2 sampling-probability CDF
@@ -143,6 +146,9 @@ fn cmd_run(args: &Args) -> infuser::Result<()> {
         backend: infuser::simd::Backend::parse(args.opt("backend").unwrap_or("auto"))?,
         lanes: infuser::simd::LaneWidth::parse(args.opt("lanes").unwrap_or("8"))?,
         memo: infuser::algo::infuser::MemoKind::parse(args.opt("memo").unwrap_or("dense"))?,
+        orders: vec![infuser::graph::OrderStrategy::parse(
+            args.opt("order").unwrap_or("identity"),
+        )?],
         imm_memory_limit: args
             .opt("imm-mem-gb")
             .map(|v| v.parse::<f64>().map(|gb| (gb * 1073741824.0) as u64))
@@ -169,6 +175,7 @@ fn cmd_run(args: &Args) -> infuser::Result<()> {
                 } else {
                     cfg.memo
                 },
+                order: cfg.order(),
                 ..Default::default()
             },
         )

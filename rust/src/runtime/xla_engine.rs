@@ -119,11 +119,23 @@ impl XlaEngine {
 
     /// Run propagation to fixpoint via the `lp_converge` artifact and slice
     /// the result back to `n × r_count`.
+    ///
+    /// A non-identity `opts.order` is applied **before padding**: the
+    /// graph is relabeled ([`Graph::reordered`]), the relabeled CSR is
+    /// packed into the bucket tensors (edge hashes already carry original
+    /// endpoint ids, so the kernel samples the bit-identical subgraphs),
+    /// and the fixpoint rows are gathered back into original vertex order
+    /// — the same contract as the native engine.
     pub fn propagate_xla(
         &self,
         graph: &Graph,
         opts: &PropagateOpts,
     ) -> crate::Result<PropagationResult> {
+        if !opts.order.is_identity() {
+            return crate::labelprop::run_reordered(graph, opts, |g, o| {
+                self.propagate_xla(g, o)
+            });
+        }
         let n = graph.num_vertices();
         let m2 = graph.adj.len();
         let exe = self.compiled(EntryKind::LpConverge, n, m2, opts.r_count)?;

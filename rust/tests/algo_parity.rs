@@ -35,7 +35,9 @@ fn all_four_algorithms_reach_comparable_quality() {
     let r = 2048;
     let budget = Budget::unlimited();
 
-    let mix = MixGreedy::new(MixGreedyParams { k, r_count: r, seed: 1 }).run(&g, &budget).unwrap();
+    let mix = MixGreedy::new(MixGreedyParams { k, r_count: r, seed: 1, ..Default::default() })
+        .run(&g, &budget)
+        .unwrap();
     let fus = FusedSampling::new(FusedParams { k, r_count: r, seed: 1, ..Default::default() })
         .run(&g, &budget)
         .unwrap();
@@ -180,7 +182,9 @@ fn timeout_injection_trips_every_algorithm() {
     let r = 2048;
 
     let outs: Vec<anyhow::Error> = vec![
-        MixGreedy::new(MixGreedyParams { k, r_count: r, seed: 1 }).run(&g, &budget).unwrap_err(),
+        MixGreedy::new(MixGreedyParams { k, r_count: r, seed: 1, ..Default::default() })
+            .run(&g, &budget)
+            .unwrap_err(),
         FusedSampling::new(FusedParams { k, r_count: r, seed: 1, ..Default::default() })
             .run(&g, &budget)
             .unwrap_err(),

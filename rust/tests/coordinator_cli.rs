@@ -155,6 +155,88 @@ fn cli_run_lanes_backend_memo_grid_end_to_end() {
 }
 
 #[test]
+fn cli_run_order_grid_end_to_end() {
+    // `infuser run --order` through the real binary: every ordering must
+    // print the identical seed line (the layout is a pure throughput
+    // knob), including combined with the sketch memo and wide lanes.
+    let base = [
+        "run", "--dataset", "nethep-s", "--algo", "infuser", "--k", "3", "--r", "32",
+        "--threads", "2", "--seed", "1", "--backend", "scalar",
+    ];
+    let seeds_line = |extra: &[&str]| -> String {
+        let mut args: Vec<&str> = base.to_vec();
+        args.extend_from_slice(extra);
+        let out = infuser_bin(&args);
+        assert!(
+            out.status.success(),
+            "args {extra:?} failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+        stdout
+            .lines()
+            .find(|l| l.starts_with("seeds:"))
+            .unwrap_or_else(|| panic!("no seeds line in output:\n{stdout}"))
+            .to_string()
+    };
+    let reference = seeds_line(&["--order", "identity"]);
+    for order in ["degree", "bfs", "hybrid"] {
+        assert_eq!(seeds_line(&["--order", order]), reference, "order {order}");
+        assert_eq!(
+            seeds_line(&["--order", order, "--memo", "sketch", "--lanes", "32"]),
+            reference,
+            "order {order} + sketch + B32"
+        );
+    }
+}
+
+#[test]
+fn cli_rejects_unknown_ordering() {
+    for bad in ["zigzag", "DEGREE", ""] {
+        let out = infuser_bin(&[
+            "run", "--dataset", "nethep-s", "--algo", "infuser", "--k", "2", "--r", "8",
+            "--order", bad,
+        ]);
+        assert!(!out.status.success(), "--order '{bad}' must fail");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("unknown ordering"), "--order '{bad}': {err}");
+        assert!(
+            err.contains("identity|degree|bfs|hybrid"),
+            "--order '{bad}' should list strategies: {err}"
+        );
+    }
+}
+
+#[test]
+fn json_config_order_sweep_reaches_the_grid() {
+    // An "order" array in an experiment config yields one row per
+    // ordering with identical seeds in each.
+    let cfg = ExperimentConfig::from_json(
+        r#"{"datasets": ["nethep-s"], "settings": ["const:0.05"],
+            "algos": ["infuser"], "k": 3, "r": 32, "threads": 2, "seed": 4,
+            "order": ["identity", "degree", "bfs", "hybrid"]}"#,
+    )
+    .unwrap();
+    let mut runner = Runner::new(cfg);
+    runner.verbose = false;
+    let cells = runner.run_grid().unwrap();
+    assert_eq!(cells.len(), 4);
+    let seeds = |c: &infuser::coordinator::CellResult| match &c.outcome {
+        Outcome::Done { seeds, .. } => seeds.clone(),
+        other => panic!("{other:?}"),
+    };
+    let reference = seeds(&cells[0]);
+    for c in &cells[1..] {
+        assert_eq!(seeds(c), reference, "{}", c.dataset);
+    }
+    let t = render_grid(&cells, "times", |o| o.time_cell());
+    let text = t.render();
+    for order in ["identity", "degree", "bfs", "hybrid"] {
+        assert!(text.contains(&format!("[{order}]")), "missing row for {order}:\n{text}");
+    }
+}
+
+#[test]
 fn cli_rejects_invalid_lane_width() {
     for bad in ["7", "0", "64", "wide"] {
         let out = infuser_bin(&[

@@ -93,6 +93,7 @@ fn fixpoint_labels_identical_across_engines_and_schedules() {
             backend: REFERENCE.0,
             lanes: REFERENCE.1,
             mode: Mode::Async,
+            ..Default::default()
         };
         let reference = propagate(&graph, &base);
         // ... and the per-lane union-find oracle agrees with the reference.
@@ -132,6 +133,7 @@ fn marginal_gains_identical_across_engines_and_memo_backends() {
             backend: REFERENCE.0,
             lanes: REFERENCE.1,
             mode: Mode::Async,
+            ..Default::default()
         };
         let ref_labels = propagate(&graph, &base).labels;
         let ref_memo = make_memo(MemoKind::Dense, ref_labels);

@@ -1,0 +1,366 @@
+//! Permutation-invariance suite for the vertex-reordering layer (the
+//! tentpole contract of the memory-layout refactor).
+//!
+//! Because the fused sampler hashes **original** endpoint ids (the
+//! orig-id invariant of `graph/order/`), every lane's sampled subgraph —
+//! and therefore σ estimates, marginal gains, and seed sets — must be
+//! **bit-identical** across identity/degree/bfs/hybrid orderings, for
+//! every kernel backend × lane width × memoization backend. This file
+//! checks that cross-product end to end, plus the `Permutation`
+//! round-trip/composition laws via the lite property harness.
+
+use infuser::algo::fused::{randcas_fused, randcas_fused_batched, FusedParams, FusedSampling};
+use infuser::algo::infuser::{make_memo, InfuserMg, InfuserParams, MemoKind};
+use infuser::algo::Budget;
+use infuser::graph::{OrderStrategy, Permutation, WeightModel};
+use infuser::labelprop::{component_sizes, initial_gains, propagate, Mode, PropagateOpts};
+use infuser::simd::{Backend, LaneWidth};
+use infuser::util::proptest_lite::check;
+use infuser::util::ThreadPool;
+use infuser::VertexId;
+
+fn backends() -> Vec<Backend> {
+    let mut v = vec![Backend::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        v.push(Backend::Avx2);
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// Permutation laws
+// ---------------------------------------------------------------------------
+
+/// Random permutation via Fisher–Yates over the harness RNG.
+fn random_permutation(gen: &mut infuser::util::proptest_lite::Gen, n: usize) -> Permutation {
+    let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+    for i in (1..n).rev() {
+        let j = gen.below(i as u32 + 1) as usize;
+        order.swap(i, j);
+    }
+    Permutation::from_forward(order).unwrap()
+}
+
+#[test]
+fn permutation_roundtrip_and_composition_laws() {
+    check("perm-laws", 30, |gen| {
+        let n = gen.size(1, 64);
+        let p = random_permutation(gen, n);
+        let q = random_permutation(gen, n);
+        // Round trip: apply then apply_inv is the identity, both ways.
+        for v in 0..n as VertexId {
+            assert_eq!(p.apply_inv(p.apply(v)), v);
+            assert_eq!(p.apply(p.apply_inv(v)), v);
+        }
+        // Inversion: p ∘ p⁻¹ = p⁻¹ ∘ p = id.
+        assert!(p.then(&p.inverted()).unwrap().is_identity());
+        assert!(p.inverted().then(&p).unwrap().is_identity());
+        // Composition agrees with pointwise application.
+        let pq = p.then(&q).unwrap();
+        for v in 0..n as VertexId {
+            assert_eq!(pq.apply(v), q.apply(p.apply(v)));
+        }
+        // Double inversion is the original.
+        assert_eq!(p.inverted().inverted(), p);
+        // forward/inverse views are consistent.
+        for v in 0..n as VertexId {
+            assert_eq!(p.forward()[v as usize], p.apply(v));
+            assert_eq!(p.inverse()[p.apply(v) as usize], v);
+        }
+    });
+}
+
+#[test]
+fn strategy_permutations_are_valid_on_random_graphs() {
+    check("strategy-perm-valid", 20, |gen| {
+        let g = gen.graph(60, 150);
+        for strategy in OrderStrategy::ALL {
+            let (rg, perm) = g.reordered(strategy);
+            rg.validate().unwrap_or_else(|e| panic!("{strategy}: {e}"));
+            assert_eq!(perm.len(), g.num_vertices());
+            for v in 0..g.num_vertices() as VertexId {
+                assert_eq!(rg.orig(perm.apply(v)), v, "{strategy}");
+                assert_eq!(rg.degree(perm.apply(v)), g.degree(v), "{strategy}");
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Propagation-layer invariance
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sampled_subgraphs_are_identical_in_every_layout() {
+    // The root invariant: per lane, edge {u, v} is alive in the reordered
+    // graph iff it is alive in the original, because the hash/threshold
+    // pair rides the orig ids.
+    check("order-sampling", 12, |gen| {
+        let g = gen
+            .gen_graph(50)
+            .with_weights(WeightModel::Uniform(0.05, 0.6), gen.u64());
+        let seed = gen.u64();
+        let xr = infuser::sampling::xr_word(seed, gen.size(0, 40));
+        for strategy in OrderStrategy::ALL {
+            let (rg, perm) = g.reordered(strategy);
+            for u in 0..g.num_vertices() as VertexId {
+                for (v, e) in g.edges_of(u) {
+                    let (_, re) = rg
+                        .edges_of(perm.apply(u))
+                        .find(|&(w, _)| w == perm.apply(v))
+                        .unwrap();
+                    assert_eq!(
+                        infuser::sampling::edge_alive(g.edge_hash[e], g.threshold[e], xr),
+                        infuser::sampling::edge_alive(rg.edge_hash[re], rg.threshold[re], xr),
+                        "{strategy}: edge {u}-{v}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn gains_bit_identical_across_orderings_backends_lanes_and_memos() {
+    // Marginal gains — initial and post-commit — must carry the exact
+    // same bit patterns per original vertex through every layout ×
+    // backend × width × memo combination.
+    let g = infuser::gen::generate(&infuser::gen::GenSpec::barabasi_albert(300, 2, 4))
+        .with_weights(WeightModel::Const(0.12), 7);
+    let n = g.num_vertices();
+    let pool = ThreadPool::new(2);
+    let base = PropagateOpts { r_count: 32, seed: 5, threads: 2, ..Default::default() };
+    let ref_labels = propagate(&g, &base).labels;
+    let ref_memo = make_memo(MemoKind::Dense, ref_labels);
+    let ref_gains = ref_memo.initial_gains(&pool);
+    let probe = 17usize;
+    let committed = 42usize;
+    let mut ref_after = make_memo(MemoKind::Dense, ref_memo.labels().clone());
+    ref_after.commit(committed);
+    let ref_post = ref_after.marginal_gain(probe, &pool);
+
+    for order in OrderStrategy::ALL {
+        for backend in backends() {
+            for lanes in LaneWidth::ALL {
+                let labels =
+                    propagate(&g, &PropagateOpts { order, backend, lanes, ..base }).labels;
+                for kind in [MemoKind::Dense, MemoKind::Sketch] {
+                    let mut memo = make_memo(kind, labels.clone());
+                    let gains = memo.initial_gains(&pool);
+                    for v in 0..n {
+                        assert!(
+                            gains[v].to_bits() == ref_gains[v].to_bits(),
+                            "{order} {}xB{} {kind:?} v={v}: {} vs {}",
+                            backend.label(),
+                            lanes.label(),
+                            gains[v],
+                            ref_gains[v]
+                        );
+                    }
+                    memo.commit(committed);
+                    let post = memo.marginal_gain(probe, &pool);
+                    assert!(
+                        post.to_bits() == ref_post.to_bits(),
+                        "{order} {}xB{} {kind:?} post-commit: {post} vs {ref_post}",
+                        backend.label(),
+                        lanes.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn infuser_seeds_and_sigma_bit_identical_across_the_full_cross_product() {
+    // The acceptance criterion verbatim: identity/degree/bfs/hybrid ×
+    // {scalar, avx2} × {8, 16, 32} lanes × {dense, sketch} memo all land
+    // on the identical seed set and the bit-identical σ estimate.
+    let g = infuser::gen::generate(&infuser::gen::GenSpec::barabasi_albert(400, 2, 3))
+        .with_weights(WeightModel::Const(0.08), 5);
+    let base = InfuserParams { k: 5, r_count: 64, seed: 7, threads: 2, ..Default::default() };
+    let reference = InfuserMg::new(base).run(&g, &Budget::unlimited()).unwrap();
+    assert_eq!(reference.seeds.len(), 5);
+    for order in OrderStrategy::ALL {
+        for backend in backends() {
+            for lanes in LaneWidth::ALL {
+                for memo in [MemoKind::Dense, MemoKind::Sketch] {
+                    let res = InfuserMg::new(InfuserParams {
+                        order,
+                        backend,
+                        lanes,
+                        memo,
+                        ..base
+                    })
+                    .run(&g, &Budget::unlimited())
+                    .unwrap();
+                    assert_eq!(
+                        res.seeds,
+                        reference.seeds,
+                        "{order} {}xB{} {memo:?}",
+                        backend.label(),
+                        lanes.label()
+                    );
+                    assert!(
+                        res.influence.to_bits() == reference.influence.to_bits(),
+                        "{order} {}xB{} {memo:?}: sigma {} vs {}",
+                        backend.label(),
+                        lanes.label(),
+                        res.influence,
+                        reference.influence
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn first_seed_path_is_order_invariant_too() {
+    let g = infuser::gen::generate(&infuser::gen::GenSpec::erdos_renyi(200, 600, 6))
+        .with_weights(WeightModel::Const(0.15), 9);
+    let base = InfuserParams { k: 1, r_count: 48, seed: 13, threads: 2, ..Default::default() };
+    let reference = InfuserMg::new(base).run_first_seed(&g, &Budget::unlimited()).unwrap();
+    for order in OrderStrategy::ALL {
+        for memo in [MemoKind::Dense, MemoKind::Sketch] {
+            let res = InfuserMg::new(InfuserParams { order, memo, ..base })
+                .run_first_seed(&g, &Budget::unlimited())
+                .unwrap();
+            assert_eq!(res.seeds, reference.seeds, "{order} {memo:?}");
+            assert!(
+                res.influence.to_bits() == reference.influence.to_bits(),
+                "{order} {memo:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sync_schedule_and_threads_stay_invariant_under_reordering() {
+    // Layout must compose with the other invariance axes: Jacobi vs
+    // Gauss–Seidel and 1 vs 4 workers, all on a non-identity layout,
+    // still produce the reference gains bit-for-bit.
+    let g = infuser::gen::generate(&infuser::gen::GenSpec::erdos_renyi(150, 450, 8))
+        .with_weights(WeightModel::Uniform(0.0, 0.3), 11);
+    let pool = ThreadPool::new(2);
+    let gains_of = |opts: &PropagateOpts| {
+        let res = propagate(&g, opts);
+        let sizes = component_sizes(&res.labels);
+        initial_gains(&res.labels, &sizes, &pool)
+    };
+    let base = PropagateOpts { r_count: 24, seed: 3, threads: 1, ..Default::default() };
+    let reference = gains_of(&base);
+    for order in [OrderStrategy::Degree, OrderStrategy::Bfs, OrderStrategy::Hybrid] {
+        for mode in [Mode::Async, Mode::Sync] {
+            for threads in [1usize, 4] {
+                let gains = gains_of(&PropagateOpts { order, mode, threads, ..base });
+                assert!(
+                    gains.iter().zip(&reference).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{order} {mode:?} tau={threads}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FUSEDSAMPLING invariance
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fused_randcas_sigma_bit_identical_in_every_layout() {
+    check("order-randcas", 10, |gen| {
+        let g = gen
+            .gen_graph(60)
+            .with_weights(WeightModel::Uniform(0.05, 0.5), gen.u64());
+        let n = g.num_vertices();
+        let seed = gen.u64();
+        let r_count = gen.size(1, 30);
+        let seeds: Vec<u32> = (0..gen.size(1, 4.min(n))).map(|_| gen.below(n as u32)).collect();
+        let reference =
+            randcas_fused(&g, &seeds, r_count, seed, 0, &Budget::unlimited()).unwrap();
+        for strategy in OrderStrategy::ALL {
+            let (rg, perm) = g.reordered(strategy);
+            let mapped: Vec<u32> = seeds.iter().map(|&s| perm.apply(s)).collect();
+            let serial =
+                randcas_fused(&rg, &mapped, r_count, seed, 0, &Budget::unlimited()).unwrap();
+            assert!(
+                serial.to_bits() == reference.to_bits(),
+                "{strategy} serial: {serial} vs {reference}"
+            );
+            for width in LaneWidth::ALL {
+                let batched = randcas_fused_batched(
+                    &rg,
+                    &mapped,
+                    r_count,
+                    seed,
+                    0,
+                    width,
+                    &Budget::unlimited(),
+                )
+                .unwrap();
+                assert!(
+                    batched.to_bits() == reference.to_bits(),
+                    "{strategy} B{width}: {batched} vs {reference}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn fused_sampling_seeds_identical_in_every_layout() {
+    let g = infuser::gen::generate(&infuser::gen::GenSpec::erdos_renyi(80, 240, 9))
+        .with_weights(WeightModel::Const(0.15), 4);
+    let base = FusedParams { k: 3, r_count: 64, seed: 5, ..Default::default() };
+    let reference = FusedSampling::new(base).run(&g, &Budget::unlimited()).unwrap();
+    for order in OrderStrategy::ALL {
+        for lanes in LaneWidth::ALL {
+            let res = FusedSampling::new(FusedParams { order, lanes, ..base })
+                .run(&g, &Budget::unlimited())
+                .unwrap();
+            assert_eq!(res.seeds, reference.seeds, "{order} B{lanes}");
+            assert!(
+                res.influence.to_bits() == reference.influence.to_bits(),
+                "{order} B{lanes}: {} vs {}",
+                res.influence,
+                reference.influence
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Weight assignment commutes with reordering
+// ---------------------------------------------------------------------------
+
+#[test]
+fn weight_assignment_commutes_with_reordering() {
+    // with_weights → reordered must equal reordered → with_weights for
+    // every stochastic model (the per-edge RNG is keyed by orig-id hash).
+    check("order-weights", 10, |gen| {
+        let g = gen.gen_graph(50);
+        let seed = gen.u64();
+        for model in [
+            WeightModel::Const(0.3),
+            WeightModel::Uniform(0.0, 0.2),
+            WeightModel::Normal(0.05, 0.025),
+        ] {
+            for strategy in [OrderStrategy::Degree, OrderStrategy::Bfs, OrderStrategy::Hybrid] {
+                let weighted_then_reordered =
+                    g.clone().with_weights(model, seed).reordered(strategy).0;
+                let (rg, _) = g.reordered(strategy);
+                let reordered_then_weighted = rg.with_weights(model, seed);
+                assert_eq!(
+                    weighted_then_reordered.weights, reordered_then_weighted.weights,
+                    "{model:?} {strategy}"
+                );
+                assert_eq!(
+                    weighted_then_reordered.threshold, reordered_then_weighted.threshold,
+                    "{model:?} {strategy}"
+                );
+            }
+        }
+    });
+}
