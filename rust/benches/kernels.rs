@@ -12,6 +12,11 @@
 //! * `ordering` — the vertex-layout sweep: async propagation over every
 //!   [`OrderStrategy`], reporting reorder cost and per-ordering edges/sec
 //!   (dumped to `BENCH_kernels.json` under `"order_sweep"`).
+//! * `threads` — the worker-scaling sweep: async propagation at every
+//!   (schedule × thread count) pair of the persistent pool runtime,
+//!   reporting per-τ edges/sec for both the stealing and the
+//!   shared-cursor dynamic schedules (dumped under `"thread_sweep"`);
+//!   fixpoint equality across the whole sweep is asserted while timing.
 //!
 //! `INFUSER_BENCH_SMOKE=1` shrinks everything to CI-smoke scale.
 
@@ -22,6 +27,7 @@ use infuser::gen::{self, GenSpec};
 use infuser::graph::weights::prob_to_threshold;
 use infuser::graph::{OrderStrategy, WeightModel};
 use infuser::labelprop::{Mode, PropagateOpts};
+use infuser::runtime::Schedule;
 use infuser::sampling::xr_stream_padded;
 use infuser::simd::{Backend, LaneEngine, LaneWidth};
 use infuser::util::json::Json;
@@ -238,21 +244,86 @@ fn bench_order(env: &BenchEnv) -> (Table, Json) {
     (t, Json::Arr(entries))
 }
 
+/// The worker-scaling sweep: async propagation to fixpoint at every
+/// (schedule × thread count) of the persistent pool, on the same graph
+/// and seed. Fixpoints must agree across the whole grid (the runtime's
+/// determinism contract), so the sweep doubles as a soak test for the
+/// steal scheduler while measuring its edges/sec.
+fn bench_threads(env: &BenchEnv) -> (Table, Json) {
+    let mut t = Table::new("Worker-scaling sweep — schedules compared");
+    t.header(vec![
+        "schedule".into(),
+        "tau".into(),
+        "propagate (s)".into(),
+        "iters".into(),
+        "edges/s".into(),
+    ]);
+    let spec = if env.smoke {
+        GenSpec::erdos_renyi(500, 2_000, 3)
+    } else {
+        GenSpec::rmat(15, 120_000, 77)
+    };
+    let g = gen::generate(&spec).with_weights(WeightModel::Const(0.05), 3);
+    let r_count = 64usize;
+    let taus: &[usize] = &[1, 2, 4, 8];
+    let mut entries: Vec<Json> = Vec::new();
+    let mut reference: Option<Vec<i32>> = None;
+    for schedule in Schedule::ALL {
+        for &tau in taus {
+            let opts = PropagateOpts {
+                r_count,
+                seed: 9,
+                threads: tau,
+                lanes: env.lanes,
+                mode: Mode::Async,
+                schedule,
+                ..Default::default()
+            };
+            let (res, secs) = time_it(|| infuser::labelprop::propagate(&g, &opts));
+            match &reference {
+                None => reference = Some(res.labels.data.clone()),
+                Some(r) => assert_eq!(
+                    &res.labels.data, r,
+                    "{schedule} tau={tau}: schedules x thread counts must agree"
+                ),
+            }
+            let edges_per_sec = res.edge_visits as f64 / secs;
+            t.row(vec![
+                schedule.label().into(),
+                tau.to_string(),
+                format!("{secs:.3}"),
+                res.iterations.to_string(),
+                format!("{edges_per_sec:.3e}"),
+            ]);
+            entries.push(obj(vec![
+                ("schedule", Json::Str(schedule.label().into())),
+                ("threads", Json::Num(tau as f64)),
+                ("propagate_secs", Json::Num(secs)),
+                ("iterations", Json::Num(res.iterations as f64)),
+                ("edges_per_sec", Json::Num(edges_per_sec)),
+            ]));
+        }
+    }
+    (t, Json::Arr(entries))
+}
+
 fn main() -> infuser::Result<()> {
     let env = BenchEnv::load()?;
     env.banner(
-        "Kernel microbenches — VECLABEL lane sweep + propagation engines + ordering sweep",
+        "Kernel microbenches — VECLABEL lane sweep + propagation engines + ordering + worker-scaling sweeps",
         "AVX2 processes B lanes/step (8/16/32 = 1/2/4 registers); fused batching serves all R per edge visit",
     );
     let (t1, sweep_json) = bench_veclabel(&env);
     let t2 = bench_propagate(&env)?;
     let (t3, order_json) = bench_order(&env);
-    env.emit("kernels", &[&t1, &t2, &t3]);
+    let (t4, thread_json) = bench_threads(&env);
+    env.emit("kernels", &[&t1, &t2, &t3, &t4]);
     let mut combined = match sweep_json {
         Json::Obj(map) => map,
         other => BTreeMap::from([("veclabel".to_string(), other)]),
     };
     combined.insert("order_sweep".to_string(), order_json);
+    combined.insert("thread_sweep".to_string(), thread_json);
     env.emit_json("kernels", &Json::Obj(combined));
     Ok(())
 }

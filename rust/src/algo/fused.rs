@@ -12,9 +12,12 @@
 use super::celf::celf_select;
 use super::{Budget, ImResult};
 use crate::graph::{Graph, OrderStrategy, Permutation};
+use crate::runtime::pool::{default_threads, Schedule};
 use crate::sampling::{edge_alive, xr_word};
 use crate::simd::LaneWidth;
+use crate::util::ThreadPool;
 use crate::VertexId;
+use std::sync::atomic::{AtomicBool, Ordering};
 
 /// FUSEDSAMPLING parameters.
 #[derive(Clone, Copy, Debug)]
@@ -25,6 +28,15 @@ pub struct FusedParams {
     pub r_count: usize,
     /// Run seed (drives the X_r stream — same contract as INFUSER-MG).
     pub seed: u64,
+    /// Worker threads τ for the NEWGREEDY initialization (simulation
+    /// rounds are hash-keyed, hence embarrassingly parallel; gains
+    /// accumulate integer-valued `f64`s, which stay exact below 2⁵³, so
+    /// results are bit-identical for every τ). The CELF phase stays
+    /// serial, as in the paper.
+    pub threads: usize,
+    /// Work-distribution policy of the worker-pool runtime
+    /// ([`crate::runtime::pool`]). Result-invariant; throughput knob.
+    pub schedule: Schedule,
     /// Lane batch width for the CELF phase's RANDCAS traversals: `B`
     /// simulations share one BFS via per-vertex lane bitmasks
     /// ([`randcas_fused_batched`]). σ estimates are identical for every
@@ -44,6 +56,8 @@ impl Default for FusedParams {
             k: 50,
             r_count: 100,
             seed: 0,
+            threads: default_threads(),
+            schedule: Schedule::default(),
             lanes: LaneWidth::default(),
             order: OrderStrategy::Identity,
         }
@@ -199,16 +213,21 @@ pub fn randcas_fused_batched(
 /// Per-simulation connected components via fused union-find: the
 /// NEWGREEDY initialization without materializing samples. Returns the
 /// accumulated average component size per vertex.
+///
+/// Parallelized over simulation rounds on the persistent worker pool:
+/// each worker owns a private union-find and a private gain accumulator
+/// for a contiguous block of rounds, reduced serially afterwards. Every
+/// addend is an integer-valued `f64` (a component size), so the sums are
+/// exact and the result is bit-identical to the serial order for every
+/// (τ, schedule) — the same determinism contract as the label engines.
 fn fused_initial_gains(
     graph: &Graph,
     r_count: usize,
     seed: u64,
+    pool: &ThreadPool,
     budget: &Budget,
 ) -> Result<Vec<f64>, super::AlgoError> {
     let n = graph.num_vertices();
-    let mut mg = vec![0f64; n];
-    let mut parent: Vec<u32> = (0..n as u32).collect();
-    let mut size: Vec<u32> = vec![1; n];
 
     fn find(parent: &mut [u32], mut x: u32) -> u32 {
         while parent[x as usize] != x {
@@ -218,39 +237,63 @@ fn fused_initial_gains(
         x
     }
 
-    for r in 0..r_count {
-        budget.check()?;
-        let xr = xr_word(seed, r);
-        // Reset the union-find to singletons before every round — stale
-        // parents or sizes from round r-1 would silently inflate gains
-        // (covered by `consecutive_rounds_use_independent_components`).
-        for v in 0..n {
-            parent[v] = v as u32;
-            size[v] = 1;
-        }
-        for u in 0..n as u32 {
-            let (a, b) = (
-                graph.xadj[u as usize] as usize,
-                graph.xadj[u as usize + 1] as usize,
-            );
-            for idx in a..b {
-                let v = graph.adj[idx];
-                if v < u {
-                    continue;
-                }
-                if edge_alive(graph.edge_hash[idx], graph.threshold[idx], xr) {
-                    let (ru, rv) = (find(&mut parent, u), find(&mut parent, v));
-                    if ru != rv {
-                        let (lo, hi) = (ru.min(rv), ru.max(rv));
-                        parent[hi as usize] = lo;
-                        size[lo as usize] += size[hi as usize];
+    let workers = pool.threads().min(r_count).max(1);
+    let per_worker = r_count.div_ceil(workers);
+    let timed_out = AtomicBool::new(false);
+    let partials: Vec<Vec<f64>> = pool.map(workers, |t| {
+        let lo = t * per_worker;
+        let hi = ((t + 1) * per_worker).min(r_count);
+        let mut mg = vec![0f64; n];
+        let mut parent: Vec<u32> = (0..n as u32).collect();
+        let mut size: Vec<u32> = vec![1; n];
+        for r in lo..hi {
+            if budget.check().is_err() {
+                timed_out.store(true, Ordering::Relaxed);
+                break;
+            }
+            let xr = xr_word(seed, r);
+            // Reset the union-find to singletons before every round —
+            // stale parents or sizes from round r-1 would silently
+            // inflate gains (covered by
+            // `consecutive_rounds_use_independent_components`).
+            for v in 0..n {
+                parent[v] = v as u32;
+                size[v] = 1;
+            }
+            for u in 0..n as u32 {
+                let (a, b) = (
+                    graph.xadj[u as usize] as usize,
+                    graph.xadj[u as usize + 1] as usize,
+                );
+                for idx in a..b {
+                    let v = graph.adj[idx];
+                    if v < u {
+                        continue;
+                    }
+                    if edge_alive(graph.edge_hash[idx], graph.threshold[idx], xr) {
+                        let (ru, rv) = (find(&mut parent, u), find(&mut parent, v));
+                        if ru != rv {
+                            let (lo, hi) = (ru.min(rv), ru.max(rv));
+                            parent[hi as usize] = lo;
+                            size[lo as usize] += size[hi as usize];
+                        }
                     }
                 }
             }
+            for v in 0..n as u32 {
+                let root = find(&mut parent, v);
+                mg[v as usize] += f64::from(size[root as usize]);
+            }
         }
-        for v in 0..n as u32 {
-            let root = find(&mut parent, v);
-            mg[v as usize] += f64::from(size[root as usize]);
+        mg
+    });
+    if timed_out.load(Ordering::Relaxed) {
+        return Err(super::AlgoError::TimedOut);
+    }
+    let mut mg = vec![0f64; n];
+    for partial in partials {
+        for (acc, p) in mg.iter_mut().zip(partial) {
+            *acc += p;
         }
     }
     for g in mg.iter_mut() {
@@ -291,7 +334,8 @@ impl FusedSampling {
         let p = self.params;
         let n = graph.num_vertices();
         let to_row = |v: VertexId| perm.map_or(v, |pm| pm.apply(v));
-        let mg_rows = fused_initial_gains(graph, p.r_count, p.seed, budget)?;
+        let pool = ThreadPool::with_schedule(p.threads, p.schedule);
+        let mg_rows = fused_initial_gains(graph, p.r_count, p.seed, &pool, budget)?;
         // Gains indexed by original id (a pure gather — values untouched).
         let mg: Vec<f64> = match perm {
             None => mg_rows,
@@ -381,7 +425,8 @@ mod tests {
         // same seed (identical sampling contract).
         let g = crate::gen::generate(&crate::gen::GenSpec::erdos_renyi(80, 200, 3))
             .with_weights(WeightModel::Const(0.25), 5);
-        let mg_uf = fused_initial_gains(&g, 16, 42, &Budget::unlimited()).unwrap();
+        let mg_uf =
+            fused_initial_gains(&g, 16, 42, &ThreadPool::new(2), &Budget::unlimited()).unwrap();
         let res = crate::labelprop::propagate(
             &g,
             &crate::labelprop::PropagateOpts {
@@ -404,6 +449,26 @@ mod tests {
                 mg_uf[v],
                 mg_lp[v]
             );
+        }
+    }
+
+    #[test]
+    fn initial_gains_bit_identical_across_threads_and_schedules() {
+        // The parallel NEWGREEDY init accumulates integer-valued f64s, so
+        // any (τ, schedule) must reproduce the serial bits exactly.
+        let g = crate::gen::generate(&crate::gen::GenSpec::barabasi_albert(150, 2, 6))
+            .with_weights(WeightModel::Const(0.3), 8);
+        let reference =
+            fused_initial_gains(&g, 33, 9, &ThreadPool::new(1), &Budget::unlimited()).unwrap();
+        for schedule in Schedule::ALL {
+            for threads in [2usize, 4, 7] {
+                let pool = ThreadPool::with_schedule(threads, schedule);
+                let mg = fused_initial_gains(&g, 33, 9, &pool, &Budget::unlimited()).unwrap();
+                assert!(
+                    mg.iter().zip(&reference).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{schedule} tau={threads}"
+                );
+            }
         }
     }
 
@@ -480,7 +545,8 @@ mod tests {
         let g = crate::gen::generate(&crate::gen::GenSpec::erdos_renyi(70, 180, 11))
             .with_weights(WeightModel::Const(0.5), 13);
         let seed = 21;
-        let mg = fused_initial_gains(&g, 2, seed, &Budget::unlimited()).unwrap();
+        let mg =
+            fused_initial_gains(&g, 2, seed, &ThreadPool::new(2), &Budget::unlimited()).unwrap();
         let labels = crate::labelprop::union_find_labels(&g, 2, seed);
         let sizes = crate::labelprop::component_sizes(&labels);
         // The two lanes must not be identical, or the test can't detect

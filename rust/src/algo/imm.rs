@@ -19,6 +19,7 @@
 use super::{Budget, ImResult};
 use crate::graph::Graph;
 use crate::rng::{Pcg32, Rng32};
+use crate::runtime::pool::{default_threads, Schedule};
 use crate::util::ThreadPool;
 use crate::VertexId;
 
@@ -35,6 +36,10 @@ pub struct ImmParams {
     pub seed: u64,
     /// Worker threads for RR-set generation.
     pub threads: usize,
+    /// Work-distribution policy of the worker-pool runtime used for
+    /// RR-set generation (result-invariant: each RR set owns a
+    /// deterministic RNG stream).
+    pub schedule: Schedule,
     /// Optional cap on tracked RR bytes (models the paper's OOM "-" cells).
     pub memory_limit: Option<u64>,
 }
@@ -46,7 +51,8 @@ impl Default for ImmParams {
             epsilon: 0.13,
             ell: 1.0,
             seed: 0,
-            threads: 1,
+            threads: default_threads(),
+            schedule: Schedule::default(),
             memory_limit: None,
         }
     }
@@ -65,6 +71,17 @@ struct RrPool {
     entries: u64,
 }
 
+/// Bytes charged per stored RR entry: 4 for the `VertexId` itself plus 4
+/// for its slot in the inverted index that selection materializes (one
+/// `u32` RR id per entry). Charging the index up front keeps the
+/// `memory_limit` check honest about the true Table-6 peak — the index is
+/// always built before any seed is selected, so by the time the limit
+/// could matter the entry really does cost 8 bytes.
+const RR_ENTRY_BYTES: u64 = 4 + 4;
+
+/// Per-set `Vec` header overhead (ptr + len + cap on 64-bit).
+const RR_SET_HEADER_BYTES: u64 = 24;
+
 impl RrPool {
     fn new() -> Self {
         Self { sets: Vec::new(), entries: 0 }
@@ -75,9 +92,15 @@ impl RrPool {
     }
 
     fn bytes(&self) -> u64 {
-        // vertex entries + per-set Vec headers + inverted index (built at
-        // selection: one u32 per entry again).
-        self.entries * 8 + (self.sets.len() * 24) as u64
+        self.entries * RR_ENTRY_BYTES + self.sets.len() as u64 * RR_SET_HEADER_BYTES
+    }
+
+    /// What [`RrPool::bytes`] would report after appending a set of
+    /// `extra_entries` vertices — the pre-append admission check, so a
+    /// `memory_limit` is enforced *before* the pool overshoots it.
+    fn bytes_with(&self, extra_entries: usize) -> u64 {
+        (self.entries + extra_entries as u64) * RR_ENTRY_BYTES
+            + (self.sets.len() as u64 + 1) * RR_SET_HEADER_BYTES
     }
 }
 
@@ -192,6 +215,7 @@ impl Imm {
     fn extend_pool(
         &self,
         graph: &Graph,
+        tp: &ThreadPool,
         pool_sets: &mut RrPool,
         target: usize,
         round: &mut u64,
@@ -204,7 +228,6 @@ impl Imm {
             return Ok(());
         }
         budget.check()?;
-        let tp = ThreadPool::new(p.threads);
         let base = *round;
         *round += need as u64;
         // Each RR set gets its own deterministic RNG stream ⇒ results are
@@ -226,13 +249,18 @@ impl Imm {
         });
         for batch in batches {
             for set in batch {
+                // Admission check *before* appending: the set that would
+                // push the pool past the limit is rejected, so tracked
+                // bytes never overshoot the configured budget (Table 6's
+                // OOM cells model a cap, not a high-water mark).
+                if let Some(limit) = p.memory_limit {
+                    let would_be = pool_sets.bytes_with(set.len());
+                    if would_be > limit {
+                        return Err(super::AlgoError::OutOfMemory(would_be).into());
+                    }
+                }
                 pool_sets.entries += set.len() as u64;
                 pool_sets.sets.push(set);
-            }
-            if let Some(limit) = p.memory_limit {
-                if pool_sets.bytes() > limit {
-                    return Err(super::AlgoError::OutOfMemory(pool_sets.bytes()).into());
-                }
             }
         }
         budget.check()?;
@@ -263,6 +291,8 @@ impl Imm {
             / p.epsilon)
             .powi(2);
 
+        // One persistent worker pool for every sampling round.
+        let tp = ThreadPool::with_schedule(p.threads, p.schedule);
         let mut pool = RrPool::new();
         let mut round_counter = 0u64;
         let mut lb = 1.0f64;
@@ -270,7 +300,7 @@ impl Imm {
         for i in 1..=max_rounds {
             let x = nf / 2f64.powi(i as i32);
             let theta_i = (lambda_p / x).ceil() as usize;
-            self.extend_pool(graph, &mut pool, theta_i, &mut round_counter, budget)?;
+            self.extend_pool(graph, &tp, &mut pool, theta_i, &mut round_counter, budget)?;
             let (_, frac) = max_coverage(&pool, n, k);
             if nf * frac >= (1.0 + eps_p) * x {
                 lb = nf * frac / (1.0 + eps_p);
@@ -278,13 +308,14 @@ impl Imm {
             }
         }
         let theta = (lambda_star / lb).ceil() as usize;
-        self.extend_pool(graph, &mut pool, theta, &mut round_counter, budget)?;
+        self.extend_pool(graph, &tp, &mut pool, theta, &mut round_counter, budget)?;
 
         let (seeds, frac) = max_coverage(&pool, n, k);
         Ok(ImResult {
             seeds,
             influence: frac * nf,
-            tracked_bytes: pool.bytes() + (pool.entries * 4) / 2, // + inverted index
+            // The inverted index is already part of the per-entry charge.
+            tracked_bytes: pool.bytes(),
             counters: vec![
                 ("rr_sets", pool.len() as f64),
                 ("rr_entries", pool.entries as f64),
@@ -352,6 +383,62 @@ mod tests {
             rr(&loose)
         );
         assert!(tight.tracked_bytes > loose.tracked_bytes);
+    }
+
+    #[test]
+    fn rr_pool_accounting_is_explicit_per_entry_and_per_set() {
+        // 4 bytes VertexId + 4 bytes inverted-index slot per entry, plus
+        // one Vec header per set — pinned so the OOM model stays honest.
+        let mut pool = RrPool::new();
+        assert_eq!(pool.bytes(), 0);
+        assert_eq!(pool.bytes_with(3), 3 * 8 + 24);
+        pool.entries += 3;
+        pool.sets.push(vec![1, 2, 3]);
+        assert_eq!(pool.bytes(), 3 * 8 + 24);
+        assert_eq!(pool.bytes_with(2), 5 * 8 + 2 * 24);
+    }
+
+    #[test]
+    fn memory_limit_is_enforced_before_append_at_the_boundary() {
+        // Learn the exact byte count a fixed sampling target produces,
+        // then rerun with the limit at, and one below, that boundary: the
+        // exact limit must admit every set, one byte less must reject —
+        // and in the failing run the pool must never overshoot the limit.
+        let g = crate::gen::generate(&GenSpec::erdos_renyi(120, 480, 3))
+            .with_weights(WeightModel::Const(0.2), 5);
+        let target = 64usize;
+        let run_with = |limit: Option<u64>| {
+            let imm = Imm::new(ImmParams {
+                k: 4,
+                epsilon: 0.3,
+                seed: 9,
+                threads: 2,
+                memory_limit: limit,
+                ..Default::default()
+            });
+            let tp = ThreadPool::new(2);
+            let mut pool = RrPool::new();
+            let mut round = 0u64;
+            let res = imm.extend_pool(&g, &tp, &mut pool, target, &mut round, &Budget::unlimited());
+            (res, pool)
+        };
+        let (ok, full_pool) = run_with(None);
+        ok.unwrap();
+        let exact = full_pool.bytes();
+        assert_eq!(full_pool.len(), target);
+
+        let (at_limit, pool_at) = run_with(Some(exact));
+        at_limit.unwrap();
+        assert_eq!(pool_at.bytes(), exact, "exact limit admits everything");
+
+        let (err, pool_under) = run_with(Some(exact - 1));
+        assert!(super::super::is_oom(&err.unwrap_err()));
+        assert!(
+            pool_under.bytes() <= exact - 1,
+            "rejection must happen before the overshooting append: {} > {}",
+            pool_under.bytes(),
+            exact - 1
+        );
     }
 
     #[test]

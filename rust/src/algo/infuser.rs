@@ -24,7 +24,8 @@ use super::celf::celf_select;
 use super::{Budget, ImResult};
 use crate::engine::Engine;
 use crate::graph::{Graph, OrderStrategy};
-use crate::labelprop::{self, Labels, Mode, PropagateOpts};
+use crate::labelprop::{self, Labels, Mode, PropagateOpts, DEFAULT_EDGE_BLOCK};
+use crate::runtime::pool::{default_threads, Schedule};
 use crate::simd::{Backend, LaneWidth};
 use crate::sketch::SketchMemo;
 use crate::util::ThreadPool;
@@ -176,6 +177,12 @@ pub struct InfuserParams {
     pub lanes: LaneWidth,
     /// Propagation schedule (async Gauss–Seidel / sync Jacobi).
     pub mode: Mode,
+    /// Work-distribution policy of the worker-pool runtime
+    /// ([`crate::runtime::pool`]). Result-invariant; throughput knob.
+    pub schedule: Schedule,
+    /// Hub-splitting edge-block granularity for the propagation stage
+    /// ([`PropagateOpts::block_size`]). Result-invariant; throughput knob.
+    pub block_size: usize,
     /// Memoization backend for the CELF phase (dense / sketch).
     pub memo: MemoKind,
     /// Vertex-reordering strategy for the propagation stage's memory
@@ -191,10 +198,12 @@ impl Default for InfuserParams {
             k: 50,
             r_count: 256,
             seed: 0,
-            threads: 1,
+            threads: default_threads(),
             backend: Backend::detect(),
             lanes: LaneWidth::default(),
             mode: Mode::Async,
+            schedule: Schedule::default(),
+            block_size: DEFAULT_EDGE_BLOCK,
             memo: MemoKind::Dense,
             order: OrderStrategy::Identity,
         }
@@ -322,7 +331,6 @@ impl InfuserMg {
         budget: &Budget,
     ) -> crate::Result<ImResult> {
         let p = self.params;
-        let pool = ThreadPool::new(p.threads);
 
         // ---- Stage 1: NEWGREEDYSTEP-VEC (Alg. 7 line 1).
         let opts = PropagateOpts {
@@ -332,10 +340,15 @@ impl InfuserMg {
             backend: p.backend,
             lanes: p.lanes,
             mode: p.mode,
+            schedule: p.schedule,
+            block_size: p.block_size,
             order: p.order,
         };
         let prop = engine.propagate(graph, &opts)?;
         budget.check()?;
+        // The CELF-phase pool is built only after the propagation stage
+        // (which runs its own) so two worker sets never coexist.
+        let pool = ThreadPool::with_schedule(p.threads, p.schedule);
         let iterations = prop.iterations;
         let edge_visits = prop.edge_visits;
         let mut memo = make_memo(p.memo, prop.labels);
@@ -371,7 +384,6 @@ impl InfuserMg {
     /// skipping the CELF phase entirely.
     pub fn run_first_seed(&self, graph: &Graph, budget: &Budget) -> crate::Result<ImResult> {
         let p = self.params;
-        let pool = ThreadPool::new(p.threads);
         let opts = PropagateOpts {
             r_count: p.r_count,
             seed: p.seed,
@@ -379,10 +391,13 @@ impl InfuserMg {
             backend: p.backend,
             lanes: p.lanes,
             mode: p.mode,
+            schedule: p.schedule,
+            block_size: p.block_size,
             order: p.order,
         };
         let prop = labelprop::propagate(graph, &opts);
         budget.check()?;
+        let pool = ThreadPool::with_schedule(p.threads, p.schedule);
         let memo = make_memo(p.memo, prop.labels);
         let mg = memo.initial_gains(&pool);
         // Argmax with the CELF heap's tie-break: on equal gains the

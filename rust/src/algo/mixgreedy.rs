@@ -18,6 +18,9 @@ use super::celf::celf_select;
 use super::{Budget, ImResult};
 use crate::graph::{Graph, OrderStrategy};
 use crate::rng::{Pcg32, Rng32};
+use crate::runtime::pool::Schedule;
+use crate::util::par::as_send_cells;
+use crate::util::ThreadPool;
 use crate::VertexId;
 
 /// MIXGREEDY parameters.
@@ -29,6 +32,15 @@ pub struct MixGreedyParams {
     pub r_count: usize,
     /// Run seed.
     pub seed: u64,
+    /// Worker threads for the per-sample gain scatter of the NEWGREEDY
+    /// step. The sampling and traversal stream stays serial (the
+    /// classical baseline consumes one positional RNG stream, and the
+    /// paper runs MIXGREEDY at τ = 1), and the scatter writes disjoint
+    /// slots once per round, so results are bit-identical for every τ.
+    pub threads: usize,
+    /// Work-distribution policy of the worker-pool runtime
+    /// ([`crate::runtime::pool`]). Result-invariant; throughput knob.
+    pub schedule: Schedule,
     /// Vertex-reordering strategy for the traversal layout
     /// ([`crate::graph::order`]). Seeds are mapped back to original ids.
     ///
@@ -44,7 +56,14 @@ pub struct MixGreedyParams {
 
 impl Default for MixGreedyParams {
     fn default() -> Self {
-        Self { k: 50, r_count: 100, seed: 0, order: OrderStrategy::Identity }
+        Self {
+            k: 50,
+            r_count: 100,
+            seed: 0,
+            threads: crate::runtime::pool::default_threads(),
+            schedule: Schedule::default(),
+            order: OrderStrategy::Identity,
+        }
     }
 }
 
@@ -202,8 +221,13 @@ impl MixGreedy {
         let n = graph.num_vertices();
         let mut rng = Pcg32::from_seed_stream(p.seed, 0x317);
         let mut tracked: u64 = 0;
+        let pool = ThreadPool::with_schedule(p.threads, p.schedule);
 
         // ---- NEWGREEDY step (Alg. 1, K = 1): initial marginal gains.
+        // Sampling and component labelling stay serial (one positional
+        // RNG stream — see `MixGreedyParams::order`); the per-vertex gain
+        // scatter fans out on the pool, each slot written once per round
+        // in round order, so gains are bit-identical for every τ.
         let mut mg = vec![0f64; n];
         for _ in 0..p.r_count {
             budget.check()?;
@@ -212,8 +236,14 @@ impl MixGreedy {
             tracked = tracked.max(
                 (sub.adj.len() * 4 + sub.xadj.len() * 8 + comp.len() * 4 + sizes.len() * 4) as u64,
             );
-            for v in 0..n {
-                mg[v] += f64::from(sizes[comp[v] as usize]);
+            {
+                let cells = as_send_cells(&mut mg);
+                let comp_ref = &comp;
+                let sizes_ref = &sizes;
+                pool.for_each(n, 1024, |v| {
+                    // SAFETY: one writer per index v.
+                    unsafe { *cells.get(v) += f64::from(sizes_ref[comp_ref[v] as usize]) };
+                });
             }
         }
         for g in mg.iter_mut() {
@@ -334,7 +364,8 @@ mod tests {
         use crate::graph::OrderStrategy;
         let g = star(20).with_weights(WeightModel::Const(0.5), 2);
         for order in OrderStrategy::ALL {
-            let res = MixGreedy::new(MixGreedyParams { k: 3, r_count: 200, seed: 1, order })
+            let res =
+                MixGreedy::new(MixGreedyParams { k: 3, r_count: 200, seed: 1, order, ..Default::default() })
                 .run(&g, &Budget::unlimited())
                 .unwrap();
             assert_eq!(res.seeds[0], 0, "{order}: hub must be picked first");
@@ -344,6 +375,28 @@ mod tests {
             unique.dedup();
             assert_eq!(unique.len(), 3, "{order}: seeds must be distinct originals");
             assert!(res.seeds.iter().all(|&s| (s as usize) < 20), "{order}");
+        }
+    }
+
+    #[test]
+    fn threads_and_schedule_do_not_change_results() {
+        // The pool only fans out the disjoint-slot gain scatter; the RNG
+        // stream is untouched, so seeds and σ must be bit-stable across
+        // every (τ, schedule).
+        let g = star(20).with_weights(WeightModel::Const(0.5), 2);
+        let base = MixGreedyParams { k: 3, r_count: 100, seed: 1, ..Default::default() };
+        let reference = MixGreedy::new(base).run(&g, &Budget::unlimited()).unwrap();
+        for schedule in Schedule::ALL {
+            for threads in [2usize, 4] {
+                let res = MixGreedy::new(MixGreedyParams { threads, schedule, ..base })
+                    .run(&g, &Budget::unlimited())
+                    .unwrap();
+                assert_eq!(res.seeds, reference.seeds, "{schedule} tau={threads}");
+                assert!(
+                    res.influence.to_bits() == reference.influence.to_bits(),
+                    "{schedule} tau={threads}"
+                );
+            }
         }
     }
 

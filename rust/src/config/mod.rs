@@ -9,6 +9,8 @@
 
 use crate::algo::infuser::MemoKind;
 use crate::graph::{OrderStrategy, WeightModel};
+use crate::labelprop::DEFAULT_EDGE_BLOCK;
+use crate::runtime::pool::Schedule;
 use crate::simd::{Backend, LaneWidth};
 use crate::util::json::Json;
 use std::time::Duration;
@@ -16,7 +18,9 @@ use std::time::Duration;
 /// Which algorithm a scenario runs.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum AlgoSpec {
-    /// Chen et al.'s baseline (τ is always 1 — the paper runs it serial).
+    /// Chen et al.'s baseline. The sampling/traversal stream is serial
+    /// (the paper runs it at τ = 1); only the result-invariant per-sample
+    /// gain scatter uses the worker pool.
     MixGreedy,
     /// Hash-fused sampling, one-by-one simulations (ablation variant).
     FusedSampling,
@@ -149,6 +153,14 @@ pub struct ExperimentConfig {
     /// VECLABEL lane batch width `B ∈ {8, 16, 32}` (JSON key `"lanes"`).
     /// Result-invariant across widths; throughput knob only.
     pub lanes: LaneWidth,
+    /// Work-distribution policy of the worker-pool runtime (JSON key
+    /// `"schedule"`: `"dynamic"` or `"steal"`). Result-invariant;
+    /// throughput knob only ([`crate::runtime::pool`]).
+    pub schedule: Schedule,
+    /// Hub-splitting edge-block granularity for the propagation stage
+    /// (JSON key `"block_size"`, edges per block, ≥ 1). Result-invariant;
+    /// throughput knob only.
+    pub block_size: usize,
     /// Memoization backend for the INFUSER-MG cells (`infuser-sketch`
     /// cells always use the sketch regardless of this default).
     pub memo: MemoKind,
@@ -179,6 +191,8 @@ impl Default for ExperimentConfig {
             oracle_r: 0,
             backend: Backend::detect(),
             lanes: LaneWidth::default(),
+            schedule: Schedule::default(),
+            block_size: DEFAULT_EDGE_BLOCK,
             memo: MemoKind::Dense,
             orders: vec![OrderStrategy::Identity],
             imm_memory_limit: None,
@@ -197,6 +211,7 @@ impl ExperimentConfig {
     ///   "k": 50, "r": 256, "threads": 16, "seed": 0,
     ///   "timeout_secs": 600, "oracle_r": 1024,
     ///   "backend": "auto", "lanes": 16, "memo": "dense",
+    ///   "schedule": "steal", "block_size": 4096,
     ///   "order": ["identity", "degree", "bfs", "hybrid"]
     /// }
     /// ```
@@ -261,6 +276,19 @@ impl ExperimentConfig {
                 (None, None) => {
                     anyhow::bail!("'lanes' must be a number or string (8, 16, or 32)")
                 }
+            };
+        }
+        if let Some(s) = json.get("schedule") {
+            cfg.schedule = match s.as_str() {
+                Some(text) => Schedule::parse(text)?,
+                None => anyhow::bail!("'schedule' must be a string (dynamic|steal)"),
+            };
+        }
+        if let Some(b) = json.get("block_size") {
+            cfg.block_size = match b.as_i64() {
+                Some(v) if v >= 1 => v as usize,
+                Some(v) => anyhow::bail!("'block_size' must be >= 1 (got {v})"),
+                None => anyhow::bail!("'block_size' must be a positive integer"),
             };
         }
         if let Some(m) = json.get("memo").and_then(|v| v.as_str()) {
@@ -357,6 +385,26 @@ mod tests {
         assert_eq!(cfg.lanes, LaneWidth::W32);
         assert_eq!(ExperimentConfig::from_json("{}").unwrap().lanes, LaneWidth::W8);
         for bad in [r#"{"lanes": 12}"#, r#"{"lanes": "wide"}"#, r#"{"lanes": true}"#] {
+            assert!(ExperimentConfig::from_json(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn schedule_and_block_size_parse_from_json() {
+        let cfg =
+            ExperimentConfig::from_json(r#"{"schedule": "dynamic", "block_size": 512}"#).unwrap();
+        assert_eq!(cfg.schedule, Schedule::Dynamic);
+        assert_eq!(cfg.block_size, 512);
+        let defaults = ExperimentConfig::from_json("{}").unwrap();
+        assert_eq!(defaults.schedule, Schedule::Steal);
+        assert_eq!(defaults.block_size, DEFAULT_EDGE_BLOCK);
+        for bad in [
+            r#"{"schedule": "guided"}"#,
+            r#"{"schedule": 3}"#,
+            r#"{"block_size": 0}"#,
+            r#"{"block_size": -8}"#,
+            r#"{"block_size": "big"}"#,
+        ] {
             assert!(ExperimentConfig::from_json(bad).is_err(), "{bad}");
         }
     }

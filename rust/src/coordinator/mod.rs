@@ -147,10 +147,17 @@ impl Runner {
         let budget = Budget::timeout(cfg.timeout);
         let timer = Timer::start();
         let result: crate::Result<ImResult> = match algo {
+            // MIXGREEDY's sampling/traversal stream stays serial (the
+            // paper runs the baseline at tau = 1); the pool fans out only
+            // its per-sample gain scatter, which is result-invariant, so
+            // threading it keeps the baseline's numbers honest while its
+            // dominant cost remains the serial RANDCAS work.
             AlgoSpec::MixGreedy => MixGreedy::new(MixGreedyParams {
                 k: cfg.k,
                 r_count: cfg.r_count,
                 seed: cfg.seed,
+                threads: cfg.threads,
+                schedule: cfg.schedule,
                 order,
             })
             .run(graph, &budget),
@@ -158,6 +165,8 @@ impl Runner {
                 k: cfg.k,
                 r_count: cfg.r_count,
                 seed: cfg.seed,
+                threads: cfg.threads,
+                schedule: cfg.schedule,
                 lanes: cfg.lanes,
                 order,
             })
@@ -169,6 +178,8 @@ impl Runner {
                 threads: cfg.threads,
                 backend: cfg.backend,
                 lanes: cfg.lanes,
+                schedule: cfg.schedule,
+                block_size: cfg.block_size,
                 memo: if algo == AlgoSpec::InfuserSketch {
                     crate::algo::infuser::MemoKind::Sketch
                 } else {
@@ -185,6 +196,8 @@ impl Runner {
                 threads: cfg.threads,
                 backend: cfg.backend,
                 lanes: cfg.lanes,
+                schedule: cfg.schedule,
+                block_size: cfg.block_size,
                 memo: cfg.memo,
                 order,
                 ..Default::default()
@@ -211,6 +224,7 @@ impl Runner {
                 epsilon,
                 seed: cfg.seed,
                 threads: cfg.threads,
+                schedule: cfg.schedule,
                 memory_limit: cfg.imm_memory_limit,
                 ..Default::default()
             })
@@ -253,12 +267,14 @@ impl Runner {
     pub fn run_grid(&self) -> crate::Result<Vec<CellResult>> {
         let cfg = &self.cfg;
         self.log(&format!(
-            "grid geometry: K={} R={} tau={} backend={} lanes=B{} orders={}",
+            "grid geometry: K={} R={} tau={} backend={} lanes=B{} schedule={} block={} orders={}",
             cfg.k,
             cfg.r_count,
             cfg.threads,
             cfg.backend.label(),
             cfg.lanes.label(),
+            cfg.schedule.label(),
+            cfg.block_size,
             cfg.orders.iter().map(|o| o.label()).collect::<Vec<_>>().join(",")
         ));
         let sweep_orders = cfg.orders.len() > 1;
@@ -374,6 +390,8 @@ mod tests {
             oracle_r: 64,
             backend: crate::simd::Backend::detect(),
             lanes: crate::simd::LaneWidth::default(),
+            schedule: crate::runtime::pool::Schedule::default(),
+            block_size: crate::labelprop::DEFAULT_EDGE_BLOCK,
             memo: crate::algo::infuser::MemoKind::Dense,
             orders: vec![crate::graph::OrderStrategy::Identity],
             imm_memory_limit: None,

@@ -7,6 +7,16 @@
 //! per kernel step via [`crate::simd::LaneEngine`] (the paper's `B = 8`
 //! is the default; every width yields a bit-identical fixpoint).
 //!
+//! The frontier loop runs on the persistent worker-pool runtime
+//! ([`crate::runtime::pool`]): workers are spawned once per propagation
+//! and parked between rounds, work is distributed per the
+//! [`Schedule`] knob (per-worker deques with chunk stealing by default,
+//! the shared-cursor dynamic schedule as the comparison baseline), and
+//! frontier hubs are split into edge blocks of at most
+//! [`PropagateOpts::block_size`] edges so one high-degree vertex spreads
+//! across the whole pool. All three knobs are result-invariant — see the
+//! runtime module docs for the `fetch_min`-commutativity argument.
+//!
 //! Two execution modes with the same fixpoint (per lane, every vertex's
 //! label = minimum vertex id of its connected component in that lane's
 //! sampled subgraph):
@@ -22,11 +32,12 @@
 //!   comparison of fixpoints.
 
 use crate::graph::{Graph, OrderStrategy};
+use crate::runtime::pool::{default_threads, ChunkQueue, Schedule};
 use crate::sampling::xr_stream;
 use crate::simd::{Backend, LaneEngine, LaneWidth};
 use crate::util::par::{as_send_cells, ThreadPool};
 use crate::VertexId;
-use std::sync::atomic::{AtomicI32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicI32, AtomicU64, Ordering};
 
 /// The `n × R` component-label matrix, row-major: `data[v*r_count + lane]`.
 /// Rows are the paper's layout ("the R labels of a single vertex are
@@ -92,6 +103,11 @@ pub enum Mode {
     Sync,
 }
 
+/// Default edge-block granularity for hub splitting: adjacency runs
+/// longer than this many edges are cut into separate work blocks so a
+/// single hub parallelizes across workers instead of pinning one.
+pub const DEFAULT_EDGE_BLOCK: usize = 4096;
+
 /// Propagation options.
 #[derive(Clone, Copy, Debug)]
 pub struct PropagateOpts {
@@ -107,6 +123,15 @@ pub struct PropagateOpts {
     pub lanes: LaneWidth,
     /// Schedule.
     pub mode: Mode,
+    /// Work-distribution policy of the frontier loop
+    /// ([`crate::runtime::pool`]). Result-invariant: `fetch_min` commits
+    /// are commutative, so only throughput moves.
+    pub schedule: Schedule,
+    /// Hub-splitting granularity: frontier vertices whose degree exceeds
+    /// this are split into edge blocks of at most this many edges, each a
+    /// separate work item (result-invariant for the same reason as
+    /// `schedule`). Values are clamped to ≥ 1.
+    pub block_size: usize,
     /// Vertex-reordering strategy for the CSR/label-matrix layout.
     /// Result-invariant by the orig-id hashing contract
     /// ([`crate::graph::order`]); labels are returned in **original** row
@@ -119,10 +144,12 @@ impl Default for PropagateOpts {
         Self {
             r_count: 256,
             seed: 0,
-            threads: 1,
+            threads: default_threads(),
             backend: Backend::detect(),
             lanes: LaneWidth::default(),
             mode: Mode::Async,
+            schedule: Schedule::default(),
+            block_size: DEFAULT_EDGE_BLOCK,
             order: OrderStrategy::Identity,
         }
     }
@@ -230,16 +257,35 @@ pub fn initial_gains(labels: &Labels, sizes: &[i32], pool: &ThreadPool) -> Vec<f
 // Async (Gauss–Seidel) engine
 // --------------------------------------------------------------------------
 
+/// One work item of the async frontier loop: a slice of vertex `u`'s
+/// adjacency, as offsets `lo..hi` into the row. Vertices with at most
+/// `block_size` edges yield one block; hubs are cut into several, so a
+/// power-law frontier's tail no longer pins a single worker (the
+/// degree-aware edge-block partitioning of the scheduler refactor).
+/// Splitting is result-invariant because every label commit is a per-lane
+/// `fetch_min` — which block, worker, or order pushes an edge cannot
+/// change the fixpoint (see [`crate::runtime::pool`] docs).
+#[derive(Clone, Copy)]
+struct EdgeBlock {
+    /// Source vertex.
+    u: VertexId,
+    /// First edge offset within `u`'s row.
+    lo: u32,
+    /// One past the last edge offset within `u`'s row.
+    hi: u32,
+}
+
 fn propagate_async(graph: &Graph, opts: &PropagateOpts) -> PropagationResult {
     let n = graph.num_vertices();
     let r_count = opts.r_count;
     let engine = opts.engine();
     let xrs = xr_stream(opts.seed, r_count);
     let mut labels = Labels::identity(n, r_count);
-    let pool = ThreadPool::new(opts.threads);
+    // Workers are spawned once here and parked between rounds; every
+    // round below is a wake → drain → park cycle on the same threads.
+    let pool = ThreadPool::with_schedule(opts.threads, opts.schedule);
+    let block_size = opts.block_size.max(1);
 
-    // Live-vertex frontier (Alg. 5's L), rebuilt from a bitset each round.
-    let mut frontier: Vec<u32> = (0..n as u32).collect();
     let words = n.div_ceil(64);
     let next_live: Vec<AtomicU64> = (0..words).map(|_| AtomicU64::new(0)).collect();
     let edge_visits = AtomicU64::new(0);
@@ -251,44 +297,54 @@ fn propagate_async(graph: &Graph, opts: &PropagateOpts) -> PropagationResult {
     // deliberate deviation from the paper's benign-race OpenMP code).
     let data_ptr = SharedLabels(labels.data.as_mut_ptr());
 
-    while !frontier.is_empty() {
+    // Edge-block work list (Alg. 5's live set L, at sub-vertex
+    // granularity), rebuilt from the live bitset each round.
+    let push_blocks = |blocks: &mut Vec<EdgeBlock>, u: VertexId| {
+        let deg = (graph.xadj[u as usize + 1] - graph.xadj[u as usize]) as usize;
+        let mut lo = 0usize;
+        while lo < deg {
+            let hi = lo.saturating_add(block_size).min(deg);
+            blocks.push(EdgeBlock { u, lo: lo as u32, hi: hi as u32 });
+            lo = hi;
+        }
+    };
+    let mut blocks: Vec<EdgeBlock> = Vec::new();
+    for u in 0..n as VertexId {
+        push_blocks(&mut blocks, u);
+    }
+
+    while !blocks.is_empty() {
         iterations += 1;
-        let cursor = AtomicUsize::new(0);
-        // Adaptive dynamic-schedule grain: aim for ~8 chunks per worker so
-        // load still balances, with a floor of 64 so tiny frontiers don't
-        // thrash the shared cursor and huge ones aren't over-chunked.
-        let chunk = (frontier.len() / (pool.threads() * 8)).max(64);
-        let frontier_ref = &frontier;
+        // Adaptive grain: aim for ~8 chunks per worker so load balances;
+        // short block lists go down to chunk 1 so even a lone split hub
+        // spreads across the whole pool.
+        let chunk = (blocks.len() / (pool.threads() * 8)).max(1);
+        let queue = ChunkQueue::new(opts.schedule, blocks.len(), chunk, pool.threads());
+        let blocks_ref = &blocks;
         let next_live_ref = &next_live;
         let xrs_ref = &xrs;
         let edge_visits_ref = &edge_visits;
         let dp = &data_ptr;
-        pool.region(|_worker| {
+        pool.region(|worker| {
             let mut changed = vec![0u64; r_count.div_ceil(64)];
             let mut lu_snap = vec![0i32; r_count];
             let mut local_visits = 0u64;
-            loop {
-                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                if start >= frontier_ref.len() {
-                    break;
-                }
-                let end = (start + chunk).min(frontier_ref.len());
-                for &u in &frontier_ref[start..end] {
-                    // Snapshot u's row once; reused across its edges.
+            while let Some((bs, be)) = queue.next(worker) {
+                for blk in &blocks_ref[bs..be] {
+                    let u = blk.u as usize;
+                    // Snapshot u's row once; reused across the block.
                     // SAFETY: concurrent fetch_min writers may race these
                     // plain loads; any torn value is a valid current-or-
                     // older label and only affects convergence speed.
                     unsafe {
                         std::ptr::copy_nonoverlapping(
-                            dp.0.add(u as usize * r_count),
+                            dp.0.add(u * r_count),
                             lu_snap.as_mut_ptr(),
                             r_count,
                         );
                     }
-                    let (s, e) = (
-                        graph.xadj[u as usize] as usize,
-                        graph.xadj[u as usize + 1] as usize,
-                    );
+                    let base = graph.xadj[u] as usize;
+                    let (s, e) = (base + blk.lo as usize, base + blk.hi as usize);
                     local_visits += (e - s) as u64;
                     for idx in s..e {
                         let v = graph.adj[idx] as usize;
@@ -333,13 +389,13 @@ fn propagate_async(graph: &Graph, opts: &PropagateOpts) -> PropagationResult {
             edge_visits_ref.fetch_add(local_visits, Ordering::Relaxed);
         });
 
-        // Rebuild the frontier from the bitset.
-        frontier.clear();
+        // Rebuild the block list from the bitset.
+        blocks.clear();
         for (w, word) in next_live.iter().enumerate() {
             let mut bits = word.swap(0, Ordering::Relaxed);
             while bits != 0 {
                 let b = bits.trailing_zeros() as usize;
-                frontier.push((w * 64 + b) as u32);
+                push_blocks(&mut blocks, (w * 64 + b) as VertexId);
                 bits &= bits - 1;
             }
         }
@@ -367,7 +423,12 @@ fn propagate_sync(graph: &Graph, opts: &PropagateOpts) -> PropagationResult {
     let engine = opts.engine();
     let xrs = xr_stream(opts.seed, r_count);
     let mut cur = Labels::identity(n, r_count);
-    let pool = ThreadPool::new(opts.threads);
+    // Persistent workers for the whole fixpoint; the sweep itself is a
+    // static interleave (each worker owns target rows v ≡ w mod τ, so
+    // writes to `next` are race-free without atomics), which is why the
+    // dynamic/steal schedule knob and hub splitting apply only to the
+    // async engine.
+    let pool = ThreadPool::with_schedule(opts.threads, opts.schedule);
     let mut next = cur.data.clone();
     let mut iterations = 0usize;
     let mut edge_visits = 0u64;
@@ -505,6 +566,7 @@ mod tests {
             lanes: LaneWidth::default(),
             mode,
             order: OrderStrategy::Identity,
+            ..Default::default()
         }
     }
 
@@ -604,6 +666,50 @@ mod tests {
         let r1 = propagate(&g, &opts(32, 9, 1, Mode::Async));
         let r8 = propagate(&g, &opts(32, 9, 8, Mode::Async));
         assert_eq!(r1.labels.data, r8.labels.data);
+    }
+
+    #[test]
+    fn zero_threads_clamp_to_one_worker() {
+        // Regression: `threads: 0` used to reach the adaptive-chunk
+        // divide (`len / (pool.threads() * 8)`); the pool clamps at
+        // construction, so 0 must behave exactly like 1.
+        let g = crate::gen::generate(&GenSpec::erdos_renyi(120, 360, 4))
+            .with_weights(WeightModel::Const(0.25), 6);
+        for mode in [Mode::Async, Mode::Sync] {
+            let r0 = propagate(&g, &opts(16, 3, 0, mode));
+            let r1 = propagate(&g, &opts(16, 3, 1, mode));
+            assert_eq!(r0.labels.data, r1.labels.data, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn schedule_and_block_size_do_not_change_fixpoint() {
+        // The scheduler-refactor invariant at the engine layer: both
+        // work-distribution policies and any hub-splitting granularity —
+        // including block sizes far below every degree and far above —
+        // land on the bit-identical fixpoint. The cross-layer property
+        // lives in `tests/schedule_equivalence.rs`.
+        let g = crate::gen::generate(&GenSpec::barabasi_albert(300, 3, 7))
+            .with_weights(WeightModel::Const(0.2), 4);
+        let reference = propagate(&g, &opts(24, 5, 1, Mode::Async));
+        for schedule in Schedule::ALL {
+            for block_size in [1usize, 2, 64, DEFAULT_EDGE_BLOCK, usize::MAX] {
+                for threads in [2usize, 4] {
+                    let res = propagate(
+                        &g,
+                        &PropagateOpts {
+                            schedule,
+                            block_size,
+                            ..opts(24, 5, threads, Mode::Async)
+                        },
+                    );
+                    assert_eq!(
+                        res.labels.data, reference.labels.data,
+                        "{schedule} block={block_size} tau={threads}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

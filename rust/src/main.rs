@@ -76,6 +76,12 @@ COMMANDS
              [--order identity|degree|bfs|hybrid]
                                        vertex memory layout (default identity;
                                        seeds are identical for every ordering)
+             [--schedule dynamic|steal]
+                                       worker-pool work distribution (default
+                                       steal; seeds are identical for both)
+             [--block-size N]          hub-splitting edge-block size (default
+                                       4096 edges; seeds are identical for
+                                       every block size)
   experiment --config FILE.json        run a full grid, render tables
              [--markdown]
   cdf        --dataset ID [--r N]      Fig. 2 sampling-probability CDF
@@ -145,6 +151,12 @@ fn cmd_run(args: &Args) -> infuser::Result<()> {
         oracle_r: args.get_or("oracle-r", 0usize)?,
         backend: infuser::simd::Backend::parse(args.opt("backend").unwrap_or("auto"))?,
         lanes: infuser::simd::LaneWidth::parse(args.opt("lanes").unwrap_or("8"))?,
+        schedule: infuser::runtime::Schedule::parse(args.opt("schedule").unwrap_or("steal"))?,
+        block_size: {
+            let b: usize = args.get_or("block-size", infuser::labelprop::DEFAULT_EDGE_BLOCK)?;
+            anyhow::ensure!(b >= 1, "--block-size must be >= 1 (edges per hub block)");
+            b
+        },
         memo: infuser::algo::infuser::MemoKind::parse(args.opt("memo").unwrap_or("dense"))?,
         orders: vec![infuser::graph::OrderStrategy::parse(
             args.opt("order").unwrap_or("identity"),
@@ -170,6 +182,8 @@ fn cmd_run(args: &Args) -> infuser::Result<()> {
                 threads: cfg.threads,
                 backend: cfg.backend,
                 lanes: cfg.lanes,
+                schedule: cfg.schedule,
+                block_size: cfg.block_size,
                 memo: if matches!(algo, AlgoSpec::InfuserSketch) {
                     infuser::algo::infuser::MemoKind::Sketch
                 } else {

@@ -1,3 +1,6 @@
+//! Execution runtimes: the persistent worker-pool substrate every native
+//! parallel region runs on ([`pool`]), and the PJRT runtime below.
+//!
 //! PJRT runtime — loads the AOT-compiled XLA artifacts and runs them from
 //! the Rust hot path. Python never executes at run time; `make artifacts`
 //! lowers the L2 JAX model (wrapping the L1 Pallas kernel) to **HLO text**
@@ -22,9 +25,11 @@
 //!   and are sliced away on readback (lanes are independent).
 
 pub mod manifest;
+pub mod pool;
 pub mod xla_engine;
 
 pub use manifest::{Artifacts, EntryKind, ManifestEntry};
+pub use pool::{ChunkQueue, Schedule, WorkerPool};
 pub use xla_engine::XlaEngine;
 
 use std::path::Path;

@@ -1,0 +1,619 @@
+//! Persistent worker-pool runtime — the crate's OpenMP-thread-team
+//! replacement for the spawn-per-region scoped-thread facade that
+//! previously lived in `util::par`.
+//!
+//! The paper's speedups hinge on keeping all τ cores busy over power-law
+//! frontiers (Alg. 5's dynamic OpenMP schedule). Two scheduler problems
+//! keep a spawn-per-region substrate from doing that at scale:
+//!
+//! 1. **Spawn cost per round.** Propagation runs many rounds per call;
+//!    respawning OS threads for every round wastes time the kernel could
+//!    spend streaming edges. [`WorkerPool`] spawns its workers **once**
+//!    (at construction, i.e. once per algorithm run), parks them on a
+//!    condvar between rounds, and wakes them per parallel region.
+//! 2. **Work granularity.** A single shared cursor serializes every
+//!    chunk-grab through one cache line. Under [`Schedule::Steal`] each
+//!    worker owns a contiguous index range consumed from the front; idle
+//!    workers steal chunks from the *back* of a victim's range, so the
+//!    common case is contention-free and the skewed case load-balances.
+//!    The shared-cursor discipline is kept as [`Schedule::Dynamic`] for
+//!    bit-for-bit comparison and for the throughput sweep in
+//!    `benches/kernels.rs`.
+//!
+//! ## Determinism argument
+//!
+//! Scheduling policy decides **which worker** executes an index, never
+//! **what** the index computes. Every parallel body in this crate writes
+//! either to disjoint slots (one writer per index, `util::par::SendCells`)
+//! or through commutative atomics — the label-propagation hot path
+//! commits exclusively via per-lane `fetch_min`, and `min` is commutative
+//! and associative, so any interleaving of committed updates lands on the
+//! same fixpoint (the per-lane component-minimum matrix). Hence σ, gains,
+//! and seed sets are bit-identical across `{Dynamic, Steal}` × any thread
+//! count — the same argument, one level up, as `labelprop`'s racy-snapshot
+//! note. What *may* vary between schedules is convergence bookkeeping
+//! (`iterations`, `edge_visits`): those count traversal work, not results,
+//! and `tests/schedule_equivalence.rs` pins exactly that split.
+//!
+//! The test-suite thread default can be raised with `INFUSER_TEST_THREADS`
+//! (used by CI to exercise the multithreaded paths; see
+//! [`default_threads`]).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Work-distribution policy for chunked parallel loops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Schedule {
+    /// Per-worker ranges with chunk stealing from the back of a victim's
+    /// range (default): contention-free in the common case, load-balanced
+    /// under skew.
+    #[default]
+    Steal,
+    /// One shared atomic cursor all workers grab chunks from — the
+    /// OpenMP `schedule(dynamic)` analog and the pre-runtime behavior,
+    /// kept for bit-for-bit comparison.
+    Dynamic,
+}
+
+impl Schedule {
+    /// Both policies, in sweep order.
+    pub const ALL: [Schedule; 2] = [Schedule::Dynamic, Schedule::Steal];
+
+    /// Parse from a CLI/config string (`dynamic` / `steal`).
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "dynamic" => Ok(Self::Dynamic),
+            "steal" => Ok(Self::Steal),
+            other => Err(anyhow::anyhow!("unknown schedule '{other}' (dynamic|steal)")),
+        }
+    }
+
+    /// Short id for logs and table headers.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Dynamic => "dynamic",
+            Self::Steal => "steal",
+        }
+    }
+}
+
+impl std::fmt::Display for Schedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Default worker count for the params structs' `Default` impls:
+/// `INFUSER_TEST_THREADS` when set (a test/CI knob — CI runs the tier-1
+/// suite once at 4 so every default-τ code path exercises the
+/// multithreaded runtime), else 1 — the conservative pre-runtime
+/// default. Read once and cached; τ is result-invariant throughout the
+/// crate, so the knob moves only resource usage, never results.
+pub fn default_threads() -> usize {
+    static CACHED: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *CACHED.get_or_init(|| {
+        std::env::var("INFUSER_TEST_THREADS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .map_or(1, |t: usize| t.max(1))
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Chunk queue — the scheduling policies behind a single `next()` call
+// ---------------------------------------------------------------------------
+
+/// A worker-local index range packed into one atomic word (`lo` in the
+/// high half, `hi` in the low half) so owner-take and thief-steal are
+/// single CAS operations, padded to its own cache line.
+#[repr(align(64))]
+struct PackedRange(AtomicU64);
+
+#[inline]
+fn pack(lo: usize, hi: usize) -> u64 {
+    ((lo as u64) << 32) | hi as u64
+}
+
+#[inline]
+fn unpack(word: u64) -> (usize, usize) {
+    ((word >> 32) as usize, (word & 0xFFFF_FFFF) as usize)
+}
+
+/// One parallel loop's work source: hands out `[start, end)` chunks of
+/// `0..len` to workers under the chosen [`Schedule`]. Every index is
+/// handed out exactly once; the policy only decides *which* worker gets
+/// it (see the module docs for why that cannot change results).
+pub struct ChunkQueue {
+    len: usize,
+    chunk: usize,
+    schedule: Schedule,
+    /// `Dynamic`: the shared cursor. Advanced by bounded CAS — never past
+    /// `len` — so repeated polling cannot wrap the counter (the
+    /// `parallel_for` overflow hazard, fixed at the source here).
+    cursor: AtomicUsize,
+    /// `Steal`: one packed `[lo, hi)` range per worker.
+    ranges: Vec<PackedRange>,
+}
+
+impl ChunkQueue {
+    /// Split `0..len` for `threads` workers, handing out `chunk`-sized
+    /// pieces. `Steal` requires the packed ranges to fit 32 bits per
+    /// bound; longer loops (never hit by real graphs: frontiers and edge
+    /// blocks are `u32`-indexed) fall back to `Dynamic`.
+    pub fn new(schedule: Schedule, len: usize, chunk: usize, threads: usize) -> Self {
+        let threads = threads.max(1);
+        let chunk = chunk.max(1);
+        let schedule = if schedule == Schedule::Steal && len > u32::MAX as usize {
+            Schedule::Dynamic
+        } else {
+            schedule
+        };
+        let ranges = match schedule {
+            Schedule::Dynamic => Vec::new(),
+            Schedule::Steal => {
+                // Even contiguous split; the first `len % threads` workers
+                // take one extra index.
+                let per = len / threads;
+                let extra = len % threads;
+                let mut start = 0usize;
+                (0..threads)
+                    .map(|w| {
+                        let take = per + usize::from(w < extra);
+                        let r = PackedRange(AtomicU64::new(pack(start, start + take)));
+                        start += take;
+                        r
+                    })
+                    .collect()
+            }
+        };
+        Self { len, chunk, schedule, cursor: AtomicUsize::new(0), ranges }
+    }
+
+    /// Next chunk for `worker`, or `None` when the whole range is drained.
+    #[inline]
+    pub fn next(&self, worker: usize) -> Option<(usize, usize)> {
+        match self.schedule {
+            Schedule::Dynamic => self.next_dynamic(),
+            Schedule::Steal => self
+                .take_front(worker)
+                .or_else(|| self.steal(worker)),
+        }
+    }
+
+    fn next_dynamic(&self) -> Option<(usize, usize)> {
+        loop {
+            let start = self.cursor.load(Ordering::Relaxed);
+            if start >= self.len {
+                return None;
+            }
+            let end = (start + self.chunk).min(self.len);
+            if self
+                .cursor
+                .compare_exchange_weak(start, end, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                return Some((start, end));
+            }
+        }
+    }
+
+    /// Owner path: take a chunk from the front of `worker`'s own range.
+    fn take_front(&self, worker: usize) -> Option<(usize, usize)> {
+        let slot = &self.ranges[worker].0;
+        loop {
+            let cur = slot.load(Ordering::Relaxed);
+            let (lo, hi) = unpack(cur);
+            if lo >= hi {
+                return None;
+            }
+            let mid = (lo + self.chunk).min(hi);
+            if slot
+                .compare_exchange_weak(cur, pack(mid, hi), Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                return Some((lo, mid));
+            }
+        }
+    }
+
+    /// Thief path: scan the other workers and take a chunk from the
+    /// *back* of the first non-empty range (back-stealing keeps the
+    /// owner's front-of-range locality intact).
+    fn steal(&self, worker: usize) -> Option<(usize, usize)> {
+        let threads = self.ranges.len();
+        for i in 1..threads {
+            let victim = (worker + i) % threads;
+            let slot = &self.ranges[victim].0;
+            loop {
+                let cur = slot.load(Ordering::Relaxed);
+                let (lo, hi) = unpack(cur);
+                if lo >= hi {
+                    break;
+                }
+                let mid = hi - self.chunk.min(hi - lo);
+                if slot
+                    .compare_exchange_weak(
+                        cur,
+                        pack(lo, mid),
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    )
+                    .is_ok()
+                {
+                    return Some((mid, hi));
+                }
+            }
+        }
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The persistent pool
+// ---------------------------------------------------------------------------
+
+/// Type-erased reference to the current region's body. The lifetime is
+/// erased to `'static` so it can sit in the shared state; soundness comes
+/// from [`WorkerPool::region`] not returning until every worker has
+/// finished the job, so the borrow always outlives its uses.
+#[derive(Clone, Copy)]
+struct Job(&'static (dyn Fn(usize) + Sync));
+
+struct State {
+    /// Monotonic region counter; a worker runs each epoch exactly once.
+    epoch: u64,
+    /// The in-flight region body (None between regions).
+    job: Option<Job>,
+    /// Workers still inside the current region.
+    remaining: usize,
+    /// First panic payload caught from a worker this region, re-raised on
+    /// the dispatching thread once every worker has parked again.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between regions.
+    work: Condvar,
+    /// The dispatching thread parks here until `remaining == 0`.
+    done: Condvar,
+}
+
+/// A persistent pool of `τ - 1` parked OS workers plus the calling
+/// thread. Construct once per algorithm run; every
+/// [`region`](WorkerPool::region) / [`for_each`](WorkerPool::for_each) /
+/// [`map`](WorkerPool::map) reuses the same workers (condvar park/unpark
+/// between rounds — no thread spawns after construction). Dropping the
+/// pool joins the workers.
+///
+/// Dispatch is **not reentrant**: only the owning thread calls into the
+/// pool, and region bodies must not dispatch nested regions.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+    schedule: Schedule,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("threads", &self.threads)
+            .field("schedule", &self.schedule)
+            .finish()
+    }
+}
+
+impl WorkerPool {
+    /// Pool with an explicit worker count (τ in the paper) and the
+    /// default [`Schedule`]. A count of 0 is clamped to 1 — the clamp
+    /// lives here, at construction, so every downstream grain computation
+    /// (`len / (pool.threads() * k)`) is divide-by-zero safe by
+    /// construction.
+    pub fn new(threads: usize) -> Self {
+        Self::with_schedule(threads, Schedule::default())
+    }
+
+    /// Pool with an explicit schedule for its chunked loops.
+    pub fn with_schedule(threads: usize, schedule: Schedule) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|id| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("infuser-worker-{id}"))
+                    .spawn(move || worker_loop(&shared, id))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { shared, workers, threads, schedule }
+    }
+
+    /// Workers available (callers included).
+    #[inline]
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The pool's chunked-loop schedule.
+    #[inline]
+    pub fn schedule(&self) -> Schedule {
+        self.schedule
+    }
+
+    /// Run `body(worker_id)` once on each of the pool's workers (SPMD
+    /// region). The calling thread participates as worker 0; parked
+    /// workers are woken, run the body, and park again. Returns after
+    /// every worker has finished. A panic — in the caller's share or any
+    /// worker's — is re-raised here, but only after every worker has
+    /// parked, so the type-erased borrow of `body` never dangles.
+    pub fn region<F: Fn(usize) + Sync>(&self, body: F) {
+        if self.threads == 1 {
+            body(0);
+            return;
+        }
+        let body_ref: &(dyn Fn(usize) + Sync) = &body;
+        // SAFETY: lifetime erasure only — we block below (on the unwind
+        // path too) until every worker is done with the job, so `body`
+        // strictly outlives its last use through this reference.
+        let body_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(body_ref) };
+        let job = Job(body_static);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(job);
+            st.remaining = self.threads - 1;
+            self.shared.work.notify_all();
+        }
+        let own = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(0)));
+        let mut st = self.shared.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+        let worker_panic = st.panic.take();
+        drop(st);
+        if let Err(payload) = own {
+            std::panic::resume_unwind(payload);
+        }
+        if let Some(payload) = worker_panic {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Chunked parallel for over `0..len` under the pool's schedule.
+    pub fn for_each<F: Fn(usize) + Sync>(&self, len: usize, chunk: usize, body: F) {
+        let chunk = chunk.max(1);
+        if self.threads == 1 || len <= chunk {
+            for i in 0..len {
+                body(i);
+            }
+            return;
+        }
+        let queue = ChunkQueue::new(self.schedule, len, chunk, self.threads);
+        self.region(|worker| {
+            while let Some((start, end)) = queue.next(worker) {
+                for i in start..end {
+                    body(i);
+                }
+            }
+        });
+    }
+
+    /// Parallel map collecting results in index order. Chunk 1: map items
+    /// are typically coarse (a per-worker batch, a whole simulation), so
+    /// even `len == threads` dispatches genuinely in parallel.
+    pub fn map<T: Send, F: Fn(usize) -> T + Sync>(&self, len: usize, body: F) -> Vec<T> {
+        let mut out: Vec<Option<T>> = (0..len).map(|_| None).collect();
+        {
+            let slots = crate::util::par::as_send_cells(&mut out);
+            self.for_each(len, 1, |i| {
+                // SAFETY: each index is written by exactly one worker.
+                unsafe { *slots.get(i) = Some(body(i)) };
+            });
+        }
+        out.into_iter().map(|x| x.unwrap()).collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, id: usize) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch > seen_epoch {
+                    if let Some(job) = st.job {
+                        seen_epoch = st.epoch;
+                        break job;
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        // `region` holds the body alive until `remaining` drops to 0,
+        // which happens strictly after this call returns. Panics are
+        // caught so the handshake completes either way; the first payload
+        // is re-raised on the dispatching thread.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.0)(id)));
+        let mut st = shared.state.lock().unwrap();
+        if let Err(payload) = result {
+            st.panic.get_or_insert(payload);
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as TestAtomicU64;
+
+    #[test]
+    fn new_clamps_zero_threads_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        // The serial path still visits everything.
+        let sum = TestAtomicU64::new(0);
+        pool.for_each(100, 10, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn for_each_visits_every_index_once_under_both_schedules() {
+        for schedule in Schedule::ALL {
+            let pool = WorkerPool::with_schedule(8, schedule);
+            let n = 10_000;
+            let counts: Vec<TestAtomicU64> = (0..n).map(|_| TestAtomicU64::new(0)).collect();
+            pool.for_each(n, 64, |i| {
+                counts[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                counts.iter().all(|c| c.load(Ordering::Relaxed) == 1),
+                "{schedule}"
+            );
+        }
+    }
+
+    #[test]
+    fn region_runs_each_worker_and_reuses_them_across_rounds() {
+        let pool = WorkerPool::new(4);
+        for _round in 0..50 {
+            let hits: Vec<TestAtomicU64> = (0..4).map(|_| TestAtomicU64::new(0)).collect();
+            pool.region(|t| {
+                hits[t].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+    }
+
+    #[test]
+    fn map_preserves_order_under_both_schedules() {
+        for schedule in Schedule::ALL {
+            let pool = WorkerPool::with_schedule(4, schedule);
+            let out = pool.map(1000, |i| i * i);
+            assert!(out.iter().enumerate().all(|(i, &v)| v == i * i), "{schedule}");
+        }
+    }
+
+    #[test]
+    fn chunk_queue_covers_range_exactly_once() {
+        // Single-threaded drain of every policy: chunks must tile 0..len.
+        for schedule in Schedule::ALL {
+            for (len, chunk, threads) in
+                [(0usize, 4usize, 3usize), (1, 4, 3), (10, 3, 4), (100, 7, 1), (97, 16, 8)]
+            {
+                let q = ChunkQueue::new(schedule, len, chunk, threads);
+                let mut seen = vec![0u32; len];
+                for w in (0..threads).cycle().take(threads * (len / chunk + 2)) {
+                    if let Some((s, e)) = q.next(w) {
+                        assert!(s < e && e <= len);
+                        assert!(e - s <= chunk);
+                        for slot in &mut seen[s..e] {
+                            *slot += 1;
+                        }
+                    }
+                }
+                assert!((0..threads).all(|w| q.next(w).is_none()));
+                assert!(
+                    seen.iter().all(|&c| c == 1),
+                    "{schedule} len={len} chunk={chunk} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn steal_takes_from_the_back_of_a_victim() {
+        let q = ChunkQueue::new(Schedule::Steal, 100, 10, 2);
+        // Worker 0 owns [0, 50), worker 1 owns [50, 100). Drain worker 1's
+        // range, then its next() must steal from the *back* of worker 0.
+        while q.take_front(1).is_some() {}
+        let stolen = q.next(1).unwrap();
+        assert_eq!(stolen, (40, 50), "thief takes the victim's tail chunk");
+        // Owner keeps consuming from the front, unaffected.
+        assert_eq!(q.next(0).unwrap(), (0, 10));
+    }
+
+    #[test]
+    fn schedule_parses_and_labels() {
+        assert_eq!(Schedule::parse("dynamic").unwrap(), Schedule::Dynamic);
+        assert_eq!(Schedule::parse("steal").unwrap(), Schedule::Steal);
+        assert!(Schedule::parse("guided").is_err());
+        assert_eq!(Schedule::default(), Schedule::Steal);
+        assert_eq!(Schedule::Dynamic.label(), "dynamic");
+        assert_eq!(format!("{}", Schedule::Steal), "steal");
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_stays_usable() {
+        // A panic inside a region body must re-raise on the dispatching
+        // thread only after every worker parked (no dangling job borrow),
+        // leaving the pool ready for the next dispatch.
+        let pool = WorkerPool::new(4);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.region(|w| {
+                if w == 3 {
+                    panic!("worker boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "the worker panic must surface to the caller");
+        let sum = TestAtomicU64::new(0);
+        pool.for_each(10, 1, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn pool_survives_many_small_dispatches() {
+        // Regression guard for the park/unpark handshake: a long sequence
+        // of tiny regions and loops must neither deadlock nor drop work.
+        let pool = WorkerPool::new(3);
+        let total = TestAtomicU64::new(0);
+        for round in 0..200 {
+            pool.for_each(round % 7, 1, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        let expect: u64 = (0..200u64).map(|r| r % 7).sum();
+        assert_eq!(total.load(Ordering::Relaxed), expect);
+    }
+}

@@ -2,7 +2,10 @@
 //! (rayon/clap/criterion/serde_json/proptest) are unavailable in this
 //! offline environment:
 //!
-//! * [`par`] — chunked parallel-for over `std::thread::scope` (the OpenMP
+//! * [`par`] — one-shot chunked parallel-for over `std::thread::scope`
+//!   plus the `SendCells` disjoint-write primitive; the reusable
+//!   `ThreadPool` name now binds the persistent work-stealing runtime
+//!   ([`crate::runtime::pool::WorkerPool`], the OpenMP thread-team
 //!   replacement for the frontier loop of Alg. 5 line 6).
 //! * [`args`] — mini CLI argument parser.
 //! * [`json`] — minimal JSON value model, parser, and writer (configs,
@@ -22,5 +25,5 @@ pub mod proptest_lite;
 pub mod stats;
 pub mod timer;
 
-pub use par::{parallel_for, ThreadPool};
+pub use par::{parallel_for, Schedule, ThreadPool};
 pub use timer::Timer;

@@ -1,18 +1,29 @@
-//! Data-parallel substrate: a chunked parallel-for built on scoped
-//! threads, standing in for the paper's OpenMP `parallel for`.
+//! Data-parallel substrate: the low-level pieces shared by the
+//! persistent worker-pool runtime ([`crate::runtime::pool`]) and by
+//! callers that want a one-shot scoped-thread loop without a pool.
 //!
-//! Work distribution is dynamic: workers grab fixed-size chunks of the
-//! index range from an atomic cursor, which load-balances the skewed
-//! per-vertex work of power-law frontiers (the same reason the paper
-//! relies on OpenMP's dynamic schedule for Alg. 5 line 6).
+//! The reusable `ThreadPool` facade that used to live here (respawning
+//! scoped threads per region) has been replaced by the persistent
+//! [`crate::runtime::pool::WorkerPool`]; the old name is re-exported
+//! below so the τ-threading contract reads the same across the stack.
+
+pub use crate::runtime::pool::{Schedule, WorkerPool as ThreadPool};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Run `body(i)` for every `i in 0..len` on `threads` workers.
+/// Run `body(i)` for every `i in 0..len` on `threads` one-shot scoped
+/// workers grabbing fixed-size chunks from a shared cursor.
 ///
 /// `body` must be `Sync` (it is shared by reference); interior mutability
 /// (atomics, per-thread buffers) is the caller's tool of choice, exactly
-/// like an OpenMP parallel region.
+/// like an OpenMP parallel region. For repeated regions, prefer a
+/// [`ThreadPool`] — it parks its workers between rounds instead of
+/// respawning them.
+///
+/// The cursor is advanced by bounded compare-exchange and never moves
+/// past `len`: a plain `fetch_add` would keep accumulating on every
+/// empty-handed poll, and with a small `len` and a long-lived loop the
+/// counter could in principle wrap `usize` and hand out indices twice.
 pub fn parallel_for<F: Fn(usize) + Sync>(threads: usize, len: usize, chunk: usize, body: F) {
     let threads = threads.max(1);
     if threads == 1 || len <= chunk {
@@ -26,11 +37,17 @@ pub fn parallel_for<F: Fn(usize) + Sync>(threads: usize, len: usize, chunk: usiz
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
-                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                let start = cursor.load(Ordering::Relaxed);
                 if start >= len {
                     break;
                 }
                 let end = (start + chunk).min(len);
+                if cursor
+                    .compare_exchange_weak(start, end, Ordering::Relaxed, Ordering::Relaxed)
+                    .is_err()
+                {
+                    continue;
+                }
                 for i in start..end {
                     body(i);
                 }
@@ -39,7 +56,8 @@ pub fn parallel_for<F: Fn(usize) + Sync>(threads: usize, len: usize, chunk: usiz
     });
 }
 
-/// Run `body(worker_id)` once on each of `threads` workers (SPMD region).
+/// Run `body(worker_id)` once on each of `threads` one-shot scoped
+/// workers (SPMD region).
 pub fn parallel_region<F: Fn(usize) + Sync>(threads: usize, body: F) {
     let threads = threads.max(1);
     if threads == 1 {
@@ -52,51 +70,6 @@ pub fn parallel_region<F: Fn(usize) + Sync>(threads: usize, body: F) {
             scope.spawn(move || body(t));
         }
     });
-}
-
-/// A reusable pool facade. Scoped threads are cheap enough for our
-/// iteration granularity (propagation rounds are milliseconds+), so the
-/// pool just records the worker count; `install` methods forward to the
-/// free functions. Kept as a type so the coordinator can thread a single
-/// parallelism config through the stack.
-#[derive(Clone, Copy, Debug)]
-pub struct ThreadPool {
-    threads: usize,
-}
-
-impl ThreadPool {
-    /// Pool with an explicit worker count (τ in the paper).
-    pub fn new(threads: usize) -> Self {
-        Self { threads: threads.max(1) }
-    }
-
-    /// Workers available.
-    pub fn threads(&self) -> usize {
-        self.threads
-    }
-
-    /// Chunked parallel for over `0..len`.
-    pub fn for_each<F: Fn(usize) + Sync>(&self, len: usize, chunk: usize, body: F) {
-        parallel_for(self.threads, len, chunk, body);
-    }
-
-    /// SPMD region.
-    pub fn region<F: Fn(usize) + Sync>(&self, body: F) {
-        parallel_region(self.threads, body);
-    }
-
-    /// Parallel map collecting results in index order.
-    pub fn map<T: Send, F: Fn(usize) -> T + Sync>(&self, len: usize, body: F) -> Vec<T> {
-        let mut out: Vec<Option<T>> = (0..len).map(|_| None).collect();
-        {
-            let slots = as_send_cells(&mut out);
-            parallel_for(self.threads, len, 16, |i| {
-                // SAFETY: each index is written by exactly one worker.
-                unsafe { *slots.get(i) = Some(body(i)) };
-            });
-        }
-        out.into_iter().map(|x| x.unwrap()).collect()
-    }
 }
 
 /// A `Sync` wrapper exposing raw mutable slot access for disjoint-index
@@ -159,6 +132,36 @@ mod tests {
             sum.fetch_add(i as u64, Ordering::Relaxed);
         });
         assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn empty_range_is_a_noop() {
+        let hits = AtomicU64::new(0);
+        parallel_for(4, 0, 8, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn chunk_larger_than_len_runs_serially_and_completely() {
+        let counts: Vec<AtomicU64> = (0..5).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(4, 5, 100, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn more_threads_than_indices_each_index_once() {
+        // chunk 1 forces the parallel path; most workers poll an already
+        // drained cursor. The bounded-CAS cursor must stay at `len`
+        // (never wrapping or over-advancing) and hand out each index once.
+        let counts: Vec<AtomicU64> = (0..3).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(16, 3, 1, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
     }
 
     #[test]

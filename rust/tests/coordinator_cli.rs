@@ -191,6 +191,93 @@ fn cli_run_order_grid_end_to_end() {
 }
 
 #[test]
+fn cli_run_schedule_and_block_size_grid_end_to_end() {
+    // `infuser run --schedule / --block-size` through the real binary:
+    // both pool schedules and any hub-splitting granularity must print
+    // the identical seed line — the scheduler refactor's determinism
+    // contract at the outermost layer.
+    let base = [
+        "run", "--dataset", "nethep-s", "--algo", "infuser", "--k", "3", "--r", "32",
+        "--threads", "4", "--seed", "1", "--backend", "scalar",
+    ];
+    let seeds_line = |extra: &[&str]| -> String {
+        let mut args: Vec<&str> = base.to_vec();
+        args.extend_from_slice(extra);
+        let out = infuser_bin(&args);
+        assert!(
+            out.status.success(),
+            "args {extra:?} failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+        stdout
+            .lines()
+            .find(|l| l.starts_with("seeds:"))
+            .unwrap_or_else(|| panic!("no seeds line in output:\n{stdout}"))
+            .to_string()
+    };
+    let reference = seeds_line(&["--schedule", "steal"]);
+    assert_eq!(seeds_line(&["--schedule", "dynamic"]), reference, "dynamic");
+    for block in ["1", "64", "100000"] {
+        for schedule in ["dynamic", "steal"] {
+            assert_eq!(
+                seeds_line(&["--schedule", schedule, "--block-size", block]),
+                reference,
+                "schedule {schedule} block {block}"
+            );
+        }
+    }
+}
+
+#[test]
+fn cli_rejects_bad_schedule_and_block_size() {
+    for (flag, bad, expect) in [
+        ("--schedule", "guided", "unknown schedule"),
+        ("--schedule", "STEAL", "unknown schedule"),
+        ("--block-size", "0", "--block-size must be >= 1"),
+    ] {
+        let out = infuser_bin(&[
+            "run", "--dataset", "nethep-s", "--algo", "infuser", "--k", "2", "--r", "8",
+            flag, bad,
+        ]);
+        assert!(!out.status.success(), "{flag} '{bad}' must fail");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains(expect), "{flag} '{bad}': {err}");
+        if flag == "--schedule" {
+            assert!(
+                err.contains("dynamic|steal"),
+                "{flag} '{bad}' should list schedules: {err}"
+            );
+        }
+    }
+}
+
+#[test]
+fn json_config_schedule_reaches_the_grid() {
+    // "schedule"/"block_size" in an experiment config must produce the
+    // same cells as the defaults (result-invariance through the config
+    // path), mirroring the lanes-key test below.
+    let seeds_with = |extra_json: &str| {
+        let cfg = ExperimentConfig::from_json(&format!(
+            r#"{{"datasets": ["nethep-s"], "settings": ["const:0.05"],
+                "algos": ["infuser"], "k": 3, "r": 32, "threads": 4,
+                "seed": 4{extra_json}}}"#
+        ))
+        .unwrap();
+        let mut runner = Runner::new(cfg);
+        runner.verbose = false;
+        let cells = runner.run_grid().unwrap();
+        match &cells[0].outcome {
+            Outcome::Done { seeds, .. } => seeds.clone(),
+            other => panic!("{other:?}"),
+        }
+    };
+    let reference = seeds_with("");
+    assert_eq!(seeds_with(r#", "schedule": "dynamic""#), reference);
+    assert_eq!(seeds_with(r#", "schedule": "steal", "block_size": 32"#), reference);
+}
+
+#[test]
 fn cli_rejects_unknown_ordering() {
     for bad in ["zigzag", "DEGREE", ""] {
         let out = infuser_bin(&[

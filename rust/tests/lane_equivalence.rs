@@ -14,6 +14,7 @@ use infuser::graph::weights::prob_to_threshold;
 use infuser::graph::WeightModel;
 use infuser::hash::HASH_MASK;
 use infuser::labelprop::{propagate, union_find_labels, Mode, PropagateOpts};
+use infuser::runtime::Schedule;
 use infuser::sampling::xr_stream;
 use infuser::simd::{Backend, LaneEngine, LaneWidth};
 use infuser::util::proptest_lite::check;
@@ -102,15 +103,20 @@ fn fixpoint_labels_identical_across_engines_and_schedules() {
         for backend in backends() {
             for lanes in LaneWidth::ALL {
                 for mode in [Mode::Async, Mode::Sync] {
-                    let res = propagate(&graph, &PropagateOpts { backend, lanes, mode, ..base });
-                    assert_eq!(
-                        res.labels.data,
-                        reference.labels.data,
-                        "{}xB{} {mode:?} on {}",
-                        backend.label(),
-                        lanes.label(),
-                        graph.name
-                    );
+                    for schedule in Schedule::ALL {
+                        let res = propagate(
+                            &graph,
+                            &PropagateOpts { backend, lanes, mode, schedule, ..base },
+                        );
+                        assert_eq!(
+                            res.labels.data,
+                            reference.labels.data,
+                            "{}xB{} {mode:?} {schedule} on {}",
+                            backend.label(),
+                            lanes.label(),
+                            graph.name
+                        );
+                    }
                 }
             }
         }
@@ -178,8 +184,10 @@ fn marginal_gains_identical_across_engines_and_memo_backends() {
 #[test]
 fn seed_sets_identical_for_fixed_seed_r_k() {
     // The acceptance criterion verbatim: for a fixed (seed, R, K), every
-    // (backend × lane width × memo × thread count) combination returns the
-    // identical seed set and influence estimate.
+    // (backend × lane width × memo × schedule × thread count) combination
+    // returns the identical seed set and influence estimate. The
+    // (schedule, τ) pairs cover both pool policies at serial, mid, and
+    // oversubscribed worker counts without squaring the grid.
     let graph = infuser::gen::generate(&infuser::gen::GenSpec::barabasi_albert(400, 2, 3))
         .with_weights(WeightModel::Const(0.08), 5);
     let (k, r_count, seed) = (5usize, 64usize, 7u64);
@@ -197,11 +205,17 @@ fn seed_sets_identical_for_fixed_seed_r_k() {
     for backend in backends() {
         for lanes in LaneWidth::ALL {
             for memo in [MemoKind::Dense, MemoKind::Sketch] {
-                for threads in [1usize, 4] {
+                for (schedule, threads) in [
+                    (Schedule::Dynamic, 1usize),
+                    (Schedule::Dynamic, 4),
+                    (Schedule::Steal, 2),
+                    (Schedule::Steal, 8),
+                ] {
                     let res = InfuserMg::new(InfuserParams {
                         backend,
                         lanes,
                         memo,
+                        schedule,
                         threads,
                         ..base
                     })
@@ -210,13 +224,13 @@ fn seed_sets_identical_for_fixed_seed_r_k() {
                     assert_eq!(
                         res.seeds,
                         reference.seeds,
-                        "{}xB{} {memo:?} tau={threads}",
+                        "{}xB{} {memo:?} {schedule} tau={threads}",
                         backend.label(),
                         lanes.label()
                     );
                     assert!(
                         (res.influence - reference.influence).abs() < 1e-9,
-                        "{}xB{} {memo:?} tau={threads}: {} vs {}",
+                        "{}xB{} {memo:?} {schedule} tau={threads}: {} vs {}",
                         backend.label(),
                         lanes.label(),
                         res.influence,

@@ -14,6 +14,7 @@ use infuser::algo::infuser::{make_memo, InfuserMg, InfuserParams, MemoKind};
 use infuser::algo::Budget;
 use infuser::graph::{OrderStrategy, Permutation, WeightModel};
 use infuser::labelprop::{component_sizes, initial_gains, propagate, Mode, PropagateOpts};
+use infuser::runtime::Schedule;
 use infuser::simd::{Backend, LaneWidth};
 use infuser::util::proptest_lite::check;
 use infuser::util::ThreadPool;
@@ -175,8 +176,9 @@ fn gains_bit_identical_across_orderings_backends_lanes_and_memos() {
 #[test]
 fn infuser_seeds_and_sigma_bit_identical_across_the_full_cross_product() {
     // The acceptance criterion verbatim: identity/degree/bfs/hybrid ×
-    // {scalar, avx2} × {8, 16, 32} lanes × {dense, sketch} memo all land
-    // on the identical seed set and the bit-identical σ estimate.
+    // {scalar, avx2} × {8, 16, 32} lanes × {dense, sketch} memo ×
+    // {dynamic, steal} pool schedules all land on the identical seed set
+    // and the bit-identical σ estimate.
     let g = infuser::gen::generate(&infuser::gen::GenSpec::barabasi_albert(400, 2, 3))
         .with_weights(WeightModel::Const(0.08), 5);
     let base = InfuserParams { k: 5, r_count: 64, seed: 7, threads: 2, ..Default::default() };
@@ -186,30 +188,33 @@ fn infuser_seeds_and_sigma_bit_identical_across_the_full_cross_product() {
         for backend in backends() {
             for lanes in LaneWidth::ALL {
                 for memo in [MemoKind::Dense, MemoKind::Sketch] {
-                    let res = InfuserMg::new(InfuserParams {
-                        order,
-                        backend,
-                        lanes,
-                        memo,
-                        ..base
-                    })
-                    .run(&g, &Budget::unlimited())
-                    .unwrap();
-                    assert_eq!(
-                        res.seeds,
-                        reference.seeds,
-                        "{order} {}xB{} {memo:?}",
-                        backend.label(),
-                        lanes.label()
-                    );
-                    assert!(
-                        res.influence.to_bits() == reference.influence.to_bits(),
-                        "{order} {}xB{} {memo:?}: sigma {} vs {}",
-                        backend.label(),
-                        lanes.label(),
-                        res.influence,
-                        reference.influence
-                    );
+                    for schedule in Schedule::ALL {
+                        let res = InfuserMg::new(InfuserParams {
+                            order,
+                            backend,
+                            lanes,
+                            memo,
+                            schedule,
+                            ..base
+                        })
+                        .run(&g, &Budget::unlimited())
+                        .unwrap();
+                        assert_eq!(
+                            res.seeds,
+                            reference.seeds,
+                            "{order} {}xB{} {memo:?} {schedule}",
+                            backend.label(),
+                            lanes.label()
+                        );
+                        assert!(
+                            res.influence.to_bits() == reference.influence.to_bits(),
+                            "{order} {}xB{} {memo:?} {schedule}: sigma {} vs {}",
+                            backend.label(),
+                            lanes.label(),
+                            res.influence,
+                            reference.influence
+                        );
+                    }
                 }
             }
         }
@@ -239,8 +244,8 @@ fn first_seed_path_is_order_invariant_too() {
 #[test]
 fn sync_schedule_and_threads_stay_invariant_under_reordering() {
     // Layout must compose with the other invariance axes: Jacobi vs
-    // Gauss–Seidel and 1 vs 4 workers, all on a non-identity layout,
-    // still produce the reference gains bit-for-bit.
+    // Gauss–Seidel, 1 vs 4 workers, and both pool schedules, all on a
+    // non-identity layout, still produce the reference gains bit-for-bit.
     let g = infuser::gen::generate(&infuser::gen::GenSpec::erdos_renyi(150, 450, 8))
         .with_weights(WeightModel::Uniform(0.0, 0.3), 11);
     let pool = ThreadPool::new(2);
@@ -254,11 +259,14 @@ fn sync_schedule_and_threads_stay_invariant_under_reordering() {
     for order in [OrderStrategy::Degree, OrderStrategy::Bfs, OrderStrategy::Hybrid] {
         for mode in [Mode::Async, Mode::Sync] {
             for threads in [1usize, 4] {
-                let gains = gains_of(&PropagateOpts { order, mode, threads, ..base });
-                assert!(
-                    gains.iter().zip(&reference).all(|(a, b)| a.to_bits() == b.to_bits()),
-                    "{order} {mode:?} tau={threads}"
-                );
+                for schedule in Schedule::ALL {
+                    let gains =
+                        gains_of(&PropagateOpts { order, mode, threads, schedule, ..base });
+                    assert!(
+                        gains.iter().zip(&reference).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "{order} {mode:?} tau={threads} {schedule}"
+                    );
+                }
             }
         }
     }

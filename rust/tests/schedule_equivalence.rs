@@ -1,0 +1,138 @@
+//! Scheduler-equivalence suite for the persistent worker-pool runtime
+//! (the tentpole contract of the scheduler refactor).
+//!
+//! Work distribution — `Schedule::Dynamic`'s shared cursor vs
+//! `Schedule::Steal`'s per-worker deques with chunk stealing — and the
+//! hub-splitting edge-block granularity decide only *which worker* pushes
+//! an edge. Every label commit is a per-lane `fetch_min`, which is
+//! commutative and associative, so the fixpoint label matrix, σ
+//! estimates, marginal gains, and seed sets must be **bit-identical**
+//! across `{Dynamic, Steal}` × `{1, 2, 4, 8}` threads × block sizes.
+//! Traversal bookkeeping (`edge_visits`, `iterations`) is explicitly
+//! *not* pinned: it counts work, which races move between rounds, and σ
+//! must not depend on it.
+
+use infuser::algo::infuser::{make_memo, InfuserMg, InfuserParams, MemoKind};
+use infuser::algo::Budget;
+use infuser::graph::WeightModel;
+use infuser::labelprop::{propagate, Mode, PropagateOpts, DEFAULT_EDGE_BLOCK};
+use infuser::runtime::Schedule;
+use infuser::util::proptest_lite::check;
+use infuser::util::ThreadPool;
+
+#[test]
+fn fixpoints_and_sigma_identical_across_schedules_on_random_graphs() {
+    // The satellite property: per random (graph, seed, R, τ, block size),
+    // Dynamic and Steal land on identical `Labels` fixpoints, and σ-layer
+    // quantities (initial gains) agree bit-for-bit even when the two
+    // runs' edge_visits counters differ.
+    check("schedule-eq", 12, |gen| {
+        let g = gen
+            .gen_graph(60)
+            .with_weights(WeightModel::Uniform(0.05, 0.6), gen.u64());
+        let seed = gen.u64();
+        let r_count = gen.size(1, 40);
+        let threads = gen.size(1, 6);
+        let block_size = [1usize, 3, 64, DEFAULT_EDGE_BLOCK][gen.size(0, 3)];
+        let run = |schedule| {
+            propagate(
+                &g,
+                &PropagateOpts {
+                    r_count,
+                    seed,
+                    threads,
+                    schedule,
+                    block_size,
+                    mode: Mode::Async,
+                    ..Default::default()
+                },
+            )
+        };
+        let dynamic = run(Schedule::Dynamic);
+        let steal = run(Schedule::Steal);
+        assert_eq!(
+            dynamic.labels.data, steal.labels.data,
+            "fixpoints must agree on {} (tau={threads} block={block_size})",
+            g.name
+        );
+        // edge_visits is free to differ between the two runs; σ is not.
+        let pool = ThreadPool::new(2);
+        let gains_d = make_memo(MemoKind::Dense, dynamic.labels).initial_gains(&pool);
+        let gains_s = make_memo(MemoKind::Dense, steal.labels).initial_gains(&pool);
+        assert!(
+            gains_d.iter().zip(&gains_s).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "gains must be bit-identical on {} even if edge_visits differ ({} vs {})",
+            g.name,
+            dynamic.edge_visits,
+            steal.edge_visits
+        );
+    });
+}
+
+#[test]
+fn seed_sets_identical_across_schedules_thread_counts_and_modes() {
+    // The acceptance criterion verbatim: for a fixed (seed, R, K), every
+    // {Dynamic, Steal} × {1, 2, 4, 8} threads × {Async, Sync} combination
+    // returns the identical seed set and the bit-identical σ estimate.
+    let g = infuser::gen::generate(&infuser::gen::GenSpec::barabasi_albert(400, 2, 3))
+        .with_weights(WeightModel::Const(0.08), 5);
+    let base = InfuserParams { k: 5, r_count: 64, seed: 7, threads: 1, ..Default::default() };
+    let reference = InfuserMg::new(base).run(&g, &Budget::unlimited()).unwrap();
+    assert_eq!(reference.seeds.len(), 5);
+    for schedule in Schedule::ALL {
+        for threads in [1usize, 2, 4, 8] {
+            for mode in [Mode::Async, Mode::Sync] {
+                let res = InfuserMg::new(InfuserParams { schedule, threads, mode, ..base })
+                    .run(&g, &Budget::unlimited())
+                    .unwrap();
+                assert_eq!(res.seeds, reference.seeds, "{schedule} tau={threads} {mode:?}");
+                assert!(
+                    res.influence.to_bits() == reference.influence.to_bits(),
+                    "{schedule} tau={threads} {mode:?}: sigma {} vs {}",
+                    res.influence,
+                    reference.influence
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn block_size_is_result_invariant_at_the_algorithm_layer() {
+    // Hub splitting may cut a vertex's adjacency into any number of work
+    // blocks without moving a single seed.
+    let g = infuser::gen::generate(&infuser::gen::GenSpec::barabasi_albert(300, 3, 9))
+        .with_weights(WeightModel::Const(0.1), 2);
+    let base = InfuserParams { k: 4, r_count: 48, seed: 11, threads: 4, ..Default::default() };
+    let reference = InfuserMg::new(base).run(&g, &Budget::unlimited()).unwrap();
+    for block_size in [1usize, 7, 256, DEFAULT_EDGE_BLOCK] {
+        for schedule in Schedule::ALL {
+            let res = InfuserMg::new(InfuserParams { block_size, schedule, ..base })
+                .run(&g, &Budget::unlimited())
+                .unwrap();
+            assert_eq!(res.seeds, reference.seeds, "block={block_size} {schedule}");
+            assert!(
+                res.influence.to_bits() == reference.influence.to_bits(),
+                "block={block_size} {schedule}"
+            );
+        }
+    }
+}
+
+#[test]
+fn zero_threads_matches_one_thread_end_to_end() {
+    // The τ = 0 regression at the algorithm layer: the pool clamps at
+    // construction, so a `threads: 0` run must behave exactly like τ = 1
+    // instead of dividing by zero in the adaptive chunk computation.
+    let g = infuser::gen::generate(&infuser::gen::GenSpec::erdos_renyi(200, 600, 6))
+        .with_weights(WeightModel::Const(0.15), 9);
+    let base = InfuserParams { k: 3, r_count: 32, seed: 13, ..Default::default() };
+    let zero = InfuserMg::new(InfuserParams { threads: 0, ..base })
+        .run(&g, &Budget::unlimited())
+        .unwrap();
+    let one = InfuserMg::new(InfuserParams { threads: 1, ..base })
+        .run(&g, &Budget::unlimited())
+        .unwrap();
+    assert_eq!(zero.seeds, one.seeds);
+    assert!(zero.influence.to_bits() == one.influence.to_bits());
+}
