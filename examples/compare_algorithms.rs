@@ -14,6 +14,7 @@ use infuser::util::args::Args;
 fn main() -> infuser::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let dataset = args.opt("dataset").unwrap_or("nethep-s").to_string();
+    let order = infuser::graph::OrderStrategy::parse(args.opt("order").unwrap_or("identity"))?;
     let cfg = ExperimentConfig {
         datasets: vec![DatasetRef::parse(&dataset)?],
         settings: vec![WeightModel::Const(0.05)],
@@ -26,28 +27,27 @@ fn main() -> infuser::Result<()> {
             AlgoSpec::Imm { epsilon: 0.13 },
         ],
         k: args.get_or("k", 10usize)?,
-        r_count: args.get_or("r", 128usize)?,
-        threads: args.get_or(
-            "threads",
-            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
-        )?,
-        seed: args.get_or("seed", 0u64)?,
-        timeout: std::time::Duration::from_secs(args.get_or("timeout", 300u64)?),
         oracle_r: 1024,
-        backend: infuser::simd::Backend::detect(),
-        lanes: infuser::simd::LaneWidth::parse(args.opt("lanes").unwrap_or("8"))?,
-        memo: infuser::algo::infuser::MemoKind::Dense,
-        orders: vec![infuser::graph::OrderStrategy::parse(
-            args.opt("order").unwrap_or("identity"),
-        )?],
-        imm_memory_limit: None,
+        options: infuser::api::RunOptions::new()
+            .r_count(args.get_or("r", 128usize)?)
+            .threads(args.get_or(
+                "threads",
+                std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
+            )?)
+            .seed(args.get_or("seed", 0u64)?)
+            .lanes(infuser::simd::LaneWidth::parse(args.opt("lanes").unwrap_or("8"))?)
+            .order(order)
+            .timeout(Some(std::time::Duration::from_secs(args.get_or(
+                "timeout", 300u64,
+            )?))),
+        orders: vec![order],
     };
     println!(
         "comparing {} algorithms on {dataset} (K={}, R={}, tau={})\n",
         cfg.algos.len(),
         cfg.k,
-        cfg.r_count,
-        cfg.threads
+        cfg.options.r_count,
+        cfg.options.threads
     );
     let runner = Runner::new(cfg);
     let cells: Vec<CellResult> = runner.run_grid()?;

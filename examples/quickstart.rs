@@ -25,7 +25,11 @@ fn main() -> infuser::Result<()> {
 
     // INFUSER-MG: K=16 seeds from R=256 fused, batched simulations.
     let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
-    let params = InfuserParams { k: 16, r_count: 256, seed: 1, threads, ..Default::default() };
+    let params = InfuserParams {
+        k: 16,
+        common: infuser::api::RunOptions::new().r_count(256).seed(1).threads(threads),
+        ..Default::default()
+    };
     let timer = Timer::start();
     let res = InfuserMg::new(params).run(&graph, &Budget::unlimited())?;
     let secs = timer.secs();

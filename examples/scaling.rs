@@ -29,7 +29,11 @@ fn main() -> infuser::Result<()> {
         let mut row = [0.0f64; 2];
         for (i, p) in [0.01f32, 0.1].iter().enumerate() {
             let g = base.clone().with_weights(WeightModel::Const(*p), 7);
-            let params = InfuserParams { k, r_count: r, seed: 3, threads: tau, ..Default::default() };
+            let params = InfuserParams {
+                k,
+                common: infuser::api::RunOptions::new().r_count(r).seed(3).threads(tau),
+                ..Default::default()
+            };
             let timer = Timer::start();
             let res = InfuserMg::new(params).run(&g, &Budget::unlimited())?;
             row[i] = timer.secs();

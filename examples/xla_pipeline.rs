@@ -78,7 +78,11 @@ fn main() -> infuser::Result<()> {
     println!("\nstage B — memoized marginal gains: identical (max |d| = {max_diff:.1e})");
 
     // ---- Stage C: full INFUSER-MG seed selection with each engine.
-    let params = InfuserParams { k: 16, r_count: 64, seed: 9, threads: 4, ..Default::default() };
+    let params = InfuserParams {
+        k: 16,
+        common: infuser::api::RunOptions::new().r_count(64).seed(9).threads(4),
+        ..Default::default()
+    };
     let t = Timer::start();
     let res_native = InfuserMg::new(params).run_with_engine(&graph, &NativeEngine, &Budget::unlimited())?;
     let sel_native = t.secs();

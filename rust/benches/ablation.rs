@@ -15,6 +15,7 @@ use infuser::algo::fused::{FusedParams, FusedSampling};
 use infuser::algo::infuser::{InfuserMg, InfuserParams};
 use infuser::algo::mixgreedy::{MixGreedy, MixGreedyParams};
 use infuser::algo::Budget;
+use infuser::api::RunOptions;
 use infuser::bench::{ratio_cell, time_it, BenchEnv};
 use infuser::config::DatasetRef;
 use infuser::coordinator::Table;
@@ -53,30 +54,34 @@ fn main() -> infuser::Result<()> {
         let r = env.r;
 
         let (mix, mix_s) = time_it(|| {
-            MixGreedy::new(MixGreedyParams { k, r_count: r, seed: 1, ..Default::default() })
+            MixGreedy::new(MixGreedyParams { k, common: RunOptions::new().r_count(r).seed(1) })
                 .run(&g, &budget())
         });
         let mix_secs = mix.ok().map(|_| mix_s);
         let (fus, fus_s) = time_it(|| {
-            FusedSampling::new(FusedParams { k, r_count: r, seed: 1, lanes: env.lanes, ..Default::default() })
-                .run(&g, &budget())
+            FusedSampling::new(FusedParams {
+                k,
+                common: RunOptions::new().r_count(r).seed(1).lanes(env.lanes),
+            })
+            .run(&g, &budget())
         });
         let fus_secs = fus.ok().map(|_| fus_s);
 
         let base = InfuserParams {
             k,
-            r_count: r,
-            seed: 1,
-            threads: env.threads,
-            lanes: env.lanes,
+            common: RunOptions::new()
+                .r_count(r)
+                .seed(1)
+                .threads(env.threads)
+                .lanes(env.lanes),
             ..Default::default()
         };
-        let scalar = InfuserParams { backend: Backend::Scalar, ..base };
+        let scalar = InfuserParams { common: base.common.backend(Backend::Scalar), ..base };
         let (rs, scalar_s) = time_it(|| InfuserMg::new(scalar).run(&g, &budget()));
         rs?;
         let avx2_available = Backend::detect() != Backend::Scalar;
         let (avx2_s, reevals) = if avx2_available {
-            let fast = InfuserParams { backend: Backend::detect(), ..base };
+            let fast = InfuserParams { common: base.common.backend(Backend::detect()), ..base };
             let (rf, s) = time_it(|| InfuserMg::new(fast).run(&g, &budget()));
             let res = rf?;
             let re = res

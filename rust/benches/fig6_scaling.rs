@@ -35,9 +35,7 @@ fn main() -> infuser::Result<()> {
             for &tau in &taus {
                 let params = InfuserParams {
                     k: env.k,
-                    r_count: env.r,
-                    seed: 3,
-                    threads: tau,
+                    common: infuser::api::RunOptions::new().r_count(env.r).seed(3).threads(tau),
                     ..Default::default()
                 };
                 let (res, secs) =

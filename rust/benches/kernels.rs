@@ -17,10 +17,19 @@
 //!   reporting per-τ edges/sec for both the stealing and the
 //!   shared-cursor dynamic schedules (dumped under `"thread_sweep"`);
 //!   fixpoint equality across the whole sweep is asserted while timing.
+//! * `session` — the prepared-query sweep: one cold one-shot INFUSER-MG
+//!   run vs an [`ImSession`]'s first (state-building) query and its warm
+//!   repeat/K-ladder queries, seeds asserted identical while timing
+//!   (dumped under `"session_reuse"` with `cold_run_secs` /
+//!   `warm_query_secs`).
 //!
 //! `INFUSER_BENCH_SMOKE=1` shrinks everything to CI-smoke scale.
 
+use infuser::algo::infuser::{InfuserMg, InfuserParams};
+use infuser::algo::Budget;
+use infuser::api::{ImSession, Query, RunOptions};
 use infuser::bench::{time_it, BenchEnv};
+use infuser::config::AlgoSpec;
 use infuser::coordinator::Table;
 use infuser::engine::{Engine, NativeEngine};
 use infuser::gen::{self, GenSpec};
@@ -307,23 +316,109 @@ fn bench_threads(env: &BenchEnv) -> (Table, Json) {
     (t, Json::Arr(entries))
 }
 
+/// The prepared-session sweep: the cost of answering the same INFUSER-MG
+/// question cold (one-shot `run`, everything rebuilt) vs through an
+/// [`ImSession`] — the first query builds the warm state, every
+/// subsequent query (same K, larger K, smaller K) is served from it.
+/// Seeds are asserted bit-identical across all paths while timing, so
+/// the sweep doubles as an equivalence soak test at bench scale.
+fn bench_session(env: &BenchEnv) -> infuser::Result<(Table, Json)> {
+    let mut t = Table::new("Session reuse — cold one-shot vs prepared warm queries");
+    t.header(vec![
+        "path".into(),
+        "K".into(),
+        "time (s)".into(),
+        "vs cold".into(),
+    ]);
+    let spec = if env.smoke {
+        GenSpec::erdos_renyi(500, 2_000, 3)
+    } else {
+        GenSpec::rmat(15, 120_000, 77)
+    };
+    let g = gen::generate(&spec).with_weights(WeightModel::Const(0.05), 3);
+    let k = env.k.max(2);
+    let opts = RunOptions::new()
+        .r_count(64)
+        .seed(9)
+        .threads(env.threads)
+        .lanes(env.lanes);
+
+    // Cold baseline: the pre-session API, one-shot.
+    let (cold, cold_secs) = time_it(|| {
+        InfuserMg::new(InfuserParams { k, common: opts, ..Default::default() })
+            .run(&g, &Budget::unlimited())
+    });
+    let cold = cold?;
+
+    // Session: first query pays preprocessing once...
+    let mut session = ImSession::prepare(g, opts)?;
+    let (first, first_secs) = time_it(|| session.query(&Query::new(AlgoSpec::InfuserMg, k)));
+    let first = first?;
+    assert_eq!(first.seeds, cold.seeds, "first session query must equal the cold run");
+
+    // ...then warm queries are nearly free: repeat, ladder up, ladder down.
+    let reps = 5usize;
+    let (_, warm_total) = time_it(|| {
+        for _ in 0..reps {
+            let warm = session.query(&Query::new(AlgoSpec::InfuserMg, k)).unwrap();
+            assert_eq!(warm.seeds, cold.seeds, "warm repeat must equal the cold run");
+        }
+    });
+    let warm_secs = warm_total / reps as f64;
+    let (ladder, ladder_secs) =
+        time_it(|| session.query(&Query::new(AlgoSpec::InfuserMg, k * 2)));
+    let ladder = ladder?;
+    assert_eq!(&ladder.seeds[..k], &cold.seeds[..], "K-ladder must extend the prefix");
+    let (down, down_secs) = time_it(|| session.query(&Query::new(AlgoSpec::InfuserMg, k / 2)));
+    let down = down?;
+    assert_eq!(&down.seeds[..], &cold.seeds[..k / 2], "smaller K is a prefix lookup");
+
+    for (path, kk, secs) in [
+        ("cold one-shot", k, cold_secs),
+        ("session first (builds warm state)", k, first_secs),
+        ("session warm repeat (avg)", k, warm_secs),
+        ("session warm K-ladder", k * 2, ladder_secs),
+        ("session warm prefix", k / 2, down_secs),
+    ] {
+        t.row(vec![
+            path.into(),
+            kk.to_string(),
+            format!("{secs:.4}"),
+            format!("{:.1}x", cold_secs / secs.max(1e-9)),
+        ]);
+    }
+    let json = obj(vec![
+        ("k", Json::Num(k as f64)),
+        ("r", Json::Num(64.0)),
+        ("cold_run_secs", Json::Num(cold_secs)),
+        ("first_query_secs", Json::Num(first_secs)),
+        ("warm_query_secs", Json::Num(warm_secs)),
+        ("warm_ladder_secs", Json::Num(ladder_secs)),
+        ("warm_prefix_secs", Json::Num(down_secs)),
+        ("warm_speedup_vs_cold", Json::Num(cold_secs / warm_secs.max(1e-9))),
+    ]);
+    Ok((t, json))
+}
+
 fn main() -> infuser::Result<()> {
     let env = BenchEnv::load()?;
     env.banner(
-        "Kernel microbenches — VECLABEL lane sweep + propagation engines + ordering + worker-scaling sweeps",
+        "Kernel microbenches — VECLABEL lane sweep + propagation engines + ordering + worker-scaling + session-reuse sweeps",
         "AVX2 processes B lanes/step (8/16/32 = 1/2/4 registers); fused batching serves all R per edge visit",
     );
     let (t1, sweep_json) = bench_veclabel(&env);
     let t2 = bench_propagate(&env)?;
     let (t3, order_json) = bench_order(&env);
     let (t4, thread_json) = bench_threads(&env);
-    env.emit("kernels", &[&t1, &t2, &t3, &t4]);
+    let (t5, session_json) = bench_session(&env)?;
+    env.emit("kernels", &[&t1, &t2, &t3, &t4, &t5]);
     let mut combined = match sweep_json {
         Json::Obj(map) => map,
         other => BTreeMap::from([("veclabel".to_string(), other)]),
     };
     combined.insert("order_sweep".to_string(), order_json);
     combined.insert("thread_sweep".to_string(), thread_json);
+    combined.insert("session_reuse".to_string(), session_json);
     env.emit_json("kernels", &Json::Obj(combined));
     Ok(())
 }

@@ -52,6 +52,93 @@ pub struct CelfStats {
     pub committed: usize,
 }
 
+/// One committed seed from [`CelfState::extend_to`].
+#[derive(Debug, Clone, Copy)]
+pub struct CelfCommit {
+    /// The committed vertex.
+    pub v: VertexId,
+    /// Its marginal gain at commit time.
+    pub gain: f64,
+    /// Cumulative re-evaluations performed when this seed committed —
+    /// exactly what a cold run stopping at this seed would report.
+    pub reevals: u64,
+}
+
+/// Resumable CELF queue state: the lazy-greedy max-heap plus its
+/// statistics, detached from any particular `k`.
+///
+/// The greedy trajectory is deterministic and *prefix-stable*: the heap
+/// after committing `k` seeds is bit-identical whether the caller stopped
+/// at `k` or is midway to a larger target. [`crate::api::ImSession`]
+/// exploits this to extend a warm seed set (`k = 10` → `k = 50`) instead
+/// of recomputing, with results identical to a cold run.
+pub struct CelfState {
+    heap: BinaryHeap<Entry>,
+    stats: CelfStats,
+}
+
+impl CelfState {
+    /// Initialize the queue from the empty-seed-set marginal gains.
+    pub fn new(initial_gains: &[f64]) -> Self {
+        let heap = initial_gains
+            .iter()
+            .enumerate()
+            .map(|(v, &gain)| Entry { gain, v: v as VertexId, round: 0 })
+            .collect();
+        Self { heap, stats: CelfStats::default() }
+    }
+
+    /// Seeds committed so far (across all `extend_to` calls).
+    pub fn committed(&self) -> usize {
+        self.stats.committed
+    }
+
+    /// Cumulative statistics across all `extend_to` calls.
+    pub fn stats(&self) -> CelfStats {
+        self.stats
+    }
+
+    /// Grow the committed prefix to `k` seeds (no-op if already there),
+    /// appending the newly committed seeds to `out` in selection order.
+    ///
+    /// `reeval(v, |S|)` recomputes the marginal gain of `v` against the
+    /// current seed set; `commit(v, gain)` is called as `v` enters the
+    /// seed set. On a budget trip the state stays valid *and observable*:
+    /// every seed committed so far remains committed, and — because `out`
+    /// is an out-parameter rather than a return value — the caller still
+    /// receives the commits that landed before the deadline, so mirrored
+    /// bookkeeping (e.g. [`crate::api::ImSession`]'s warm trajectory)
+    /// never desyncs from the memo state the `commit` callback mutated.
+    pub fn extend_to<E, C>(
+        &mut self,
+        k: usize,
+        mut reeval: E,
+        mut commit: C,
+        budget: &super::Budget,
+        out: &mut Vec<CelfCommit>,
+    ) -> Result<(), super::AlgoError>
+    where
+        E: FnMut(VertexId, usize) -> f64,
+        C: FnMut(VertexId, f64),
+    {
+        while self.stats.committed < k {
+            let Some(top) = self.heap.pop() else { break };
+            if top.round as usize == self.stats.committed {
+                // Fresh for this round: greedy-commit (submodularity).
+                commit(top.v, top.gain);
+                self.stats.committed += 1;
+                out.push(CelfCommit { v: top.v, gain: top.gain, reevals: self.stats.reevals });
+            } else {
+                budget.check()?;
+                let gain = reeval(top.v, self.stats.committed);
+                self.stats.reevals += 1;
+                self.heap.push(Entry { gain, v: top.v, round: self.stats.committed as u32 });
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Run CELF: start from `initial_gains`, select `k` seeds.
 ///
 /// `reeval(v, |S|)` recomputes the marginal gain of `v` against the
@@ -61,40 +148,24 @@ pub struct CelfStats {
 pub fn celf_select<E, C>(
     initial_gains: &[f64],
     k: usize,
-    mut reeval: E,
-    mut commit: C,
+    reeval: E,
+    commit: C,
     budget: &super::Budget,
 ) -> Result<(Vec<VertexId>, f64, CelfStats), super::AlgoError>
 where
     E: FnMut(VertexId, usize) -> f64,
     C: FnMut(VertexId, f64),
 {
-    let mut heap: BinaryHeap<Entry> = initial_gains
-        .iter()
-        .enumerate()
-        .map(|(v, &gain)| Entry { gain, v: v as VertexId, round: 0 })
-        .collect();
-
-    let mut seeds = Vec::with_capacity(k);
+    let mut state = CelfState::new(initial_gains);
+    let mut commits = Vec::new();
+    state.extend_to(k, reeval, commit, budget, &mut commits)?;
+    let mut seeds = Vec::with_capacity(commits.len());
     let mut sigma = 0.0;
-    let mut stats = CelfStats::default();
-
-    while seeds.len() < k {
-        let Some(top) = heap.pop() else { break };
-        if top.round as usize == seeds.len() {
-            // Fresh for this round: greedy-commit (submodularity).
-            commit(top.v, top.gain);
-            sigma += top.gain;
-            seeds.push(top.v);
-            stats.committed += 1;
-        } else {
-            budget.check()?;
-            let gain = reeval(top.v, seeds.len());
-            stats.reevals += 1;
-            heap.push(Entry { gain, v: top.v, round: seeds.len() as u32 });
-        }
+    for c in &commits {
+        seeds.push(c.v);
+        sigma += c.gain;
     }
-    Ok((seeds, sigma, stats))
+    Ok((seeds, sigma, state.stats))
 }
 
 #[cfg(test)]
@@ -135,6 +206,79 @@ mod tests {
         // round 0: 10 committed; round 1: 9 → reeval 4.5, still top → commit.
         assert_eq!(seeds, vec![0, 1]);
         assert!((sigma - 14.5).abs() < 1e-12);
+    }
+
+    /// The warm-reuse invariant: committing in two steps (k=2 then k=4)
+    /// yields the exact trajectory and stats of one cold k=4 run.
+    #[test]
+    fn extend_to_is_prefix_stable() {
+        crate::util::proptest_lite::check("celf-extend-prefix", 20, |g| {
+            let n = g.size(4, 24);
+            let sets: Vec<u64> = (0..n).map(|_| g.u64()).collect();
+            let init: Vec<f64> = sets.iter().map(|s| s.count_ones() as f64).collect();
+            let run = |targets: &[usize]| {
+                let covered = std::cell::Cell::new(0u64);
+                let mut st = CelfState::new(&init);
+                let mut commits = Vec::new();
+                for &k in targets {
+                    st.extend_to(
+                        k,
+                        |v, _| (sets[v as usize] & !covered.get()).count_ones() as f64,
+                        |v, _| covered.set(covered.get() | sets[v as usize]),
+                        &Budget::unlimited(),
+                        &mut commits,
+                    )
+                    .unwrap();
+                }
+                (commits, st.stats())
+            };
+            let k = g.size(2, n.min(6));
+            let (warm, warm_stats) = run(&[k / 2, k]);
+            let (cold, cold_stats) = run(&[k]);
+            assert_eq!(warm.len(), cold.len());
+            for (w, c) in warm.iter().zip(&cold) {
+                assert_eq!(w.v, c.v);
+                assert_eq!(w.gain.to_bits(), c.gain.to_bits());
+                assert_eq!(w.reevals, c.reevals);
+            }
+            assert_eq!(warm_stats.reevals, cold_stats.reevals);
+            assert_eq!(warm_stats.committed, cold_stats.committed);
+        });
+    }
+
+    /// A budget trip mid-extension must still hand the caller every seed
+    /// that committed before the deadline (they already mutated the
+    /// caller's covered state via `commit`), and the queue must resume
+    /// afterwards exactly where a cold run would have been.
+    #[test]
+    fn budget_trip_delivers_partial_commits_and_resumes() {
+        let init = vec![10.0, 9.0, 1.0];
+        let reeval = |v: crate::VertexId, _: usize| init[v as usize] / 2.0;
+        let expired = Budget::timeout(std::time::Duration::ZERO);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+
+        let mut st = CelfState::new(&init);
+        let mut commits = Vec::new();
+        // The first pop is fresh (round 0, nothing committed) and greedy-
+        // commits before any deadline check; the second pop is stale and
+        // trips the budget before its re-evaluation.
+        let err = st.extend_to(2, reeval, |_, _| {}, &expired, &mut commits).unwrap_err();
+        assert!(matches!(err, crate::algo::AlgoError::TimedOut));
+        assert_eq!(commits.len(), 1, "the pre-deadline commit must be visible");
+        assert_eq!(commits[0].v, 0);
+        assert_eq!(st.committed(), 1);
+
+        // Resume with an unarmed budget: the combined trajectory equals a
+        // cold two-seed run.
+        st.extend_to(2, reeval, |_, _| {}, &Budget::unlimited(), &mut commits).unwrap();
+        let mut cold = CelfState::new(&init);
+        let mut cold_commits = Vec::new();
+        cold.extend_to(2, reeval, |_, _| {}, &Budget::unlimited(), &mut cold_commits).unwrap();
+        assert_eq!(commits.len(), cold_commits.len());
+        for (a, b) in commits.iter().zip(&cold_commits) {
+            assert_eq!(a.v, b.v);
+            assert_eq!(a.gain.to_bits(), b.gain.to_bits());
+        }
     }
 
     #[test]

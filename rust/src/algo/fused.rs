@@ -11,56 +11,33 @@
 
 use super::celf::celf_select;
 use super::{Budget, ImResult};
-use crate::graph::{Graph, OrderStrategy, Permutation};
-use crate::runtime::pool::{default_threads, Schedule};
+use crate::api::RunOptions;
+use crate::graph::{Graph, Permutation};
 use crate::sampling::{edge_alive, xr_word};
 use crate::simd::LaneWidth;
 use crate::util::ThreadPool;
 use crate::VertexId;
 use std::sync::atomic::{AtomicBool, Ordering};
 
-/// FUSEDSAMPLING parameters.
+/// FUSEDSAMPLING parameters. Everything but `k` is the shared
+/// [`RunOptions`] geometry; of it this variant uses `r_count`, `seed`,
+/// `threads` (NEWGREEDY rounds are hash-keyed, hence embarrassingly
+/// parallel with bit-identical integer-f64 sums; the CELF phase stays
+/// serial, as in the paper), `schedule`, `lanes` (the CELF phase's
+/// batched RANDCAS — `B` simulations share one BFS with width-invariant
+/// σ), and `order` (aliveness hashes original endpoint ids, so seeds are
+/// bit-identical in every layout).
 #[derive(Clone, Copy, Debug)]
 pub struct FusedParams {
     /// Seed-set size K.
     pub k: usize,
-    /// Monte-Carlo simulations per estimate R.
-    pub r_count: usize,
-    /// Run seed (drives the X_r stream — same contract as INFUSER-MG).
-    pub seed: u64,
-    /// Worker threads τ for the NEWGREEDY initialization (simulation
-    /// rounds are hash-keyed, hence embarrassingly parallel; gains
-    /// accumulate integer-valued `f64`s, which stay exact below 2⁵³, so
-    /// results are bit-identical for every τ). The CELF phase stays
-    /// serial, as in the paper.
-    pub threads: usize,
-    /// Work-distribution policy of the worker-pool runtime
-    /// ([`crate::runtime::pool`]). Result-invariant; throughput knob.
-    pub schedule: Schedule,
-    /// Lane batch width for the CELF phase's RANDCAS traversals: `B`
-    /// simulations share one BFS via per-vertex lane bitmasks
-    /// ([`randcas_fused_batched`]). σ estimates are identical for every
-    /// width (per-lane reachability is batch-invariant).
-    pub lanes: LaneWidth,
-    /// Vertex-reordering strategy for the traversal layout
-    /// ([`crate::graph::order`]). The hash-based sampler keys aliveness
-    /// to original endpoint ids and the CELF phase ranks and tie-breaks
-    /// in original id space, so σ and seeds are bit-identical for every
-    /// strategy — only traversal locality moves.
-    pub order: OrderStrategy,
+    /// Shared run geometry.
+    pub common: RunOptions,
 }
 
 impl Default for FusedParams {
     fn default() -> Self {
-        Self {
-            k: 50,
-            r_count: 100,
-            seed: 0,
-            threads: default_threads(),
-            schedule: Schedule::default(),
-            lanes: LaneWidth::default(),
-            order: OrderStrategy::Identity,
-        }
+        Self { k: 50, common: RunOptions::default().r_count(100) }
     }
 }
 
@@ -316,10 +293,10 @@ impl FusedSampling {
     /// re-evaluation), so ranking and tie-breaks — and therefore seeds
     /// and σ — are bit-identical to the identity layout.
     pub fn run(&self, graph: &Graph, budget: &Budget) -> crate::Result<ImResult> {
-        if self.params.order.is_identity() {
+        if self.params.common.order.is_identity() {
             return self.run_on(graph, None, budget);
         }
-        let (rg, perm) = graph.reordered(self.params.order);
+        let (rg, perm) = graph.reordered(self.params.common.order);
         self.run_on(&rg, Some(&perm), budget)
     }
 
@@ -332,10 +309,11 @@ impl FusedSampling {
         budget: &Budget,
     ) -> crate::Result<ImResult> {
         let p = self.params;
+        let c = p.common;
         let n = graph.num_vertices();
         let to_row = |v: VertexId| perm.map_or(v, |pm| pm.apply(v));
-        let pool = ThreadPool::with_schedule(p.threads, p.schedule);
-        let mg_rows = fused_initial_gains(graph, p.r_count, p.seed, &pool, budget)?;
+        let pool = ThreadPool::with_schedule(c.threads, c.schedule);
+        let mg_rows = fused_initial_gains(graph, c.r_count, c.seed, &pool, budget)?;
         // Gains indexed by original id (a pure gather — values untouched).
         let mg: Vec<f64> = match perm {
             None => mg_rows,
@@ -361,8 +339,8 @@ impl FusedSampling {
                 // Fresh X_r block per re-evaluation (disjoint offsets) —
                 // mirrors MIXGREEDY consuming fresh randomness per RANDCAS.
                 reeval_counter += 1;
-                let off = p.r_count * reeval_counter;
-                match randcas_fused_batched(graph, &trial, p.r_count, p.seed, off, p.lanes, budget)
+                let off = c.r_count * reeval_counter;
+                match randcas_fused_batched(graph, &trial, c.r_count, c.seed, off, c.lanes, budget)
                 {
                     Ok(s) => s - sigma_s.get(),
                     Err(e) => {
@@ -396,6 +374,7 @@ impl FusedSampling {
 mod tests {
     use super::*;
     use crate::graph::{GraphBuilder, WeightModel};
+    use crate::runtime::pool::Schedule;
 
     fn star(n: usize, p: f32) -> Graph {
         let mut b = GraphBuilder::new(n);
@@ -475,9 +454,12 @@ mod tests {
     #[test]
     fn hub_first_on_star() {
         let g = star(24, 0.5);
-        let res = FusedSampling::new(FusedParams { k: 2, r_count: 128, seed: 3, ..Default::default() })
-            .run(&g, &Budget::unlimited())
-            .unwrap();
+        let res = FusedSampling::new(FusedParams {
+            k: 2,
+            common: RunOptions::new().r_count(128).seed(3),
+        })
+        .run(&g, &Budget::unlimited())
+        .unwrap();
         assert_eq!(res.seeds[0], 0);
     }
 
@@ -521,14 +503,19 @@ mod tests {
     fn lane_width_does_not_change_fused_seeds() {
         let g = crate::gen::generate(&crate::gen::GenSpec::erdos_renyi(80, 240, 9))
             .with_weights(WeightModel::Const(0.15), 4);
-        let reference = FusedSampling::new(FusedParams { k: 3, r_count: 64, seed: 5, ..Default::default() })
+        let reference = FusedSampling::new(FusedParams {
+            k: 3,
+            common: RunOptions::new().r_count(64).seed(5),
+        })
+        .run(&g, &Budget::unlimited())
+        .unwrap();
+        for lanes in LaneWidth::ALL {
+            let res = FusedSampling::new(FusedParams {
+                k: 3,
+                common: RunOptions::new().r_count(64).seed(5).lanes(lanes),
+            })
             .run(&g, &Budget::unlimited())
             .unwrap();
-        for lanes in LaneWidth::ALL {
-            let res =
-                FusedSampling::new(FusedParams { k: 3, r_count: 64, seed: 5, lanes, ..Default::default() })
-                    .run(&g, &Budget::unlimited())
-                    .unwrap();
             assert_eq!(res.seeds, reference.seeds, "lanes {lanes}");
             assert!((res.influence - reference.influence).abs() < 1e-12, "lanes {lanes}");
         }

@@ -17,13 +17,17 @@
 //! while INFUSER-MG's stays flat.
 
 use super::{Budget, ImResult};
+use crate::api::RunOptions;
 use crate::graph::Graph;
 use crate::rng::{Pcg32, Rng32};
-use crate::runtime::pool::{default_threads, Schedule};
 use crate::util::ThreadPool;
 use crate::VertexId;
 
-/// IMM parameters.
+/// IMM parameters: the RIS-specific knobs plus the shared [`RunOptions`]
+/// geometry, of which IMM uses `seed`, `threads`, `schedule` (RR-set
+/// generation is result-invariant: each RR set owns a deterministic RNG
+/// stream) and `imm_memory_limit` (the cap on tracked RR bytes that
+/// models the paper's OOM "-" cells).
 #[derive(Clone, Copy, Debug)]
 pub struct ImmParams {
     /// Seed-set size K.
@@ -32,29 +36,13 @@ pub struct ImmParams {
     pub epsilon: f64,
     /// Failure-probability exponent ℓ (guarantee holds w.p. 1 − n^−ℓ).
     pub ell: f64,
-    /// Run seed.
-    pub seed: u64,
-    /// Worker threads for RR-set generation.
-    pub threads: usize,
-    /// Work-distribution policy of the worker-pool runtime used for
-    /// RR-set generation (result-invariant: each RR set owns a
-    /// deterministic RNG stream).
-    pub schedule: Schedule,
-    /// Optional cap on tracked RR bytes (models the paper's OOM "-" cells).
-    pub memory_limit: Option<u64>,
+    /// Shared run geometry.
+    pub common: RunOptions,
 }
 
 impl Default for ImmParams {
     fn default() -> Self {
-        Self {
-            k: 50,
-            epsilon: 0.13,
-            ell: 1.0,
-            seed: 0,
-            threads: default_threads(),
-            schedule: Schedule::default(),
-            memory_limit: None,
-        }
+        Self { k: 50, epsilon: 0.13, ell: 1.0, common: RunOptions::default() }
     }
 }
 
@@ -241,7 +229,8 @@ impl Imm {
             let mut out = Vec::with_capacity(hi.saturating_sub(lo));
             for i in lo..hi {
                 let id = base + i as u64;
-                let mut rng = Pcg32::from_seed_stream(p.seed, id.wrapping_mul(2).wrapping_add(1));
+                let mut rng =
+                    Pcg32::from_seed_stream(p.common.seed, id.wrapping_mul(2).wrapping_add(1));
                 let root = rng.below(n as u32);
                 out.push(rr_set(graph, root, &mut rng, &mut visited, i as u32, &mut queue));
             }
@@ -253,7 +242,7 @@ impl Imm {
                 // push the pool past the limit is rejected, so tracked
                 // bytes never overshoot the configured budget (Table 6's
                 // OOM cells model a cap, not a high-water mark).
-                if let Some(limit) = p.memory_limit {
+                if let Some(limit) = p.common.imm_memory_limit {
                     let would_be = pool_sets.bytes_with(set.len());
                     if would_be > limit {
                         return Err(super::AlgoError::OutOfMemory(would_be).into());
@@ -292,7 +281,7 @@ impl Imm {
             .powi(2);
 
         // One persistent worker pool for every sampling round.
-        let tp = ThreadPool::with_schedule(p.threads, p.schedule);
+        let tp = ThreadPool::with_schedule(p.common.threads, p.common.schedule);
         let mut pool = RrPool::new();
         let mut round_counter = 0u64;
         let mut lb = 1.0f64;
@@ -359,9 +348,14 @@ mod tests {
     #[test]
     fn hub_first_on_star() {
         let g = star(40, 0.3);
-        let res = Imm::new(ImmParams { k: 2, epsilon: 0.3, seed: 4, threads: 2, ..Default::default() })
-            .run(&g, &Budget::unlimited())
-            .unwrap();
+        let res = Imm::new(ImmParams {
+            k: 2,
+            epsilon: 0.3,
+            common: RunOptions::new().seed(4).threads(2),
+            ..Default::default()
+        })
+        .run(&g, &Budget::unlimited())
+        .unwrap();
         assert_eq!(res.seeds[0], 0, "hub must dominate coverage");
     }
 
@@ -369,12 +363,18 @@ mod tests {
     fn smaller_epsilon_generates_more_rr_sets() {
         let g = crate::gen::generate(&GenSpec::erdos_renyi(200, 600, 2))
             .with_weights(WeightModel::Const(0.05), 3);
-        let loose = Imm::new(ImmParams { k: 5, epsilon: 0.5, seed: 1, ..Default::default() })
+        let at_eps = |epsilon: f64| {
+            Imm::new(ImmParams {
+                k: 5,
+                epsilon,
+                common: RunOptions::new().seed(1),
+                ..Default::default()
+            })
             .run(&g, &Budget::unlimited())
-            .unwrap();
-        let tight = Imm::new(ImmParams { k: 5, epsilon: 0.13, seed: 1, ..Default::default() })
-            .run(&g, &Budget::unlimited())
-            .unwrap();
+            .unwrap()
+        };
+        let loose = at_eps(0.5);
+        let tight = at_eps(0.13);
         let rr = |r: &ImResult| r.counters.iter().find(|c| c.0 == "rr_sets").unwrap().1;
         assert!(
             rr(&tight) > rr(&loose) * 2.0,
@@ -411,9 +411,7 @@ mod tests {
             let imm = Imm::new(ImmParams {
                 k: 4,
                 epsilon: 0.3,
-                seed: 9,
-                threads: 2,
-                memory_limit: limit,
+                common: RunOptions::new().seed(9).threads(2).imm_memory_limit(limit),
                 ..Default::default()
             });
             let tp = ThreadPool::new(2);
@@ -448,8 +446,7 @@ mod tests {
         let out = Imm::new(ImmParams {
             k: 10,
             epsilon: 0.13,
-            seed: 2,
-            memory_limit: Some(10_000),
+            common: RunOptions::new().seed(2).imm_memory_limit(Some(10_000)),
             ..Default::default()
         })
         .run(&g, &Budget::unlimited());
@@ -463,9 +460,14 @@ mod tests {
         // percent of the mt19937 oracle on a mid-size instance.
         let g = crate::gen::generate(&GenSpec::barabasi_albert(400, 3, 9))
             .with_weights(WeightModel::Const(0.1), 4);
-        let res = Imm::new(ImmParams { k: 8, epsilon: 0.2, seed: 6, threads: 2, ..Default::default() })
-            .run(&g, &Budget::unlimited())
-            .unwrap();
+        let res = Imm::new(ImmParams {
+            k: 8,
+            epsilon: 0.2,
+            common: RunOptions::new().seed(6).threads(2),
+            ..Default::default()
+        })
+        .run(&g, &Budget::unlimited())
+        .unwrap();
         let oracle = crate::algo::oracle::influence_score(
             &g,
             &res.seeds,
@@ -480,9 +482,14 @@ mod tests {
         let g = crate::gen::generate(&GenSpec::erdos_renyi(150, 450, 5))
             .with_weights(WeightModel::Const(0.1), 8);
         let mk = |t: usize| {
-            Imm::new(ImmParams { k: 4, epsilon: 0.4, seed: 12, threads: t, ..Default::default() })
-                .run(&g, &Budget::unlimited())
-                .unwrap()
+            Imm::new(ImmParams {
+                k: 4,
+                epsilon: 0.4,
+                common: RunOptions::new().seed(12).threads(t),
+                ..Default::default()
+            })
+            .run(&g, &Budget::unlimited())
+            .unwrap()
         };
         let a = mk(1);
         let b = mk(4);

@@ -22,11 +22,10 @@
 
 use super::celf::celf_select;
 use super::{Budget, ImResult};
+use crate::api::RunOptions;
 use crate::engine::Engine;
-use crate::graph::{Graph, OrderStrategy};
-use crate::labelprop::{self, Labels, Mode, PropagateOpts, DEFAULT_EDGE_BLOCK};
-use crate::runtime::pool::{default_threads, Schedule};
-use crate::simd::{Backend, LaneWidth};
+use crate::graph::Graph;
+use crate::labelprop::{self, Labels, Mode};
 use crate::sketch::SketchMemo;
 use crate::util::ThreadPool;
 
@@ -156,57 +155,25 @@ pub(crate) fn union_sigma(
     total as f64 / r as f64
 }
 
-/// INFUSER-MG parameters.
+/// INFUSER-MG parameters: the algorithm-specific knobs plus the shared
+/// [`RunOptions`] geometry (`r_count`, `seed`, `threads`, `backend`,
+/// `lanes`, `schedule`, `block_size`, `memo`, `order` — see
+/// [`crate::api::RunOptions`] for each knob's invariance contract).
 #[derive(Clone, Copy, Debug)]
 pub struct InfuserParams {
     /// Seed-set size K.
     pub k: usize,
-    /// Monte-Carlo simulations R (label-matrix lanes).
-    pub r_count: usize,
-    /// Run seed (drives the `X_r` stream).
-    pub seed: u64,
-    /// Worker threads τ.
-    pub threads: usize,
-    /// VECLABEL backend (scalar / AVX2).
-    pub backend: Backend,
-    /// VECLABEL lane batch width `B ∈ {8, 16, 32}`. Result-invariant: the
-    /// memo label layout is the same row-major `n × R` matrix for every
-    /// width (both [`DenseMemo`] and [`crate::sketch::SketchMemo`] index
-    /// it as `l·R + lane`), so seeds are identical — only kernel
-    /// throughput moves.
-    pub lanes: LaneWidth,
-    /// Propagation schedule (async Gauss–Seidel / sync Jacobi).
+    /// Propagation schedule (async Gauss–Seidel / sync Jacobi) — the one
+    /// INFUSER-specific execution knob (the Jacobi schedule exists for
+    /// bit-for-bit XLA cross-checks).
     pub mode: Mode,
-    /// Work-distribution policy of the worker-pool runtime
-    /// ([`crate::runtime::pool`]). Result-invariant; throughput knob.
-    pub schedule: Schedule,
-    /// Hub-splitting edge-block granularity for the propagation stage
-    /// ([`PropagateOpts::block_size`]). Result-invariant; throughput knob.
-    pub block_size: usize,
-    /// Memoization backend for the CELF phase (dense / sketch).
-    pub memo: MemoKind,
-    /// Vertex-reordering strategy for the propagation stage's memory
-    /// layout ([`crate::graph::order`]). Result-invariant: labels come
-    /// back in original row order and sampling hashes original endpoint
-    /// ids, so σ, gains, and seeds are bit-identical for every strategy.
-    pub order: OrderStrategy,
+    /// Shared run geometry.
+    pub common: RunOptions,
 }
 
 impl Default for InfuserParams {
     fn default() -> Self {
-        Self {
-            k: 50,
-            r_count: 256,
-            seed: 0,
-            threads: default_threads(),
-            backend: Backend::detect(),
-            lanes: LaneWidth::default(),
-            mode: Mode::Async,
-            schedule: Schedule::default(),
-            block_size: DEFAULT_EDGE_BLOCK,
-            memo: MemoKind::Dense,
-            order: OrderStrategy::Identity,
-        }
+        Self { k: 50, mode: Mode::Async, common: RunOptions::default() }
     }
 }
 
@@ -333,25 +300,15 @@ impl InfuserMg {
         let p = self.params;
 
         // ---- Stage 1: NEWGREEDYSTEP-VEC (Alg. 7 line 1).
-        let opts = PropagateOpts {
-            r_count: p.r_count,
-            seed: p.seed,
-            threads: p.threads,
-            backend: p.backend,
-            lanes: p.lanes,
-            mode: p.mode,
-            schedule: p.schedule,
-            block_size: p.block_size,
-            order: p.order,
-        };
+        let opts = p.common.propagate_opts(p.mode);
         let prop = engine.propagate(graph, &opts)?;
         budget.check()?;
         // The CELF-phase pool is built only after the propagation stage
         // (which runs its own) so two worker sets never coexist.
-        let pool = ThreadPool::with_schedule(p.threads, p.schedule);
+        let pool = ThreadPool::with_schedule(p.common.threads, p.common.schedule);
         let iterations = prop.iterations;
         let edge_visits = prop.edge_visits;
-        let mut memo = make_memo(p.memo, prop.labels);
+        let mut memo = make_memo(p.common.memo, prop.labels);
         let mg0 = memo.initial_gains(&pool);
         budget.check()?;
         let tracked = memo.bytes() + (mg0.len() * 8) as u64;
@@ -384,22 +341,13 @@ impl InfuserMg {
     /// skipping the CELF phase entirely.
     pub fn run_first_seed(&self, graph: &Graph, budget: &Budget) -> crate::Result<ImResult> {
         let p = self.params;
-        let opts = PropagateOpts {
-            r_count: p.r_count,
-            seed: p.seed,
-            threads: p.threads,
-            backend: p.backend,
-            lanes: p.lanes,
-            mode: p.mode,
-            schedule: p.schedule,
-            block_size: p.block_size,
-            order: p.order,
-        };
+        let opts = p.common.propagate_opts(p.mode);
         let prop = labelprop::propagate(graph, &opts);
         budget.check()?;
-        let pool = ThreadPool::with_schedule(p.threads, p.schedule);
-        let memo = make_memo(p.memo, prop.labels);
+        let pool = ThreadPool::with_schedule(p.common.threads, p.common.schedule);
+        let memo = make_memo(p.common.memo, prop.labels);
         let mg = memo.initial_gains(&pool);
+        budget.check()?;
         // Argmax with the CELF heap's tie-break: on equal gains the
         // smallest vertex id wins (`Entry::cmp` in `celf.rs` makes the
         // smallest id the greatest entry), so a K=1 run picks exactly the
@@ -407,6 +355,9 @@ impl InfuserMg {
         // `first_seed_tiebreak_matches_celf_on_exact_ties`.
         let (mut best, mut gain) = (0u32, mg.first().copied().unwrap_or(0.0));
         for (v, &g) in mg.iter().enumerate().skip(1) {
+            if v % 4096 == 0 {
+                budget.check()?;
+            }
             if g > gain {
                 best = v as u32;
                 gain = g;
@@ -427,10 +378,19 @@ mod tests {
     use crate::algo::fused::randcas_fused;
     use crate::gen::GenSpec;
     use crate::graph::{GraphBuilder, WeightModel};
+    use crate::labelprop::PropagateOpts;
     use crate::util::proptest_lite::check;
 
     fn params(k: usize, r: usize, seed: u64) -> InfuserParams {
-        InfuserParams { k, r_count: r, seed, threads: 2, ..Default::default() }
+        InfuserParams {
+            k,
+            common: RunOptions::new().r_count(r).seed(seed).threads(2),
+            ..Default::default()
+        }
+    }
+
+    fn with_memo(p: InfuserParams, memo: MemoKind) -> InfuserParams {
+        InfuserParams { common: p.common.memo(memo), ..p }
     }
 
     #[test]
@@ -565,10 +525,9 @@ mod tests {
         let g = crate::gen::generate(&GenSpec::barabasi_albert(400, 2, 3))
             .with_weights(WeightModel::Const(0.08), 5);
         let dense = InfuserMg::new(params(5, 64, 7)).run(&g, &Budget::unlimited()).unwrap();
-        let sketch =
-            InfuserMg::new(InfuserParams { memo: MemoKind::Sketch, ..params(5, 64, 7) })
-                .run(&g, &Budget::unlimited())
-                .unwrap();
+        let sketch = InfuserMg::new(with_memo(params(5, 64, 7), MemoKind::Sketch))
+            .run(&g, &Budget::unlimited())
+            .unwrap();
         assert_eq!(dense.seeds, sketch.seeds);
         assert!((dense.influence - sketch.influence).abs() < 1e-9);
         assert!(
@@ -583,12 +542,25 @@ mod tests {
     fn run_first_seed_honors_memo_kind() {
         let g = crate::gen::generate(&GenSpec::erdos_renyi(150, 400, 4))
             .with_weights(WeightModel::Const(0.2), 6);
-        let p = InfuserParams { memo: MemoKind::Sketch, ..params(1, 64, 3) };
+        let p = with_memo(params(1, 64, 3), MemoKind::Sketch);
         let dense_first =
             InfuserMg::new(params(1, 64, 3)).run_first_seed(&g, &Budget::unlimited()).unwrap();
         let sketch_first = InfuserMg::new(p).run_first_seed(&g, &Budget::unlimited()).unwrap();
         assert_eq!(dense_first.seeds, sketch_first.seeds);
         assert!(sketch_first.tracked_bytes < dense_first.tracked_bytes);
+    }
+
+    #[test]
+    fn run_first_seed_honors_the_budget() {
+        // Regression for the budget-enforcement gap: the K=1 fast path
+        // must trip on an expired deadline like the full run does.
+        let g = crate::gen::generate(&GenSpec::erdos_renyi(150, 400, 4))
+            .with_weights(WeightModel::Const(0.2), 6);
+        let budget = Budget::timeout(std::time::Duration::from_millis(1));
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let out = InfuserMg::new(params(1, 32, 3)).run_first_seed(&g, &budget);
+        assert!(out.is_err());
+        assert!(crate::algo::is_timeout(&out.unwrap_err()));
     }
 
     #[test]
@@ -604,12 +576,14 @@ mod tests {
     fn deterministic_across_thread_counts() {
         let g = crate::gen::generate(&GenSpec::barabasi_albert(300, 2, 8))
             .with_weights(WeightModel::Const(0.15), 2);
-        let r1 = InfuserMg::new(InfuserParams { threads: 1, ..params(6, 64, 5) })
-            .run(&g, &Budget::unlimited())
-            .unwrap();
-        let r8 = InfuserMg::new(InfuserParams { threads: 8, ..params(6, 64, 5) })
-            .run(&g, &Budget::unlimited())
-            .unwrap();
+        let at_tau = |threads: usize| {
+            let p = params(6, 64, 5);
+            InfuserMg::new(InfuserParams { common: p.common.threads(threads), ..p })
+                .run(&g, &Budget::unlimited())
+                .unwrap()
+        };
+        let r1 = at_tau(1);
+        let r8 = at_tau(8);
         assert_eq!(r1.seeds, r8.seeds);
         assert!((r1.influence - r8.influence).abs() < 1e-9);
     }

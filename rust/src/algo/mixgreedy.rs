@@ -16,54 +16,38 @@
 
 use super::celf::celf_select;
 use super::{Budget, ImResult};
+use crate::api::RunOptions;
 use crate::graph::{Graph, OrderStrategy};
 use crate::rng::{Pcg32, Rng32};
-use crate::runtime::pool::Schedule;
 use crate::util::par::as_send_cells;
 use crate::util::ThreadPool;
 use crate::VertexId;
 
-/// MIXGREEDY parameters.
+/// MIXGREEDY parameters. Everything but `k` is the shared [`RunOptions`]
+/// geometry; of it the baseline uses `r_count`, `seed`, `threads` (only
+/// the result-invariant per-sample gain scatter fans out — the sampling
+/// and traversal stream stays serial, as the paper runs the baseline at
+/// τ = 1), `schedule`, and `order` (seeds are mapped back to original
+/// ids).
+///
+/// Ordering caveat: unlike the hash-fused family (FUSEDSAMPLING,
+/// INFUSER-MG), the classical baseline consumes its RNG stream
+/// *positionally* — one draw per edge in CSR iteration order — so a
+/// relabeled graph pairs different draws with different edges: the
+/// estimate is statistically equivalent but **not** bit-identical across
+/// layouts. That contrast is the point of the orig-id hashing invariant
+/// the fused sampler gets for free.
 #[derive(Clone, Copy, Debug)]
 pub struct MixGreedyParams {
     /// Seed-set size K.
     pub k: usize,
-    /// Monte-Carlo simulations per estimate R.
-    pub r_count: usize,
-    /// Run seed.
-    pub seed: u64,
-    /// Worker threads for the per-sample gain scatter of the NEWGREEDY
-    /// step. The sampling and traversal stream stays serial (the
-    /// classical baseline consumes one positional RNG stream, and the
-    /// paper runs MIXGREEDY at τ = 1), and the scatter writes disjoint
-    /// slots once per round, so results are bit-identical for every τ.
-    pub threads: usize,
-    /// Work-distribution policy of the worker-pool runtime
-    /// ([`crate::runtime::pool`]). Result-invariant; throughput knob.
-    pub schedule: Schedule,
-    /// Vertex-reordering strategy for the traversal layout
-    /// ([`crate::graph::order`]). Seeds are mapped back to original ids.
-    ///
-    /// Unlike the hash-fused family (FUSEDSAMPLING, INFUSER-MG), the
-    /// classical baseline consumes its RNG stream *positionally* — one
-    /// draw per edge in CSR iteration order — so a relabeled graph pairs
-    /// different draws with different edges: the estimate is
-    /// statistically equivalent but **not** bit-identical across
-    /// layouts. That contrast is the point of the orig-id hashing
-    /// invariant the fused sampler gets for free.
-    pub order: OrderStrategy,
+    /// Shared run geometry.
+    pub common: RunOptions,
 }
 
 impl Default for MixGreedyParams {
     fn default() -> Self {
-        Self {
-            k: 50,
-            r_count: 100,
-            seed: 0,
-            threads: crate::runtime::pool::default_threads(),
-            schedule: Schedule::default(),
-            order: OrderStrategy::Identity,
-        }
+        Self { k: 50, common: RunOptions::default().r_count(100) }
     }
 }
 
@@ -203,12 +187,12 @@ impl MixGreedy {
 
     /// Run MIXGREEDY (Alg. 3). A non-identity `order` relabels the graph
     /// for traversal locality; seeds are mapped back to original ids (see
-    /// [`MixGreedyParams::order`] for the bit-determinism caveat).
+    /// [`MixGreedyParams`] for the bit-determinism caveat).
     pub fn run(&self, graph: &Graph, budget: &Budget) -> crate::Result<ImResult> {
-        if !self.params.order.is_identity() {
-            let (rg, _perm) = graph.reordered(self.params.order);
+        if !self.params.common.order.is_identity() {
+            let (rg, _perm) = graph.reordered(self.params.common.order);
             let identity = MixGreedy::new(MixGreedyParams {
-                order: OrderStrategy::Identity,
+                common: self.params.common.order(OrderStrategy::Identity),
                 ..self.params
             });
             let mut res = identity.run(&rg, budget)?;
@@ -218,18 +202,19 @@ impl MixGreedy {
             return Ok(res);
         }
         let p = self.params;
+        let c = p.common;
         let n = graph.num_vertices();
-        let mut rng = Pcg32::from_seed_stream(p.seed, 0x317);
+        let mut rng = Pcg32::from_seed_stream(c.seed, 0x317);
         let mut tracked: u64 = 0;
-        let pool = ThreadPool::with_schedule(p.threads, p.schedule);
+        let pool = ThreadPool::with_schedule(c.threads, c.schedule);
 
         // ---- NEWGREEDY step (Alg. 1, K = 1): initial marginal gains.
         // Sampling and component labelling stay serial (one positional
-        // RNG stream — see `MixGreedyParams::order`); the per-vertex gain
+        // RNG stream — see `MixGreedyParams`); the per-vertex gain
         // scatter fans out on the pool, each slot written once per round
         // in round order, so gains are bit-identical for every τ.
         let mut mg = vec![0f64; n];
-        for _ in 0..p.r_count {
+        for _ in 0..c.r_count {
             budget.check()?;
             let sub = sample_subgraph(graph, &mut rng);
             let (comp, sizes) = components(&sub);
@@ -247,13 +232,13 @@ impl MixGreedy {
             }
         }
         for g in mg.iter_mut() {
-            *g /= p.r_count as f64;
+            *g /= c.r_count as f64;
         }
 
         // ---- CELF phase: every re-evaluation is a fresh RANDCAS batch.
         let current_seeds: std::cell::RefCell<Vec<VertexId>> = std::cell::RefCell::new(Vec::new());
         let sigma_s = std::cell::Cell::new(0.0f64); // σ(S) under the running estimator
-        let mut reeval_rng = Pcg32::from_seed_stream(p.seed, 0xCE1F);
+        let mut reeval_rng = Pcg32::from_seed_stream(c.seed, 0xCE1F);
         let mut err: Option<super::AlgoError> = None;
         let (seeds, sigma, stats) = {
             let result = celf_select(
@@ -263,7 +248,7 @@ impl MixGreedy {
                     // σ(S ∪ {v}) - σ(S), via RANDCAS (Alg. 3 line 14).
                     let mut trial: Vec<VertexId> = current_seeds.borrow().clone();
                     trial.push(v);
-                    match randcas(graph, &trial, p.r_count, &mut reeval_rng, budget) {
+                    match randcas(graph, &trial, c.r_count, &mut reeval_rng, budget) {
                         Ok(s) => s - sigma_s.get(),
                         Err(e) => {
                             err = Some(e);
@@ -349,9 +334,12 @@ mod tests {
     fn hub_is_first_seed_on_star() {
         // p = 0.5 star: hub strictly dominates.
         let g = star(20).with_weights(WeightModel::Const(0.5), 2);
-        let res = MixGreedy::new(MixGreedyParams { k: 3, r_count: 200, seed: 1, ..Default::default() })
-            .run(&g, &Budget::unlimited())
-            .unwrap();
+        let res = MixGreedy::new(MixGreedyParams {
+            k: 3,
+            common: RunOptions::new().r_count(200).seed(1),
+        })
+        .run(&g, &Budget::unlimited())
+        .unwrap();
         assert_eq!(res.seeds[0], 0, "hub must be picked first");
         assert_eq!(res.seeds.len(), 3);
         assert!(res.influence > 1.0);
@@ -364,10 +352,12 @@ mod tests {
         use crate::graph::OrderStrategy;
         let g = star(20).with_weights(WeightModel::Const(0.5), 2);
         for order in OrderStrategy::ALL {
-            let res =
-                MixGreedy::new(MixGreedyParams { k: 3, r_count: 200, seed: 1, order, ..Default::default() })
-                .run(&g, &Budget::unlimited())
-                .unwrap();
+            let res = MixGreedy::new(MixGreedyParams {
+                k: 3,
+                common: RunOptions::new().r_count(200).seed(1).order(order),
+            })
+            .run(&g, &Budget::unlimited())
+            .unwrap();
             assert_eq!(res.seeds[0], 0, "{order}: hub must be picked first");
             assert_eq!(res.seeds.len(), 3, "{order}");
             let mut unique = res.seeds.clone();
@@ -384,13 +374,16 @@ mod tests {
         // stream is untouched, so seeds and σ must be bit-stable across
         // every (τ, schedule).
         let g = star(20).with_weights(WeightModel::Const(0.5), 2);
-        let base = MixGreedyParams { k: 3, r_count: 100, seed: 1, ..Default::default() };
+        let base = MixGreedyParams { k: 3, common: RunOptions::new().r_count(100).seed(1) };
         let reference = MixGreedy::new(base).run(&g, &Budget::unlimited()).unwrap();
-        for schedule in Schedule::ALL {
+        for schedule in crate::runtime::pool::Schedule::ALL {
             for threads in [2usize, 4] {
-                let res = MixGreedy::new(MixGreedyParams { threads, schedule, ..base })
-                    .run(&g, &Budget::unlimited())
-                    .unwrap();
+                let res = MixGreedy::new(MixGreedyParams {
+                    common: base.common.threads(threads).schedule(schedule),
+                    ..base
+                })
+                .run(&g, &Budget::unlimited())
+                .unwrap();
                 assert_eq!(res.seeds, reference.seeds, "{schedule} tau={threads}");
                 assert!(
                     res.influence.to_bits() == reference.influence.to_bits(),
@@ -406,8 +399,11 @@ mod tests {
             .with_weights(WeightModel::Const(0.1), 1);
         let budget = Budget::timeout(std::time::Duration::from_millis(1));
         std::thread::sleep(std::time::Duration::from_millis(2));
-        let out = MixGreedy::new(MixGreedyParams { k: 5, r_count: 500, seed: 1, ..Default::default() })
-            .run(&g, &budget);
+        let out = MixGreedy::new(MixGreedyParams {
+            k: 5,
+            common: RunOptions::new().r_count(500).seed(1),
+        })
+        .run(&g, &budget);
         assert!(out.is_err());
         assert!(super::super::is_timeout(&out.unwrap_err()));
     }

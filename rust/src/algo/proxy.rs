@@ -13,25 +13,42 @@
 //! These run in `O(m + n log n)`; the paper's point is that simulation-
 //! based greedy buys noticeably better seed sets for the extra cost, and
 //! the `compare_algorithms` example lets you see both sides.
+//!
+//! Like the simulation-based algorithms, both heuristics honor the
+//! wall-clock [`Budget`]: huge graphs served through the experiment grid
+//! or a query session get the same "-" timeout cells as everything else
+//! instead of a proxy run that cannot be interrupted.
 
+use super::{AlgoError, Budget};
 use crate::graph::Graph;
 use crate::VertexId;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+/// How many selection steps pass between deadline polls.
+const BUDGET_POLL: usize = 4096;
+
 /// Top-K degree heuristic.
-pub fn degree(graph: &Graph, k: usize) -> Vec<VertexId> {
+pub fn degree(graph: &Graph, k: usize, budget: &Budget) -> Result<Vec<VertexId>, AlgoError> {
+    budget.check()?;
     let n = graph.num_vertices();
     let mut order: Vec<VertexId> = (0..n as VertexId).collect();
     order.sort_by_key(|&v| (Reverse(graph.degree(v)), v));
+    budget.check()?;
     order.truncate(k.min(n));
-    order
+    Ok(order)
 }
 
 /// DEGREEDISCOUNTIC (Chen et al. 2009, Alg. 4) for uniform probability
 /// `p`. For non-uniform weight models the mean edge weight is used as
 /// `p` — the heuristic's own approximation, not ours.
-pub fn degree_discount(graph: &Graph, k: usize, p: f64) -> Vec<VertexId> {
+pub fn degree_discount(
+    graph: &Graph,
+    k: usize,
+    p: f64,
+    budget: &Budget,
+) -> Result<Vec<VertexId>, AlgoError> {
+    budget.check()?;
     let n = graph.num_vertices();
     let k = k.min(n);
     let mut t = vec![0u32; n]; // selected-neighbor counts
@@ -43,7 +60,12 @@ pub fn degree_discount(graph: &Graph, k: usize, p: f64) -> Vec<VertexId> {
         .collect();
     let mut selected = vec![false; n];
     let mut seeds = Vec::with_capacity(k);
+    let mut pops = 0usize;
     while seeds.len() < k {
+        pops += 1;
+        if pops % BUDGET_POLL == 0 {
+            budget.check()?;
+        }
         let Some((_, ver, u)) = heap.pop() else { break };
         if selected[u as usize] || ver != version[u as usize] {
             continue;
@@ -63,7 +85,7 @@ pub fn degree_discount(graph: &Graph, k: usize, p: f64) -> Vec<VertexId> {
             heap.push((Ordered(dd[vi]), version[vi], v));
         }
     }
-    seeds
+    Ok(seeds)
 }
 
 /// Mean edge weight of a graph — the `p` a discount heuristic assumes.
@@ -87,8 +109,8 @@ impl Ord for Ordered {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algo::{oracle, Budget};
     use crate::algo::infuser::{InfuserMg, InfuserParams};
+    use crate::algo::oracle;
     use crate::gen::GenSpec;
     use crate::graph::{GraphBuilder, WeightModel};
 
@@ -103,9 +125,23 @@ mod tests {
     #[test]
     fn degree_picks_hub_first() {
         let g = star(20);
-        let seeds = degree(&g, 3);
+        let seeds = degree(&g, 3, &Budget::unlimited()).unwrap();
         assert_eq!(seeds[0], 0);
         assert_eq!(seeds.len(), 3);
+    }
+
+    #[test]
+    fn proxies_honor_an_expired_budget() {
+        // Regression for the budget-enforcement gap: the proxies used to
+        // be the only algorithms that could not be interrupted.
+        let g = star(20);
+        let budget = Budget::timeout(std::time::Duration::from_millis(1));
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(matches!(degree(&g, 3, &budget), Err(AlgoError::TimedOut)));
+        assert!(matches!(
+            degree_discount(&g, 3, 0.1, &budget),
+            Err(AlgoError::TimedOut)
+        ));
     }
 
     #[test]
@@ -126,17 +162,17 @@ mod tests {
             b.edge(13, v); // vertex 13: 4 fresh leaves
         }
         let g = b.build().with_weights(WeightModel::Const(1.0), 1);
-        let dd = degree_discount(&g, 2, 1.0);
+        let dd = degree_discount(&g, 2, 1.0, &Budget::unlimited()).unwrap();
         assert_eq!(dd[0], 0);
         assert_eq!(dd[1], 13, "discounted hub 1 must lose to fresh vertex 13");
-        let plain = degree(&g, 2);
+        let plain = degree(&g, 2, &Budget::unlimited()).unwrap();
         assert_eq!(plain, vec![0, 1], "plain degree falls into the trap");
     }
 
     #[test]
     fn discount_handles_k_ge_n() {
         let g = star(5);
-        assert_eq!(degree_discount(&g, 50, 0.1).len(), 5);
+        assert_eq!(degree_discount(&g, 50, 0.1, &Budget::unlimited()).unwrap().len(), 5);
     }
 
     #[test]
@@ -147,9 +183,13 @@ mod tests {
         let g = crate::gen::generate(&GenSpec::barabasi_albert(400, 3, 11))
             .with_weights(WeightModel::Const(0.1), 5);
         let k = 8;
-        let inf = InfuserMg::new(InfuserParams { k, r_count: 512, seed: 3, threads: 2, ..Default::default() })
-            .run(&g, &Budget::unlimited())
-            .unwrap();
+        let inf = InfuserMg::new(InfuserParams {
+            k,
+            common: crate::api::RunOptions::new().r_count(512).seed(3).threads(2),
+            ..Default::default()
+        })
+        .run(&g, &Budget::unlimited())
+        .unwrap();
         let score = |s: &[u32]| {
             oracle::influence_score(
                 &g,
@@ -158,8 +198,8 @@ mod tests {
             )
         };
         let s_inf = score(&inf.seeds);
-        let s_dd = score(&degree_discount(&g, k, mean_weight(&g)));
-        let s_deg = score(&degree(&g, k));
+        let s_dd = score(&degree_discount(&g, k, mean_weight(&g), &Budget::unlimited()).unwrap());
+        let s_deg = score(&degree(&g, k, &Budget::unlimited()).unwrap());
         // 10% band, not strict dominance: at p = 0.1 the paper's XOR
         // sampler has only ~1/p ≈ 10 effectively distinct samples
         // (DESIGN.md §9.1), so greedy selection carries real noise on a

@@ -1,0 +1,160 @@
+//! [`ImAlgorithm`] implementations — one per [`AlgoSpec`] family.
+//!
+//! Each implementation owns the translation from the shared
+//! ([`Prepared`], [`Query`]) pair to its algorithm's params struct, so
+//! the knob plumbing lives next to the algorithm instead of in a
+//! coordinator match. The INFUSER family routes through the session's
+//! warm state; the resampling baselines and proxies recompute per query
+//! (they have no memoizable state — the paper's point).
+
+use super::session::{Prepared, Query};
+use super::ImAlgorithm;
+use crate::algo::fused::{FusedParams, FusedSampling};
+use crate::algo::imm::{Imm, ImmParams};
+use crate::algo::infuser::MemoKind;
+use crate::algo::mixgreedy::{MixGreedy, MixGreedyParams};
+use crate::algo::{proxy, ImResult};
+use crate::config::AlgoSpec;
+
+/// The run options for one query: the session's shared geometry with the
+/// query's seed override applied.
+fn query_options(p: &Prepared<'_>, q: &Query) -> crate::api::RunOptions {
+    let opts = *p.options();
+    match q.seed {
+        Some(s) => opts.seed(s),
+        None => opts,
+    }
+}
+
+/// INFUSER-MG and its variants (sketch memo, K=1 fast path) — the warm
+/// family: served from the session's retained memo + CELF queue.
+pub(crate) struct InfuserAlg {
+    /// Force the sketch memo backend (`infuser-sketch`).
+    pub sketch: bool,
+    /// Serve only the first seed with `run_first_seed`'s result shape
+    /// (`infuser-k1`).
+    pub first_seed_only: bool,
+}
+
+impl ImAlgorithm for InfuserAlg {
+    fn name(&self) -> &'static str {
+        match (self.first_seed_only, self.sketch) {
+            (true, _) => "infuser-k1",
+            (false, true) => "infuser-sketch",
+            (false, false) => "infuser",
+        }
+    }
+
+    fn run(&self, p: &Prepared<'_>, q: &Query) -> crate::Result<ImResult> {
+        let memo_kind = if self.sketch { MemoKind::Sketch } else { p.options().memo };
+        p.run_infuser(memo_kind, self.first_seed_only, q)
+    }
+}
+
+/// FUSEDSAMPLING — recomputes per query (CELF re-evaluations consume
+/// fresh randomness, so there is nothing to memoize).
+pub(crate) struct FusedAlg;
+
+impl ImAlgorithm for FusedAlg {
+    fn name(&self) -> &'static str {
+        "fused"
+    }
+
+    fn run(&self, p: &Prepared<'_>, q: &Query) -> crate::Result<ImResult> {
+        FusedSampling::new(FusedParams { k: q.k, common: query_options(p, q) })
+            .run(p.graph(), &p.budget_for(q))
+    }
+}
+
+/// MIXGREEDY — the classical baseline; recomputes per query.
+pub(crate) struct MixGreedyAlg;
+
+impl ImAlgorithm for MixGreedyAlg {
+    fn name(&self) -> &'static str {
+        "mixgreedy"
+    }
+
+    fn run(&self, p: &Prepared<'_>, q: &Query) -> crate::Result<ImResult> {
+        MixGreedy::new(MixGreedyParams { k: q.k, common: query_options(p, q) })
+            .run(p.graph(), &p.budget_for(q))
+    }
+}
+
+/// IMM at a given ε — recomputes per query (the RR pool's geometry is a
+/// function of `k`, so it cannot be shared across a K-ladder).
+pub(crate) struct ImmAlg {
+    pub epsilon: f64,
+}
+
+impl ImAlgorithm for ImmAlg {
+    fn name(&self) -> &'static str {
+        "imm"
+    }
+
+    fn run(&self, p: &Prepared<'_>, q: &Query) -> crate::Result<ImResult> {
+        Imm::new(ImmParams {
+            k: q.k,
+            epsilon: self.epsilon,
+            common: query_options(p, q),
+            ..Default::default()
+        })
+        .run(p.graph(), &p.budget_for(q))
+    }
+}
+
+/// Result shape shared by both proxy heuristics: no internal σ estimate,
+/// a flat per-vertex working-set charge, no counters.
+fn proxy_result(p: &Prepared<'_>, seeds: Vec<crate::VertexId>) -> ImResult {
+    ImResult {
+        seeds,
+        influence: 0.0, // proxies carry no internal estimate
+        tracked_bytes: (p.graph().num_vertices() * 24) as u64,
+        counters: vec![],
+    }
+}
+
+/// Top-K degree proxy.
+pub(crate) struct DegreeAlg;
+
+impl ImAlgorithm for DegreeAlg {
+    fn name(&self) -> &'static str {
+        "degree"
+    }
+
+    fn run(&self, p: &Prepared<'_>, q: &Query) -> crate::Result<ImResult> {
+        let seeds = proxy::degree(p.graph(), q.k, &p.budget_for(q))?;
+        Ok(proxy_result(p, seeds))
+    }
+}
+
+/// DEGREEDISCOUNTIC proxy.
+pub(crate) struct DegreeDiscountAlg;
+
+impl ImAlgorithm for DegreeDiscountAlg {
+    fn name(&self) -> &'static str {
+        "degree-discount"
+    }
+
+    fn run(&self, p: &Prepared<'_>, q: &Query) -> crate::Result<ImResult> {
+        let graph = p.graph();
+        let seeds =
+            proxy::degree_discount(graph, q.k, proxy::mean_weight(graph), &p.budget_for(q))?;
+        Ok(proxy_result(p, seeds))
+    }
+}
+
+/// The registry: map an [`AlgoSpec`] to its [`ImAlgorithm`]
+/// implementation. This is the single dispatch point that replaced the
+/// coordinator's per-cell params-plumbing match.
+pub fn resolve(spec: AlgoSpec) -> Box<dyn ImAlgorithm> {
+    match spec {
+        AlgoSpec::MixGreedy => Box::new(MixGreedyAlg),
+        AlgoSpec::FusedSampling => Box::new(FusedAlg),
+        AlgoSpec::InfuserMg => Box::new(InfuserAlg { sketch: false, first_seed_only: false }),
+        AlgoSpec::InfuserSketch => Box::new(InfuserAlg { sketch: true, first_seed_only: false }),
+        AlgoSpec::InfuserK1 => Box::new(InfuserAlg { sketch: false, first_seed_only: true }),
+        AlgoSpec::Imm { epsilon } => Box::new(ImmAlg { epsilon }),
+        AlgoSpec::Degree => Box::new(DegreeAlg),
+        AlgoSpec::DegreeDiscount => Box::new(DegreeDiscountAlg),
+    }
+}

@@ -1,0 +1,289 @@
+//! The public influence-maximization API: shared [`RunOptions`], the
+//! object-safe [`ImAlgorithm`] trait with its [`resolve`] registry, and
+//! the prepared [`ImSession`] query interface with warm-state reuse.
+//!
+//! Three layers, outermost first:
+//!
+//! 1. **[`ImSession`]** — preprocess a weighted graph once (worker-pool
+//!    spawn, sampling tables; propagation fixpoint + memo lazily), then
+//!    serve repeated [`Query`]s. INFUSER queries reuse and *extend* the
+//!    warm memoized state — a K-ladder costs one propagation total — and
+//!    stay bit-identical to cold one-shot runs.
+//! 2. **[`ImAlgorithm`]** — one trait over every algorithm the paper
+//!    evaluates (MIXGREEDY, FUSEDSAMPLING, INFUSER-MG ± sketch ± K=1,
+//!    IMM, the proxy heuristics). [`resolve`] maps an
+//!    [`AlgoSpec`](crate::config::AlgoSpec) to its implementation; the
+//!    experiment coordinator, the CLI and embedders all dispatch through
+//!    it.
+//! 3. **[`RunOptions`]** — the shared knob set (seed, threads, backend,
+//!    lanes, schedule, block size, ordering, memo, budget), factored out
+//!    of the per-algorithm params structs, with a builder and one JSON
+//!    dialect.
+//!
+//! ```
+//! use infuser::api::{resolve, ImSession, Query, RunOptions};
+//! use infuser::config::AlgoSpec;
+//! use infuser::gen::{self, GenSpec};
+//! use infuser::graph::WeightModel;
+//!
+//! let g = gen::generate(&GenSpec::barabasi_albert(200, 2, 3))
+//!     .with_weights(WeightModel::Const(0.1), 9);
+//! let mut session = ImSession::prepare(g, RunOptions::new().r_count(32).threads(2)).unwrap();
+//!
+//! // Repeated queries hit the warm state; every algorithm shares the
+//! // same prepared graph (INFUSER queries also share the session's
+//! // worker pool and memo — the baselines recompute by design).
+//! let infuser = session.query(&Query::new(AlgoSpec::InfuserMg, 8)).unwrap();
+//! let proxy = session.query(&Query::new(AlgoSpec::Degree, 8)).unwrap();
+//! assert_eq!(infuser.seeds.len(), 8);
+//! assert_eq!(proxy.seeds.len(), 8);
+//!
+//! // The registry is also usable directly against the prepared state.
+//! let alg = resolve(AlgoSpec::DegreeDiscount);
+//! assert_eq!(alg.name(), "degree-discount");
+//! let res = alg.run(session.prepared(), &Query::new(AlgoSpec::DegreeDiscount, 4)).unwrap();
+//! assert_eq!(res.seeds.len(), 4);
+//! ```
+
+mod algorithms;
+mod options;
+mod session;
+
+pub use algorithms::resolve;
+pub use options::RunOptions;
+pub use session::{ImSession, Prepared, Query};
+
+use crate::algo::ImResult;
+
+/// One influence-maximization algorithm behind the unified interface.
+///
+/// Object-safe by design: the coordinator holds `Box<dyn ImAlgorithm>`s
+/// from [`resolve`] and treats every algorithm — the paper's contribution,
+/// the baselines, the proxies — identically. Implementations read their
+/// shared knobs from the session's [`RunOptions`] and their per-query
+/// geometry (`k`, seed/weights/timeout overrides) from the [`Query`].
+pub trait ImAlgorithm {
+    /// Stable identifier (matches the
+    /// [`AlgoSpec`](crate::config::AlgoSpec) parse dialect).
+    fn name(&self) -> &'static str;
+
+    /// Answer `query` against the prepared session state. Warm-capable
+    /// implementations (the INFUSER family) serve from and extend the
+    /// session's retained state; everything else recomputes.
+    fn run(&self, prepared: &Prepared<'_>, query: &Query) -> crate::Result<ImResult>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::Budget;
+    use crate::config::AlgoSpec;
+    use crate::gen::GenSpec;
+    use crate::graph::WeightModel;
+
+    fn graph() -> crate::graph::Graph {
+        crate::gen::generate(&GenSpec::barabasi_albert(250, 2, 5))
+            .with_weights(WeightModel::Const(0.1), 4)
+    }
+
+    #[test]
+    fn registry_names_round_trip_through_algospec_parse() {
+        for spec in [
+            AlgoSpec::MixGreedy,
+            AlgoSpec::FusedSampling,
+            AlgoSpec::InfuserMg,
+            AlgoSpec::InfuserSketch,
+            AlgoSpec::InfuserK1,
+            AlgoSpec::Degree,
+            AlgoSpec::DegreeDiscount,
+        ] {
+            let name = resolve(spec).name();
+            assert_eq!(AlgoSpec::parse(name).unwrap(), spec, "{name}");
+        }
+        assert_eq!(resolve(AlgoSpec::Imm { epsilon: 0.5 }).name(), "imm");
+    }
+
+    #[test]
+    fn warm_k_ladder_extends_instead_of_recomputing() {
+        let g = graph();
+        let opts = RunOptions::new().r_count(64).seed(3).threads(2);
+        let mut session = ImSession::prepare(g.clone(), opts).unwrap();
+        let k5 = session.query(&Query::new(AlgoSpec::InfuserMg, 5)).unwrap();
+        let k10 = session.query(&Query::new(AlgoSpec::InfuserMg, 10)).unwrap();
+        assert_eq!(&k10.seeds[..5], &k5.seeds[..], "ladder must extend the prefix");
+        assert_eq!(session.prepared().warm_pipelines(), 1, "one shared pipeline");
+
+        // Bit-identical to cold one-shot runs at both rungs.
+        use crate::algo::infuser::{InfuserMg, InfuserParams};
+        for (k, warm) in [(5usize, &k5), (10, &k10)] {
+            let cold = InfuserMg::new(InfuserParams { k, common: opts, ..Default::default() })
+                .run(&g, &Budget::unlimited())
+                .unwrap();
+            assert_eq!(cold.seeds, warm.seeds, "k={k}");
+            assert_eq!(cold.influence.to_bits(), warm.influence.to_bits(), "k={k}");
+            assert_eq!(cold.counters, warm.counters, "k={k}");
+            assert_eq!(cold.tracked_bytes, warm.tracked_bytes, "k={k}");
+        }
+    }
+
+    #[test]
+    fn shrinking_k_is_a_prefix_lookup() {
+        let mut session = ImSession::prepare(
+            graph(),
+            RunOptions::new().r_count(32).seed(7).threads(2),
+        )
+        .unwrap();
+        let k8 = session.query(&Query::new(AlgoSpec::InfuserMg, 8)).unwrap();
+        let k3 = session.query(&Query::new(AlgoSpec::InfuserMg, 3)).unwrap();
+        assert_eq!(&k8.seeds[..3], &k3.seeds[..]);
+        assert_eq!(session.prepared().warm_pipelines(), 1);
+    }
+
+    #[test]
+    fn k1_query_matches_cold_first_seed_shape() {
+        use crate::algo::infuser::{InfuserMg, InfuserParams};
+        let g = graph();
+        let opts = RunOptions::new().r_count(32).seed(2).threads(2);
+        let mut session = ImSession::prepare(g.clone(), opts).unwrap();
+        let warm = session.query(&Query::new(AlgoSpec::InfuserK1, 1)).unwrap();
+        let cold = InfuserMg::new(InfuserParams { k: 1, common: opts, ..Default::default() })
+            .run_first_seed(&g, &Budget::unlimited())
+            .unwrap();
+        assert_eq!(cold.seeds, warm.seeds);
+        assert_eq!(cold.influence.to_bits(), warm.influence.to_bits());
+        assert_eq!(cold.counters, warm.counters);
+        assert_eq!(cold.tracked_bytes, warm.tracked_bytes);
+    }
+
+    #[test]
+    fn seed_override_rebuilds_but_does_not_hoard() {
+        use crate::algo::infuser::{InfuserMg, InfuserParams};
+        let g = graph();
+        let opts = RunOptions::new().r_count(32).seed(1).threads(2);
+        let mut session = ImSession::prepare(g.clone(), opts).unwrap();
+        session.query(&Query::new(AlgoSpec::InfuserMg, 4)).unwrap();
+        let b = session.query(&Query::new(AlgoSpec::InfuserMg, 4).seed(99)).unwrap();
+        // The override really selected the other sample universe: it
+        // matches a cold run at seed 99 bit-for-bit.
+        let cold = InfuserMg::new(InfuserParams {
+            k: 4,
+            common: opts.seed(99),
+            ..Default::default()
+        })
+        .run(&g, &Budget::unlimited())
+        .unwrap();
+        assert_eq!(cold.seeds, b.seeds);
+        assert_eq!(cold.influence.to_bits(), b.influence.to_bits());
+        assert_eq!(session.prepared().warm_pipelines(), 1, "per-backend slot is replaced");
+    }
+
+    #[test]
+    fn weights_switch_invalidates_warm_state() {
+        let base = crate::gen::generate(&GenSpec::barabasi_albert(250, 2, 5));
+        let opts = RunOptions::new().r_count(32).seed(4).threads(2);
+        let mut session = ImSession::prepare(
+            base.clone().with_weights(WeightModel::Const(0.1), opts.seed ^ 0x5E77),
+            opts,
+        )
+        .unwrap();
+        let at_01 = session.query(&Query::new(AlgoSpec::InfuserMg, 5)).unwrap();
+        let at_03 = session
+            .query(&Query::new(AlgoSpec::InfuserMg, 5).weights(WeightModel::Const(0.3)))
+            .unwrap();
+        assert!(at_03.influence > at_01.influence, "heavier weights spread further");
+
+        // The re-weighted query equals a cold run on a freshly weighted graph.
+        use crate::algo::infuser::{InfuserMg, InfuserParams};
+        let cold = InfuserMg::new(InfuserParams { k: 5, common: opts, ..Default::default() })
+            .run(
+                &base.with_weights(WeightModel::Const(0.3), opts.seed ^ 0x5E77),
+                &Budget::unlimited(),
+            )
+            .unwrap();
+        assert_eq!(cold.seeds, at_03.seeds);
+        assert_eq!(cold.influence.to_bits(), at_03.influence.to_bits());
+
+        // Asking for the active model again is free (no invalidation).
+        let again = session
+            .query(&Query::new(AlgoSpec::InfuserMg, 5).weights(WeightModel::Const(0.3)))
+            .unwrap();
+        assert_eq!(again.seeds, at_03.seeds);
+    }
+
+    #[test]
+    fn dense_and_sketch_pipelines_coexist() {
+        let mut session = ImSession::prepare(
+            graph(),
+            RunOptions::new().r_count(32).seed(6).threads(2),
+        )
+        .unwrap();
+        let dense = session.query(&Query::new(AlgoSpec::InfuserMg, 4)).unwrap();
+        let sketch = session.query(&Query::new(AlgoSpec::InfuserSketch, 4)).unwrap();
+        assert_eq!(dense.seeds, sketch.seeds, "sparse graphs: sketch is exact");
+        assert_eq!(session.prepared().warm_pipelines(), 2, "one pipeline per memo backend");
+        session.invalidate();
+        assert_eq!(session.prepared().warm_pipelines(), 0);
+    }
+
+    #[test]
+    fn query_rejects_k_zero_and_parses_json() {
+        let mut session =
+            ImSession::prepare(graph(), RunOptions::new().r_count(8).threads(1)).unwrap();
+        assert!(session.query(&Query::new(AlgoSpec::Degree, 0)).is_err());
+
+        let q = Query::from_json(
+            &crate::util::json::Json::parse(
+                r#"{"algo": "imm:0.5", "k": 3, "seed": 9, "weights": "const:0.2", "timeout_secs": 60}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(q.algo, AlgoSpec::Imm { epsilon: 0.5 });
+        assert_eq!(q.k, 3);
+        assert_eq!(q.seed, Some(9));
+        assert_eq!(q.weights, Some(WeightModel::Const(0.2)));
+        assert_eq!(q.timeout, Some(std::time::Duration::from_secs(60)));
+        for bad in [
+            r#"{"k": 3}"#,
+            r#"{"algo": "infuser"}"#,
+            r#"{"algo": "infuser", "k": 0}"#,
+            r#"{"algo": "infuser", "k": 3, "timeout_secs": -1}"#,
+        ] {
+            assert!(
+                Query::from_json(&crate::util::json::Json::parse(bad).unwrap()).is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn timed_out_query_leaves_the_session_usable() {
+        use crate::algo::infuser::{InfuserMg, InfuserParams};
+        let g = graph();
+        let opts = RunOptions::new().r_count(64).seed(3).threads(2);
+        let mut session = ImSession::prepare(g.clone(), opts).unwrap();
+
+        // Trip during the warm *build* (nothing committed yet)...
+        let q = Query::new(AlgoSpec::InfuserMg, 6).timeout(std::time::Duration::from_nanos(1));
+        let err = session.query(&q).unwrap_err();
+        assert!(crate::algo::is_timeout(&err));
+
+        // ...then warm a small prefix and trip during the CELF
+        // *extension* (the warm state keeps whatever committed before the
+        // deadline — regression for the trajectory/memo desync).
+        session.query(&Query::new(AlgoSpec::InfuserMg, 2)).unwrap();
+        let _ = session
+            .query(&Query::new(AlgoSpec::InfuserMg, 6).timeout(std::time::Duration::from_nanos(1)))
+            .unwrap_err();
+
+        // Either way the next (unbounded) query answers bit-identically
+        // to a cold run.
+        let ok = session.query(&Query::new(AlgoSpec::InfuserMg, 6)).unwrap();
+        let cold = InfuserMg::new(InfuserParams { k: 6, common: opts, ..Default::default() })
+            .run(&g, &Budget::unlimited())
+            .unwrap();
+        assert_eq!(cold.seeds, ok.seeds);
+        assert_eq!(cold.influence.to_bits(), ok.influence.to_bits());
+        assert_eq!(cold.counters, ok.counters);
+    }
+}

@@ -1,0 +1,404 @@
+//! [`RunOptions`] — the one shared knob set of the public API.
+//!
+//! Every algorithm family in this crate (INFUSER-MG, FUSEDSAMPLING,
+//! MIXGREEDY, IMM, the proxies) used to duplicate the same run geometry —
+//! seed, threads, backend, lanes, schedule, block size, ordering, memo —
+//! in its own params struct, and the coordinator copied the set a fifth
+//! time per match arm. `RunOptions` is that knob set factored out once:
+//! the params structs now embed it (`common`) and keep only their
+//! algorithm-specific fields, and [`crate::api::ImSession`] preprocesses a
+//! graph once per `RunOptions` and serves repeated queries against the
+//! warm state.
+//!
+//! ```
+//! use infuser::api::RunOptions;
+//! use infuser::simd::LaneWidth;
+//!
+//! let opts = RunOptions::new()
+//!     .r_count(64)
+//!     .seed(7)
+//!     .threads(2)
+//!     .lanes(LaneWidth::W16);
+//! assert_eq!(opts.r_count, 64);
+//! assert_eq!(opts.seed, 7);
+//! // Unset knobs keep their defaults.
+//! assert_eq!(opts.block_size, infuser::labelprop::DEFAULT_EDGE_BLOCK);
+//! ```
+
+use crate::algo::infuser::MemoKind;
+use crate::algo::Budget;
+use crate::graph::OrderStrategy;
+use crate::labelprop::{Mode, PropagateOpts, DEFAULT_EDGE_BLOCK};
+use crate::runtime::pool::{default_threads, Schedule};
+use crate::simd::{Backend, LaneWidth};
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// The shared run geometry of every influence-maximization algorithm:
+/// everything that is *not* algorithm-specific and *not* per-query.
+///
+/// `k` deliberately lives in [`crate::api::Query`] (it is per-query — the
+/// whole point of the prepared-session API is that a K-ladder reuses the
+/// warm state), and algorithm-specific knobs (IMM's `epsilon`, INFUSER's
+/// propagation `mode`) stay in the algorithm params structs.
+#[derive(Clone, Copy, Debug)]
+pub struct RunOptions {
+    /// Monte-Carlo simulations R (label-matrix lanes).
+    pub r_count: usize,
+    /// Run seed (drives the `X_r` stream and the weight RNG).
+    pub seed: u64,
+    /// Worker threads τ.
+    pub threads: usize,
+    /// VECLABEL kernel backend (scalar / AVX2).
+    pub backend: Backend,
+    /// VECLABEL lane batch width `B ∈ {8, 16, 32}`. Result-invariant;
+    /// throughput knob.
+    pub lanes: LaneWidth,
+    /// Work-distribution policy of the worker-pool runtime
+    /// ([`crate::runtime::pool`]). Result-invariant; throughput knob.
+    pub schedule: Schedule,
+    /// Hub-splitting edge-block granularity for the propagation stage
+    /// ([`PropagateOpts::block_size`]). Result-invariant; throughput knob.
+    pub block_size: usize,
+    /// Vertex-reordering strategy for the memory layout
+    /// ([`crate::graph::order`]). Result-invariant for the hash-fused
+    /// algorithms; throughput knob.
+    pub order: OrderStrategy,
+    /// Memoization backend for the CELF phase (dense / sketch).
+    pub memo: MemoKind,
+    /// Wall-clock budget per run/query (`None` = unlimited). Armed fresh
+    /// by [`RunOptions::budget`] each time; entry points that accept an
+    /// explicit [`Budget`] ignore it.
+    pub timeout: Option<Duration>,
+    /// Memory cap for IMM's RR pool in bytes (`None` = unlimited) — the
+    /// paper's Table-6 "insufficient memory" cells at laptop scale. A
+    /// passthrough for the IMM cells; other algorithms ignore it.
+    pub imm_memory_limit: Option<u64>,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        Self {
+            r_count: 256,
+            seed: 0,
+            threads: default_threads(),
+            backend: Backend::detect(),
+            lanes: LaneWidth::default(),
+            schedule: Schedule::default(),
+            block_size: DEFAULT_EDGE_BLOCK,
+            order: OrderStrategy::Identity,
+            memo: MemoKind::Dense,
+            timeout: None,
+            imm_memory_limit: None,
+        }
+    }
+}
+
+macro_rules! setter {
+    ($(#[$doc:meta])* $name:ident: $ty:ty) => {
+        $(#[$doc])*
+        #[must_use]
+        pub fn $name(mut self, $name: $ty) -> Self {
+            self.$name = $name;
+            self
+        }
+    };
+}
+
+impl RunOptions {
+    /// Defaults — identical to [`RunOptions::default`]; reads better at
+    /// the head of a builder chain.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    setter!(
+        /// Set the simulation count R.
+        r_count: usize
+    );
+    setter!(
+        /// Set the run seed.
+        seed: u64
+    );
+    setter!(
+        /// Set the worker-thread count τ.
+        threads: usize
+    );
+    setter!(
+        /// Set the VECLABEL backend.
+        backend: Backend
+    );
+    setter!(
+        /// Set the VECLABEL lane batch width B.
+        lanes: LaneWidth
+    );
+    setter!(
+        /// Set the worker-pool schedule.
+        schedule: Schedule
+    );
+    setter!(
+        /// Set the hub-splitting edge-block size.
+        block_size: usize
+    );
+    setter!(
+        /// Set the vertex-reordering strategy.
+        order: OrderStrategy
+    );
+    setter!(
+        /// Set the CELF memoization backend.
+        memo: MemoKind
+    );
+    setter!(
+        /// Set the per-query wall-clock budget.
+        timeout: Option<Duration>
+    );
+    setter!(
+        /// Set the IMM RR-pool memory cap.
+        imm_memory_limit: Option<u64>
+    );
+
+    /// Arm a fresh [`Budget`] from the `timeout` knob. The deadline
+    /// starts *now*, so sessions call this per query, not per session.
+    pub fn budget(&self) -> Budget {
+        match self.timeout {
+            Some(d) => Budget::timeout(d),
+            None => Budget::unlimited(),
+        }
+    }
+
+    /// The propagation-stage options these run options imply.
+    pub fn propagate_opts(&self, mode: Mode) -> PropagateOpts {
+        PropagateOpts {
+            r_count: self.r_count,
+            seed: self.seed,
+            threads: self.threads,
+            backend: self.backend,
+            lanes: self.lanes,
+            mode,
+            schedule: self.schedule,
+            block_size: self.block_size,
+            order: self.order,
+        }
+    }
+
+    /// Sanity-check knob ranges shared by every entry point.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.r_count >= 1, "r must be >= 1");
+        anyhow::ensure!(self.block_size >= 1, "block_size must be >= 1");
+        Ok(())
+    }
+
+    /// Parse the shared keys from a JSON object, starting from defaults.
+    /// This is the one place config knobs are read — the experiment
+    /// config, the CLI `query` subcommand, and any embedder parse the
+    /// same dialect:
+    ///
+    /// ```json
+    /// {
+    ///   "r": 256, "seed": 0, "threads": 16,
+    ///   "backend": "auto", "lanes": 16, "memo": "dense",
+    ///   "schedule": "steal", "block_size": 4096,
+    ///   "order": "identity", "timeout_secs": 600
+    /// }
+    /// ```
+    ///
+    /// `"r_count"` is accepted as an alias of `"r"` and `"block-size"` of
+    /// `"block_size"`; spelling a knob *both* ways is rejected as a
+    /// conflict (even when the values agree) so a typo can't silently
+    /// shadow the intended setting. Unknown keys are the caller's
+    /// business (the experiment config adds its own on top).
+    pub fn from_json(json: &Json) -> crate::Result<Self> {
+        let mut opts = Self::default();
+        if let Some(r) = json_alias(json, "r", "r_count")? {
+            opts.r_count = match r.as_i64() {
+                Some(v) if v >= 1 => v as usize,
+                _ => anyhow::bail!("'r' must be a positive integer"),
+            };
+        }
+        if let Some(s) = json.get("seed").and_then(|v| v.as_i64()) {
+            opts.seed = s as u64;
+        }
+        if let Some(t) = json.get("threads").and_then(|v| v.as_i64()) {
+            opts.threads = t as usize;
+        }
+        if let Some(b) = json.get("backend").and_then(|v| v.as_str()) {
+            opts.backend = Backend::parse(b)?;
+        }
+        if let Some(l) = json.get("lanes") {
+            opts.lanes = match (l.as_i64(), l.as_str()) {
+                (Some(b), _) => LaneWidth::from_lanes(b as usize)?,
+                (None, Some(s)) => LaneWidth::parse(s)?,
+                (None, None) => {
+                    anyhow::bail!("'lanes' must be a number or string (8, 16, or 32)")
+                }
+            };
+        }
+        if let Some(s) = json.get("schedule") {
+            opts.schedule = match s.as_str() {
+                Some(text) => Schedule::parse(text)?,
+                None => anyhow::bail!("'schedule' must be a string (dynamic|steal)"),
+            };
+        }
+        if let Some(b) = json_alias(json, "block_size", "block-size")? {
+            opts.block_size = match b.as_i64() {
+                Some(v) if v >= 1 => v as usize,
+                Some(v) => anyhow::bail!("'block_size' must be >= 1 (got {v})"),
+                None => anyhow::bail!("'block_size' must be a positive integer"),
+            };
+        }
+        if let Some(o) = json.get("order").and_then(|v| v.as_str()) {
+            opts.order = OrderStrategy::parse(o)?;
+        }
+        if let Some(m) = json.get("memo").and_then(|v| v.as_str()) {
+            opts.memo = MemoKind::parse(m)?;
+        }
+        if let Some(t) = json.get("timeout_secs").and_then(|v| v.as_f64()) {
+            opts.timeout = Some(parse_timeout_secs(t)?);
+        }
+        if let Some(gb) = json.get("imm_memory_limit_gb").and_then(|v| v.as_f64()) {
+            anyhow::ensure!(
+                gb.is_finite() && gb >= 0.0,
+                "'imm_memory_limit_gb' must be a non-negative number (got {gb})"
+            );
+            opts.imm_memory_limit = Some((gb * 1024.0 * 1024.0 * 1024.0) as u64);
+        }
+        Ok(opts)
+    }
+}
+
+/// Convert a `timeout_secs`-style knob to a [`Duration`] with a clean
+/// error instead of `Duration::from_secs_f64`'s panic on negative,
+/// non-finite, or overflowing values.
+pub(crate) fn parse_timeout_secs(secs: f64) -> crate::Result<Duration> {
+    Duration::try_from_secs_f64(secs)
+        .map_err(|_| anyhow::anyhow!("timeout seconds must be a finite non-negative number (got {secs})"))
+}
+
+/// Fetch `primary` or its `alias` from a JSON object, rejecting documents
+/// that spell the knob both ways.
+fn json_alias<'j>(json: &'j Json, primary: &str, alias: &str) -> crate::Result<Option<&'j Json>> {
+    match (json.get(primary), json.get(alias)) {
+        (Some(_), Some(_)) => Err(anyhow::anyhow!(
+            "conflicting keys '{primary}' and '{alias}': set exactly one"
+        )),
+        (Some(v), None) | (None, Some(v)) => Ok(Some(v)),
+        (None, None) => Ok(None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_sets_every_knob() {
+        let opts = RunOptions::new()
+            .r_count(64)
+            .seed(9)
+            .threads(3)
+            .lanes(LaneWidth::W32)
+            .schedule(Schedule::Dynamic)
+            .block_size(128)
+            .order(OrderStrategy::Degree)
+            .memo(MemoKind::Sketch)
+            .timeout(Some(Duration::from_secs(5)))
+            .imm_memory_limit(Some(1 << 20));
+        assert_eq!(opts.r_count, 64);
+        assert_eq!(opts.seed, 9);
+        assert_eq!(opts.threads, 3);
+        assert_eq!(opts.lanes, LaneWidth::W32);
+        assert_eq!(opts.schedule, Schedule::Dynamic);
+        assert_eq!(opts.block_size, 128);
+        assert_eq!(opts.order, OrderStrategy::Degree);
+        assert_eq!(opts.memo, MemoKind::Sketch);
+        assert_eq!(opts.timeout, Some(Duration::from_secs(5)));
+        assert_eq!(opts.imm_memory_limit, Some(1 << 20));
+    }
+
+    #[test]
+    fn budget_arms_from_timeout() {
+        assert!(!RunOptions::new().budget().exceeded());
+        // The deadline starts at budget() time, not at construction: the
+        // sleep exceeds the timeout, yet a freshly armed budget is fine.
+        let opts = RunOptions::new().timeout(Some(Duration::from_millis(50)));
+        std::thread::sleep(Duration::from_millis(100));
+        assert!(!opts.budget().exceeded());
+    }
+
+    #[test]
+    fn propagate_opts_carry_the_shared_knobs() {
+        let opts = RunOptions::new().r_count(32).seed(5).block_size(77);
+        let p = opts.propagate_opts(Mode::Sync);
+        assert_eq!(p.r_count, 32);
+        assert_eq!(p.seed, 5);
+        assert_eq!(p.block_size, 77);
+        assert_eq!(p.mode, Mode::Sync);
+    }
+
+    #[test]
+    fn from_json_parses_shared_keys() {
+        let json = Json::parse(
+            r#"{"r": 64, "seed": 3, "threads": 2, "lanes": 16,
+                "schedule": "dynamic", "block_size": 512,
+                "order": "bfs", "memo": "sketch", "timeout_secs": 30}"#,
+        )
+        .unwrap();
+        let opts = RunOptions::from_json(&json).unwrap();
+        assert_eq!(opts.r_count, 64);
+        assert_eq!(opts.seed, 3);
+        assert_eq!(opts.threads, 2);
+        assert_eq!(opts.lanes, LaneWidth::W16);
+        assert_eq!(opts.schedule, Schedule::Dynamic);
+        assert_eq!(opts.block_size, 512);
+        assert_eq!(opts.order, OrderStrategy::Bfs);
+        assert_eq!(opts.memo, MemoKind::Sketch);
+        assert_eq!(opts.timeout, Some(Duration::from_secs(30)));
+    }
+
+    #[test]
+    fn from_json_accepts_aliases_but_rejects_conflicts() {
+        let ok = Json::parse(r#"{"r_count": 48, "block-size": 9}"#).unwrap();
+        let opts = RunOptions::from_json(&ok).unwrap();
+        assert_eq!(opts.r_count, 48);
+        assert_eq!(opts.block_size, 9);
+        for (doc, needle) in [
+            (r#"{"r": 48, "r_count": 48}"#, "'r' and 'r_count'"),
+            (r#"{"r": 48, "r_count": 32}"#, "'r' and 'r_count'"),
+            (r#"{"block_size": 4, "block-size": 8}"#, "'block_size' and 'block-size'"),
+        ] {
+            let err = RunOptions::from_json(&Json::parse(doc).unwrap()).unwrap_err();
+            assert!(err.to_string().contains("conflicting keys"), "{doc}: {err}");
+            assert!(err.to_string().contains(needle), "{doc}: {err}");
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_bad_values() {
+        for doc in [
+            r#"{"r": 0}"#,
+            r#"{"r": "lots"}"#,
+            r#"{"lanes": 12}"#,
+            r#"{"schedule": "guided"}"#,
+            r#"{"block_size": 0}"#,
+            r#"{"order": "zigzag"}"#,
+            r#"{"memo": "zip"}"#,
+            // A negative/overflowing timeout must be a clean parse error,
+            // never Duration::from_secs_f64's panic.
+            r#"{"timeout_secs": -1}"#,
+            r#"{"timeout_secs": 1e300}"#,
+            r#"{"imm_memory_limit_gb": -1}"#,
+        ] {
+            assert!(
+                RunOptions::from_json(&Json::parse(doc).unwrap()).is_err(),
+                "{doc} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn validate_enforces_ranges() {
+        assert!(RunOptions::new().validate().is_ok());
+        assert!(RunOptions::new().r_count(0).validate().is_err());
+        assert!(RunOptions::new().block_size(0).validate().is_err());
+    }
+}

@@ -1,0 +1,445 @@
+//! [`ImSession`] — the prepared-query API.
+//!
+//! The paper's headline result is that INFUSER's memoized label matrix
+//! makes *repeated* influence queries nearly free: "adding the next 49
+//! seeds only takes 10%–20% of the overall execution time" (Table 4).
+//! One-shot `run(graph, budget)` calls throw that away — every call
+//! rebuilds the vertex ordering, the sampling tables, the worker pool and
+//! the memo from scratch. A session does the preprocessing once and then
+//! serves [`Query`] after [`Query`] against the warm state:
+//!
+//! * the **worker pool** is spawned at [`ImSession::prepare`] and parked
+//!   between queries (it serves the INFUSER memo scans; the resampling
+//!   baselines still spawn their own per-run pools internally);
+//! * the **weighted graph** (and its sampling tables) is built once and
+//!   rebuilt only when a query switches [`weights`](field@Query::weights);
+//! * the **INFUSER warm state** — propagation fixpoint, memo backend,
+//!   CELF queue — is built on first use per (memo backend, run seed) and
+//!   then *extended*: a K-ladder (`k = 10`, then `k = 50`) resumes the
+//!   CELF queue where it stopped instead of recomputing, and a repeated
+//!   `k` is a pure table lookup.
+//!
+//! Warm answers are **bit-identical** to cold one-shot runs — seeds, σ̂,
+//! and counters — because the greedy trajectory is deterministic and
+//! prefix-stable (`tests/session_reuse.rs` enforces this across memo
+//! backends × schedules × lane widths). The resampling baselines
+//! (MIXGREEDY, FUSEDSAMPLING, IMM) have no memoizable state — that is
+//! exactly the paper's point — so their queries recompute, reusing only
+//! the session's prepared graph.
+
+use super::options::RunOptions;
+use super::resolve;
+use crate::algo::celf::CelfState;
+use crate::algo::infuser::{make_memo, MemoBackend, MemoKind};
+use crate::algo::{Budget, ImResult};
+use crate::config::AlgoSpec;
+use crate::engine::NativeEngine;
+use crate::graph::{Graph, WeightModel};
+use crate::util::json::Json;
+use crate::util::ThreadPool;
+use crate::VertexId;
+use std::borrow::Cow;
+use std::cell::RefCell;
+use std::time::Duration;
+
+/// One influence-maximization question against a prepared session.
+#[derive(Clone, Copy, Debug)]
+pub struct Query {
+    /// Which algorithm answers it.
+    pub algo: AlgoSpec,
+    /// Seed-set size K.
+    pub k: usize,
+    /// Run-seed override (`None` = the session's [`seed`](field@RunOptions::seed)).
+    /// A fresh seed means a fresh sample set, so it rebuilds the INFUSER
+    /// warm state.
+    pub seed: Option<u64>,
+    /// Weight-model override (`None` = keep the session's current
+    /// weights). Switching models re-weights the graph and rebuilds the
+    /// sampling tables once; asking for the current model is free.
+    pub weights: Option<WeightModel>,
+    /// Wall-clock budget override (`None` = the session's
+    /// [`timeout`](field@RunOptions::timeout)).
+    pub timeout: Option<Duration>,
+}
+
+impl Query {
+    /// A plain `algo` × `k` query with no overrides.
+    pub fn new(algo: AlgoSpec, k: usize) -> Self {
+        Self { algo, k, seed: None, weights: None, timeout: None }
+    }
+
+    /// Override the run seed for this query.
+    #[must_use]
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Override the weight model for this query.
+    #[must_use]
+    pub fn weights(mut self, model: WeightModel) -> Self {
+        self.weights = Some(model);
+        self
+    }
+
+    /// Override the wall-clock budget for this query.
+    #[must_use]
+    pub fn timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = Some(timeout);
+        self
+    }
+
+    /// Parse one query from a JSON object — the element dialect of the
+    /// `infuser query --queries FILE.json` batch file:
+    ///
+    /// ```json
+    /// {"algo": "infuser", "k": 10, "seed": 3,
+    ///  "weights": "const:0.05", "timeout_secs": 60}
+    /// ```
+    ///
+    /// `algo` and `k` are required; the rest default to the session's
+    /// options.
+    pub fn from_json(json: &Json) -> crate::Result<Self> {
+        let algo = json
+            .get("algo")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("query needs an 'algo' string"))
+            .and_then(AlgoSpec::parse)?;
+        let k = match json.get("k").and_then(|v| v.as_i64()) {
+            Some(k) if k >= 1 => k as usize,
+            _ => anyhow::bail!("query needs a 'k' >= 1"),
+        };
+        let mut q = Query::new(algo, k);
+        if let Some(s) = json.get("seed").and_then(|v| v.as_i64()) {
+            q.seed = Some(s as u64);
+        }
+        if let Some(w) = json.get("weights").and_then(|v| v.as_str()) {
+            q.weights = Some(WeightModel::parse(w)?);
+        }
+        if let Some(t) = json.get("timeout_secs").and_then(|v| v.as_f64()) {
+            q.timeout = Some(super::options::parse_timeout_secs(t)?);
+        }
+        Ok(q)
+    }
+}
+
+/// The point in a committed CELF trajectory after one seed: everything a
+/// query stopping there needs to answer bit-identically to a cold run.
+struct TrajPoint {
+    v: VertexId,
+    /// Running σ̂ (sum of committed gains in commit order).
+    cum_sigma: f64,
+    /// Cumulative CELF re-evaluations when this seed committed.
+    cum_reevals: u64,
+}
+
+/// The INFUSER warm state for one (memo backend, run seed): the retained
+/// memo, the resumable CELF queue, and the trajectory served so far.
+struct InfuserWarm {
+    seed: u64,
+    memo: Box<dyn MemoBackend>,
+    celf: CelfState,
+    trajectory: Vec<TrajPoint>,
+    sigma: f64,
+    lp_iterations: usize,
+    edge_visits: u64,
+    /// Cold-run `tracked_bytes` of the full pipeline (memo + gains).
+    tracked_bytes: u64,
+    /// Cold-run `tracked_bytes` of the K=1 path (memo only).
+    memo_bytes: u64,
+}
+
+impl InfuserWarm {
+    /// The cold pipeline's stage 1, retained: propagate, memoize, seed
+    /// the CELF queue from the initial gains.
+    fn build(
+        graph: &Graph,
+        opts: &RunOptions,
+        memo_kind: MemoKind,
+        seed: u64,
+        pool: &ThreadPool,
+        budget: &Budget,
+    ) -> crate::Result<Self> {
+        use crate::engine::Engine;
+        let popts = opts.seed(seed).propagate_opts(crate::labelprop::Mode::Async);
+        let prop = NativeEngine.propagate(graph, &popts)?;
+        budget.check()?;
+        let lp_iterations = prop.iterations;
+        let edge_visits = prop.edge_visits;
+        let memo = make_memo(memo_kind, prop.labels);
+        let mg0 = memo.initial_gains(pool);
+        budget.check()?;
+        let memo_bytes = memo.bytes();
+        let tracked_bytes = memo_bytes + (mg0.len() * 8) as u64;
+        let celf = CelfState::new(&mg0);
+        Ok(Self {
+            seed,
+            memo,
+            celf,
+            trajectory: Vec::new(),
+            sigma: 0.0,
+            lp_iterations,
+            edge_visits,
+            tracked_bytes,
+            memo_bytes,
+        })
+    }
+
+    /// Grow the committed trajectory to `k` seeds (no-op when already
+    /// there). On a budget trip the seeds committed before the deadline
+    /// stay valid — the trajectory is flushed from the commit log *before*
+    /// the error propagates, so it never desyncs from the memo coverage
+    /// the commits already mutated, and the next query resumes exactly
+    /// where a cold run's greedy loop would have been.
+    fn extend_to(&mut self, k: usize, pool: &ThreadPool, budget: &Budget) -> crate::Result<()> {
+        if self.trajectory.len() >= k {
+            return Ok(());
+        }
+        let Self { memo, celf, trajectory, sigma, .. } = self;
+        let memo_cell = RefCell::new(memo);
+        let mut commits = Vec::new();
+        let outcome = celf.extend_to(
+            k,
+            |v, _| memo_cell.borrow().marginal_gain(v as usize, pool),
+            |v, _| memo_cell.borrow_mut().commit(v as usize),
+            budget,
+            &mut commits,
+        );
+        for c in commits {
+            *sigma += c.gain;
+            trajectory.push(TrajPoint { v: c.v, cum_sigma: *sigma, cum_reevals: c.reevals });
+        }
+        outcome?;
+        Ok(())
+    }
+
+    /// Assemble the cold-identical result for a `k`-seed query.
+    fn result(&self, k: usize) -> ImResult {
+        let kk = k.min(self.trajectory.len());
+        let served = &self.trajectory[..kk];
+        let (sigma, reevals) = served
+            .last()
+            .map_or((0.0, 0), |t| (t.cum_sigma, t.cum_reevals));
+        ImResult {
+            seeds: served.iter().map(|t| t.v).collect(),
+            influence: sigma,
+            tracked_bytes: self.tracked_bytes,
+            counters: vec![
+                ("celf_reevals", reevals as f64),
+                ("lp_iterations", self.lp_iterations as f64),
+                ("edge_visits", self.edge_visits as f64),
+            ],
+        }
+    }
+
+    /// Assemble the cold-identical result for the K=1 fast path
+    /// (`run_first_seed`'s shape: no CELF counters, memo-only bytes).
+    /// The empty-graph degenerate case mirrors the cold argmax, which
+    /// starts from `(vertex 0, gain 0.0)`.
+    fn first_seed_result(&self) -> ImResult {
+        let (v, sigma) = self
+            .trajectory
+            .first()
+            .map_or((0, 0.0), |first| (first.v, first.cum_sigma));
+        ImResult {
+            seeds: vec![v],
+            influence: sigma,
+            tracked_bytes: self.memo_bytes,
+            counters: vec![("lp_iterations", self.lp_iterations as f64)],
+        }
+    }
+}
+
+/// Per-session mutable warm state behind the shared [`Prepared`] borrow.
+#[derive(Default)]
+struct WarmState {
+    /// At most one warm INFUSER pipeline per memo backend; a query with a
+    /// different run seed replaces the backend's entry (sessions serve
+    /// one sample universe at a time — keeping every seed ever queried
+    /// would hoard `O(n·R)` bytes per seed).
+    infuser: Vec<(MemoKind, InfuserWarm)>,
+}
+
+/// Everything [`super::ImAlgorithm`] implementations may touch: the
+/// weighted graph, the shared options, the persistent worker pool, and
+/// the warm-state cache. Produced by [`ImSession::prepare`] and borrowed
+/// per query.
+pub struct Prepared<'g> {
+    graph: Cow<'g, Graph>,
+    opts: RunOptions,
+    pool: ThreadPool,
+    /// The weight model the session last applied (`None` = the graph
+    /// exactly as handed to `prepare`).
+    weights: Option<WeightModel>,
+    warm: RefCell<WarmState>,
+}
+
+impl Prepared<'_> {
+    /// The session's current weighted graph.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// The session's shared run options.
+    pub fn options(&self) -> &RunOptions {
+        &self.opts
+    }
+
+    /// The persistent worker pool (spawned once per session).
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+
+    /// Arm the wall-clock budget for one query (query override first,
+    /// session default second).
+    pub fn budget_for(&self, q: &Query) -> Budget {
+        match q.timeout {
+            Some(d) => Budget::timeout(d),
+            None => self.opts.budget(),
+        }
+    }
+
+    /// Serve an INFUSER-family query from the warm state, building or
+    /// extending it as needed. `memo_kind` is the resolved backend
+    /// (`infuser-sketch` forces [`MemoKind::Sketch`]); `first_seed_only`
+    /// selects the K=1 fast path's result shape.
+    pub(crate) fn run_infuser(
+        &self,
+        memo_kind: MemoKind,
+        first_seed_only: bool,
+        q: &Query,
+    ) -> crate::Result<ImResult> {
+        let seed = q.seed.unwrap_or(self.opts.seed);
+        let budget = self.budget_for(q);
+        let mut warm = self.warm.borrow_mut();
+        let slot = &mut warm.infuser;
+        let idx = match slot.iter().position(|(kind, _)| *kind == memo_kind) {
+            Some(i) if slot[i].1.seed == seed => i,
+            Some(i) => {
+                slot[i].1 =
+                    InfuserWarm::build(&self.graph, &self.opts, memo_kind, seed, &self.pool, &budget)?;
+                i
+            }
+            None => {
+                let built =
+                    InfuserWarm::build(&self.graph, &self.opts, memo_kind, seed, &self.pool, &budget)?;
+                slot.push((memo_kind, built));
+                slot.len() - 1
+            }
+        };
+        let w = &mut slot[idx].1;
+        let target = if first_seed_only { 1 } else { q.k };
+        w.extend_to(target, &self.pool, &budget)?;
+        Ok(if first_seed_only { w.first_seed_result() } else { w.result(target) })
+    }
+
+    /// Number of INFUSER warm pipelines currently cached (observability /
+    /// tests).
+    pub fn warm_pipelines(&self) -> usize {
+        self.warm.borrow().infuser.len()
+    }
+}
+
+/// A prepared influence-maximization session: preprocessing once, then
+/// repeated [`Query`]s against the warm state. See the module docs for
+/// the reuse contract.
+///
+/// ```
+/// use infuser::api::{ImSession, Query, RunOptions};
+/// use infuser::config::AlgoSpec;
+/// use infuser::gen::{self, GenSpec};
+/// use infuser::graph::WeightModel;
+///
+/// let g = gen::generate(&GenSpec::barabasi_albert(200, 2, 7))
+///     .with_weights(WeightModel::Const(0.1), 11);
+/// let mut session = ImSession::prepare(g, RunOptions::new().r_count(32).threads(2)).unwrap();
+/// let five = session.query(&Query::new(AlgoSpec::InfuserMg, 5)).unwrap();
+/// // The K-ladder extends the warm seed set instead of recomputing…
+/// let ten = session.query(&Query::new(AlgoSpec::InfuserMg, 10)).unwrap();
+/// assert_eq!(&ten.seeds[..5], &five.seeds[..]);
+/// // …and stays bit-identical to a cold one-shot run.
+/// ```
+pub struct ImSession<'g> {
+    prepared: Prepared<'g>,
+}
+
+impl<'g> ImSession<'g> {
+    /// Preprocess an owned weighted graph into a servable session: knob
+    /// validation plus the one-time worker-pool spawn. The heavier warm
+    /// state (propagation fixpoint, memo) is built lazily on the first
+    /// query that needs it, so sessions that only serve proxies never pay
+    /// for it.
+    pub fn prepare(graph: Graph, opts: RunOptions) -> crate::Result<Self> {
+        Self::prepare_cow(Cow::Owned(graph), opts)
+    }
+
+    /// [`ImSession::prepare`] borrowing the graph instead of owning it —
+    /// what the experiment coordinator uses so an order/setting sweep
+    /// doesn't clone the CSR per cell.
+    pub fn prepare_borrowed(graph: &'g Graph, opts: RunOptions) -> crate::Result<Self> {
+        Self::prepare_cow(Cow::Borrowed(graph), opts)
+    }
+
+    fn prepare_cow(graph: Cow<'g, Graph>, opts: RunOptions) -> crate::Result<Self> {
+        opts.validate()?;
+        let pool = ThreadPool::with_schedule(opts.threads, opts.schedule);
+        Ok(Self {
+            prepared: Prepared {
+                graph,
+                opts,
+                pool,
+                weights: None,
+                warm: RefCell::new(WarmState::default()),
+            },
+        })
+    }
+
+    /// The prepared state (what [`super::ImAlgorithm`] implementations
+    /// receive).
+    pub fn prepared(&self) -> &Prepared<'g> {
+        &self.prepared
+    }
+
+    /// The session's current weighted graph.
+    pub fn graph(&self) -> &Graph {
+        self.prepared.graph()
+    }
+
+    /// The session's shared run options.
+    pub fn options(&self) -> &RunOptions {
+        self.prepared.options()
+    }
+
+    /// Answer one query. Dispatches through the [`super::resolve`]
+    /// registry; INFUSER-family queries reuse (and extend) the warm
+    /// state, everything else recomputes against the prepared graph.
+    pub fn query(&mut self, q: &Query) -> crate::Result<ImResult> {
+        anyhow::ensure!(q.k >= 1, "query k must be >= 1");
+        if let Some(model) = q.weights {
+            self.set_weights(model);
+        }
+        resolve(q.algo).run(&self.prepared, q)
+    }
+
+    /// Re-weight the session's graph under `model` (rebuilding the
+    /// sampling tables) and invalidate the warm state. A no-op when
+    /// `model` is already the active one. Uses the same weight-seed
+    /// derivation as the experiment coordinator (`seed ^ 0x5E77`), so a
+    /// session query equals the corresponding grid cell bit-for-bit.
+    pub fn set_weights(&mut self, model: WeightModel) {
+        if self.prepared.weights == Some(model) {
+            return;
+        }
+        let reweighted =
+            self.prepared.graph.as_ref().clone().with_weights(model, self.prepared.opts.seed ^ 0x5E77);
+        self.prepared.graph = Cow::Owned(reweighted);
+        self.prepared.weights = Some(model);
+        self.prepared.warm.borrow_mut().infuser.clear();
+    }
+
+    /// Drop all warm state (keeps the pool and the graph). Mostly for
+    /// tests and memory-pressure hooks.
+    pub fn invalidate(&mut self) {
+        self.prepared.warm.borrow_mut().infuser.clear();
+    }
+}

@@ -122,12 +122,13 @@ impl BenchEnv {
     pub fn base_config(&self) -> ExperimentConfig {
         ExperimentConfig {
             k: self.k,
-            r_count: self.r,
-            threads: self.threads,
-            timeout: self.timeout,
-            seed: 0,
             oracle_r: 0,
-            lanes: self.lanes,
+            options: crate::api::RunOptions::new()
+                .r_count(self.r)
+                .threads(self.threads)
+                .lanes(self.lanes)
+                .order(self.order)
+                .timeout(Some(self.timeout)),
             orders: vec![self.order],
             ..Default::default()
         }

@@ -7,11 +7,8 @@
 //! coordinator crosses them into a scenario grid, exactly like the paper's
 //! Tables 5–7 (12 graphs × 4 settings × 3 algorithms).
 
-use crate::algo::infuser::MemoKind;
+use crate::api::RunOptions;
 use crate::graph::{OrderStrategy, WeightModel};
-use crate::labelprop::DEFAULT_EDGE_BLOCK;
-use crate::runtime::pool::Schedule;
-use crate::simd::{Backend, LaneWidth};
 use crate::util::json::Json;
 use std::time::Duration;
 
@@ -64,7 +61,9 @@ impl AlgoSpec {
         }
     }
 
-    /// Column header used in rendered tables.
+    /// Column header used in rendered tables (human-oriented; see the
+    /// [`std::fmt::Display`] impl for the machine form that round-trips
+    /// through [`AlgoSpec::parse`]).
     pub fn label(&self) -> String {
         match self {
             Self::MixGreedy => "MixGreedy".into(),
@@ -75,6 +74,25 @@ impl AlgoSpec {
             Self::Imm { epsilon } => format!("IMM(e={epsilon})"),
             Self::Degree => "Degree".into(),
             Self::DegreeDiscount => "DegreeDiscount".into(),
+        }
+    }
+}
+
+/// The machine-readable rendering: exactly the dialect [`AlgoSpec::parse`]
+/// accepts, so `parse(x.to_string()) == x` for every spec (enforced by a
+/// property test). Rust's shortest-round-trip float formatting keeps the
+/// `imm:EPS` case exact.
+impl std::fmt::Display for AlgoSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::MixGreedy => write!(f, "mixgreedy"),
+            Self::FusedSampling => write!(f, "fused"),
+            Self::InfuserMg => write!(f, "infuser"),
+            Self::InfuserSketch => write!(f, "infuser-sketch"),
+            Self::InfuserK1 => write!(f, "infuser-k1"),
+            Self::Imm { epsilon } => write!(f, "imm:{epsilon}"),
+            Self::Degree => write!(f, "degree"),
+            Self::DegreeDiscount => write!(f, "degree-discount"),
         }
     }
 }
@@ -127,7 +145,9 @@ impl DatasetRef {
     }
 }
 
-/// Full experiment configuration.
+/// Full experiment configuration: the grid axes (datasets × settings ×
+/// algorithms), the per-cell query geometry (`k`, `oracle_r`, the
+/// ordering sweep), and the shared [`RunOptions`] every cell runs under.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     /// Datasets to run.
@@ -138,43 +158,21 @@ pub struct ExperimentConfig {
     pub algos: Vec<AlgoSpec>,
     /// Seed-set size K.
     pub k: usize,
-    /// Simulations R.
-    pub r_count: usize,
-    /// Threads τ for the parallel algorithms.
-    pub threads: usize,
-    /// Run seed.
-    pub seed: u64,
-    /// Per-run wall-clock timeout (the paper's 302,400 s, scaled down).
-    pub timeout: Duration,
     /// Oracle simulations for influence rescoring (0 = skip rescoring).
     pub oracle_r: usize,
-    /// VECLABEL backend.
-    pub backend: Backend,
-    /// VECLABEL lane batch width `B ∈ {8, 16, 32}` (JSON key `"lanes"`).
-    /// Result-invariant across widths; throughput knob only.
-    pub lanes: LaneWidth,
-    /// Work-distribution policy of the worker-pool runtime (JSON key
-    /// `"schedule"`: `"dynamic"` or `"steal"`). Result-invariant;
-    /// throughput knob only ([`crate::runtime::pool`]).
-    pub schedule: Schedule,
-    /// Hub-splitting edge-block granularity for the propagation stage
-    /// (JSON key `"block_size"`, edges per block, ≥ 1). Result-invariant;
-    /// throughput knob only.
-    pub block_size: usize,
-    /// Memoization backend for the INFUSER-MG cells (`infuser-sketch`
-    /// cells always use the sketch regardless of this default).
-    pub memo: MemoKind,
+    /// Shared run geometry (JSON keys `r`, `seed`, `threads`, `backend`,
+    /// `lanes`, `schedule`, `block_size`, `memo`, `timeout_secs`,
+    /// `imm_memory_limit_gb` — parsed once by
+    /// [`RunOptions::from_json`], never re-read per algorithm). The
+    /// `order` knob holds the *primary* ordering; sweeps live in
+    /// [`ExperimentConfig::orders`].
+    pub options: RunOptions,
     /// Vertex-reordering strategies to sweep (JSON key `"order"`: a
     /// string or an array of strings). The grid gets one table row per
     /// (dataset, ordering); a single entry — the default `identity` —
     /// keeps the pre-refactor shape. Result-invariant for the hash-fused
     /// algorithms ([`crate::graph::order`]); throughput knob only.
     pub orders: Vec<OrderStrategy>,
-    /// Memory budget for IMM's RR pool in bytes (None = unlimited). The
-    /// paper's Table 6 shows IMM(ε=0.13) failing with "insufficient
-    /// memory" on the largest graphs; this knob reproduces those "oom"
-    /// cells at laptop scale.
-    pub imm_memory_limit: Option<u64>,
 }
 
 impl Default for ExperimentConfig {
@@ -184,18 +182,11 @@ impl Default for ExperimentConfig {
             settings: vec![WeightModel::Const(0.01)],
             algos: vec![AlgoSpec::InfuserMg],
             k: 50,
-            r_count: 256,
-            threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
-            seed: 0,
-            timeout: Duration::from_secs(600),
             oracle_r: 0,
-            backend: Backend::detect(),
-            lanes: LaneWidth::default(),
-            schedule: Schedule::default(),
-            block_size: DEFAULT_EDGE_BLOCK,
-            memo: MemoKind::Dense,
+            options: RunOptions::default()
+                .threads(std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1))
+                .timeout(Some(Duration::from_secs(600))),
             orders: vec![OrderStrategy::Identity],
-            imm_memory_limit: None,
         }
     }
 }
@@ -218,6 +209,17 @@ impl ExperimentConfig {
     pub fn from_json(text: &str) -> crate::Result<Self> {
         let json = Json::parse(text)?;
         let mut cfg = Self::default();
+        // The shared knobs are parsed exactly once, by the API layer;
+        // config only layers the grid axes and its own defaults (machine
+        // threads, the scaled-down paper timeout) on top.
+        let defaults = cfg.options;
+        cfg.options = RunOptions::from_json(&json)?;
+        if json.get("threads").is_none() {
+            cfg.options.threads = defaults.threads;
+        }
+        if json.get("timeout_secs").is_none() {
+            cfg.options.timeout = defaults.timeout;
+        }
         if let Some(arr) = json.get("datasets").and_then(|v| v.as_arr()) {
             cfg.datasets = arr
                 .iter()
@@ -251,49 +253,12 @@ impl ExperimentConfig {
         if let Some(k) = json.get("k").and_then(|v| v.as_i64()) {
             cfg.k = k as usize;
         }
-        if let Some(r) = json.get("r").and_then(|v| v.as_i64()) {
-            cfg.r_count = r as usize;
-        }
-        if let Some(t) = json.get("threads").and_then(|v| v.as_i64()) {
-            cfg.threads = t as usize;
-        }
-        if let Some(s) = json.get("seed").and_then(|v| v.as_i64()) {
-            cfg.seed = s as u64;
-        }
-        if let Some(t) = json.get("timeout_secs").and_then(|v| v.as_f64()) {
-            cfg.timeout = Duration::from_secs_f64(t);
-        }
         if let Some(o) = json.get("oracle_r").and_then(|v| v.as_i64()) {
             cfg.oracle_r = o as usize;
         }
-        if let Some(b) = json.get("backend").and_then(|v| v.as_str()) {
-            cfg.backend = Backend::parse(b)?;
-        }
-        if let Some(l) = json.get("lanes") {
-            cfg.lanes = match (l.as_i64(), l.as_str()) {
-                (Some(b), _) => LaneWidth::from_lanes(b as usize)?,
-                (None, Some(s)) => LaneWidth::parse(s)?,
-                (None, None) => {
-                    anyhow::bail!("'lanes' must be a number or string (8, 16, or 32)")
-                }
-            };
-        }
-        if let Some(s) = json.get("schedule") {
-            cfg.schedule = match s.as_str() {
-                Some(text) => Schedule::parse(text)?,
-                None => anyhow::bail!("'schedule' must be a string (dynamic|steal)"),
-            };
-        }
-        if let Some(b) = json.get("block_size") {
-            cfg.block_size = match b.as_i64() {
-                Some(v) if v >= 1 => v as usize,
-                Some(v) => anyhow::bail!("'block_size' must be >= 1 (got {v})"),
-                None => anyhow::bail!("'block_size' must be a positive integer"),
-            };
-        }
-        if let Some(m) = json.get("memo").and_then(|v| v.as_str()) {
-            cfg.memo = MemoKind::parse(m)?;
-        }
+        // The grid-only extension of the shared "order" knob: an *array*
+        // sweeps orderings row by row (RunOptions::from_json handles the
+        // single-string form; the first entry becomes the primary).
         if let Some(o) = json.get("order") {
             cfg.orders = match (o.as_str(), o.as_arr()) {
                 (Some(s), _) => vec![OrderStrategy::parse(s)?],
@@ -310,12 +275,10 @@ impl ExperimentConfig {
                 ),
             };
             anyhow::ensure!(!cfg.orders.is_empty(), "'order' must not be empty");
-        }
-        if let Some(gb) = json.get("imm_memory_limit_gb").and_then(|v| v.as_f64()) {
-            cfg.imm_memory_limit = Some((gb * 1024.0 * 1024.0 * 1024.0) as u64);
+            cfg.options.order = cfg.orders[0];
         }
         anyhow::ensure!(cfg.k >= 1, "k must be >= 1");
-        anyhow::ensure!(cfg.r_count >= 1, "r must be >= 1");
+        cfg.options.validate()?;
         Ok(cfg)
     }
 
@@ -323,6 +286,12 @@ impl ExperimentConfig {
     /// what single-run entry points like `infuser run` use.
     pub fn order(&self) -> OrderStrategy {
         self.orders.first().copied().unwrap_or_default()
+    }
+
+    /// The per-cell run options: the shared geometry with the primary
+    /// ordering applied.
+    pub fn run_options(&self) -> RunOptions {
+        self.options.order(self.order())
     }
 
     /// The paper's four weight settings (§4.1).
@@ -357,7 +326,10 @@ mod tests {
         assert_eq!(cfg.settings[1], WeightModel::Normal(0.05, 0.025));
         assert_eq!(cfg.algos[1], AlgoSpec::Imm { epsilon: 0.13 });
         assert_eq!(cfg.k, 10);
-        assert_eq!(cfg.timeout, Duration::from_secs(30));
+        assert_eq!(cfg.options.r_count, 64);
+        assert_eq!(cfg.options.threads, 4);
+        assert_eq!(cfg.options.seed, 7);
+        assert_eq!(cfg.options.timeout, Some(Duration::from_secs(30)));
     }
 
     #[test]
@@ -365,6 +337,59 @@ mod tests {
         let cfg = ExperimentConfig::from_json("{}").unwrap();
         assert_eq!(cfg.k, 50);
         assert!(!cfg.datasets.is_empty());
+        // Config-level defaults survive the shared-knob delegation.
+        assert_eq!(cfg.options.timeout, Some(Duration::from_secs(600)));
+        assert_eq!(cfg.options.r_count, 256);
+    }
+
+    #[test]
+    fn display_mirrors_parse_for_every_spec() {
+        // The fixed variants, plus the interesting IMM epsilons.
+        for s in [
+            "mixgreedy", "fused", "infuser", "infuser-sketch", "infuser-k1",
+            "degree", "degree-discount", "imm:0.13", "imm:0.5",
+        ] {
+            let spec = AlgoSpec::parse(s).unwrap();
+            assert_eq!(spec.to_string(), s, "display must mirror parse");
+        }
+        crate::util::proptest_lite::check("algospec-roundtrip", 200, |g| {
+            let spec = match g.size(0, 8) {
+                0 => AlgoSpec::MixGreedy,
+                1 => AlgoSpec::FusedSampling,
+                2 => AlgoSpec::InfuserMg,
+                3 => AlgoSpec::InfuserSketch,
+                4 => AlgoSpec::InfuserK1,
+                5 => AlgoSpec::Degree,
+                6 => AlgoSpec::DegreeDiscount,
+                _ => AlgoSpec::Imm {
+                    // Arbitrary positive finite epsilons, including
+                    // awkward ones: shortest-round-trip formatting must
+                    // bring every one back bit-exactly.
+                    epsilon: (g.below(1_000_000) as f64 + 1.0) / g.size(1, 10_000) as f64,
+                },
+            };
+            let rendered = spec.to_string();
+            let back = AlgoSpec::parse(&rendered).unwrap();
+            assert_eq!(back, spec, "parse(display({rendered})) must round-trip");
+        });
+    }
+
+    #[test]
+    fn conflicting_shared_keys_are_rejected() {
+        // The aliases RunOptions accepts must not be combinable with
+        // their primaries — a conflict is an error even when the values
+        // agree (one source of truth per knob).
+        for doc in [
+            r#"{"r": 64, "r_count": 64}"#,
+            r#"{"r": 64, "r_count": 32}"#,
+            r#"{"block_size": 16, "block-size": 16}"#,
+        ] {
+            let err = ExperimentConfig::from_json(doc).unwrap_err();
+            assert!(err.to_string().contains("conflicting keys"), "{doc}: {err}");
+        }
+        // The alias alone is fine.
+        let cfg = ExperimentConfig::from_json(r#"{"r_count": 48}"#).unwrap();
+        assert_eq!(cfg.options.r_count, 48);
     }
 
     #[test]
@@ -379,11 +404,12 @@ mod tests {
 
     #[test]
     fn lanes_parse_from_json_number_or_string() {
+        use crate::simd::LaneWidth;
         let cfg = ExperimentConfig::from_json(r#"{"lanes": 16}"#).unwrap();
-        assert_eq!(cfg.lanes, LaneWidth::W16);
+        assert_eq!(cfg.options.lanes, LaneWidth::W16);
         let cfg = ExperimentConfig::from_json(r#"{"lanes": "32"}"#).unwrap();
-        assert_eq!(cfg.lanes, LaneWidth::W32);
-        assert_eq!(ExperimentConfig::from_json("{}").unwrap().lanes, LaneWidth::W8);
+        assert_eq!(cfg.options.lanes, LaneWidth::W32);
+        assert_eq!(ExperimentConfig::from_json("{}").unwrap().options.lanes, LaneWidth::W8);
         for bad in [r#"{"lanes": 12}"#, r#"{"lanes": "wide"}"#, r#"{"lanes": true}"#] {
             assert!(ExperimentConfig::from_json(bad).is_err(), "{bad}");
         }
@@ -391,13 +417,15 @@ mod tests {
 
     #[test]
     fn schedule_and_block_size_parse_from_json() {
+        use crate::labelprop::DEFAULT_EDGE_BLOCK;
+        use crate::runtime::pool::Schedule;
         let cfg =
             ExperimentConfig::from_json(r#"{"schedule": "dynamic", "block_size": 512}"#).unwrap();
-        assert_eq!(cfg.schedule, Schedule::Dynamic);
-        assert_eq!(cfg.block_size, 512);
+        assert_eq!(cfg.options.schedule, Schedule::Dynamic);
+        assert_eq!(cfg.options.block_size, 512);
         let defaults = ExperimentConfig::from_json("{}").unwrap();
-        assert_eq!(defaults.schedule, Schedule::Steal);
-        assert_eq!(defaults.block_size, DEFAULT_EDGE_BLOCK);
+        assert_eq!(defaults.options.schedule, Schedule::Steal);
+        assert_eq!(defaults.options.block_size, DEFAULT_EDGE_BLOCK);
         for bad in [
             r#"{"schedule": "guided"}"#,
             r#"{"schedule": 3}"#,
@@ -411,9 +439,10 @@ mod tests {
 
     #[test]
     fn memo_backend_parses_from_json() {
+        use crate::algo::infuser::MemoKind;
         let cfg = ExperimentConfig::from_json(r#"{"memo": "sketch"}"#).unwrap();
-        assert_eq!(cfg.memo, MemoKind::Sketch);
-        assert_eq!(ExperimentConfig::from_json("{}").unwrap().memo, MemoKind::Dense);
+        assert_eq!(cfg.options.memo, MemoKind::Sketch);
+        assert_eq!(ExperimentConfig::from_json("{}").unwrap().options.memo, MemoKind::Dense);
         assert!(ExperimentConfig::from_json(r#"{"memo": "zip"}"#).is_err());
     }
 
@@ -422,6 +451,7 @@ mod tests {
         let cfg = ExperimentConfig::from_json(r#"{"order": "degree"}"#).unwrap();
         assert_eq!(cfg.orders, vec![OrderStrategy::Degree]);
         assert_eq!(cfg.order(), OrderStrategy::Degree);
+        assert_eq!(cfg.run_options().order, OrderStrategy::Degree);
         let cfg =
             ExperimentConfig::from_json(r#"{"order": ["identity", "bfs", "hybrid"]}"#).unwrap();
         assert_eq!(
@@ -455,8 +485,8 @@ mod tests {
     #[test]
     fn imm_memory_limit_parses_from_gb() {
         let cfg = ExperimentConfig::from_json(r#"{"imm_memory_limit_gb": 0.5}"#).unwrap();
-        assert_eq!(cfg.imm_memory_limit, Some(512 * 1024 * 1024));
-        assert_eq!(ExperimentConfig::from_json("{}").unwrap().imm_memory_limit, None);
+        assert_eq!(cfg.options.imm_memory_limit, Some(512 * 1024 * 1024));
+        assert_eq!(ExperimentConfig::from_json("{}").unwrap().options.imm_memory_limit, None);
     }
 
     #[test]

@@ -11,11 +11,8 @@ pub mod table;
 
 pub use table::Table;
 
-use crate::algo::fused::{FusedParams, FusedSampling};
-use crate::algo::imm::{Imm, ImmParams};
-use crate::algo::infuser::{InfuserMg, InfuserParams};
-use crate::algo::mixgreedy::{MixGreedy, MixGreedyParams};
-use crate::algo::{self, oracle, Budget, ImResult};
+use crate::algo::{self, oracle, ImResult};
+use crate::api::{ImSession, Query};
 use crate::config::{AlgoSpec, DatasetRef, ExperimentConfig};
 use crate::graph::Graph;
 #[cfg(test)]
@@ -132,11 +129,17 @@ impl Runner {
     }
 
     /// Run one algorithm on one weighted graph under the config's budget
-    /// with an explicit vertex-reordering strategy. The graph is passed in
-    /// its original layout; algorithms that honor `order` relabel
-    /// internally and report seeds in original ids, so oracle rescoring
-    /// below always runs on the original graph. Proxy heuristics and IMM
-    /// have no label-matrix hot path and ignore the strategy.
+    /// with an explicit vertex-reordering strategy, through the public
+    /// session API: one cold [`ImSession`] per cell (so the timing tables
+    /// stay honest about full cold-run cost) and one [`Query`] dispatched
+    /// via the [`crate::api::resolve`] registry — the per-algorithm
+    /// params plumbing lives with the algorithms now, not here.
+    ///
+    /// The graph is passed in its original layout; algorithms that honor
+    /// `order` relabel internally and report seeds in original ids, so
+    /// oracle rescoring below always runs on the original graph. Proxy
+    /// heuristics and IMM have no label-matrix hot path and ignore the
+    /// strategy.
     pub fn run_cell_ordered(
         &self,
         graph: &Graph,
@@ -144,92 +147,10 @@ impl Runner {
         order: crate::graph::OrderStrategy,
     ) -> Outcome {
         let cfg = &self.cfg;
-        let budget = Budget::timeout(cfg.timeout);
+        let opts = cfg.options.order(order);
         let timer = Timer::start();
-        let result: crate::Result<ImResult> = match algo {
-            // MIXGREEDY's sampling/traversal stream stays serial (the
-            // paper runs the baseline at tau = 1); the pool fans out only
-            // its per-sample gain scatter, which is result-invariant, so
-            // threading it keeps the baseline's numbers honest while its
-            // dominant cost remains the serial RANDCAS work.
-            AlgoSpec::MixGreedy => MixGreedy::new(MixGreedyParams {
-                k: cfg.k,
-                r_count: cfg.r_count,
-                seed: cfg.seed,
-                threads: cfg.threads,
-                schedule: cfg.schedule,
-                order,
-            })
-            .run(graph, &budget),
-            AlgoSpec::FusedSampling => FusedSampling::new(FusedParams {
-                k: cfg.k,
-                r_count: cfg.r_count,
-                seed: cfg.seed,
-                threads: cfg.threads,
-                schedule: cfg.schedule,
-                lanes: cfg.lanes,
-                order,
-            })
-            .run(graph, &budget),
-            AlgoSpec::InfuserMg | AlgoSpec::InfuserSketch => InfuserMg::new(InfuserParams {
-                k: cfg.k,
-                r_count: cfg.r_count,
-                seed: cfg.seed,
-                threads: cfg.threads,
-                backend: cfg.backend,
-                lanes: cfg.lanes,
-                schedule: cfg.schedule,
-                block_size: cfg.block_size,
-                memo: if algo == AlgoSpec::InfuserSketch {
-                    crate::algo::infuser::MemoKind::Sketch
-                } else {
-                    cfg.memo
-                },
-                order,
-                ..Default::default()
-            })
-            .run(graph, &budget),
-            AlgoSpec::InfuserK1 => InfuserMg::new(InfuserParams {
-                k: 1,
-                r_count: cfg.r_count,
-                seed: cfg.seed,
-                threads: cfg.threads,
-                backend: cfg.backend,
-                lanes: cfg.lanes,
-                schedule: cfg.schedule,
-                block_size: cfg.block_size,
-                memo: cfg.memo,
-                order,
-                ..Default::default()
-            })
-            .run_first_seed(graph, &budget),
-            AlgoSpec::Degree | AlgoSpec::DegreeDiscount => {
-                let seeds = match algo {
-                    AlgoSpec::Degree => crate::algo::proxy::degree(graph, cfg.k),
-                    _ => crate::algo::proxy::degree_discount(
-                        graph,
-                        cfg.k,
-                        crate::algo::proxy::mean_weight(graph),
-                    ),
-                };
-                Ok(ImResult {
-                    seeds,
-                    influence: 0.0, // proxies carry no internal estimate
-                    tracked_bytes: (graph.num_vertices() * 24) as u64,
-                    counters: vec![],
-                })
-            }
-            AlgoSpec::Imm { epsilon } => Imm::new(ImmParams {
-                k: cfg.k,
-                epsilon,
-                seed: cfg.seed,
-                threads: cfg.threads,
-                schedule: cfg.schedule,
-                memory_limit: cfg.imm_memory_limit,
-                ..Default::default()
-            })
-            .run(graph, &budget),
-        };
+        let result: crate::Result<ImResult> = ImSession::prepare_borrowed(graph, opts)
+            .and_then(|mut session| session.query(&Query::new(algo, cfg.k)));
         let secs = timer.secs();
         match result {
             Ok(res) => {
@@ -240,7 +161,7 @@ impl Runner {
                         &oracle::OracleParams {
                             r_count: cfg.oracle_r,
                             seed: 0x0AC1E,
-                            threads: cfg.threads,
+                            threads: cfg.options.threads,
                         },
                     ))
                 } else {
@@ -269,12 +190,12 @@ impl Runner {
         self.log(&format!(
             "grid geometry: K={} R={} tau={} backend={} lanes=B{} schedule={} block={} orders={}",
             cfg.k,
-            cfg.r_count,
-            cfg.threads,
-            cfg.backend.label(),
-            cfg.lanes.label(),
-            cfg.schedule.label(),
-            cfg.block_size,
+            cfg.options.r_count,
+            cfg.options.threads,
+            cfg.options.backend.label(),
+            cfg.options.lanes.label(),
+            cfg.options.schedule.label(),
+            cfg.options.block_size,
             cfg.orders.iter().map(|o| o.label()).collect::<Vec<_>>().join(",")
         ));
         let sweep_orders = cfg.orders.len() > 1;
@@ -286,7 +207,7 @@ impl Runner {
                 // graph is layout-independent (algorithms relabel
                 // internally), so the ordering sweep must not repeat the
                 // O(n + m) clone + per-edge weight draw.
-                let graph = base.clone().with_weights(setting, cfg.seed ^ 0x5E77);
+                let graph = base.clone().with_weights(setting, cfg.options.seed ^ 0x5E77);
                 for &order in &cfg.orders {
                     let row_label = if sweep_orders {
                         format!("{} [{}]", dref.name(), order.label())
@@ -383,18 +304,13 @@ mod tests {
             settings: vec![WeightModel::Const(0.05)],
             algos: vec![AlgoSpec::InfuserMg, AlgoSpec::Imm { epsilon: 0.5 }],
             k: 3,
-            r_count: 32,
-            threads: 2,
-            seed: 1,
-            timeout: Duration::from_secs(120),
             oracle_r: 64,
-            backend: crate::simd::Backend::detect(),
-            lanes: crate::simd::LaneWidth::default(),
-            schedule: crate::runtime::pool::Schedule::default(),
-            block_size: crate::labelprop::DEFAULT_EDGE_BLOCK,
-            memo: crate::algo::infuser::MemoKind::Dense,
+            options: crate::api::RunOptions::new()
+                .r_count(32)
+                .threads(2)
+                .seed(1)
+                .timeout(Some(Duration::from_secs(120))),
             orders: vec![crate::graph::OrderStrategy::Identity],
-            imm_memory_limit: None,
         }
     }
 
@@ -441,7 +357,7 @@ mod tests {
             let mut cfg = tiny_cfg();
             cfg.algos = vec![AlgoSpec::InfuserMg, AlgoSpec::FusedSampling];
             cfg.oracle_r = 0;
-            cfg.lanes = lanes;
+            cfg.options.lanes = lanes;
             let mut runner = Runner::new(cfg);
             runner.verbose = false;
             runner
@@ -498,13 +414,29 @@ mod tests {
         let mut cfg = tiny_cfg();
         cfg.algos = vec![AlgoSpec::MixGreedy];
         cfg.k = 50;
-        cfg.r_count = 4096;
-        cfg.timeout = Duration::from_millis(1);
+        cfg.options.r_count = 4096;
+        cfg.options.timeout = Some(Duration::from_millis(1));
         let mut runner = Runner::new(cfg);
         runner.verbose = false;
         let cells = runner.run_grid().unwrap();
         assert_eq!(cells[0].outcome.time_cell(), "-");
         assert!(cells[0].outcome.secs().is_none());
+    }
+
+    #[test]
+    fn proxy_cells_honor_the_budget_too() {
+        // Regression for the budget-enforcement gap: proxies used to be
+        // the only cells that could never render the paper's "-".
+        let mut cfg = tiny_cfg();
+        cfg.algos = vec![AlgoSpec::Degree, AlgoSpec::DegreeDiscount];
+        cfg.oracle_r = 0;
+        cfg.options.timeout = Some(Duration::from_nanos(1));
+        let mut runner = Runner::new(cfg);
+        runner.verbose = false;
+        let cells = runner.run_grid().unwrap();
+        for c in &cells {
+            assert_eq!(c.outcome.time_cell(), "-", "{}: {:?}", c.algo, c.outcome);
+        }
     }
 
     #[test]

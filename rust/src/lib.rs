@@ -21,22 +21,29 @@
 //! and is self-contained.
 //!
 //! ## Quick start
+//!
+//! The [`api`] module is the front door: prepare a session once, then
+//! serve repeated queries against the warm state (a K-ladder extends the
+//! memoized seed set instead of recomputing).
+//!
 //! ```no_run
+//! use infuser::api::{ImSession, Query, RunOptions};
+//! use infuser::config::AlgoSpec;
 //! use infuser::gen::{self, GenSpec};
-//! use infuser::algo::{Budget, infuser::{InfuserMg, InfuserParams}};
 //! use infuser::graph::WeightModel;
 //!
 //! let g = gen::generate(&GenSpec::barabasi_albert(10_000, 4, 42))
 //!     .with_weights(WeightModel::Const(0.05), 7);
-//! let res = InfuserMg::new(InfuserParams { k: 16, r_count: 256, threads: 8, ..Default::default() })
-//!     .run(&g, &Budget::unlimited())
-//!     .unwrap();
-//! println!("seeds={:?} influence≈{:.1}", res.seeds, res.influence);
+//! let mut session = ImSession::prepare(g, RunOptions::new().r_count(256).threads(8)).unwrap();
+//! let res = session.query(&Query::new(AlgoSpec::InfuserMg, 16)).unwrap();
+//! let more = session.query(&Query::new(AlgoSpec::InfuserMg, 50)).unwrap(); // warm: ~free
+//! println!("seeds={:?} influence≈{:.1}", more.seeds, res.influence);
 //! ```
 
 #![warn(missing_docs)]
 
 pub mod algo;
+pub mod api;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -5,6 +5,8 @@
 //! * `catalog` — list the 12 synthetic Table-3 analog datasets.
 //! * `gen` — generate a dataset and print stats (optionally save binary).
 //! * `run` — run one algorithm on one dataset, print seeds + oracle score.
+//! * `query` — serve a JSON batch of queries from one prepared
+//!   [`ImSession`] (warm-state reuse across the batch).
 //! * `experiment` — execute a JSON experiment config (dataset × setting ×
 //!   algorithm grid) and render the paper-shaped tables.
 //! * `cdf` — the Fig. 2 analysis: hash-sampling probability CDF + KS.
@@ -13,7 +15,8 @@
 //!
 //! Run `infuser <cmd> --help` for flags.
 
-use infuser::algo::{Budget, ImResult};
+use infuser::algo::ImResult;
+use infuser::api::{ImSession, Query, RunOptions};
 use infuser::config::{AlgoSpec, DatasetRef, ExperimentConfig};
 use infuser::coordinator::{render_grid, Runner};
 use infuser::graph::WeightModel;
@@ -38,6 +41,7 @@ fn main() {
         "catalog" => cmd_catalog(),
         "gen" => cmd_gen(&args),
         "run" => cmd_run(&args),
+        "query" => cmd_query(&args),
         "experiment" => cmd_experiment(&args),
         "cdf" => cmd_cdf(&args),
         "artifacts" => cmd_artifacts(&args),
@@ -82,6 +86,11 @@ COMMANDS
              [--block-size N]          hub-splitting edge-block size (default
                                        4096 edges; seeds are identical for
                                        every block size)
+  query      --dataset ID --queries FILE.json
+                                       serve a JSON batch of queries from ONE
+                                       prepared session (warm-state reuse: a
+                                       K-ladder extends the memoized seed set)
+             [--weights W] [--oracle-r N] + the shared `run` knobs
   experiment --config FILE.json        run a full grid, render tables
              [--markdown]
   cdf        --dataset ID [--r N]      Fig. 2 sampling-probability CDF
@@ -133,106 +142,157 @@ fn weighted_graph(args: &Args) -> infuser::Result<infuser::graph::Graph> {
     Ok(dref.load()?.with_weights(weights, seed ^ 0x5E77))
 }
 
-fn cmd_run(args: &Args) -> infuser::Result<()> {
-    let algo = AlgoSpec::parse(args.req("algo")?)?;
-    let graph = weighted_graph(args)?;
-    let cfg = ExperimentConfig {
-        datasets: vec![],
-        settings: vec![],
-        algos: vec![],
-        k: args.get_or("k", 50usize)?,
-        r_count: args.get_or("r", 256usize)?,
-        threads: args.get_or(
+/// Parse the shared `RunOptions` knobs from CLI flags — the same set
+/// `run` and `query` accept, mirroring the JSON dialect of
+/// [`RunOptions::from_json`].
+fn session_options(args: &Args) -> infuser::Result<RunOptions> {
+    let opts = RunOptions::new()
+        .r_count(args.get_or("r", 256usize)?)
+        .seed(args.get_or("seed", 0u64)?)
+        .threads(args.get_or(
             "threads",
             std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
-        )?,
-        seed: args.get_or("seed", 0u64)?,
-        timeout: std::time::Duration::from_secs_f64(args.get_or("timeout", 3600.0f64)?),
-        oracle_r: args.get_or("oracle-r", 0usize)?,
-        backend: infuser::simd::Backend::parse(args.opt("backend").unwrap_or("auto"))?,
-        lanes: infuser::simd::LaneWidth::parse(args.opt("lanes").unwrap_or("8"))?,
-        schedule: infuser::runtime::Schedule::parse(args.opt("schedule").unwrap_or("steal"))?,
-        block_size: {
+        )?)
+        .backend(infuser::simd::Backend::parse(args.opt("backend").unwrap_or("auto"))?)
+        .lanes(infuser::simd::LaneWidth::parse(args.opt("lanes").unwrap_or("8"))?)
+        .schedule(infuser::runtime::Schedule::parse(args.opt("schedule").unwrap_or("steal"))?)
+        .block_size({
             let b: usize = args.get_or("block-size", infuser::labelprop::DEFAULT_EDGE_BLOCK)?;
             anyhow::ensure!(b >= 1, "--block-size must be >= 1 (edges per hub block)");
             b
-        },
-        memo: infuser::algo::infuser::MemoKind::parse(args.opt("memo").unwrap_or("dense"))?,
-        orders: vec![infuser::graph::OrderStrategy::parse(
-            args.opt("order").unwrap_or("identity"),
-        )?],
-        imm_memory_limit: args
-            .opt("imm-mem-gb")
-            .map(|v| v.parse::<f64>().map(|gb| (gb * 1073741824.0) as u64))
-            .transpose()?,
-    };
+        })
+        .memo(infuser::algo::infuser::MemoKind::parse(args.opt("memo").unwrap_or("dense"))?)
+        .order(infuser::graph::OrderStrategy::parse(args.opt("order").unwrap_or("identity"))?)
+        .timeout(Some({
+            let t: f64 = args.get_or("timeout", 3600.0f64)?;
+            std::time::Duration::try_from_secs_f64(t).map_err(|_| {
+                anyhow::anyhow!("--timeout must be a finite non-negative number (got {t})")
+            })?
+        }))
+        .imm_memory_limit(
+            args.opt("imm-mem-gb")
+                .map(|v| -> infuser::Result<u64> {
+                    let gb = v.parse::<f64>()?;
+                    anyhow::ensure!(
+                        gb.is_finite() && gb >= 0.0,
+                        "--imm-mem-gb must be a non-negative number (got {gb})"
+                    );
+                    Ok((gb * 1073741824.0) as u64)
+                })
+                .transpose()?,
+        );
+    opts.validate()?;
+    Ok(opts)
+}
+
+/// Oracle-rescore a seed set when `--oracle-r` asks for it.
+fn oracle_line(graph: &infuser::graph::Graph, seeds: &[u32], oracle_r: usize, threads: usize) {
+    if oracle_r > 0 {
+        let s = infuser::algo::oracle::influence_score(
+            graph,
+            seeds,
+            &infuser::algo::oracle::OracleParams { r_count: oracle_r, seed: 0x0AC1E, threads },
+        );
+        println!("sigma(oracle): {s:.2}");
+    }
+}
+
+fn cmd_run(args: &Args) -> infuser::Result<()> {
+    let algo = AlgoSpec::parse(args.req("algo")?)?;
+    let opts = session_options(args)?;
+    let k = args.get_or("k", 50usize)?;
+    let oracle_r = args.get_or("oracle-r", 0usize)?;
+    let graph = weighted_graph(args)?;
 
     let engine = args.opt("engine").unwrap_or("native");
     let timer = Timer::start();
-    let outcome = if engine == "xla"
-        && matches!(algo, AlgoSpec::InfuserMg | AlgoSpec::InfuserSketch)
-    {
-        // The three-layer path: propagation through the PJRT artifacts.
+    if engine == "xla" && matches!(algo, AlgoSpec::InfuserMg | AlgoSpec::InfuserSketch) {
+        // The three-layer path: propagation through the PJRT artifacts
+        // (engine selection stays below the session API).
         let xla = infuser::runtime::XlaEngine::discover()?;
+        let common = if matches!(algo, AlgoSpec::InfuserSketch) {
+            opts.memo(infuser::algo::infuser::MemoKind::Sketch)
+        } else {
+            opts
+        };
         let res: ImResult = infuser::algo::infuser::InfuserMg::new(
-            infuser::algo::infuser::InfuserParams {
-                k: cfg.k,
-                r_count: cfg.r_count,
-                seed: cfg.seed,
-                threads: cfg.threads,
-                backend: cfg.backend,
-                lanes: cfg.lanes,
-                schedule: cfg.schedule,
-                block_size: cfg.block_size,
-                memo: if matches!(algo, AlgoSpec::InfuserSketch) {
-                    infuser::algo::infuser::MemoKind::Sketch
-                } else {
-                    cfg.memo
-                },
-                order: cfg.order(),
-                ..Default::default()
-            },
+            infuser::algo::infuser::InfuserParams { k, common, ..Default::default() },
         )
-        .run_with_engine(&graph, &xla, &Budget::timeout(cfg.timeout))?;
-        print_result(&graph, res, timer.secs(), &cfg);
+        .run_with_engine(&graph, &xla, &opts.budget())?;
+        println!("time: {:.3}s", timer.secs());
+        println!("sigma(own): {:.2}", res.influence);
+        oracle_line(&graph, &res.seeds, oracle_r, opts.threads);
+        println!("seeds: {:?}", res.seeds);
         return Ok(());
-    } else {
-        let runner = Runner::new(cfg.clone());
-        runner.run_cell(&graph, algo)
-    };
-    match outcome {
-        infuser::coordinator::Outcome::Done { secs, bytes, sigma_own, sigma_oracle, seeds } => {
+    }
+
+    let mut session = ImSession::prepare(graph, opts)?;
+    match session.query(&Query::new(algo, k)) {
+        Ok(res) => {
             println!(
-                "time: {secs:.3}s  mem: {:.3} GB ({bytes} bytes tracked)",
-                infuser::util::mem::gb(bytes)
+                "time: {:.3}s  mem: {:.3} GB ({} bytes tracked)",
+                timer.secs(),
+                infuser::util::mem::gb(res.tracked_bytes),
+                res.tracked_bytes
             );
-            println!("sigma(own): {sigma_own:.2}");
-            if let Some(s) = sigma_oracle {
-                println!("sigma(oracle): {s:.2}");
-            }
-            println!("seeds: {seeds:?}");
+            println!("sigma(own): {:.2}", res.influence);
+            oracle_line(session.graph(), &res.seeds, oracle_r, opts.threads);
+            println!("seeds: {:?}", res.seeds);
         }
-        other => println!("outcome: {}", other.time_cell()),
+        Err(e) if infuser::algo::is_timeout(&e) => println!("outcome: -"),
+        Err(e) if infuser::algo::is_oom(&e) => println!("outcome: oom"),
+        Err(e) => return Err(e),
     }
     Ok(())
 }
 
-fn print_result(g: &infuser::graph::Graph, res: ImResult, secs: f64, cfg: &ExperimentConfig) {
-    println!("time: {secs:.3}s");
-    println!("sigma(own): {:.2}", res.influence);
-    if cfg.oracle_r > 0 {
-        let s = infuser::algo::oracle::influence_score(
-            g,
-            &res.seeds,
-            &infuser::algo::oracle::OracleParams {
-                r_count: cfg.oracle_r,
-                seed: 0x0AC1E,
-                threads: cfg.threads,
-            },
-        );
-        println!("sigma(oracle): {s:.2}");
+/// `infuser query` — the batch face of the prepared-session API: one
+/// [`ImSession`] over the dataset, then every query in the JSON file
+/// (`[{"algo": "infuser", "k": 10}, {"algo": "infuser", "k": 50}, ...]`)
+/// served in order against the warm state. INFUSER K-ladders extend the
+/// memoized seed set, so the marginal queries are nearly free — exactly
+/// the paper's Table-4 claim, operationalized.
+fn cmd_query(args: &Args) -> infuser::Result<()> {
+    let opts = session_options(args)?;
+    let oracle_r = args.get_or("oracle-r", 0usize)?;
+    let text = std::fs::read_to_string(args.req("queries")?)?;
+    let doc = infuser::util::json::Json::parse(&text)?;
+    let queries: Vec<Query> = doc
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("--queries file must be a JSON array of query objects"))?
+        .iter()
+        .map(Query::from_json)
+        .collect::<infuser::Result<_>>()?;
+    anyhow::ensure!(!queries.is_empty(), "--queries file must contain at least one query");
+
+    let prep_timer = Timer::start();
+    let graph = weighted_graph(args)?;
+    let mut session = ImSession::prepare(graph, opts)?;
+    println!("session: prepared in {:.3}s", prep_timer.secs());
+    for (i, q) in queries.iter().enumerate() {
+        let timer = Timer::start();
+        match session.query(q) {
+            Ok(res) => {
+                println!(
+                    "query[{i}] algo={} k={}: time: {:.3}s  sigma(own): {:.2}",
+                    q.algo,
+                    q.k,
+                    timer.secs(),
+                    res.influence
+                );
+                oracle_line(session.graph(), &res.seeds, oracle_r, opts.threads);
+                println!("seeds: {:?}", res.seeds);
+            }
+            Err(e) if infuser::algo::is_timeout(&e) => {
+                println!("query[{i}] algo={} k={}: outcome: -", q.algo, q.k);
+            }
+            Err(e) if infuser::algo::is_oom(&e) => {
+                println!("query[{i}] algo={} k={}: outcome: oom", q.algo, q.k);
+            }
+            Err(e) => return Err(e),
+        }
     }
-    println!("seeds: {:?}", res.seeds);
+    Ok(())
 }
 
 fn cmd_experiment(args: &Args) -> infuser::Result<()> {

@@ -9,6 +9,7 @@ use infuser::algo::imm::{Imm, ImmParams};
 use infuser::algo::infuser::{InfuserMg, InfuserParams};
 use infuser::algo::mixgreedy::{MixGreedy, MixGreedyParams};
 use infuser::algo::{oracle, Budget};
+use infuser::api::RunOptions;
 use infuser::gen::{self, GenSpec};
 use infuser::graph::{Graph, WeightModel};
 
@@ -35,16 +36,25 @@ fn all_four_algorithms_reach_comparable_quality() {
     let r = 2048;
     let budget = Budget::unlimited();
 
-    let mix = MixGreedy::new(MixGreedyParams { k, r_count: r, seed: 1, ..Default::default() })
+    let mix = MixGreedy::new(MixGreedyParams { k, common: RunOptions::new().r_count(r).seed(1) })
         .run(&g, &budget)
         .unwrap();
-    let fus = FusedSampling::new(FusedParams { k, r_count: r, seed: 1, ..Default::default() })
+    let fus = FusedSampling::new(FusedParams { k, common: RunOptions::new().r_count(r).seed(1) })
         .run(&g, &budget)
         .unwrap();
-    let inf = InfuserMg::new(InfuserParams { k, r_count: r, seed: 1, threads: 2, ..Default::default() })
+    let inf = InfuserMg::new(InfuserParams {
+        k,
+        common: RunOptions::new().r_count(r).seed(1).threads(2),
+        ..Default::default()
+    })
         .run(&g, &budget)
         .unwrap();
-    let imm = Imm::new(ImmParams { k, epsilon: 0.2, seed: 1, threads: 2, ..Default::default() })
+    let imm = Imm::new(ImmParams {
+        k,
+        epsilon: 0.2,
+        common: RunOptions::new().seed(1).threads(2),
+        ..Default::default()
+    })
         .run(&g, &budget)
         .unwrap();
 
@@ -75,7 +85,11 @@ fn greedy_beats_random_and_tracks_degree_heuristic() {
     let g = gen::generate(&GenSpec::watts_strogatz(600, 3, 0.1, 5))
         .with_weights(WeightModel::Const(0.12), 9);
     let k = 10;
-    let inf = InfuserMg::new(InfuserParams { k, r_count: 512, seed: 2, threads: 2, ..Default::default() })
+    let inf = InfuserMg::new(InfuserParams {
+        k,
+        common: RunOptions::new().r_count(512).seed(2).threads(2),
+        ..Default::default()
+    })
         .run(&g, &Budget::unlimited())
         .unwrap();
     let s_inf = oracle_score(&g, &inf.seeds);
@@ -112,7 +126,11 @@ fn seed_sets_monotone_in_k() {
     // the K=4 run (lazy greedy is prefix-stable for a fixed memo).
     let g = test_graph();
     let mk = |k| {
-        InfuserMg::new(InfuserParams { k, r_count: 128, seed: 5, threads: 2, ..Default::default() })
+        InfuserMg::new(InfuserParams {
+            k,
+            common: RunOptions::new().r_count(128).seed(5).threads(2),
+            ..Default::default()
+        })
             .run(&g, &Budget::unlimited())
             .unwrap()
             .seeds
@@ -127,9 +145,7 @@ fn influence_estimates_agree_with_oracle_within_noise() {
     let g = test_graph();
     let inf = InfuserMg::new(InfuserParams {
         k: 6,
-        r_count: 512,
-        seed: 8,
-        threads: 2,
+        common: RunOptions::new().r_count(512).seed(8).threads(2),
         ..Default::default()
     })
     .run(&g, &Budget::unlimited())
@@ -182,16 +198,25 @@ fn timeout_injection_trips_every_algorithm() {
     let r = 2048;
 
     let outs: Vec<anyhow::Error> = vec![
-        MixGreedy::new(MixGreedyParams { k, r_count: r, seed: 1, ..Default::default() })
+        MixGreedy::new(MixGreedyParams { k, common: RunOptions::new().r_count(r).seed(1) })
             .run(&g, &budget)
             .unwrap_err(),
-        FusedSampling::new(FusedParams { k, r_count: r, seed: 1, ..Default::default() })
+        FusedSampling::new(FusedParams { k, common: RunOptions::new().r_count(r).seed(1) })
             .run(&g, &budget)
             .unwrap_err(),
-        InfuserMg::new(InfuserParams { k, r_count: r, seed: 1, threads: 2, ..Default::default() })
+        InfuserMg::new(InfuserParams {
+            k,
+            common: RunOptions::new().r_count(r).seed(1).threads(2),
+            ..Default::default()
+        })
             .run(&g, &budget)
             .unwrap_err(),
-        Imm::new(ImmParams { k, epsilon: 0.13, seed: 1, threads: 2, ..Default::default() })
+        Imm::new(ImmParams {
+            k,
+            epsilon: 0.13,
+            common: RunOptions::new().seed(1).threads(2),
+            ..Default::default()
+        })
             .run(&g, &budget)
             .unwrap_err(),
     ];
@@ -207,7 +232,11 @@ fn weighted_cascade_model_runs_end_to_end() {
     // algorithms must run and produce sane output.
     let g = gen::generate(&GenSpec::barabasi_albert(300, 3, 4))
         .with_weights(WeightModel::WeightedCascade, 6);
-    let res = InfuserMg::new(InfuserParams { k: 5, r_count: 128, seed: 3, threads: 2, ..Default::default() })
+    let res = InfuserMg::new(InfuserParams {
+        k: 5,
+        common: RunOptions::new().r_count(128).seed(3).threads(2),
+        ..Default::default()
+    })
         .run(&g, &Budget::unlimited())
         .unwrap();
     assert_eq!(res.seeds.len(), 5);

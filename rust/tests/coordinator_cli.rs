@@ -394,6 +394,83 @@ fn json_config_lanes_key_reaches_the_grid() {
 }
 
 #[test]
+fn cli_query_batch_serves_one_session() {
+    // `infuser query` end-to-end: a K-ladder batch through one prepared
+    // session. The k=3 seed lines must be identical (warm repeat), the
+    // k=6 line must extend the k=3 prefix, and a one-shot `infuser run`
+    // at k=6 must print the same seeds (warm == cold at the outermost
+    // layer). A degree entry rides along to cover the proxy path.
+    let dir = std::env::temp_dir().join("infuser-cli-query-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("queries.json");
+    std::fs::write(
+        &path,
+        r#"[
+            {"algo": "infuser", "k": 3},
+            {"algo": "infuser", "k": 6},
+            {"algo": "infuser", "k": 3},
+            {"algo": "degree", "k": 3}
+        ]"#,
+    )
+    .unwrap();
+    let path_s = path.display().to_string();
+    let out = infuser_bin(&[
+        "query", "--dataset", "nethep-s", "--queries", &path_s, "--k", "3", "--r", "32",
+        "--threads", "2", "--seed", "1", "--backend", "scalar",
+    ]);
+    assert!(
+        out.status.success(),
+        "query batch failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    let seed_lines: Vec<&str> =
+        stdout.lines().filter(|l| l.starts_with("seeds:")).collect();
+    assert_eq!(seed_lines.len(), 4, "one seeds line per query:\n{stdout}");
+    assert_eq!(seed_lines[0], seed_lines[2], "warm repeat must be identical");
+    let k3 = seed_lines[0].trim_start_matches("seeds: [").trim_end_matches(']');
+    let k6 = seed_lines[1].trim_start_matches("seeds: [").trim_end_matches(']');
+    assert!(
+        k6.starts_with(k3),
+        "k=6 must extend the k=3 prefix: {k3} vs {k6}"
+    );
+    assert!(stdout.contains("session: prepared"), "{stdout}");
+
+    // Warm K-ladder == cold one-shot, through the real binaries.
+    let run_out = infuser_bin(&[
+        "run", "--dataset", "nethep-s", "--algo", "infuser", "--k", "6", "--r", "32",
+        "--threads", "2", "--seed", "1", "--backend", "scalar",
+    ]);
+    assert!(run_out.status.success());
+    let run_stdout = String::from_utf8_lossy(&run_out.stdout).into_owned();
+    let cold = run_stdout
+        .lines()
+        .find(|l| l.starts_with("seeds:"))
+        .unwrap_or_else(|| panic!("no seeds line:\n{run_stdout}"));
+    assert_eq!(cold, seed_lines[1], "session ladder must equal the cold run");
+}
+
+#[test]
+fn cli_query_rejects_malformed_batches() {
+    let dir = std::env::temp_dir().join("infuser-cli-query-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    for (name, content, expect) in [
+        ("not-array.json", r#"{"algo": "infuser", "k": 3}"#, "JSON array"),
+        ("empty.json", "[]", "at least one query"),
+        ("no-k.json", r#"[{"algo": "infuser"}]"#, "'k'"),
+        ("bad-algo.json", r#"[{"algo": "magic", "k": 3}]"#, "unknown algorithm"),
+    ] {
+        let path = dir.join(name);
+        std::fs::write(&path, content).unwrap();
+        let path_s = path.display().to_string();
+        let out = infuser_bin(&["query", "--dataset", "nethep-s", "--queries", &path_s]);
+        assert!(!out.status.success(), "{name} must fail");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains(expect), "{name}: {err}");
+    }
+}
+
+#[test]
 fn imm_memory_limit_renders_oom_cell() {
     // The paper's Table 6 "insufficient memory" entries, reproduced at
     // laptop scale with an artificially tight RR-pool budget.

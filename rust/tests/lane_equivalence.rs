@@ -10,6 +10,7 @@
 
 use infuser::algo::infuser::{make_memo, InfuserMg, InfuserParams, MemoKind};
 use infuser::algo::Budget;
+use infuser::api::RunOptions;
 use infuser::graph::weights::prob_to_threshold;
 use infuser::graph::WeightModel;
 use infuser::hash::HASH_MASK;
@@ -193,11 +194,12 @@ fn seed_sets_identical_for_fixed_seed_r_k() {
     let (k, r_count, seed) = (5usize, 64usize, 7u64);
     let base = InfuserParams {
         k,
-        r_count,
-        seed,
-        threads: 2,
-        backend: REFERENCE.0,
-        lanes: REFERENCE.1,
+        common: RunOptions::new()
+            .r_count(r_count)
+            .seed(seed)
+            .threads(2)
+            .backend(REFERENCE.0)
+            .lanes(REFERENCE.1),
         ..Default::default()
     };
     let reference = InfuserMg::new(base).run(&graph, &Budget::unlimited()).unwrap();
@@ -212,11 +214,13 @@ fn seed_sets_identical_for_fixed_seed_r_k() {
                     (Schedule::Steal, 8),
                 ] {
                     let res = InfuserMg::new(InfuserParams {
-                        backend,
-                        lanes,
-                        memo,
-                        schedule,
-                        threads,
+                        common: base
+                            .common
+                            .backend(backend)
+                            .lanes(lanes)
+                            .memo(memo)
+                            .schedule(schedule)
+                            .threads(threads),
                         ..base
                     })
                     .run(&graph, &Budget::unlimited())
@@ -248,11 +252,12 @@ fn first_seed_path_is_width_invariant_too() {
         .with_weights(WeightModel::Const(0.15), 9);
     let base = InfuserParams {
         k: 1,
-        r_count: 48,
-        seed: 13,
-        threads: 2,
-        backend: REFERENCE.0,
-        lanes: REFERENCE.1,
+        common: RunOptions::new()
+            .r_count(48)
+            .seed(13)
+            .threads(2)
+            .backend(REFERENCE.0)
+            .lanes(REFERENCE.1),
         ..Default::default()
     };
     let reference = InfuserMg::new(base)
@@ -260,7 +265,10 @@ fn first_seed_path_is_width_invariant_too() {
         .unwrap();
     for backend in backends() {
         for lanes in LaneWidth::ALL {
-            let res = InfuserMg::new(InfuserParams { backend, lanes, ..base })
+            let res = InfuserMg::new(InfuserParams {
+                common: base.common.backend(backend).lanes(lanes),
+                ..base
+            })
                 .run_first_seed(&graph, &Budget::unlimited())
                 .unwrap();
             assert_eq!(res.seeds, reference.seeds, "{}xB{}", backend.label(), lanes.label());

@@ -30,10 +30,7 @@ fn ba_catalog_graph() -> Graph {
 fn run(g: &Graph, memo: MemoKind, k: usize, r: usize) -> infuser::algo::ImResult {
     InfuserMg::new(InfuserParams {
         k,
-        r_count: r,
-        seed: 11,
-        threads: 2,
-        memo,
+        common: infuser::api::RunOptions::new().r_count(r).seed(11).threads(2).memo(memo),
         ..Default::default()
     })
     .run(g, &Budget::unlimited())

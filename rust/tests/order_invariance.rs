@@ -12,6 +12,7 @@
 use infuser::algo::fused::{randcas_fused, randcas_fused_batched, FusedParams, FusedSampling};
 use infuser::algo::infuser::{make_memo, InfuserMg, InfuserParams, MemoKind};
 use infuser::algo::Budget;
+use infuser::api::RunOptions;
 use infuser::graph::{OrderStrategy, Permutation, WeightModel};
 use infuser::labelprop::{component_sizes, initial_gains, propagate, Mode, PropagateOpts};
 use infuser::runtime::Schedule;
@@ -181,7 +182,11 @@ fn infuser_seeds_and_sigma_bit_identical_across_the_full_cross_product() {
     // and the bit-identical σ estimate.
     let g = infuser::gen::generate(&infuser::gen::GenSpec::barabasi_albert(400, 2, 3))
         .with_weights(WeightModel::Const(0.08), 5);
-    let base = InfuserParams { k: 5, r_count: 64, seed: 7, threads: 2, ..Default::default() };
+    let base = InfuserParams {
+        k: 5,
+        common: RunOptions::new().r_count(64).seed(7).threads(2),
+        ..Default::default()
+    };
     let reference = InfuserMg::new(base).run(&g, &Budget::unlimited()).unwrap();
     assert_eq!(reference.seeds.len(), 5);
     for order in OrderStrategy::ALL {
@@ -190,11 +195,13 @@ fn infuser_seeds_and_sigma_bit_identical_across_the_full_cross_product() {
                 for memo in [MemoKind::Dense, MemoKind::Sketch] {
                     for schedule in Schedule::ALL {
                         let res = InfuserMg::new(InfuserParams {
-                            order,
-                            backend,
-                            lanes,
-                            memo,
-                            schedule,
+                            common: base
+                                .common
+                                .order(order)
+                                .backend(backend)
+                                .lanes(lanes)
+                                .memo(memo)
+                                .schedule(schedule),
                             ..base
                         })
                         .run(&g, &Budget::unlimited())
@@ -225,11 +232,18 @@ fn infuser_seeds_and_sigma_bit_identical_across_the_full_cross_product() {
 fn first_seed_path_is_order_invariant_too() {
     let g = infuser::gen::generate(&infuser::gen::GenSpec::erdos_renyi(200, 600, 6))
         .with_weights(WeightModel::Const(0.15), 9);
-    let base = InfuserParams { k: 1, r_count: 48, seed: 13, threads: 2, ..Default::default() };
+    let base = InfuserParams {
+        k: 1,
+        common: RunOptions::new().r_count(48).seed(13).threads(2),
+        ..Default::default()
+    };
     let reference = InfuserMg::new(base).run_first_seed(&g, &Budget::unlimited()).unwrap();
     for order in OrderStrategy::ALL {
         for memo in [MemoKind::Dense, MemoKind::Sketch] {
-            let res = InfuserMg::new(InfuserParams { order, memo, ..base })
+            let res = InfuserMg::new(InfuserParams {
+                common: base.common.order(order).memo(memo),
+                ..base
+            })
                 .run_first_seed(&g, &Budget::unlimited())
                 .unwrap();
             assert_eq!(res.seeds, reference.seeds, "{order} {memo:?}");
@@ -321,11 +335,14 @@ fn fused_randcas_sigma_bit_identical_in_every_layout() {
 fn fused_sampling_seeds_identical_in_every_layout() {
     let g = infuser::gen::generate(&infuser::gen::GenSpec::erdos_renyi(80, 240, 9))
         .with_weights(WeightModel::Const(0.15), 4);
-    let base = FusedParams { k: 3, r_count: 64, seed: 5, ..Default::default() };
+    let base = FusedParams { k: 3, common: RunOptions::new().r_count(64).seed(5) };
     let reference = FusedSampling::new(base).run(&g, &Budget::unlimited()).unwrap();
     for order in OrderStrategy::ALL {
         for lanes in LaneWidth::ALL {
-            let res = FusedSampling::new(FusedParams { order, lanes, ..base })
+            let res = FusedSampling::new(FusedParams {
+                common: base.common.order(order).lanes(lanes),
+                ..base
+            })
                 .run(&g, &Budget::unlimited())
                 .unwrap();
             assert_eq!(res.seeds, reference.seeds, "{order} B{lanes}");

@@ -14,6 +14,7 @@
 
 use infuser::algo::infuser::{make_memo, InfuserMg, InfuserParams, MemoKind};
 use infuser::algo::Budget;
+use infuser::api::RunOptions;
 use infuser::graph::WeightModel;
 use infuser::labelprop::{propagate, Mode, PropagateOpts, DEFAULT_EDGE_BLOCK};
 use infuser::runtime::Schedule;
@@ -76,13 +77,21 @@ fn seed_sets_identical_across_schedules_thread_counts_and_modes() {
     // returns the identical seed set and the bit-identical σ estimate.
     let g = infuser::gen::generate(&infuser::gen::GenSpec::barabasi_albert(400, 2, 3))
         .with_weights(WeightModel::Const(0.08), 5);
-    let base = InfuserParams { k: 5, r_count: 64, seed: 7, threads: 1, ..Default::default() };
+    let base = InfuserParams {
+        k: 5,
+        common: RunOptions::new().r_count(64).seed(7).threads(1),
+        ..Default::default()
+    };
     let reference = InfuserMg::new(base).run(&g, &Budget::unlimited()).unwrap();
     assert_eq!(reference.seeds.len(), 5);
     for schedule in Schedule::ALL {
         for threads in [1usize, 2, 4, 8] {
             for mode in [Mode::Async, Mode::Sync] {
-                let res = InfuserMg::new(InfuserParams { schedule, threads, mode, ..base })
+                let res = InfuserMg::new(InfuserParams {
+                    mode,
+                    common: base.common.schedule(schedule).threads(threads),
+                    ..base
+                })
                     .run(&g, &Budget::unlimited())
                     .unwrap();
                 assert_eq!(res.seeds, reference.seeds, "{schedule} tau={threads} {mode:?}");
@@ -103,11 +112,18 @@ fn block_size_is_result_invariant_at_the_algorithm_layer() {
     // blocks without moving a single seed.
     let g = infuser::gen::generate(&infuser::gen::GenSpec::barabasi_albert(300, 3, 9))
         .with_weights(WeightModel::Const(0.1), 2);
-    let base = InfuserParams { k: 4, r_count: 48, seed: 11, threads: 4, ..Default::default() };
+    let base = InfuserParams {
+        k: 4,
+        common: RunOptions::new().r_count(48).seed(11).threads(4),
+        ..Default::default()
+    };
     let reference = InfuserMg::new(base).run(&g, &Budget::unlimited()).unwrap();
     for block_size in [1usize, 7, 256, DEFAULT_EDGE_BLOCK] {
         for schedule in Schedule::ALL {
-            let res = InfuserMg::new(InfuserParams { block_size, schedule, ..base })
+            let res = InfuserMg::new(InfuserParams {
+                common: base.common.block_size(block_size).schedule(schedule),
+                ..base
+            })
                 .run(&g, &Budget::unlimited())
                 .unwrap();
             assert_eq!(res.seeds, reference.seeds, "block={block_size} {schedule}");
@@ -126,11 +142,15 @@ fn zero_threads_matches_one_thread_end_to_end() {
     // instead of dividing by zero in the adaptive chunk computation.
     let g = infuser::gen::generate(&infuser::gen::GenSpec::erdos_renyi(200, 600, 6))
         .with_weights(WeightModel::Const(0.15), 9);
-    let base = InfuserParams { k: 3, r_count: 32, seed: 13, ..Default::default() };
-    let zero = InfuserMg::new(InfuserParams { threads: 0, ..base })
+    let base = InfuserParams {
+        k: 3,
+        common: RunOptions::new().r_count(32).seed(13),
+        ..Default::default()
+    };
+    let zero = InfuserMg::new(InfuserParams { common: base.common.threads(0), ..base })
         .run(&g, &Budget::unlimited())
         .unwrap();
-    let one = InfuserMg::new(InfuserParams { threads: 1, ..base })
+    let one = InfuserMg::new(InfuserParams { common: base.common.threads(1), ..base })
         .run(&g, &Budget::unlimited())
         .unwrap();
     assert_eq!(zero.seeds, one.seeds);

@@ -1,0 +1,166 @@
+//! The prepared-session acceptance criterion: N warm [`ImSession`]
+//! queries must be **bit-identical** — seeds, σ̂, counters, tracked
+//! bytes — to N cold one-shot runs, across memo backends × schedules ×
+//! lane widths, including K-ladders (warm extension), K-prefixes (warm
+//! lookup), repeated Ks, per-query seed overrides, and the K=1 fast
+//! path.
+
+use infuser::algo::infuser::{InfuserMg, InfuserParams, MemoKind};
+use infuser::algo::{Budget, ImResult};
+use infuser::api::{ImSession, Query, RunOptions};
+use infuser::config::AlgoSpec;
+use infuser::gen::{self, GenSpec};
+use infuser::graph::WeightModel;
+use infuser::runtime::Schedule;
+use infuser::simd::LaneWidth;
+
+fn test_graph() -> infuser::graph::Graph {
+    gen::generate(&GenSpec::barabasi_albert(350, 2, 9)).with_weights(WeightModel::Const(0.1), 2)
+}
+
+fn assert_bit_identical(cold: &ImResult, warm: &ImResult, what: &str) {
+    assert_eq!(cold.seeds, warm.seeds, "{what}: seeds");
+    assert_eq!(
+        cold.influence.to_bits(),
+        warm.influence.to_bits(),
+        "{what}: sigma {} vs {}",
+        cold.influence,
+        warm.influence
+    );
+    assert_eq!(cold.counters, warm.counters, "{what}: counters");
+    assert_eq!(cold.tracked_bytes, warm.tracked_bytes, "{what}: tracked bytes");
+}
+
+/// The full matrix: for every (memo × schedule × lanes) combination, a
+/// warm K-ladder (4 → 8 → 8 → 2) must reproduce the corresponding cold
+/// one-shot runs bit-for-bit.
+#[test]
+fn warm_queries_bit_identical_to_cold_runs_across_the_matrix() {
+    let g = test_graph();
+    for memo in [MemoKind::Dense, MemoKind::Sketch] {
+        for schedule in Schedule::ALL {
+            for lanes in LaneWidth::ALL {
+                let opts = RunOptions::new()
+                    .r_count(48)
+                    .seed(7)
+                    .threads(2)
+                    .memo(memo)
+                    .schedule(schedule)
+                    .lanes(lanes);
+                let ctx = format!("{} {schedule} B{}", memo.label(), lanes.label());
+                let mut session = ImSession::prepare_borrowed(&g, opts).unwrap();
+                for k in [4usize, 8, 8, 2] {
+                    let warm = session.query(&Query::new(AlgoSpec::InfuserMg, k)).unwrap();
+                    let cold =
+                        InfuserMg::new(InfuserParams { k, common: opts, ..Default::default() })
+                            .run(&g, &Budget::unlimited())
+                            .unwrap();
+                    assert_bit_identical(&cold, &warm, &format!("{ctx} k={k}"));
+                }
+                assert_eq!(
+                    session.prepared().warm_pipelines(),
+                    1,
+                    "{ctx}: the whole ladder shares one pipeline"
+                );
+            }
+        }
+    }
+}
+
+/// The K=1 fast path (`infuser-k1`) through a warm session equals the
+/// cold `run_first_seed` shape exactly, for both memo backends.
+#[test]
+fn warm_k1_matches_cold_first_seed_for_both_memos() {
+    let g = test_graph();
+    for memo in [MemoKind::Dense, MemoKind::Sketch] {
+        let opts = RunOptions::new().r_count(32).seed(5).threads(2).memo(memo);
+        let mut session = ImSession::prepare_borrowed(&g, opts).unwrap();
+        // Warm the state with a larger query first — the K1 result must
+        // still come out in `run_first_seed`'s shape.
+        session.query(&Query::new(AlgoSpec::InfuserMg, 6)).unwrap();
+        let warm = session.query(&Query::new(AlgoSpec::InfuserK1, 1)).unwrap();
+        let cold = InfuserMg::new(InfuserParams { k: 1, common: opts, ..Default::default() })
+            .run_first_seed(&g, &Budget::unlimited())
+            .unwrap();
+        assert_bit_identical(&cold, &warm, memo.label());
+    }
+}
+
+/// `infuser-sketch` through the session forces the sketch memo exactly
+/// like the coordinator's dedicated cell used to.
+#[test]
+fn sketch_spec_forces_sketch_backend_warm() {
+    let g = test_graph();
+    let opts = RunOptions::new().r_count(32).seed(3).threads(2); // memo: dense default
+    let mut session = ImSession::prepare_borrowed(&g, opts).unwrap();
+    let warm = session.query(&Query::new(AlgoSpec::InfuserSketch, 5)).unwrap();
+    let cold = InfuserMg::new(InfuserParams {
+        k: 5,
+        common: opts.memo(MemoKind::Sketch),
+        ..Default::default()
+    })
+    .run(&g, &Budget::unlimited())
+    .unwrap();
+    assert_bit_identical(&cold, &warm, "infuser-sketch");
+}
+
+/// Per-query seed overrides select a different sample universe and must
+/// match a cold run at that seed; returning to the session seed matches
+/// the original universe again.
+#[test]
+fn seed_overrides_stay_cold_equivalent() {
+    let g = test_graph();
+    let opts = RunOptions::new().r_count(32).seed(1).threads(2);
+    let mut session = ImSession::prepare_borrowed(&g, opts).unwrap();
+    for seed in [1u64, 42, 1] {
+        let warm = session
+            .query(&Query::new(AlgoSpec::InfuserMg, 5).seed(seed))
+            .unwrap();
+        let cold = InfuserMg::new(InfuserParams {
+            k: 5,
+            common: opts.seed(seed),
+            ..Default::default()
+        })
+        .run(&g, &Budget::unlimited())
+        .unwrap();
+        assert_bit_identical(&cold, &warm, &format!("seed={seed}"));
+    }
+}
+
+/// The non-memoized algorithms answer identically through the session
+/// (they recompute, so this is plumbing equivalence, not state reuse).
+#[test]
+fn resampling_algorithms_match_their_direct_runs() {
+    use infuser::algo::fused::{FusedParams, FusedSampling};
+    use infuser::algo::mixgreedy::{MixGreedy, MixGreedyParams};
+    let g = test_graph();
+    let opts = RunOptions::new().r_count(32).seed(6).threads(2);
+    let mut session = ImSession::prepare_borrowed(&g, opts).unwrap();
+
+    let warm = session.query(&Query::new(AlgoSpec::FusedSampling, 4)).unwrap();
+    let cold = FusedSampling::new(FusedParams { k: 4, common: opts })
+        .run(&g, &Budget::unlimited())
+        .unwrap();
+    assert_bit_identical(&cold, &warm, "fused");
+
+    let warm = session.query(&Query::new(AlgoSpec::MixGreedy, 4)).unwrap();
+    let cold = MixGreedy::new(MixGreedyParams { k: 4, common: opts })
+        .run(&g, &Budget::unlimited())
+        .unwrap();
+    assert_bit_identical(&cold, &warm, "mixgreedy");
+}
+
+/// A proxy query after an INFUSER query must not disturb the warm state:
+/// the INFUSER answer stays bit-identical before and after.
+#[test]
+fn interleaved_algorithms_do_not_perturb_warm_state() {
+    let g = test_graph();
+    let opts = RunOptions::new().r_count(32).seed(8).threads(2);
+    let mut session = ImSession::prepare_borrowed(&g, opts).unwrap();
+    let before = session.query(&Query::new(AlgoSpec::InfuserMg, 6)).unwrap();
+    session.query(&Query::new(AlgoSpec::Degree, 6)).unwrap();
+    session.query(&Query::new(AlgoSpec::DegreeDiscount, 3)).unwrap();
+    session.query(&Query::new(AlgoSpec::Imm { epsilon: 0.5 }, 4)).unwrap();
+    let after = session.query(&Query::new(AlgoSpec::InfuserMg, 6)).unwrap();
+    assert_bit_identical(&before, &after, "interleaved");
+}

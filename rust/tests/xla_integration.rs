@@ -116,11 +116,8 @@ fn full_infuser_run_identical_on_both_engines() {
     let g = gen::generate(&GenSpec::rmat(10, 3000, 6)).with_weights(WeightModel::Const(0.08), 5);
     let params = InfuserParams {
         k: 8,
-        r_count: 64,
-        seed: 11,
-        threads: 2,
         mode: Mode::Async,
-        ..Default::default()
+        common: infuser::api::RunOptions::new().r_count(64).seed(11).threads(2),
     };
     let a = InfuserMg::new(params).run_with_engine(&g, &NativeEngine, &Budget::unlimited()).unwrap();
     let b = InfuserMg::new(params).run_with_engine(&g, &engine, &Budget::unlimited()).unwrap();
