@@ -225,6 +225,9 @@ fn fused_initial_gains(
         let mut size: Vec<u32> = vec![1; n];
         for r in lo..hi {
             if budget.check().is_err() {
+                // ORDERING: Relaxed flag store — readers only consult it
+                // after pool.map's region handshake joins every worker,
+                // which already orders the store before the load.
                 timed_out.store(true, Ordering::Relaxed);
                 break;
             }
@@ -264,6 +267,8 @@ fn fused_initial_gains(
         }
         mg
     });
+    // ORDERING: Relaxed read is ordered after all worker stores by the
+    // pool.map handshake (mutex + condvar) that returned above.
     if timed_out.load(Ordering::Relaxed) {
         return Err(super::AlgoError::TimedOut);
     }

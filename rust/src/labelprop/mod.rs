@@ -375,23 +375,36 @@ fn propagate_async(graph: &Graph, opts: &PropagateOpts) -> PropagationResult {
                                 let a = unsafe {
                                     AtomicI32::from_ptr(dp.0.add(v * r_count + lane))
                                 };
+                                // ORDERING: Relaxed fetch_min — commits are
+                                // commutative per-lane minima, so no cross-
+                                // cell ordering is needed; the fixpoint is
+                                // interleaving-invariant (module docs) and
+                                // rounds are separated by the pool handshake.
                                 if a.fetch_min(c, Ordering::Relaxed) > c {
                                     changed_any = true;
                                 }
                             }
                         }
                         if changed_any {
+                            // ORDERING: Relaxed fetch_or — liveness bits are
+                            // idempotent single-bit sets, drained only after
+                            // the region handshake joins all workers.
                             next_live_ref[v / 64].fetch_or(1 << (v % 64), Ordering::Relaxed);
                         }
                     }
                 }
             }
+            // ORDERING: Relaxed counter — a pure tally, read only after the
+            // final round's handshake has joined every worker.
             edge_visits_ref.fetch_add(local_visits, Ordering::Relaxed);
         });
 
         // Rebuild the block list from the bitset.
         blocks.clear();
         for (w, word) in next_live.iter().enumerate() {
+            // ORDERING: Relaxed swap — single-threaded here: all workers
+            // parked by the handshake above; atomicity only satisfies the
+            // shared-reference type, no concurrent access exists.
             let mut bits = word.swap(0, Ordering::Relaxed);
             while bits != 0 {
                 let b = bits.trailing_zeros() as usize;
@@ -404,13 +417,23 @@ fn propagate_async(graph: &Graph, opts: &PropagateOpts) -> PropagationResult {
     PropagationResult {
         labels,
         iterations,
+        // ORDERING: Relaxed read — workers are parked; every fetch_add was
+        // ordered before this point by the last region handshake.
         edge_visits: edge_visits.load(Ordering::Relaxed),
     }
 }
 
 /// `Sync`-safe raw pointer to the shared label matrix.
 struct SharedLabels(*mut i32);
+// SAFETY: the pointee is an `n × r_count` i32 matrix that outlives the
+// propagation region. Concurrent access is exclusively the racy-snapshot
+// discipline documented at the use sites: plain reads that tolerate
+// staleness, and commits through `AtomicI32::from_ptr` fetch_min — never
+// a plain write racing another access.
 unsafe impl Sync for SharedLabels {}
+// SAFETY: sending the wrapper moves only the raw pointer; the matrix it
+// points into is owned by the dispatching frame, which the pool region
+// keeps alive until every worker has parked.
 unsafe impl Send for SharedLabels {}
 
 // --------------------------------------------------------------------------
@@ -486,11 +509,15 @@ fn propagate_sync(graph: &Graph, opts: &PropagateOpts) -> PropagationResult {
                     }
                     v += threads;
                 }
+                // ORDERING: Relaxed fetch_or — a one-way convergence flag,
+                // read only after the region handshake joins all workers.
                 changed_ref.fetch_or(local_changed, Ordering::Relaxed);
             });
         }
         edge_visits += graph.adj.len() as u64;
         std::mem::swap(&mut cur.data, &mut next);
+        // ORDERING: Relaxed read — ordered after every worker's fetch_or by
+        // the handshake that ended the region above.
         if changed.load(Ordering::Relaxed) == 0 {
             break;
         }

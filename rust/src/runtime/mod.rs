@@ -26,6 +26,7 @@
 
 pub mod manifest;
 pub mod pool;
+pub mod sync;
 pub mod xla_engine;
 
 pub use manifest::{Artifacts, EntryKind, ManifestEntry};

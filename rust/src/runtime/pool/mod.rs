@@ -38,10 +38,22 @@
 //! The test-suite thread default can be raised with `INFUSER_TEST_THREADS`
 //! (used by CI to exercise the multithreaded paths; see
 //! [`default_threads`]).
+//!
+//! ## Verification
+//!
+//! Every synchronization primitive here comes from the
+//! [`crate::runtime::sync`] facade, so the pool's concurrency core — the
+//! packed steal slots, the shared dynamic cursor, and the park/unpark
+//! round handshake — runs unchanged under the in-tree bounded model
+//! checker (`RUSTFLAGS="--cfg loom" cargo test --test loom_pool`), which
+//! enumerates interleavings up to a preemption bound and checks the
+//! no-lost-work / no-double-claim / no-deadlock invariants the comments
+//! below argue informally. Each `Ordering::Relaxed` carries an
+//! `// ORDERING:` justification; `cargo xtask lint` enforces that.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+use crate::runtime::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::runtime::sync::{thread, Condvar, Mutex};
+use std::sync::Arc;
 
 /// Work-distribution policy for chunked parallel loops.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -184,16 +196,26 @@ impl ChunkQueue {
 
     fn next_dynamic(&self) -> Option<(usize, usize)> {
         loop {
+            // ORDERING: Relaxed suffices for both the load and the CAS
+            // below: the cursor word *is* the entire shared state (claims
+            // are disjoint because each starts where the previous winner
+            // ended), and the chunk's data is published by the pool's
+            // region handshake, not by this cursor. Verified by the loom
+            // model in tests/loom_pool.rs (no lost / doubled index).
             let start = self.cursor.load(Ordering::Relaxed);
             if start >= self.len {
                 return None;
             }
             let end = (start + self.chunk).min(self.len);
-            if self
-                .cursor
-                .compare_exchange_weak(start, end, Ordering::Relaxed, Ordering::Relaxed)
-                .is_ok()
-            {
+            let claim = self.cursor.compare_exchange_weak(
+                start,
+                end,
+                // ORDERING: Relaxed CAS — single-word state, see the load
+                // above; failure only retries the loop.
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
+            if claim.is_ok() {
                 return Some((start, end));
             }
         }
@@ -203,14 +225,25 @@ impl ChunkQueue {
     fn take_front(&self, worker: usize) -> Option<(usize, usize)> {
         let slot = &self.ranges[worker].0;
         loop {
+            // ORDERING: Relaxed load — the packed word carries the whole
+            // range, so any (possibly stale) value either CASes through or
+            // retries; staleness cannot hand out an index twice.
             let cur = slot.load(Ordering::Relaxed);
             let (lo, hi) = unpack(cur);
             if lo >= hi {
                 return None;
             }
             let mid = (lo + self.chunk).min(hi);
+            // ORDERING: AcqRel on success. The claim itself only needs the
+            // CAS word (disjointness is by-construction: owner advances lo,
+            // thieves retreat hi, and a full-word CAS serializes them), but
+            // AcqRel makes the claim a publication edge, pairing
+            // owner-takes with back-steals so a chunk observed as claimed
+            // happens-before its execution even if a future caller commits
+            // through non-atomic slots keyed off the stolen range. Failure
+            // is Relaxed: a failed CAS publishes nothing, the loop retries.
             if slot
-                .compare_exchange_weak(cur, pack(mid, hi), Ordering::Relaxed, Ordering::Relaxed)
+                .compare_exchange_weak(cur, pack(mid, hi), Ordering::AcqRel, Ordering::Relaxed)
                 .is_ok()
             {
                 return Some((lo, mid));
@@ -227,17 +260,25 @@ impl ChunkQueue {
             let victim = (worker + i) % threads;
             let slot = &self.ranges[victim].0;
             loop {
+                // ORDERING: Relaxed load — same argument as take_front: the
+                // packed word is self-contained, stale reads only retry.
                 let cur = slot.load(Ordering::Relaxed);
                 let (lo, hi) = unpack(cur);
                 if lo >= hi {
                     break;
                 }
                 let mid = hi - self.chunk.min(hi - lo);
+                // ORDERING: AcqRel on success publishes the stolen [mid, hi)
+                // range (the steal-slot publication edge from the PR 6
+                // audit); failure is Relaxed — nothing was claimed. The
+                // tiling invariant (every index claimed exactly once across
+                // owner and thieves) is checked exhaustively by the loom
+                // model in tests/loom_pool.rs.
                 if slot
                     .compare_exchange_weak(
                         cur,
                         pack(lo, mid),
-                        Ordering::Relaxed,
+                        Ordering::AcqRel,
                         Ordering::Relaxed,
                     )
                     .is_ok()
@@ -293,7 +334,7 @@ struct Shared {
 /// pool, and region bodies must not dispatch nested regions.
 pub struct WorkerPool {
     shared: Arc<Shared>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
     threads: usize,
     schedule: Schedule,
 }
@@ -334,7 +375,7 @@ impl WorkerPool {
         let workers = (1..threads)
             .map(|id| {
                 let shared = Arc::clone(&shared);
-                std::thread::Builder::new()
+                thread::Builder::new()
                     .name(format!("infuser-worker-{id}"))
                     .spawn(move || worker_loop(&shared, id))
                     .expect("spawn pool worker")
@@ -374,16 +415,16 @@ impl WorkerPool {
             unsafe { std::mem::transmute(body_ref) };
         let job = Job(body_static);
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.shared.state.lock();
             st.epoch += 1;
             st.job = Some(job);
             st.remaining = self.threads - 1;
             self.shared.work.notify_all();
         }
         let own = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(0)));
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = self.shared.state.lock();
         while st.remaining > 0 {
-            st = self.shared.done.wait(st).unwrap();
+            st = self.shared.done.wait(st);
         }
         st.job = None;
         let worker_panic = st.panic.take();
@@ -434,7 +475,7 @@ impl WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.shared.state.lock();
             st.shutdown = true;
             self.shared.work.notify_all();
         }
@@ -448,7 +489,7 @@ fn worker_loop(shared: &Shared, id: usize) {
     let mut seen_epoch = 0u64;
     loop {
         let job = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = shared.state.lock();
             loop {
                 if st.shutdown {
                     return;
@@ -459,7 +500,7 @@ fn worker_loop(shared: &Shared, id: usize) {
                         break job;
                     }
                 }
-                st = shared.work.wait(st).unwrap();
+                st = shared.work.wait(st);
             }
         };
         // `region` holds the body alive until `remaining` drops to 0,
@@ -467,7 +508,7 @@ fn worker_loop(shared: &Shared, id: usize) {
         // caught so the handshake completes either way; the first payload
         // is re-raised on the dispatching thread.
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.0)(id)));
-        let mut st = shared.state.lock().unwrap();
+        let mut st = shared.state.lock();
         if let Err(payload) = result {
             st.panic.get_or_insert(payload);
         }

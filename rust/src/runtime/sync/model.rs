@@ -1,0 +1,1065 @@
+//! A miniature bounded model checker for the pool's synchronization core
+//! — the `cfg(loom)` side of the [`super`] facade.
+//!
+//! The real `loom` crate is not vendorable in this build environment
+//! (the crate graph is `anyhow`-only and offline), so the facade's
+//! model-checking half is implemented in-tree. The design is the
+//! CHESS/loom *execution* model rather than loom's C11 memory model:
+//!
+//! * Every facade operation (atomic access, mutex acquire/release,
+//!   condvar wait/notify, spawn/join) is a **scheduling point**.
+//! * A controller runs the test closure under a **token discipline**:
+//!   exactly one virtual thread executes between scheduling points, so
+//!   each execution is one deterministic interleaving.
+//! * The controller explores interleavings by depth-first search over
+//!   the scheduling-decision tree, replaying the closure from scratch
+//!   for every schedule, with a **preemption bound** (CHESS): at most
+//!   `preemption_bound` context switches away from a still-runnable
+//!   thread per execution. Within that bound the search is exhaustive.
+//!
+//! ## What this model does and does not prove
+//!
+//! Executions are **sequentially consistent**: every atomic op takes
+//! effect at its scheduling point, whatever `Ordering` the caller passed.
+//! The checker therefore proves *algorithmic* concurrency properties —
+//! no lost work items, no double execution, no deadlock, panic-handshake
+//! liveness — under every (bounded) interleaving, but it cannot
+//! distinguish `Relaxed` from `SeqCst`. Sufficiency of each `Relaxed` in
+//! the runtime is argued in the mandatory `// ORDERING:` comments
+//! (enforced by `cargo xtask lint`) and stress-checked by the TSan CI
+//! job; the arguments are of two shapes, both SC-robust: a CAS word that
+//! carries its entire payload inside the word itself, or data published
+//! across the pool's mutex/condvar handshake.
+//!
+//! Deadlocks are detected (all live threads blocked) and reported with a
+//! per-thread wait reason; the run is then torn down by aborting every
+//! virtual thread and the controller re-raises with the report.
+//!
+//! Knobs (env, read per `model()` call): `INFUSER_LOOM_PREEMPTIONS`
+//! (default 2), `INFUSER_LOOM_MAX_ITERS` (default 200 000 executions),
+//! `INFUSER_LOOM_LOG=1` to print the executions-explored count.
+
+use std::cell::RefCell;
+use std::sync::atomic::Ordering as StdOrdering;
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, PoisonError};
+
+// ---------------------------------------------------------------------------
+// Scheduler state
+// ---------------------------------------------------------------------------
+
+/// Why a virtual thread cannot currently run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Wait {
+    /// Waiting to acquire model mutex `.0`.
+    Mutex(usize),
+    /// Waiting on model condvar `.0`.
+    Condvar(usize),
+    /// Waiting for virtual thread `.0` to finish.
+    Join(usize),
+}
+
+/// Virtual-thread scheduling state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Park {
+    /// Executing user code (holds the token, or is starting up).
+    Running,
+    /// Paused at a scheduling point; a grant candidate.
+    Ready,
+    /// Blocked on a synchronization object; not a grant candidate until
+    /// a waker moves it back to `Ready`.
+    Blocked(Wait),
+    Finished,
+}
+
+struct SchedState {
+    threads: Vec<Park>,
+    /// Model-mutex lock bits, indexed by registration id.
+    mutexes: Vec<bool>,
+    /// Model-condvar waiter lists, indexed by registration id.
+    cond_waiters: Vec<Vec<usize>>,
+    /// The virtual thread currently holding the execution token.
+    running: Option<usize>,
+    /// Teardown mode: scheduling points panic (or, on already-panicking
+    /// threads, fall through to the real primitive) so every real thread
+    /// exits promptly.
+    abort: bool,
+    /// Panic payload of virtual thread 0 (the test body), re-raised by
+    /// the controller so assertion failures surface normally.
+    t0_panic: Option<Box<dyn std::any::Any + Send>>,
+    /// Scheduling decisions taken this execution (controller-side).
+    steps: usize,
+}
+
+struct Sched {
+    state: StdMutex<SchedState>,
+    cv: StdCondvar,
+}
+
+impl Sched {
+    fn new() -> Self {
+        Self {
+            state: StdMutex::new(SchedState {
+                threads: Vec::new(),
+                mutexes: Vec::new(),
+                cond_waiters: Vec::new(),
+                running: None,
+                abort: false,
+                t0_panic: None,
+                steps: 0,
+            }),
+            cv: StdCondvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, SchedState> {
+        // A virtual thread can panic (assertion failure, teardown) while
+        // another holds this lock only vacuously — all model panics are
+        // raised after the guard is dropped — but recover anyway.
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// Per-OS-thread identity inside a model execution.
+#[derive(Clone)]
+struct Ctx {
+    sched: Arc<Sched>,
+    tid: usize,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+fn current() -> Option<Ctx> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+const ABORT_MSG: &str = "infuser-loom: execution aborted (model teardown)";
+
+/// Pause at a scheduling point until the controller grants the token.
+/// Outside a model execution this is a no-op, so facade types degrade to
+/// plain sequentially-consistent primitives when used un-modeled.
+pub(super) fn yield_point() {
+    let Some(ctx) = current() else { return };
+    let mut st = ctx.sched.lock();
+    if st.abort {
+        drop(st);
+        abort_current_thread();
+        return;
+    }
+    st.threads[ctx.tid] = Park::Ready;
+    if st.running == Some(ctx.tid) {
+        st.running = None;
+    }
+    ctx.sched.cv.notify_all();
+    while !(st.abort || st.running == Some(ctx.tid)) {
+        st = ctx.sched.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+    }
+    // On grant the controller already marked us Running. On abort, fall
+    // through to teardown.
+    let aborted = st.abort && st.running != Some(ctx.tid);
+    drop(st);
+    if aborted {
+        abort_current_thread();
+    }
+}
+
+/// Teardown policy: panic the thread so it unwinds out of the model —
+/// unless it is *already* unwinding (a panic inside `Drop` during unwind
+/// aborts the process), in which case fall through and let the caller
+/// run the underlying real primitive directly.
+fn abort_current_thread() {
+    if !std::thread::panicking() {
+        panic!("{ABORT_MSG}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Modeled atomics
+// ---------------------------------------------------------------------------
+
+/// Declares a modeled atomic: the value lives in a real `SeqCst` atomic
+/// (exclusive access is guaranteed by the token discipline; the real
+/// atomic just keeps the type `Sync`), and every operation is a
+/// scheduling point. `Ordering` arguments are accepted for API parity
+/// and ignored — the model is sequentially consistent by construction.
+macro_rules! model_atomic {
+    ($name:ident, $std:ident, $t:ty) => {
+        /// Modeled sequentially-consistent atomic (see module docs).
+        #[derive(Debug, Default)]
+        pub struct $name(std::sync::atomic::$std);
+
+        impl $name {
+            pub fn new(v: $t) -> Self {
+                Self(std::sync::atomic::$std::new(v))
+            }
+
+            pub fn load(&self, _: StdOrdering) -> $t {
+                yield_point();
+                self.0.load(StdOrdering::SeqCst)
+            }
+
+            pub fn store(&self, v: $t, _: StdOrdering) {
+                yield_point();
+                self.0.store(v, StdOrdering::SeqCst);
+            }
+
+            pub fn swap(&self, v: $t, _: StdOrdering) -> $t {
+                yield_point();
+                self.0.swap(v, StdOrdering::SeqCst)
+            }
+
+            pub fn fetch_add(&self, v: $t, _: StdOrdering) -> $t {
+                yield_point();
+                self.0.fetch_add(v, StdOrdering::SeqCst)
+            }
+
+            pub fn fetch_or(&self, v: $t, _: StdOrdering) -> $t {
+                yield_point();
+                self.0.fetch_or(v, StdOrdering::SeqCst)
+            }
+
+            pub fn compare_exchange(
+                &self,
+                cur: $t,
+                new: $t,
+                _: StdOrdering,
+                _: StdOrdering,
+            ) -> Result<$t, $t> {
+                yield_point();
+                self.0
+                    .compare_exchange(cur, new, StdOrdering::SeqCst, StdOrdering::SeqCst)
+            }
+
+            /// Modeled without spurious failure (deterministic replay
+            /// requires it); callers must already loop on failure.
+            pub fn compare_exchange_weak(
+                &self,
+                cur: $t,
+                new: $t,
+                success: StdOrdering,
+                failure: StdOrdering,
+            ) -> Result<$t, $t> {
+                self.compare_exchange(cur, new, success, failure)
+            }
+        }
+    };
+}
+
+model_atomic!(AtomicU64, AtomicU64, u64);
+model_atomic!(AtomicUsize, AtomicUsize, usize);
+
+/// Modeled `AtomicBool` (subset: the bitwise fetch ops differ in type,
+/// so it gets its own impl rather than the macro).
+#[derive(Debug, Default)]
+pub struct AtomicBool(std::sync::atomic::AtomicBool);
+
+impl AtomicBool {
+    pub fn new(v: bool) -> Self {
+        Self(std::sync::atomic::AtomicBool::new(v))
+    }
+
+    pub fn load(&self, _: StdOrdering) -> bool {
+        yield_point();
+        self.0.load(StdOrdering::SeqCst)
+    }
+
+    pub fn store(&self, v: bool, _: StdOrdering) {
+        yield_point();
+        self.0.store(v, StdOrdering::SeqCst);
+    }
+
+    pub fn swap(&self, v: bool, _: StdOrdering) -> bool {
+        yield_point();
+        self.0.swap(v, StdOrdering::SeqCst)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Modeled Mutex / Condvar
+// ---------------------------------------------------------------------------
+
+/// Registration handle: which scheduler (if any) models this object.
+/// Objects created outside a model execution run in fallback mode and
+/// use only their inner `std` primitive.
+#[derive(Clone)]
+struct Reg {
+    sched: Arc<Sched>,
+    id: usize,
+}
+
+fn in_model_of(reg: &Option<Reg>) -> Option<(Ctx, usize)> {
+    let reg = reg.as_ref()?;
+    let ctx = current()?;
+    if !Arc::ptr_eq(&ctx.sched, &reg.sched) {
+        return None;
+    }
+    let id = reg.id;
+    Some((ctx, id))
+}
+
+/// Modeled mutex. Blocking is mediated by the scheduler; the inner
+/// `std::sync::Mutex` provides the data storage and is uncontended by
+/// construction (the model-level lock is acquired first).
+pub struct Mutex<T> {
+    inner: StdMutex<T>,
+    reg: Option<Reg>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(value: T) -> Self {
+        let reg = current().map(|ctx| {
+            let mut st = ctx.sched.lock();
+            st.mutexes.push(false);
+            let id = st.mutexes.len() - 1;
+            drop(st);
+            Reg { sched: ctx.sched, id }
+        });
+        Self { inner: StdMutex::new(value), reg }
+    }
+
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        let modeled = match in_model_of(&self.reg) {
+            Some((ctx, id)) => model_lock(&ctx, id),
+            None => false,
+        };
+        let guard = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        MutexGuard { owner: self, guard: Some(guard), modeled }
+    }
+}
+
+/// Acquire the model-level lock `id` for the calling virtual thread.
+/// Returns true when model bookkeeping was taken (false = aborted into
+/// fallback; caller just takes the real lock).
+fn model_lock(ctx: &Ctx, id: usize) -> bool {
+    yield_point();
+    loop {
+        let mut st = ctx.sched.lock();
+        if st.abort {
+            drop(st);
+            abort_current_thread();
+            return false;
+        }
+        if !st.mutexes[id] {
+            st.mutexes[id] = true;
+            return true;
+        }
+        st.threads[ctx.tid] = Park::Blocked(Wait::Mutex(id));
+        if st.running == Some(ctx.tid) {
+            st.running = None;
+        }
+        ctx.sched.cv.notify_all();
+        while !(st.abort || st.running == Some(ctx.tid)) {
+            st = ctx.sched.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+        // Granted (or aborted): re-check the lock bit from the top.
+    }
+}
+
+/// Release the model-level lock `id` and move its blocked waiters back
+/// to the grant pool.
+fn model_unlock(sched: &Arc<Sched>, id: usize) {
+    let mut st = sched.lock();
+    if st.abort {
+        return;
+    }
+    st.mutexes[id] = false;
+    for park in st.threads.iter_mut() {
+        if *park == Park::Blocked(Wait::Mutex(id)) {
+            *park = Park::Ready;
+        }
+    }
+    sched.cv.notify_all();
+}
+
+/// Guard for [`Mutex`]; releases the model-level lock after the real one.
+pub struct MutexGuard<'a, T> {
+    owner: &'a Mutex<T>,
+    guard: Option<std::sync::MutexGuard<'a, T>>,
+    modeled: bool,
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.guard.as_ref().expect("guard present")
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.guard.as_mut().expect("guard present")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.modeled {
+            // Scheduling point *before* releasing, so contenders get to
+            // observe the locked state and explore their blocking path.
+            yield_point();
+        }
+        self.guard = None;
+        if self.modeled {
+            if let Some(reg) = &self.owner.reg {
+                model_unlock(&reg.sched, reg.id);
+            }
+        }
+    }
+}
+
+/// Modeled condvar. `wait` releases the paired [`Mutex`] atomically
+/// under the scheduler lock, parks until notified, then reacquires.
+/// No spurious wakeups are modeled (callers must tolerate them anyway,
+/// per the std contract).
+pub struct Condvar {
+    inner: StdCondvar,
+    reg: Option<Reg>,
+}
+
+impl Condvar {
+    pub fn new() -> Self {
+        let reg = current().map(|ctx| {
+            let mut st = ctx.sched.lock();
+            st.cond_waiters.push(Vec::new());
+            let id = st.cond_waiters.len() - 1;
+            drop(st);
+            Reg { sched: ctx.sched, id }
+        });
+        Self { inner: StdCondvar::new(), reg }
+    }
+
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        let Some((ctx, cv_id)) = in_model_of(&self.reg) else {
+            // Fallback: real condvar over the real mutex.
+            let owner = guard.owner;
+            let real = guard.guard.take().expect("guard present");
+            let was_modeled = guard.modeled;
+            guard.modeled = false; // the model lock state is handed over
+            drop(guard);
+            let real = self.inner.wait(real).unwrap_or_else(PoisonError::into_inner);
+            return MutexGuard { owner, guard: Some(real), modeled: was_modeled };
+        };
+        let owner = guard.owner;
+        let mutex_reg = owner.reg.as_ref().expect("modeled guard implies registered mutex");
+        let mutex_id = mutex_reg.id;
+        // Dismantle the guard by hand: the release, the waiter
+        // registration and the park must be one atomic step w.r.t. the
+        // model, so the guard's normal Drop (which takes the scheduler
+        // lock itself) cannot be used.
+        guard.modeled = false;
+        let real = guard.guard.take().expect("guard present");
+        drop(real);
+        drop(guard);
+        let mut st = ctx.sched.lock();
+        let mut aborted = st.abort;
+        if !aborted {
+            st.mutexes[mutex_id] = false;
+            for park in st.threads.iter_mut() {
+                if *park == Park::Blocked(Wait::Mutex(mutex_id)) {
+                    *park = Park::Ready;
+                }
+            }
+            st.threads[ctx.tid] = Park::Blocked(Wait::Condvar(cv_id));
+            st.cond_waiters[cv_id].push(ctx.tid);
+            if st.running == Some(ctx.tid) {
+                st.running = None;
+            }
+            ctx.sched.cv.notify_all();
+            while !(st.abort || st.running == Some(ctx.tid)) {
+                st = ctx.sched.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+            aborted = st.abort && st.running != Some(ctx.tid);
+        }
+        drop(st);
+        if aborted {
+            abort_current_thread();
+            // Already-unwinding thread: reacquire the real lock only.
+            let real = owner.inner.lock().unwrap_or_else(PoisonError::into_inner);
+            return MutexGuard { owner, guard: Some(real), modeled: false };
+        }
+        // Notified and granted: reacquire model + real lock.
+        let modeled = model_lock(&ctx, mutex_id);
+        let real = owner.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        MutexGuard { owner, guard: Some(real), modeled }
+    }
+
+    pub fn notify_all(&self) {
+        if let Some((ctx, cv_id)) = in_model_of(&self.reg) {
+            yield_point();
+            let mut st = ctx.sched.lock();
+            if !st.abort {
+                let waiters = std::mem::take(&mut st.cond_waiters[cv_id]);
+                for w in waiters {
+                    if st.threads[w] == Park::Blocked(Wait::Condvar(cv_id)) {
+                        st.threads[w] = Park::Ready;
+                    }
+                }
+                ctx.sched.cv.notify_all();
+            }
+        }
+        self.inner.notify_all();
+    }
+
+    /// Deterministic approximation: wakes the longest-waiting waiter
+    /// (no scheduler branching over which waiter wins — the std contract
+    /// permits any, and the runtime only uses `notify_all`).
+    pub fn notify_one(&self) {
+        if let Some((ctx, cv_id)) = in_model_of(&self.reg) {
+            yield_point();
+            let mut st = ctx.sched.lock();
+            if !st.abort && !st.cond_waiters[cv_id].is_empty() {
+                let w = st.cond_waiters[cv_id].remove(0);
+                if st.threads[w] == Park::Blocked(Wait::Condvar(cv_id)) {
+                    st.threads[w] = Park::Ready;
+                }
+                ctx.sched.cv.notify_all();
+            }
+        }
+        self.inner.notify_one();
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Modeled threads
+// ---------------------------------------------------------------------------
+
+/// Modeled `std::thread::Builder` subset (name + spawn).
+#[derive(Default)]
+pub struct Builder {
+    name: Option<String>,
+}
+
+impl Builder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn name(mut self, name: String) -> Self {
+        self.name = Some(name);
+        self
+    }
+
+    pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let mut builder = std::thread::Builder::new();
+        if let Some(name) = self.name {
+            builder = builder.name(name);
+        }
+        let Some(ctx) = current() else {
+            // Fallback: plain std spawn.
+            let real = builder.spawn(f)?;
+            return Ok(JoinHandle { real, model: None });
+        };
+        // Register the child *here*, on the spawning thread, so thread
+        // ids are assigned in deterministic program order.
+        let tid = {
+            let mut st = ctx.sched.lock();
+            st.threads.push(Park::Running);
+            st.threads.len() - 1
+        };
+        let sched = Arc::clone(&ctx.sched);
+        let real = builder.spawn(move || {
+            CURRENT.with(|c| {
+                *c.borrow_mut() = Some(Ctx { sched: Arc::clone(&sched), tid });
+            });
+            yield_point();
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+            finish(&sched, tid);
+            match result {
+                Ok(v) => v,
+                // Re-raise so the real JoinHandle reports Err(payload),
+                // matching std::thread semantics for a panicked child.
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        })?;
+        // Scheduling point after the spawn: the child is now a grant
+        // candidate alongside the continuation of this thread.
+        yield_point();
+        Ok(JoinHandle { real, model: Some((Arc::clone(&ctx.sched), tid)) })
+    }
+}
+
+/// Mark virtual thread `tid` finished and wake its joiners.
+fn finish(sched: &Arc<Sched>, tid: usize) {
+    let mut st = sched.lock();
+    st.threads[tid] = Park::Finished;
+    if st.running == Some(tid) {
+        st.running = None;
+    }
+    for park in st.threads.iter_mut() {
+        if *park == Park::Blocked(Wait::Join(tid)) {
+            *park = Park::Ready;
+        }
+    }
+    sched.cv.notify_all();
+}
+
+/// Modeled join handle; blocks through the scheduler, then joins the
+/// real thread (which is guaranteed to be exiting).
+pub struct JoinHandle<T> {
+    real: std::thread::JoinHandle<T>,
+    model: Option<(Arc<Sched>, usize)>,
+}
+
+impl<T> JoinHandle<T> {
+    pub fn join(self) -> std::thread::Result<T> {
+        if let Some((sched, target)) = &self.model {
+            if let Some(ctx) = current() {
+                if Arc::ptr_eq(&ctx.sched, sched) {
+                    yield_point();
+                    let mut st = ctx.sched.lock();
+                    loop {
+                        if st.abort || st.threads[*target] == Park::Finished {
+                            break;
+                        }
+                        st.threads[ctx.tid] = Park::Blocked(Wait::Join(*target));
+                        if st.running == Some(ctx.tid) {
+                            st.running = None;
+                        }
+                        ctx.sched.cv.notify_all();
+                        while !(st.abort || st.running == Some(ctx.tid)) {
+                            st = ctx.sched.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+                        }
+                    }
+                    let aborted = st.abort && st.threads[*target] != Park::Finished;
+                    drop(st);
+                    if aborted {
+                        abort_current_thread();
+                        // Unwinding teardown: the target is guaranteed to
+                        // exit (every aborted thread does), so a real
+                        // join is safe and bounded.
+                    }
+                }
+            }
+        }
+        self.real.join()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The explorer (controller + DFS over schedules)
+// ---------------------------------------------------------------------------
+
+/// One scheduling decision: which grant candidate was chosen, out of how
+/// many. The DFS trace is a vector of these.
+#[derive(Clone, Copy, Debug)]
+struct Choice {
+    chosen: usize,
+    num: usize,
+}
+
+enum Outcome {
+    /// All virtual threads finished; payload = thread 0's panic, if any.
+    Done(Option<Box<dyn std::any::Any + Send>>),
+    Deadlock(String),
+    TooManySteps,
+}
+
+/// Exploration configuration. `model()` uses env-derived defaults; tests
+/// can construct explicitly for tighter bounds.
+pub struct Explorer {
+    /// Max context switches away from a still-runnable thread per
+    /// execution (CHESS bound). Exhaustive within the bound.
+    pub preemption_bound: usize,
+    /// Hard cap on explored executions; exceeding it fails the test
+    /// loudly rather than silently under-exploring.
+    pub max_iters: usize,
+    /// Hard cap on scheduling decisions in one execution (livelock guard).
+    pub max_steps: usize,
+}
+
+impl Default for Explorer {
+    fn default() -> Self {
+        let env_usize = |key: &str, default: usize| {
+            std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+        };
+        Self {
+            preemption_bound: env_usize("INFUSER_LOOM_PREEMPTIONS", 2),
+            max_iters: env_usize("INFUSER_LOOM_MAX_ITERS", 200_000),
+            max_steps: 100_000,
+        }
+    }
+}
+
+impl Explorer {
+    /// Explore every schedule of `f` within the preemption bound.
+    /// Panics on deadlock, on a panic in any execution (re-raised), or
+    /// when a cap is exceeded. Returns the number of executions explored.
+    pub fn check<F: Fn() + Send + Sync + 'static>(&self, f: F) -> usize {
+        let f = Arc::new(f);
+        let mut trace: Vec<Choice> = Vec::new();
+        let mut iters = 0usize;
+        loop {
+            iters += 1;
+            if iters > self.max_iters {
+                panic!(
+                    "infuser-loom: exceeded {} executions (schedule space too large; \
+                     shrink the model or raise INFUSER_LOOM_MAX_ITERS)",
+                    self.max_iters
+                );
+            }
+            match self.run_one(Arc::clone(&f), &mut trace) {
+                Outcome::Done(None) => {}
+                Outcome::Done(Some(payload)) => {
+                    eprintln!(
+                        "infuser-loom: panic in execution {iters} (schedule {:?})",
+                        trace.iter().map(|c| c.chosen).collect::<Vec<_>>()
+                    );
+                    std::panic::resume_unwind(payload);
+                }
+                Outcome::Deadlock(msg) => {
+                    panic!("infuser-loom: deadlock in execution {iters}: {msg}");
+                }
+                Outcome::TooManySteps => {
+                    panic!(
+                        "infuser-loom: execution {iters} exceeded {} scheduling points \
+                         (livelock, or a model too large to explore)",
+                        self.max_steps
+                    );
+                }
+            }
+            // DFS backtrack: drop exhausted tail decisions, bump the
+            // deepest one that still has an unexplored branch.
+            while let Some(last) = trace.last() {
+                if last.chosen + 1 < last.num {
+                    break;
+                }
+                trace.pop();
+            }
+            match trace.last_mut() {
+                Some(last) => last.chosen += 1,
+                None => break,
+            }
+        }
+        if std::env::var("INFUSER_LOOM_LOG").is_ok() {
+            eprintln!("infuser-loom: explored {iters} executions");
+        }
+        iters
+    }
+
+    /// Run one execution, replaying `trace` and extending it with
+    /// first-branch choices past its end.
+    fn run_one<F: Fn() + Send + Sync + 'static>(
+        &self,
+        f: Arc<F>,
+        trace: &mut Vec<Choice>,
+    ) -> Outcome {
+        let sched = Arc::new(Sched::new());
+        {
+            let mut st = sched.lock();
+            st.threads.push(Park::Running); // vthread 0
+        }
+        let t0_sched = Arc::clone(&sched);
+        let t0 = std::thread::Builder::new()
+            .name("infuser-loom-t0".into())
+            .spawn(move || {
+                CURRENT.with(|c| {
+                    *c.borrow_mut() = Some(Ctx { sched: Arc::clone(&t0_sched), tid: 0 });
+                });
+                yield_point();
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f()));
+                if let Err(payload) = result {
+                    let mut st = t0_sched.lock();
+                    st.t0_panic = Some(payload);
+                }
+                finish(&t0_sched, 0);
+            })
+            .expect("spawn model thread 0");
+
+        let outcome = self.drive(&sched, trace);
+        // The teardown protocol guarantees every virtual thread exits,
+        // so this join is bounded in every outcome.
+        let _ = t0.join();
+        outcome
+    }
+
+    /// The controller loop: wait for quiescence, pick the next thread
+    /// per the DFS trace, grant, repeat.
+    fn drive(&self, sched: &Arc<Sched>, trace: &mut Vec<Choice>) -> Outcome {
+        let mut step = 0usize;
+        let mut preemptions = 0usize;
+        let mut last: Option<usize> = None;
+        let mut st = sched.lock();
+        loop {
+            // Quiescence: nobody holds the token, nobody is in startup.
+            while st.running.is_some() || st.threads.iter().any(|t| *t == Park::Running) {
+                st = sched.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+            if st.threads.iter().all(|t| *t == Park::Finished) {
+                let payload = st.t0_panic.take();
+                return Outcome::Done(payload);
+            }
+            let enabled: Vec<usize> = st
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| **t == Park::Ready)
+                .map(|(i, _)| i)
+                .collect();
+            if enabled.is_empty() {
+                let msg = describe_deadlock(&st);
+                st.abort = true;
+                sched.cv.notify_all();
+                return Outcome::Deadlock(msg);
+            }
+            // Candidate order: the previously-granted thread first (the
+            // free "continue" branch), then the rest ascending. Under an
+            // exhausted preemption budget only "continue" remains.
+            let prev_enabled = last.is_some_and(|p| enabled.contains(&p));
+            let mut candidates: Vec<usize> = Vec::with_capacity(enabled.len());
+            if let Some(p) = last.filter(|p| enabled.contains(p)) {
+                candidates.push(p);
+            }
+            candidates.extend(enabled.iter().copied().filter(|&t| Some(t) != last));
+            if prev_enabled && preemptions >= self.preemption_bound {
+                candidates.truncate(1);
+            }
+            let chosen = if step < trace.len() {
+                assert_eq!(
+                    trace[step].num,
+                    candidates.len(),
+                    "infuser-loom: nondeterministic model (candidate count changed on \
+                     replay at step {step}; the closure must be deterministic)"
+                );
+                trace[step].chosen
+            } else {
+                trace.push(Choice { chosen: 0, num: candidates.len() });
+                0
+            };
+            let tid = candidates[chosen];
+            if prev_enabled && Some(tid) != last {
+                preemptions += 1;
+            }
+            last = Some(tid);
+            step += 1;
+            if step > self.max_steps {
+                st.abort = true;
+                sched.cv.notify_all();
+                return Outcome::TooManySteps;
+            }
+            st.steps = step;
+            st.threads[tid] = Park::Running;
+            st.running = Some(tid);
+            sched.cv.notify_all();
+        }
+    }
+}
+
+fn describe_deadlock(st: &SchedState) -> String {
+    let parts: Vec<String> = st
+        .threads
+        .iter()
+        .enumerate()
+        .map(|(i, t)| match t {
+            Park::Blocked(Wait::Mutex(m)) => format!("t{i}: blocked on mutex #{m}"),
+            Park::Blocked(Wait::Condvar(c)) => format!("t{i}: waiting on condvar #{c}"),
+            Park::Blocked(Wait::Join(j)) => format!("t{i}: joining t{j}"),
+            Park::Finished => format!("t{i}: finished"),
+            other => format!("t{i}: {other:?}"),
+        })
+        .collect();
+    parts.join("; ")
+}
+
+/// Model-check `f` under every bounded interleaving — the loom-shaped
+/// entry point used by `rust/tests/loom_pool.rs`. Returns the number of
+/// executions explored.
+pub fn model<F: Fn() + Send + Sync + 'static>(f: F) -> usize {
+    Explorer::default().check(f)
+}
+
+// ---------------------------------------------------------------------------
+// Litmus tests — these run in the tier-1 suite (the checker itself must
+// be machine-checked before anything it certifies can be trusted).
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    fn tiny() -> Explorer {
+        Explorer { preemption_bound: 2, max_iters: 100_000, max_steps: 10_000 }
+    }
+
+    fn spawn_model<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        Builder::new().spawn(f).expect("spawn model thread")
+    }
+
+    #[test]
+    fn explores_more_than_one_interleaving() {
+        let n = tiny().check(|| {
+            let a = Arc::new(AtomicU64::new(0));
+            let a2 = Arc::clone(&a);
+            let t = spawn_model(move || {
+                a2.fetch_add(1, Ordering::Relaxed);
+            });
+            a.fetch_add(1, Ordering::Relaxed);
+            t.join().unwrap();
+            assert_eq!(a.load(Ordering::Relaxed), 2, "fetch_add must never lose an increment");
+        });
+        assert!(n > 1, "two unordered increments must yield several schedules, got {n}");
+    }
+
+    #[test]
+    fn sequential_consistency_store_buffering() {
+        // SB litmus: under SC (which this model implements by design)
+        // r1 == 0 && r2 == 0 is impossible.
+        tiny().check(|| {
+            let x = Arc::new(AtomicU64::new(0));
+            let y = Arc::new(AtomicU64::new(0));
+            let (x1, y1) = (Arc::clone(&x), Arc::clone(&y));
+            let t1 = spawn_model(move || {
+                x1.store(1, Ordering::Relaxed);
+                y1.load(Ordering::Relaxed)
+            });
+            x.store(0, Ordering::Relaxed); // no-op; keeps t0 symmetric-ish
+            y.store(1, Ordering::Relaxed);
+            let r2 = x.load(Ordering::Relaxed);
+            let r1 = t1.join().unwrap();
+            assert!(r1 == 1 || r2 == 1, "SC forbids r1 == 0 && r2 == 0");
+        });
+    }
+
+    #[test]
+    fn cas_loop_claims_each_value_once() {
+        // The bounded-CAS cursor discipline in miniature: two threads
+        // draining a 3-item cursor must claim disjoint indices covering
+        // the range, in every schedule.
+        tiny().check(|| {
+            let cursor = Arc::new(AtomicUsize::new(0));
+            let claim = |cursor: &AtomicUsize| {
+                let mut got = Vec::new();
+                loop {
+                    let cur = cursor.load(Ordering::Relaxed);
+                    if cur >= 3 {
+                        return got;
+                    }
+                    if cursor
+                        .compare_exchange_weak(cur, cur + 1, Ordering::Relaxed, Ordering::Relaxed)
+                        .is_ok()
+                    {
+                        got.push(cur);
+                    }
+                }
+            };
+            let c2 = Arc::clone(&cursor);
+            let t = spawn_model(move || claim(&c2));
+            let mut mine = claim(&cursor);
+            let theirs = t.join().unwrap();
+            mine.extend(theirs);
+            mine.sort_unstable();
+            assert_eq!(mine, vec![0, 1, 2], "every index claimed exactly once");
+        });
+    }
+
+    #[test]
+    fn mutex_provides_mutual_exclusion() {
+        tiny().check(|| {
+            let m = Arc::new(Mutex::new(0u64));
+            let m2 = Arc::clone(&m);
+            let t = spawn_model(move || {
+                let mut g = m2.lock();
+                let snapshot = *g;
+                *g = snapshot + 1;
+            });
+            {
+                let mut g = m.lock();
+                let snapshot = *g;
+                *g = snapshot + 1;
+            }
+            t.join().unwrap();
+            assert_eq!(*m.lock(), 2, "read-modify-write under the lock must not be lost");
+        });
+    }
+
+    #[test]
+    fn condvar_handshake_completes() {
+        // A one-shot ping: waiter parks until the flag is set. Exercises
+        // wait/notify_all plus the atomic-release-and-park path.
+        tiny().check(|| {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let pair2 = Arc::clone(&pair);
+            let t = spawn_model(move || {
+                let (m, cv) = &*pair2;
+                let mut g = m.lock();
+                *g = true;
+                cv.notify_all();
+                drop(g);
+            });
+            let (m, cv) = &*pair;
+            let mut g = m.lock();
+            while !*g {
+                g = cv.wait(g);
+            }
+            drop(g);
+            t.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn detects_ab_ba_deadlock() {
+        let result = std::panic::catch_unwind(|| {
+            tiny().check(|| {
+                let a = Arc::new(Mutex::new(()));
+                let b = Arc::new(Mutex::new(()));
+                let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+                let t = spawn_model(move || {
+                    let _ga = a2.lock();
+                    let _gb = b2.lock();
+                });
+                let _gb = b.lock();
+                let _ga = a.lock();
+                drop((_gb, _ga));
+                let _ = t.join();
+            });
+        });
+        let err = result.expect_err("AB-BA locking must be reported as a deadlock");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()).unwrap_or_default());
+        assert!(msg.contains("deadlock"), "unexpected panic: {msg}");
+    }
+
+    #[test]
+    fn join_observes_child_result() {
+        tiny().check(|| {
+            let t = spawn_model(|| 41u64 + 1);
+            assert_eq!(t.join().unwrap(), 42);
+        });
+    }
+
+    #[test]
+    fn preemption_bound_zero_still_covers_completion() {
+        // With no preemptions allowed the search degenerates to a small
+        // set of run-to-completion schedules — it must still terminate
+        // and verify the invariant.
+        let ex = Explorer { preemption_bound: 0, max_iters: 10_000, max_steps: 10_000 };
+        let n = ex.check(|| {
+            let a = Arc::new(AtomicU64::new(0));
+            let a2 = Arc::clone(&a);
+            let t = spawn_model(move || {
+                a2.fetch_add(1, Ordering::Relaxed);
+            });
+            a.fetch_add(1, Ordering::Relaxed);
+            t.join().unwrap();
+            assert_eq!(a.load(Ordering::Relaxed), 2);
+        });
+        assert!(n >= 1);
+    }
+}

@@ -24,8 +24,15 @@ macro_rules! avx2_row {
         #[doc = $doc]
         ///
         /// # Safety
-        /// Requires AVX2. Slices may have any length; the tail is handled
-        /// by the scalar reference kernel.
+        /// * The CPU must support AVX2 (`#[target_feature]`): call only
+        ///   after `is_x86_feature_detected!("avx2")`, as `Backend::detect`
+        ///   does — executing on a non-AVX2 core is immediate UB.
+        /// * `lv`, `xrs`, and `cand` must each hold at least `lu.len()`
+        ///   elements: the vector body reads/writes them at the same lane
+        ///   offsets as `lu` through raw pointer adds that bypass slice
+        ///   bounds checks.
+        /// * No alignment requirement — all accesses are `loadu`/`storeu`
+        ///   (unaligned); the tail (< `B` lanes) uses the scalar kernel.
         #[target_feature(enable = "avx2")]
         pub unsafe fn $name(
             lu: &[i32],
@@ -94,7 +101,13 @@ macro_rules! avx2_masked {
         #[doc = $doc]
         ///
         /// # Safety
-        /// Requires AVX2.
+        /// * The CPU must support AVX2 (`#[target_feature]`): call only
+        ///   after `is_x86_feature_detected!("avx2")` — see `Backend::detect`.
+        /// * `lv`, `xrs`, and `cand` must each hold at least `lu.len()`
+        ///   elements (raw-pointer lane accesses bypass bounds checks), and
+        ///   `mask` at least `lu.len().div_ceil(64)` words (indexed `o/64`).
+        /// * No alignment requirement — all vector accesses are unaligned;
+        ///   the sub-`B` tail runs the scalar kernel.
         #[target_feature(enable = "avx2")]
         pub unsafe fn $name(
             lu: &[i32],
@@ -156,7 +169,13 @@ macro_rules! avx2_maskonly {
         #[doc = $doc]
         ///
         /// # Safety
-        /// Requires AVX2.
+        /// * The CPU must support AVX2 (`#[target_feature]`): call only
+        ///   after `is_x86_feature_detected!("avx2")` — see `Backend::detect`.
+        /// * `lv` and `xrs` must each hold at least `lu.len()` elements
+        ///   (raw-pointer lane accesses bypass bounds checks), and `mask`
+        ///   at least `lu.len().div_ceil(64)` words (indexed `o/64`).
+        /// * No alignment requirement — all vector accesses are unaligned;
+        ///   the sub-`B` tail runs the scalar kernel.
         #[target_feature(enable = "avx2")]
         pub unsafe fn $name(
             lu: &[i32],

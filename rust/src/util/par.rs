@@ -6,13 +6,19 @@
 //! scoped threads per region) has been replaced by the persistent
 //! [`crate::runtime::pool::WorkerPool`]; the old name is re-exported
 //! below so the τ-threading contract reads the same across the stack.
+//!
+//! Work distribution is delegated to [`ChunkQueue`] — `parallel_for`
+//! is exactly `WorkerPool::for_each` with one-shot scoped threads in
+//! place of parked persistent workers, so the bounded-CAS cursor that
+//! both share is defined (and loom-model-checked) in one place.
 
 pub use crate::runtime::pool::{Schedule, WorkerPool as ThreadPool};
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::runtime::pool::ChunkQueue;
 
 /// Run `body(i)` for every `i in 0..len` on `threads` one-shot scoped
-/// workers grabbing fixed-size chunks from a shared cursor.
+/// workers grabbing fixed-size chunks from a shared cursor
+/// ([`Schedule::Dynamic`] — the OpenMP `schedule(dynamic)` analog).
 ///
 /// `body` must be `Sync` (it is shared by reference); interior mutability
 /// (atomics, per-thread buffers) is the caller's tool of choice, exactly
@@ -20,10 +26,11 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 /// [`ThreadPool`] — it parks its workers between rounds instead of
 /// respawning them.
 ///
-/// The cursor is advanced by bounded compare-exchange and never moves
-/// past `len`: a plain `fetch_add` would keep accumulating on every
-/// empty-handed poll, and with a small `len` and a long-lived loop the
-/// counter could in principle wrap `usize` and hand out indices twice.
+/// The cursor (inside [`ChunkQueue`]) is advanced by bounded
+/// compare-exchange and never moves past `len`: a plain `fetch_add`
+/// would keep accumulating on every empty-handed poll, and with a small
+/// `len` and a long-lived loop the counter could in principle wrap
+/// `usize` and hand out indices twice.
 pub fn parallel_for<F: Fn(usize) + Sync>(threads: usize, len: usize, chunk: usize, body: F) {
     let threads = threads.max(1);
     if threads == 1 || len <= chunk {
@@ -32,24 +39,16 @@ pub fn parallel_for<F: Fn(usize) + Sync>(threads: usize, len: usize, chunk: usiz
         }
         return;
     }
-    let cursor = AtomicUsize::new(0);
-    let chunk = chunk.max(1);
+    let queue = ChunkQueue::new(Schedule::Dynamic, len, chunk.max(1), threads);
     std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let start = cursor.load(Ordering::Relaxed);
-                if start >= len {
-                    break;
-                }
-                let end = (start + chunk).min(len);
-                if cursor
-                    .compare_exchange_weak(start, end, Ordering::Relaxed, Ordering::Relaxed)
-                    .is_err()
-                {
-                    continue;
-                }
-                for i in start..end {
-                    body(i);
+        for worker in 0..threads {
+            let queue = &queue;
+            let body = &body;
+            scope.spawn(move || {
+                while let Some((start, end)) = queue.next(worker) {
+                    for i in start..end {
+                        body(i);
+                    }
                 }
             });
         }
@@ -80,7 +79,17 @@ pub struct SendCells<T> {
     ptr: *mut T,
     len: usize,
 }
+// SAFETY: SendCells is only a capability token for disjoint-index writes.
+// Sharing `&SendCells` across threads is sound because the only way to
+// touch the pointee is the `unsafe fn get`, whose contract makes the
+// caller (not this impl) responsible for index-disjointness; with
+// disjoint indices, concurrent `&mut` slots never alias. `T: Send` is
+// required because slot values are written from other threads.
 unsafe impl<T: Send> Sync for SendCells<T> {}
+// SAFETY: moving the wrapper between threads moves only a raw pointer +
+// length; the pointee's thread affinity is covered by `T: Send`, and the
+// borrow of the underlying slice is pinned by `as_send_cells`'s `&mut`
+// argument lifetime, which callers keep alive for the parallel region.
 unsafe impl<T: Send> Send for SendCells<T> {}
 
 impl<T> SendCells<T> {
@@ -115,14 +124,37 @@ mod tests {
     use super::*;
     use std::sync::atomic::{AtomicU64, Ordering};
 
-    #[test]
-    fn parallel_for_visits_every_index_once() {
-        let n = 10_000;
-        let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
-        parallel_for(8, n, 64, |i| {
+    /// Run `parallel_for` over `0..len` and return how many times each
+    /// index was visited. The assert pattern all the coverage tests share.
+    fn parallel_for_visit_counts(threads: usize, len: usize, chunk: usize) -> Vec<u64> {
+        let counts: Vec<AtomicU64> = (0..len).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(threads, len, chunk, |i| {
             counts[i].fetch_add(1, Ordering::Relaxed);
         });
-        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+        counts.into_iter().map(AtomicU64::into_inner).collect()
+    }
+
+    /// Same, but through a persistent pool under an explicit schedule —
+    /// used to pin that the steal path also never drops or repeats work.
+    fn pool_visit_counts(schedule: Schedule, threads: usize, len: usize, chunk: usize) -> Vec<u64> {
+        let pool = ThreadPool::with_schedule(threads, schedule);
+        let counts: Vec<AtomicU64> = (0..len).map(|_| AtomicU64::new(0)).collect();
+        pool.for_each(len, chunk, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        counts.into_iter().map(AtomicU64::into_inner).collect()
+    }
+
+    /// Every index visited exactly once: nothing lost, nothing doubled.
+    fn assert_exactly_once(counts: &[u64], ctx: &str) {
+        for (i, &c) in counts.iter().enumerate() {
+            assert_eq!(c, 1, "{ctx}: index {i} visited {c} times");
+        }
+    }
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        assert_exactly_once(&parallel_for_visit_counts(8, 10_000, 64), "8 threads");
     }
 
     #[test]
@@ -136,20 +168,12 @@ mod tests {
 
     #[test]
     fn empty_range_is_a_noop() {
-        let hits = AtomicU64::new(0);
-        parallel_for(4, 0, 8, |_| {
-            hits.fetch_add(1, Ordering::Relaxed);
-        });
-        assert_eq!(hits.load(Ordering::Relaxed), 0);
+        assert!(parallel_for_visit_counts(4, 0, 8).is_empty());
     }
 
     #[test]
     fn chunk_larger_than_len_runs_serially_and_completely() {
-        let counts: Vec<AtomicU64> = (0..5).map(|_| AtomicU64::new(0)).collect();
-        parallel_for(4, 5, 100, |i| {
-            counts[i].fetch_add(1, Ordering::Relaxed);
-        });
-        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+        assert_exactly_once(&parallel_for_visit_counts(4, 5, 100), "serial fallback");
     }
 
     #[test]
@@ -157,11 +181,25 @@ mod tests {
         // chunk 1 forces the parallel path; most workers poll an already
         // drained cursor. The bounded-CAS cursor must stay at `len`
         // (never wrapping or over-advancing) and hand out each index once.
-        let counts: Vec<AtomicU64> = (0..3).map(|_| AtomicU64::new(0)).collect();
-        parallel_for(16, 3, 1, |i| {
-            counts[i].fetch_add(1, Ordering::Relaxed);
-        });
-        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+        assert_exactly_once(&parallel_for_visit_counts(16, 3, 1), "16 threads, 3 indices");
+    }
+
+    #[test]
+    fn steal_schedule_never_visits_an_index_twice() {
+        // The steal path tiles 0..len across per-worker ranges with
+        // back-stealing; no index may be dropped by a mis-split or handed
+        // out twice by an owner/thief race on the packed slot.
+        for (threads, len, chunk) in [(8, 10_000, 64), (4, 97, 16), (16, 3, 1)] {
+            assert_exactly_once(
+                &pool_visit_counts(Schedule::Steal, threads, len, chunk),
+                &format!("steal τ={threads} len={len} chunk={chunk}"),
+            );
+        }
+    }
+
+    #[test]
+    fn dynamic_schedule_matches_parallel_for_coverage() {
+        assert_exactly_once(&pool_visit_counts(Schedule::Dynamic, 8, 10_000, 64), "dynamic pool");
     }
 
     #[test]

@@ -1,0 +1,161 @@
+//! Pool panic-handshake integration tests (PR 6, satellite 3).
+//!
+//! A worker that panics mid-chunk — mid `EdgeBlock`, in propagation terms —
+//! must poison the round cleanly: the payload re-raises on the dispatching
+//! thread only after every worker has parked (so the type-erased region
+//! borrow never dangles), no thread hangs, and the pool dispatches the
+//! next round as if nothing happened. The pool's unit test covers the
+//! default schedule only; these cover **both** [`Schedule`] policies and
+//! the mid-loop (`for_each`) shape, which is where a panic interleaves
+//! with live chunk claims in the steal deques / shared cursor.
+//!
+//! The exhaustive interleaving check for the same property lives in the
+//! loom model (`tests/loom_pool.rs`, `pool_panic_handshake_never_deadlocks`);
+//! this file checks the real `std` runtime end to end.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use infuser::runtime::{Schedule, WorkerPool};
+
+/// Marker prefix for every intentional panic in this binary, so the
+/// silencing hook can tell expected unwinds from real test failures.
+const BOOM: &str = "pool-panic-test:";
+
+/// Install (once, process-wide) a panic hook that suppresses the default
+/// backtrace spew for this file's intentional panics and defers to the
+/// previous hook for everything else. Tests in one binary share the
+/// process hook, so this must be idempotent — hence the `OnceLock`.
+fn silence_expected_panics() {
+    static INSTALLED: OnceLock<()> = OnceLock::new();
+    INSTALLED.get_or_init(|| {
+        let previous = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let expected = info
+                .payload()
+                .downcast_ref::<String>()
+                .is_some_and(|s| s.contains(BOOM))
+                || info
+                    .payload()
+                    .downcast_ref::<&str>()
+                    .is_some_and(|s| s.contains(BOOM));
+            if !expected {
+                previous(info);
+            }
+        }));
+    });
+}
+
+/// Drive one poisoned `for_each` round: worker threads process chunks of
+/// an edge-block-sized loop, and the body panics partway through — on a
+/// specific index, so under either schedule some worker dies mid-drain
+/// while others keep claiming chunks. Returns the caught payload.
+fn poisoned_round(pool: &WorkerPool, len: usize, chunk: usize) -> Box<dyn std::any::Any + Send> {
+    let visited = AtomicUsize::new(0);
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        pool.for_each(len, chunk, |i| {
+            visited.fetch_add(1, Ordering::Relaxed);
+            if i == len / 2 {
+                panic!("{BOOM} died at index {i}");
+            }
+        });
+    }));
+    let payload = result.expect_err("the mid-loop panic must surface to the dispatcher");
+    // The panicking index ran; the poisoned round is allowed to finish the
+    // other chunks (surviving workers drain the queue) but never to run an
+    // index twice — `pool_still_tiles_exactly_once` checks the latter on
+    // the next round.
+    let seen = visited.load(Ordering::Relaxed);
+    assert!(seen >= 1 && seen <= len, "visited {seen} of {len}");
+    payload
+}
+
+/// After a poisoned round the same pool must still tile `0..len` exactly
+/// once — the steal ranges / cursor of the dead round must not leak into
+/// the next `ChunkQueue`.
+fn pool_still_tiles_exactly_once(pool: &WorkerPool, len: usize, chunk: usize) {
+    let counts: Vec<AtomicU64> = (0..len).map(|_| AtomicU64::new(0)).collect();
+    pool.for_each(len, chunk, |i| {
+        counts[i].fetch_add(1, Ordering::Relaxed);
+    });
+    for (i, c) in counts.iter().enumerate() {
+        assert_eq!(
+            c.load(Ordering::Relaxed),
+            1,
+            "index {i} not visited exactly once after a poisoned round ({})",
+            pool.schedule()
+        );
+    }
+}
+
+#[test]
+fn mid_block_panic_poisons_cleanly_under_both_schedules() {
+    silence_expected_panics();
+    for schedule in Schedule::ALL {
+        let pool = WorkerPool::with_schedule(4, schedule);
+        let payload = poisoned_round(&pool, 1000, 16);
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(
+            msg.contains(BOOM),
+            "{schedule}: dispatcher must receive the worker's payload, got {msg:?}"
+        );
+        pool_still_tiles_exactly_once(&pool, 1000, 16);
+    }
+}
+
+#[test]
+fn repeated_poisoned_rounds_do_not_wedge_the_handshake() {
+    silence_expected_panics();
+    for schedule in Schedule::ALL {
+        let pool = WorkerPool::with_schedule(3, schedule);
+        for _ in 0..20 {
+            let _ = poisoned_round(&pool, 60, 4);
+        }
+        pool_still_tiles_exactly_once(&pool, 60, 4);
+    }
+}
+
+#[test]
+fn dispatcher_share_panic_behaves_like_a_worker_panic() {
+    // Worker 0 is the dispatching thread itself; its own unwind takes the
+    // `own` path in `region` rather than the worker handshake, and must
+    // still wait for every parked worker before re-raising.
+    silence_expected_panics();
+    for schedule in Schedule::ALL {
+        let pool = WorkerPool::with_schedule(4, schedule);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.region(|w| {
+                if w == 0 {
+                    panic!("{BOOM} dispatcher share");
+                }
+            });
+        }));
+        assert!(result.is_err(), "{schedule}: dispatcher panic must re-raise");
+        pool_still_tiles_exactly_once(&pool, 128, 8);
+    }
+}
+
+#[test]
+fn panicking_map_leaves_pool_usable() {
+    // `map` routes through the same handshake; a poisoned map must not
+    // corrupt the ordered-result path of the next one.
+    silence_expected_panics();
+    for schedule in Schedule::ALL {
+        let pool = WorkerPool::with_schedule(4, schedule);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.map(32, |i| {
+                if i == 17 {
+                    panic!("{BOOM} map item");
+                }
+                i * 3
+            })
+        }));
+        assert!(result.is_err(), "{schedule}: map panic must re-raise");
+        let out = pool.map(32, |i| i * 3);
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i * 3), "{schedule}");
+    }
+}

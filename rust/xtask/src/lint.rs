@@ -1,0 +1,636 @@
+//! The repo-invariant lint pass (`cargo xtask lint`).
+//!
+//! Clippy sees types and syntax; these rules encode *project* contracts
+//! that live in comments and module boundaries, so they are enforced at
+//! the source level with a small lexer that strips comments, string
+//! literals, and char literals before matching (a `"unsafe"` inside a
+//! string or doc comment never trips a rule).
+//!
+//! Rules (scanned over `rust/src`; `#[cfg(test)]` regions are exempt
+//! from R2–R4 — test code may use raw primitives and synthetic ids —
+//! but **not** from R1, unsafety must be justified everywhere):
+//!
+//! * **R1 `safety-comment`** — every `unsafe` token (block, fn, impl)
+//!   carries a `// SAFETY:` comment or a `# Safety` doc section within
+//!   the preceding [`SAFETY_WINDOW`] lines, stating the precondition it
+//!   relies on.
+//! * **R2 `ordering-comment`** — every `Ordering::Relaxed` outside
+//!   tests carries an `// ORDERING:` justification within the preceding
+//!   12 lines (either "the CAS word carries its whole payload" or "the
+//!   data crosses the pool's mutex/condvar handshake" — see
+//!   `runtime/sync`'s module docs).
+//! * **R3 `facade-bypass`** — no direct `std::sync::Mutex`/`Condvar`/
+//!   `RwLock` or `std::thread::{spawn, Builder, scope}` outside
+//!   `runtime/` (which includes the `runtime/sync` facade) and
+//!   `util/par.rs` (the scoped-thread substrate). Everything else goes
+//!   through `crate::runtime::sync` so the loom build models it.
+//! * **R4 `orig-id-hash`** — the PR 3 invariant: edge sampling hashes
+//!   key off *original* vertex ids, never permuted ones. Every
+//!   `edge_hash(...)` call site must reference `orig` in its argument
+//!   window, and the body of `rebuild_sampling_tables` must call
+//!   `orig(...)`.
+
+use std::fmt;
+use std::path::Path;
+
+// ---------------------------------------------------------------------------
+// Lexer: split each source line into code text and comment text
+// ---------------------------------------------------------------------------
+
+/// One source line after lexing: `code` with comments/strings/chars
+/// blanked out, `comment` holding only comment text (line, block, doc).
+struct Line {
+    code: String,
+    comment: String,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Code,
+    /// `// ...` until end of line.
+    LineComment,
+    /// `/* ... */`, nesting depth.
+    BlockComment(u32),
+    /// `"..."` with backslash escapes.
+    Str,
+    /// `r"..."` / `r##"..."##`, closing needs this many `#`s.
+    RawStr(u32),
+    /// `'x'` / `'\n'` with backslash escapes.
+    CharLit,
+}
+
+/// Lex `text` into per-line code/comment split. Handles nested block
+/// comments, raw strings, byte strings, and the char-literal/lifetime
+/// ambiguity (`'a'` is a literal, `<'a>` is not).
+fn classify(text: &str) -> Vec<Line> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let ch = chars[i];
+        if ch == '\n' {
+            if mode == Mode::LineComment {
+                mode = Mode::Code;
+            }
+            lines.push(Line { code: std::mem::take(&mut code), comment: std::mem::take(&mut comment) });
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let next = chars.get(i + 1).copied();
+                if ch == '/' && next == Some('/') {
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if ch == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                } else if ch == '"' {
+                    mode = Mode::Str;
+                    code.push(' ');
+                    i += 1;
+                } else if (ch == 'r' || ch == 'b')
+                    && !code.chars().last().is_some_and(is_ident_char)
+                {
+                    // Possible raw/byte-string prefix: b" r" br" r#" br#" ...
+                    let mut j = i;
+                    if chars.get(j) == Some(&'b') {
+                        j += 1;
+                    }
+                    let raw = chars.get(j) == Some(&'r');
+                    if raw {
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if raw && chars.get(j) == Some(&'"') {
+                        mode = Mode::RawStr(hashes);
+                        code.push(' ');
+                        i = j + 1;
+                    } else if ch == 'b' && chars.get(i + 1) == Some(&'"') {
+                        mode = Mode::Str;
+                        code.push(' ');
+                        i += 2;
+                    } else {
+                        code.push(ch);
+                        i += 1;
+                    }
+                } else if ch == '\'' {
+                    if next == Some('\\') {
+                        mode = Mode::CharLit;
+                        code.push(' ');
+                        // Consume the quote, the backslash, AND the escaped
+                        // character, so `'\\'` / `'\''` cannot re-trigger
+                        // escape handling on the escaped character itself.
+                        i += 3;
+                    } else if next.is_some() && chars.get(i + 2) == Some(&'\'') {
+                        // 'x' — a one-char literal.
+                        code.push(' ');
+                        i += 3;
+                    } else {
+                        // A lifetime; keep scanning as code.
+                        code.push(ch);
+                        i += 1;
+                    }
+                } else {
+                    code.push(ch);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                comment.push(ch);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if ch == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else if ch == '*' && next == Some('/') {
+                    mode = if depth == 1 { Mode::Code } else { Mode::BlockComment(depth - 1) };
+                    i += 2;
+                } else {
+                    comment.push(ch);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if ch == '\\' {
+                    // Skip the escaped character — except a line
+                    // continuation's newline, which must still flush the
+                    // physical line above (line numbers stay 1:1 with the
+                    // file).
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if ch == '"' {
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if ch == '"' && (0..hashes).all(|k| chars.get(i + 1 + k as usize) == Some(&'#')) {
+                    mode = Mode::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::CharLit => {
+                // The opening quote, backslash, and escaped character are
+                // already consumed; scan for the closing quote (loose
+                // enough for multi-char escapes like `'\u{7fff}'`).
+                if ch == '\'' {
+                    mode = Mode::Code;
+                }
+                i += 1;
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(Line { code, comment });
+    }
+    lines
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// True when `word` occurs in `code` with non-identifier characters (or
+/// line boundaries) on both sides. Byte-wise so non-ASCII in `code`
+/// cannot cause slicing trouble.
+fn has_word(code: &str, word: &str) -> bool {
+    word_position(code, word).is_some()
+}
+
+fn word_position(code: &str, word: &str) -> Option<usize> {
+    let c = code.as_bytes();
+    let w = word.as_bytes();
+    if w.is_empty() || c.len() < w.len() {
+        return None;
+    }
+    for i in 0..=c.len() - w.len() {
+        if &c[i..i + w.len()] == w {
+            let before_ok = i == 0 || !is_ident_byte(c[i - 1]);
+            let after = i + w.len();
+            let after_ok = after >= c.len() || !is_ident_byte(c[after]);
+            if before_ok && after_ok {
+                return Some(i);
+            }
+        }
+    }
+    None
+}
+
+/// True when `word` occurs as an identifier immediately followed by
+/// `follow` (e.g. a call: `edge_hash(`).
+fn has_word_followed_by(code: &str, word: &str, follow: u8) -> bool {
+    let c = code.as_bytes();
+    let w = word.as_bytes();
+    if w.is_empty() || c.len() < w.len() + 1 {
+        return false;
+    }
+    for i in 0..=c.len() - w.len() - 1 {
+        if &c[i..i + w.len()] == w
+            && (i == 0 || !is_ident_byte(c[i - 1]))
+            && c[i + w.len()] == follow
+        {
+            return true;
+        }
+    }
+    false
+}
+
+/// Mark the lines belonging to `#[cfg(test)]`-gated items: from the
+/// attribute line through the matching close brace of the item's body
+/// (found by brace counting over code text — string/char contents were
+/// already blanked by the lexer).
+fn test_mask(lines: &[Line]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0usize;
+    while i < lines.len() {
+        if !lines[i].code.contains("cfg(test") {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut j = i;
+        while j < lines.len() {
+            for ch in lines[j].code.chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        let end = j.min(lines.len().saturating_sub(1));
+        for flag in &mut mask[start..=end] {
+            *flag = true;
+        }
+        i = end + 1;
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+/// How far above an `unsafe` token a SAFETY justification may sit
+/// (multi-bullet `# Safety` doc sections plus attributes need room).
+const SAFETY_WINDOW: usize = 12;
+/// How far above a `Relaxed` ordering an ORDERING justification may sit
+/// (a little wider: CAS calls often span several wrapped lines).
+const ORDERING_WINDOW: usize = 12;
+/// How far below an `edge_hash(` call its arguments may wrap.
+const HASH_ARG_WINDOW: usize = 2;
+/// How far into `rebuild_sampling_tables` the `orig(...)` call must appear.
+const REBUILD_BODY_WINDOW: usize = 25;
+
+/// Raw primitives that must come from the `runtime::sync` facade instead.
+const FACADE_BYPASS_TOKENS: [&str; 6] = [
+    "std::sync::Mutex",
+    "std::sync::Condvar",
+    "std::sync::RwLock",
+    "std::thread::spawn",
+    "std::thread::Builder",
+    "std::thread::scope",
+];
+
+/// Paths (relative to `rust/src`, `/`-separated) allowed to touch raw
+/// sync primitives: the runtime layer (including the facade itself) and
+/// the scoped-thread substrate.
+fn facade_bypass_allowed(relpath: &str) -> bool {
+    relpath.starts_with("runtime/") || relpath == "util/par.rs"
+}
+
+#[derive(Debug)]
+pub struct Violation {
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Lint one source file (`relpath` relative to the scan root, with `/`
+/// separators). Pure so the fixture self-tests below can drive it.
+pub fn check_source(relpath: &str, text: &str) -> Vec<Violation> {
+    let lines = classify(text);
+    let mask = test_mask(&lines);
+    let mut out = Vec::new();
+    let violation = |i: usize, rule: &'static str, msg: String| Violation {
+        file: relpath.to_string(),
+        line: i + 1,
+        rule,
+        msg,
+    };
+
+    let comment_in_window = |i: usize, window: usize, needles: &[&str]| {
+        lines[i.saturating_sub(window)..=i]
+            .iter()
+            .any(|l| needles.iter().any(|n| l.comment.contains(n)))
+    };
+
+    for i in 0..lines.len() {
+        let code = lines[i].code.as_str();
+
+        // R1: unsafe needs a SAFETY justification — tests included.
+        if has_word(code, "unsafe")
+            && !comment_in_window(i, SAFETY_WINDOW, &["SAFETY:", "# Safety"])
+        {
+            out.push(violation(
+                i,
+                "safety-comment",
+                "`unsafe` without a `// SAFETY:` comment or `# Safety` doc section in the \
+                 preceding lines"
+                    .to_string(),
+            ));
+        }
+
+        if mask[i] {
+            continue; // R2–R4 do not apply to #[cfg(test)] regions
+        }
+
+        // R2: Relaxed needs an ORDERING justification.
+        if has_word(code, "Relaxed") && !comment_in_window(i, ORDERING_WINDOW, &["ORDERING:"]) {
+            out.push(violation(
+                i,
+                "ordering-comment",
+                "`Ordering::Relaxed` without an `// ORDERING:` justification in the \
+                 preceding lines"
+                    .to_string(),
+            ));
+        }
+
+        // R3: raw sync primitives outside the runtime layer.
+        if !facade_bypass_allowed(relpath) {
+            for token in FACADE_BYPASS_TOKENS {
+                if code.contains(token) {
+                    out.push(violation(
+                        i,
+                        "facade-bypass",
+                        format!("direct `{token}` — use `crate::runtime::sync` so the loom \
+                                 build can model it"),
+                    ));
+                }
+            }
+        }
+
+        // R4: hashes must key off original ids, not permuted ones.
+        if has_word_followed_by(code, "edge_hash", b'(') && !code.contains("fn edge_hash") {
+            let hi = (i + HASH_ARG_WINDOW).min(lines.len() - 1);
+            let references_orig = lines[i..=hi].iter().any(|l| has_word(&l.code, "orig"));
+            if !references_orig {
+                out.push(violation(
+                    i,
+                    "orig-id-hash",
+                    "`edge_hash(...)` call without `orig` in its argument window — edge \
+                     sampling must hash original vertex ids (PR 3 invariant)"
+                        .to_string(),
+                ));
+            }
+        }
+        if code.contains("fn rebuild_sampling_tables") {
+            let hi = (i + REBUILD_BODY_WINDOW).min(lines.len() - 1);
+            let calls_orig = lines[i..=hi].iter().any(|l| has_word_followed_by(&l.code, "orig", b'('));
+            if !calls_orig {
+                out.push(violation(
+                    i,
+                    "orig-id-hash",
+                    "`rebuild_sampling_tables` body does not call `orig(...)` — sampling \
+                     tables must be keyed off original vertex ids (PR 3 invariant)"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Lint every `.rs` file under `root`, in sorted order.
+pub fn check_tree(root: &Path) -> Result<Vec<Violation>, String> {
+    let mut files = Vec::new();
+    collect_rs_files(root, root, &mut files)?;
+    if files.is_empty() {
+        return Err(format!("no .rs files under {}", root.display()));
+    }
+    files.sort();
+    let mut out = Vec::new();
+    for rel in files {
+        let text = std::fs::read_to_string(root.join(&rel))
+            .map_err(|e| format!("read {rel}: {e}"))?;
+        out.extend(check_source(&rel, &text));
+    }
+    Ok(out)
+}
+
+fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<(), String> {
+    let entries = std::fs::read_dir(dir).map_err(|e| format!("read {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .map_err(|e| e.to_string())?
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fixture self-tests: each rule must fire on a violating fixture and
+// stay quiet on the corrected one (the ISSUE 6 acceptance demo).
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(relpath: &str, text: &str) -> Vec<&'static str> {
+        check_source(relpath, text).into_iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn safety_rule_fires_without_comment_and_passes_with_it() {
+        let bad = "fn f(p: *mut u8) {\n    unsafe { *p = 1 };\n}\n";
+        assert_eq!(rules("algo/x.rs", bad), vec!["safety-comment"]);
+
+        let good = "fn f(p: *mut u8) {\n    // SAFETY: p is valid and exclusively owned here.\n    unsafe { *p = 1 };\n}\n";
+        assert!(rules("algo/x.rs", good).is_empty());
+
+        let doc = "/// # Safety\n/// Caller guarantees p is valid.\npub unsafe fn f(p: *mut u8) {}\n";
+        assert!(rules("algo/x.rs", doc).is_empty());
+    }
+
+    #[test]
+    fn safety_rule_applies_inside_test_modules_too() {
+        let bad = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let mut x = 0u8;\n        unsafe { *(&mut x as *mut u8) = 1 };\n    }\n}\n";
+        assert_eq!(rules("algo/x.rs", bad), vec!["safety-comment"]);
+    }
+
+    #[test]
+    fn ordering_rule_fires_without_comment_and_passes_with_it() {
+        let bad = "fn f(a: &AtomicUsize) -> usize {\n    a.load(Ordering::Relaxed)\n}\n";
+        assert_eq!(rules("algo/x.rs", bad), vec!["ordering-comment"]);
+
+        let good = "fn f(a: &AtomicUsize) -> usize {\n    // ORDERING: counter is only read after the pool handshake joins.\n    a.load(Ordering::Relaxed)\n}\n";
+        assert!(rules("algo/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn ordering_rule_exempts_test_regions() {
+        let text = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        X.fetch_add(1, Ordering::Relaxed);\n    }\n}\n";
+        assert!(rules("algo/x.rs", text).is_empty());
+    }
+
+    #[test]
+    fn facade_bypass_fires_outside_runtime_and_passes_inside() {
+        let text = "use std::sync::Mutex;\n";
+        assert_eq!(rules("algo/x.rs", text), vec!["facade-bypass"]);
+        assert!(rules("runtime/pool/mod.rs", text).is_empty());
+        assert!(rules("runtime/sync/model.rs", text).is_empty());
+
+        let scoped = "fn f() { std::thread::scope(|s| {}); }\n";
+        assert_eq!(rules("labelprop/mod.rs", scoped), vec!["facade-bypass"]);
+        assert!(rules("util/par.rs", scoped).is_empty());
+    }
+
+    #[test]
+    fn orig_id_rule_fires_on_permuted_hash_and_passes_on_orig() {
+        let bad = "fn w(g: &Graph, u: u32, v: u32) -> u32 {\n    edge_hash(u, v)\n}\n";
+        assert_eq!(rules("graph/weights.rs", bad), vec!["orig-id-hash"]);
+
+        let good = "fn w(g: &Graph, u: u32, v: u32) -> u32 {\n    edge_hash(g.orig(u), g.orig(v))\n}\n";
+        assert!(rules("graph/weights.rs", good).is_empty());
+
+        // Multi-line argument windows count.
+        let wrapped = "fn w(g: &Graph, u: u32, v: u32) -> u32 {\n    edge_hash(\n        g.orig(u),\n        g.orig(v),\n    )\n}\n";
+        assert!(rules("graph/weights.rs", wrapped).is_empty());
+    }
+
+    #[test]
+    fn orig_id_rule_checks_rebuild_sampling_tables_body() {
+        let bad = "impl Graph {\n    pub fn rebuild_sampling_tables(&mut self) {\n        for i in 0..self.adj.len() {\n            self.edge_hash.push(hash(i as u32));\n        }\n    }\n}\n";
+        assert_eq!(rules("graph/mod.rs", bad), vec!["orig-id-hash"]);
+
+        let good = "impl Graph {\n    pub fn rebuild_sampling_tables(&mut self) {\n        for i in 0..self.adj.len() {\n            self.edge_hash.push(edge_hash(self.orig(v), self.orig(self.adj[i])));\n        }\n    }\n}\n";
+        assert!(rules("graph/mod.rs", good).is_empty());
+    }
+
+    #[test]
+    fn field_access_is_not_a_hash_call() {
+        // `graph.edge_hash[e]` is table indexing, not a keyed hash call.
+        let text = "fn f(graph: &Graph, e: usize) -> u32 {\n    graph.edge_hash[e]\n}\n";
+        assert!(rules("algo/fused.rs", text).is_empty());
+    }
+
+    #[test]
+    fn lexer_ignores_strings_comments_and_char_literals() {
+        // "unsafe"/"Relaxed" in strings and comments must not trip rules.
+        let text = concat!(
+            "fn f() {\n",
+            "    let s = \"unsafe { Ordering::Relaxed }\";\n",
+            "    let r = r#\"unsafe edge_hash(u, v)\"#;\n",
+            "    let c = '\\'';\n",
+            "    let lt: &'static str = s; // mentions unsafe and Relaxed\n",
+            "    /* block comment: std::sync::Mutex, unsafe, Relaxed */\n",
+            "}\n"
+        );
+        assert!(rules("algo/x.rs", text).is_empty());
+    }
+
+    #[test]
+    fn lexer_survives_escaped_char_literals() {
+        // `'\\'` must close at its real quote: the escaped character must
+        // not re-trigger escape handling and swallow the closing quote
+        // (and with it the code that follows — a rule-hiding lexer bug).
+        let text = concat!(
+            "fn f(ch: char, a: &A) -> bool {\n",
+            "    let back = ch == '\\\\';\n",
+            "    let quote = ch == '\\'';\n",
+            "    let nl = ch == '\\n';\n",
+            "    a.load(Ordering::Relaxed);\n",
+            "    back || quote || nl\n",
+            "}\n"
+        );
+        // The Relaxed on the line after the literals must still be seen.
+        assert_eq!(rules("algo/x.rs", text), vec!["ordering-comment"]);
+    }
+
+    #[test]
+    fn string_line_continuations_keep_line_numbers_aligned() {
+        // A trailing-backslash string continuation spans two physical
+        // lines; the lexer must still emit both lines so every report and
+        // comment-window distance stays 1:1 with the file.
+        let text = concat!(
+            "fn f(a: &A) {\n",
+            "    let s = \"first half \\\n",
+            "             second half\";\n",
+            "    a.load(Ordering::Relaxed);\n",
+            "}\n"
+        );
+        let violations = check_source("algo/x.rs", text);
+        assert_eq!(violations.len(), 1);
+        assert_eq!(violations[0].line, 4, "line numbers must track the file");
+    }
+
+    #[test]
+    fn lexer_still_sees_code_after_a_string_on_the_same_line() {
+        let text = "fn f() { let s = \"x\"; unsafe { danger() } }\n";
+        assert_eq!(rules("algo/x.rs", text), vec!["safety-comment"]);
+    }
+
+    #[test]
+    fn nested_block_comments_terminate_correctly() {
+        let text = "/* outer /* inner */ still comment */ fn f(a: &A) { a.load(Ordering::Relaxed); }\n";
+        assert_eq!(rules("algo/x.rs", text), vec!["ordering-comment"]);
+    }
+
+    #[test]
+    fn safety_window_is_bounded() {
+        // A SAFETY comment 11+ lines above must NOT satisfy the rule —
+        // stale justifications drifting away from their code are bugs.
+        let mut text = String::from("// SAFETY: too far away.\n");
+        for _ in 0..SAFETY_WINDOW {
+            text.push_str("fn pad() {}\n");
+        }
+        text.push_str("fn f(p: *mut u8) { unsafe { *p = 1 }; }\n");
+        assert_eq!(rules("algo/x.rs", &text), vec!["safety-comment"]);
+    }
+}

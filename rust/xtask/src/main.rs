@@ -1,0 +1,55 @@
+//! Repo tooling, invoked as `cargo xtask <command>` (alias in
+//! `rust/.cargo/config.toml`).
+//!
+//! The one command is `lint`: a source-level pass over `rust/src`
+//! enforcing repo-specific invariants that clippy cannot express (see
+//! [`lint`] for the rule list). It is a hard CI gate — `cargo xtask
+//! lint` must exit 0 on every PR.
+
+mod lint;
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> ExitCode {
+    eprintln!("usage: cargo xtask lint [--root <src-dir>]");
+    eprintln!();
+    eprintln!("commands:");
+    eprintln!("  lint    check SAFETY/ORDERING comment coverage, sync-facade");
+    eprintln!("          bypasses, and orig-id hashing invariants over rust/src");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("lint") => {
+            let root = match (args.next().as_deref(), args.next()) {
+                (Some("--root"), Some(dir)) => PathBuf::from(dir),
+                (None, _) => {
+                    // xtask lives at rust/xtask; the lint surface is rust/src.
+                    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../src")
+                }
+                _ => return usage(),
+            };
+            match lint::check_tree(&root) {
+                Ok(violations) if violations.is_empty() => {
+                    println!("xtask lint: clean");
+                    ExitCode::SUCCESS
+                }
+                Ok(violations) => {
+                    for v in &violations {
+                        eprintln!("{v}");
+                    }
+                    eprintln!("xtask lint: {} violation(s)", violations.len());
+                    ExitCode::FAILURE
+                }
+                Err(err) => {
+                    eprintln!("xtask lint: {err}");
+                    ExitCode::from(2)
+                }
+            }
+        }
+        _ => usage(),
+    }
+}
