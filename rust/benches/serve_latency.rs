@@ -1,0 +1,187 @@
+//! Serving benchmark (§ north-star: "millions of users"): N concurrent
+//! clients drive one `infuser serve` endpoint over localhost TCP and
+//! measure what a tenant actually observes — per-request wall latency
+//! (lock waits, protocol framing, and the warm-query work included) and
+//! sustained queries/sec across the whole client fleet.
+//!
+//! The mix is the serving steady state: warm K-queries at a couple of
+//! ladder heights, with a periodic seed-override request (a full warm
+//! rebuild) in the tail. Responses are spot-checked against a direct
+//! cold [`ImSession`] run while timing, so the bench cannot silently
+//! drift from the bit-identity contract `serve_e2e.rs` enforces.
+//!
+//! Emits `bench_results/BENCH_serve.json` with `p50_secs` / `p99_secs`
+//! / `sustained_qps` (asserted by the CI serve-smoke step).
+//! `INFUSER_BENCH_SMOKE=1` shrinks the geometry to CI scale.
+
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use infuser::api::{ImSession, Query, RunOptions};
+use infuser::bench::BenchEnv;
+use infuser::config::AlgoSpec;
+use infuser::coordinator::Table;
+use infuser::gen::{self, GenSpec};
+use infuser::graph::WeightModel;
+use infuser::serve::client::{expect_ok, Client};
+use infuser::serve::{ServeOptions, Server};
+use infuser::util::json::{obj, Json};
+
+const WEIGHTS: WeightModel = WeightModel::Const(0.05);
+
+/// Nearest-rank quantile over an already-sorted latency slice.
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).ceil() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn main() -> infuser::Result<()> {
+    let env = BenchEnv::load()?;
+    env.banner(
+        "Serve latency — concurrent clients on a warm multi-tenant endpoint",
+        "front-loaded INFUSER state makes queries cheap; serving amortizes it across users",
+    );
+
+    // Geometry: ≥ 4 concurrent clients in every mode (the acceptance
+    // floor); smoke keeps the graph and request counts CI-tiny.
+    let (n, r, clients, per_client) =
+        if env.smoke { (400usize, 16usize, 4usize, 6usize) } else { (8000, 64, 8, 24) };
+    let k = if env.smoke { 4usize } else { env.k.max(4) };
+    let k_low = (k / 2).max(1);
+    let spec = GenSpec::barabasi_albert(n, 2, 7);
+    let opts = RunOptions::new().r_count(r).seed(7).threads(env.threads);
+
+    // Expected answers for the warm mix, computed cold — the bench
+    // asserts correctness while it times.
+    let weighted = gen::generate(&spec).with_weights(WEIGHTS, opts.seed ^ 0x5E77);
+    let mut cold = ImSession::prepare(weighted, opts)?;
+    let expect_k = cold.query(&Query::new(AlgoSpec::InfuserMg, k))?.seeds;
+    let expect_k_low = cold.query(&Query::new(AlgoSpec::InfuserMg, k_low))?.seeds;
+    drop(cold);
+
+    let server = Server::bind(ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        ..Default::default()
+    })?;
+    server.pool().open_graph("bench", "ba-bench", gen::generate(&spec), WEIGHTS, opts)?;
+    let handle = server.spawn()?;
+    let addr = handle.addr();
+
+    // One warm-up request so the measured window starts from the warm
+    // steady state the serving story is about.
+    {
+        let mut c = Client::connect(addr)?;
+        let resp = expect_ok(c.request(&query_body("bench", k, None))?)?;
+        assert_seeds(&resp, &expect_k, "warm-up");
+    }
+
+    let barrier = Arc::new(Barrier::new(clients + 1));
+    let mut threads = Vec::new();
+    for tid in 0..clients {
+        let barrier = Arc::clone(&barrier);
+        let expect_k = expect_k.clone();
+        let expect_k_low = expect_k_low.clone();
+        threads.push(std::thread::spawn(move || -> infuser::Result<Vec<f64>> {
+            let mut client = Client::connect(addr)?;
+            let mut latencies = Vec::with_capacity(per_client);
+            barrier.wait();
+            for j in 0..per_client {
+                let (body, expected): (Json, Option<&[u32]>) = if j % 8 == 7 {
+                    // A seed override: full warm rebuild in the tail.
+                    let seed = 10_000 + (tid * 100 + j) as u64;
+                    (query_body("bench", k, Some(seed)), None)
+                } else if j % 3 == 2 {
+                    (query_body("bench", k_low, None), Some(&expect_k_low))
+                } else {
+                    (query_body("bench", k, None), Some(&expect_k))
+                };
+                let t0 = Instant::now();
+                let resp = expect_ok(client.request(&body)?)?;
+                latencies.push(t0.elapsed().as_secs_f64());
+                if let Some(seeds) = expected {
+                    assert_seeds(&resp, seeds, &format!("client {tid} request {j}"));
+                } else {
+                    anyhow::ensure!(
+                        resp.get("outcome").and_then(|v| v.as_str()) == Some("ok"),
+                        "client {tid} request {j}: rebuild request failed"
+                    );
+                }
+            }
+            Ok(latencies)
+        }));
+    }
+    barrier.wait();
+    let wall_start = Instant::now();
+    let mut all: Vec<f64> = Vec::with_capacity(clients * per_client);
+    for t in threads {
+        all.extend(t.join().expect("client thread panicked")?);
+    }
+    let wall = wall_start.elapsed().as_secs_f64();
+    handle.shutdown()?;
+
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total = all.len();
+    let p50 = quantile(&all, 0.50);
+    let p99 = quantile(&all, 0.99);
+    let qps = total as f64 / wall.max(1e-9);
+
+    let mut t = Table::new("Serve latency — concurrent clients, warm session");
+    t.header(vec![
+        "clients".into(),
+        "requests".into(),
+        "p50 ms".into(),
+        "p99 ms".into(),
+        "sustained q/s".into(),
+    ]);
+    t.row(vec![
+        clients.to_string(),
+        total.to_string(),
+        format!("{:.3}", p50 * 1e3),
+        format!("{:.3}", p99 * 1e3),
+        format!("{qps:.1}"),
+    ]);
+    env.emit("serve", &[&t]);
+    env.emit_json(
+        "serve",
+        &obj(vec![
+            ("p50_secs", Json::Num(p50)),
+            ("p99_secs", Json::Num(p99)),
+            ("sustained_qps", Json::Num(qps)),
+            ("clients", Json::Num(clients as f64)),
+            ("requests_total", Json::Num(total as f64)),
+            ("wall_secs", Json::Num(wall)),
+            ("n", Json::Num(n as f64)),
+            ("r", Json::Num(r as f64)),
+            ("k", Json::Num(k as f64)),
+            ("smoke", Json::Bool(env.smoke)),
+        ]),
+    );
+    Ok(())
+}
+
+fn query_body(session: &str, k: usize, seed: Option<u64>) -> Json {
+    let mut pairs = vec![
+        ("op", Json::Str("query".to_string())),
+        ("session", Json::Str(session.to_string())),
+        ("algo", Json::Str("infuser".to_string())),
+        ("k", Json::Num(k as f64)),
+    ];
+    if let Some(s) = seed {
+        pairs.push(("seed", Json::Num(s as f64)));
+    }
+    obj(pairs)
+}
+
+fn assert_seeds(resp: &Json, expected: &[u32], what: &str) {
+    let seeds: Vec<u32> = resp
+        .get("seeds")
+        .and_then(|v| v.as_arr())
+        .unwrap_or_else(|| panic!("{what}: no seeds in {}", resp.to_string()))
+        .iter()
+        .map(|v| v.as_f64().unwrap() as u32)
+        .collect();
+    assert_eq!(seeds, expected, "{what}: served seeds diverged from the cold run");
+}

@@ -92,7 +92,7 @@ pub trait MemoBackend {
 
 /// Construct the memo backend selected by `kind` from a propagation
 /// fixpoint.
-pub fn make_memo(kind: MemoKind, labels: Labels) -> Box<dyn MemoBackend> {
+pub fn make_memo(kind: MemoKind, labels: Labels) -> Box<dyn MemoBackend + Send> {
     match kind {
         MemoKind::Dense => Box::new(DenseMemo::new(labels)),
         MemoKind::Sketch => Box::new(SketchMemo::new(labels)),

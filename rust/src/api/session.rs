@@ -137,7 +137,7 @@ struct TrajPoint {
 /// memo, the resumable CELF queue, and the trajectory served so far.
 struct InfuserWarm {
     seed: u64,
-    memo: Box<dyn MemoBackend>,
+    memo: Box<dyn MemoBackend + Send>,
     celf: CelfState,
     trajectory: Vec<TrajPoint>,
     sigma: f64,
@@ -337,6 +337,13 @@ impl Prepared<'_> {
     /// tests).
     pub fn warm_pipelines(&self) -> usize {
         self.warm.borrow().infuser.len()
+    }
+
+    /// Total bytes retained by the cached warm pipelines (memo backends +
+    /// gain vectors), as tracked by the cold-run accounting. This is what
+    /// a serving layer charges a session for on top of its graph.
+    pub fn warm_bytes(&self) -> u64 {
+        self.warm.borrow().infuser.iter().map(|(_, w)| w.tracked_bytes).sum()
     }
 }
 

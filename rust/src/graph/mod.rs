@@ -69,6 +69,19 @@ impl Graph {
         (self.xadj[v as usize + 1] - self.xadj[v as usize]) as usize
     }
 
+    /// Heap bytes held by the CSR arrays (xadj, adjacency, weights,
+    /// edge hashes, thresholds, orig-id map). Used by the serving
+    /// layer's memory-budget accounting; excludes allocator slack.
+    pub fn heap_bytes(&self) -> u64 {
+        let xadj = self.xadj.len() * std::mem::size_of::<u64>();
+        let adj = self.adj.len() * std::mem::size_of::<u32>();
+        let weights = self.weights.len() * std::mem::size_of::<f32>();
+        let edge_hash = self.edge_hash.len() * std::mem::size_of::<u32>();
+        let threshold = self.threshold.len() * std::mem::size_of::<i32>();
+        let orig_id = self.orig_id.len() * std::mem::size_of::<u32>();
+        (xadj + adj + weights + edge_hash + threshold + orig_id) as u64
+    }
+
     /// Original (pre-reordering) id of vertex `v` — `v` itself for graphs
     /// in their input layout.
     #[inline]

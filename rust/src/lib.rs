@@ -55,6 +55,7 @@ pub mod labelprop;
 pub mod rng;
 pub mod runtime;
 pub mod sampling;
+pub mod serve;
 pub mod simd;
 pub mod sketch;
 pub mod util;

@@ -7,6 +7,8 @@
 //! * `run` — run one algorithm on one dataset, print seeds + oracle score.
 //! * `query` — serve a JSON batch of queries from one prepared
 //!   [`ImSession`] (warm-state reuse across the batch).
+//! * `serve` — long-lived multi-tenant session server (JSON lines over
+//!   TCP, [`infuser::serve`]).
 //! * `experiment` — execute a JSON experiment config (dataset × setting ×
 //!   algorithm grid) and render the paper-shaped tables.
 //! * `cdf` — the Fig. 2 analysis: hash-sampling probability CDF + KS.
@@ -42,6 +44,7 @@ fn main() {
         "gen" => cmd_gen(&args),
         "run" => cmd_run(&args),
         "query" => cmd_query(&args),
+        "serve" => cmd_serve(&args),
         "experiment" => cmd_experiment(&args),
         "cdf" => cmd_cdf(&args),
         "artifacts" => cmd_artifacts(&args),
@@ -91,6 +94,10 @@ COMMANDS
                                        prepared session (warm-state reuse: a
                                        K-ladder extends the memoized seed set)
              [--weights W] [--oracle-r N] + the shared `run` knobs
+  serve      [--addr HOST:PORT]        multi-tenant session server (JSON lines
+             [--memory-budget MB]      over TCP; see README \"Serving\")
+             [--max-sessions N]
+             [--config FILE.json]      endpoint knobs + session preloads
   experiment --config FILE.json        run a full grid, render tables
              [--markdown]
   cdf        --dataset ID [--r N]      Fig. 2 sampling-probability CDF
@@ -293,6 +300,53 @@ fn cmd_query(args: &Args) -> infuser::Result<()> {
         }
     }
     Ok(())
+}
+
+fn cmd_serve(args: &Args) -> infuser::Result<()> {
+    use infuser::serve::{config::ServeConfig, ServeOptions, Server};
+
+    let mut opts = ServeOptions::default();
+    if let Some(path) = args.opt("config") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading --config {path}: {e}"))?;
+        ServeConfig::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing --config {path}: {e:#}"))?
+            .apply(&mut opts);
+    }
+    // CLI flags win over the config file.
+    if let Some(addr) = args.opt("addr") {
+        opts.addr = addr.to_string();
+    }
+    if let Some(mb) = args.opt("memory-budget") {
+        let mb: f64 = mb.parse()?;
+        anyhow::ensure!(
+            mb.is_finite() && mb > 0.0,
+            "--memory-budget must be a positive number of MiB (got {mb})"
+        );
+        opts.pool.memory_budget = Some((mb * 1024.0 * 1024.0) as u64);
+    }
+    if let Some(n) = args.opt("max-sessions") {
+        let n: usize = n.parse()?;
+        anyhow::ensure!(n >= 1, "--max-sessions must be >= 1");
+        opts.pool.max_sessions = n;
+    }
+
+    let server = Server::bind(opts)?;
+    let stats = server.pool().stats();
+    println!("infuser serve: listening on {}", server.local_addr());
+    match stats.memory_budget {
+        Some(b) => println!("  memory budget: {:.1} MiB, max sessions: {}",
+            b as f64 / (1024.0 * 1024.0), stats.max_sessions),
+        None => println!("  memory budget: unlimited, max sessions: {}", stats.max_sessions),
+    }
+    for s in &stats.sessions {
+        println!(
+            "  session '{}': {} ({} weights)  n={} m={}  {:.1} MiB",
+            s.name, s.dataset, s.weights, s.n, s.m,
+            s.bytes as f64 / (1024.0 * 1024.0)
+        );
+    }
+    server.run()
 }
 
 fn cmd_experiment(args: &Args) -> infuser::Result<()> {

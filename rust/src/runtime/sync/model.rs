@@ -214,6 +214,11 @@ macro_rules! model_atomic {
                 self.0.fetch_add(v, StdOrdering::SeqCst)
             }
 
+            pub fn fetch_sub(&self, v: $t, _: StdOrdering) -> $t {
+                yield_point();
+                self.0.fetch_sub(v, StdOrdering::SeqCst)
+            }
+
             pub fn fetch_or(&self, v: $t, _: StdOrdering) -> $t {
                 yield_point();
                 self.0.fetch_or(v, StdOrdering::SeqCst)

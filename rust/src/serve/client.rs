@@ -1,0 +1,80 @@
+//! A small blocking client for the serve protocol — one request line
+//! out, one response line back. Used by the serve test battery and the
+//! `serve_latency` bench; thin enough to double as a reference
+//! implementation of the wire dialect.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::util::json::{obj, Json};
+
+/// A blocking serve-protocol client over one TCP connection. Requests
+/// on one client are strictly sequential (the protocol answers in
+/// order); concurrency comes from multiple clients.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    /// Connect to a serve endpoint. A 30s read safety-timeout guards
+    /// tests against a hung server.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> crate::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Self { stream, reader })
+    }
+
+    /// Send one raw request line (no trailing newline) and read the
+    /// response line. The line must not contain `\n`.
+    pub fn request_line(&mut self, line: &str) -> crate::Result<Json> {
+        anyhow::ensure!(!line.contains('\n'), "a request line cannot contain a newline");
+        let mut framed = String::with_capacity(line.len() + 1);
+        framed.push_str(line);
+        framed.push('\n');
+        self.stream.write_all(framed.as_bytes())?;
+        let mut response = String::new();
+        let k = self.reader.read_line(&mut response)?;
+        anyhow::ensure!(k > 0, "server closed the connection before responding");
+        Json::parse(response.trim_end())
+    }
+
+    /// Send one request object and read the response object.
+    pub fn request(&mut self, body: &Json) -> crate::Result<Json> {
+        self.request_line(&body.to_string())
+    }
+
+    /// `ping` round trip; errors if the server is unreachable or the
+    /// response is not `ok`.
+    pub fn ping(&mut self) -> crate::Result<()> {
+        expect_ok(self.request(&obj(vec![("op", Json::Str("ping".into()))]))?).map(|_| ())
+    }
+
+    /// Fetch the pool `stats` snapshot.
+    pub fn stats(&mut self) -> crate::Result<Json> {
+        expect_ok(self.request(&obj(vec![("op", Json::Str("stats".into()))]))?)
+    }
+
+    /// Ask the server to stop (it still answers this request).
+    pub fn shutdown(&mut self) -> crate::Result<()> {
+        expect_ok(self.request(&obj(vec![("op", Json::Str("shutdown".into()))]))?).map(|_| ())
+    }
+}
+
+/// Unwrap a response: `ok: true` passes the object through, `ok: false`
+/// surfaces the server's `error` string as an `Err`.
+pub fn expect_ok(response: Json) -> crate::Result<Json> {
+    match response.get("ok") {
+        Some(Json::Bool(true)) => Ok(response),
+        _ => {
+            let msg = response
+                .get("error")
+                .and_then(|v| v.as_str())
+                .unwrap_or("response missing 'ok': true");
+            anyhow::bail!("server error: {msg}")
+        }
+    }
+}

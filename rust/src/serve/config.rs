@@ -1,0 +1,137 @@
+//! The `infuser serve --config FILE` format: a JSON object with
+//! endpoint knobs plus a `preload` array of sessions to open before
+//! the listener accepts. Example:
+//!
+//! ```json
+//! {
+//!   "addr": "127.0.0.1:7071",
+//!   "memory_budget_mb": 512,
+//!   "max_sessions": 8,
+//!   "preload": [
+//!     {"session": "hep", "dataset": "ba@1", "weights": "const:0.02", "r": 128},
+//!     {"session": "dblp", "dataset": "file:graphs/dblp.csr", "r": 256}
+//!   ]
+//! }
+//! ```
+//!
+//! Command-line flags override the file's endpoint knobs; preloads are
+//! additive (file first, then any in-process opens).
+
+use crate::util::json::Json;
+
+use super::pool::SessionSpec;
+use super::ServeOptions;
+
+/// Parsed `--config` file contents; [`ServeConfig::apply`] folds them
+/// into [`ServeOptions`] defaults (CLI flags are applied after, so they
+/// win).
+#[derive(Default)]
+pub struct ServeConfig {
+    /// `addr` — bind address.
+    pub addr: Option<String>,
+    /// `memory_budget_mb` — pool byte budget, in MiB.
+    pub memory_budget_mb: Option<f64>,
+    /// `max_sessions` — resident-session cap.
+    pub max_sessions: Option<usize>,
+    /// `max_line_bytes` — request-line size cap.
+    pub max_line_bytes: Option<usize>,
+    /// `preload` — sessions opened at startup.
+    pub preload: Vec<SessionSpec>,
+}
+
+fn pos_int(json: &Json, key: &str) -> crate::Result<Option<usize>> {
+    match json.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let x = v
+                .as_f64()
+                .filter(|x| x.fract() == 0.0 && *x >= 1.0)
+                .ok_or_else(|| anyhow::anyhow!("'{key}' must be a positive integer"))?;
+            Ok(Some(x as usize))
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Parse a config file's text.
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let json = Json::parse(text)?;
+        let addr = json.get("addr").and_then(|v| v.as_str()).map(str::to_string);
+        let memory_budget_mb = match json.get("memory_budget_mb") {
+            None => None,
+            Some(v) => {
+                let mb = v
+                    .as_f64()
+                    .filter(|x| x.is_finite() && *x > 0.0)
+                    .ok_or_else(|| anyhow::anyhow!("'memory_budget_mb' must be a positive number"))?;
+                Some(mb)
+            }
+        };
+        let max_sessions = pos_int(&json, "max_sessions")?;
+        let max_line_bytes = pos_int(&json, "max_line_bytes")?;
+        let mut preload = Vec::new();
+        if let Some(entries) = json.get("preload") {
+            let arr = entries
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'preload' must be an array of session objects"))?;
+            for entry in arr {
+                preload.push(SessionSpec::from_json(entry)?);
+            }
+        }
+        Ok(Self { addr, memory_budget_mb, max_sessions, max_line_bytes, preload })
+    }
+
+    /// Fold the file's knobs into `opts` (file wins over defaults;
+    /// callers apply CLI flags afterwards so flags win over the file).
+    pub fn apply(self, opts: &mut ServeOptions) {
+        if let Some(addr) = self.addr {
+            opts.addr = addr;
+        }
+        if let Some(mb) = self.memory_budget_mb {
+            opts.pool.memory_budget = Some((mb * 1024.0 * 1024.0) as u64);
+        }
+        if let Some(n) = self.max_sessions {
+            opts.pool.max_sessions = n;
+        }
+        if let Some(n) = self.max_line_bytes {
+            opts.max_line_bytes = n;
+        }
+        opts.preload.extend(self.preload);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config_and_applies_over_defaults() {
+        let cfg = ServeConfig::parse(
+            r#"{"addr": "127.0.0.1:0", "memory_budget_mb": 64, "max_sessions": 3,
+                "preload": [{"session": "a", "dataset": "er@1", "r": 16}]}"#,
+        )
+        .unwrap();
+        let mut opts = ServeOptions::default();
+        cfg.apply(&mut opts);
+        assert_eq!(opts.addr, "127.0.0.1:0");
+        assert_eq!(opts.pool.memory_budget, Some(64 * 1024 * 1024));
+        assert_eq!(opts.pool.max_sessions, 3);
+        assert_eq!(opts.preload.len(), 1);
+        assert_eq!(opts.preload[0].name, "a");
+        assert_eq!(opts.preload[0].options.r_count, 16);
+    }
+
+    #[test]
+    fn rejects_bad_fields() {
+        for (text, needle) in [
+            (r#"{"max_sessions": 0}"#, "positive integer"),
+            (r#"{"memory_budget_mb": -1}"#, "positive number"),
+            (r#"{"preload": {"session": "a"}}"#, "array"),
+            (r#"{"preload": [{"session": "a", "dataset": "er@1", "r": 8, "r_count": 8}]}"#,
+             "conflicting"),
+        ] {
+            let err = ServeConfig::parse(text).unwrap_err().to_string();
+            assert!(err.contains(needle), "{text}: {err:?} missing {needle:?}");
+        }
+    }
+}

@@ -1,0 +1,497 @@
+//! `infuser serve` — a long-lived multi-tenant session server.
+//!
+//! The paper's INFUSER design front-loads the expensive work (fused
+//! sampling + propagation fixpoint) so queries are cheap; the serving
+//! layer makes that split pay off across *users*: a TCP JSON-lines
+//! endpoint keeps a [`SessionPool`] of named warm
+//! [`ImSession`](crate::api::ImSession)s — one per graph × weight
+//! scheme — and routes concurrent query batches onto their persistent
+//! worker pools. Per-request deadlines ride the existing
+//! [`Budget`](crate::algo::Budget) plumbing; cold tenants are evicted
+//! LRU under a global memory budget using the tracked-bytes accounting
+//! the memo backends already expose.
+//!
+//! Layers (one file each):
+//!
+//! * [`protocol`] — the line-delimited request/response dialect.
+//! * [`pool`] — session table, admission/eviction, byte accounting.
+//! * [`client`] — a small blocking client, used by the tests and the
+//!   `serve_latency` bench.
+//! * [`config`] — the `--config` preload file format.
+//! * this module — the TCP listener, per-connection threads, dispatch.
+//!
+//! Serving guarantees (enforced by `rust/tests/serve_*.rs`):
+//!
+//! * **Bit-identity** — a served response carries exactly the seeds,
+//!   σ̂ bits, and counters a cold [`ImSession`](crate::api::ImSession)
+//!   run of the same query would produce, under any interleaving of
+//!   concurrent tenants.
+//! * **Fault isolation** — malformed lines, unknown sessions, alias
+//!   conflicts, oversized requests, and mid-request disconnects answer
+//!   structured errors (or drop one connection) without killing the
+//!   server or poisoning the pool.
+//! * **Budget honesty** — a session is charged before its warm state
+//!   is allocated, trued up after every query, and an open that cannot
+//!   fit is rejected *before* allocation.
+//!
+//! All synchronization goes through the [`crate::runtime::sync`]
+//! facade (xtask-lint rule R3), so the serve layer compiles under the
+//! `--cfg loom` personality like the rest of the tree.
+
+pub mod client;
+pub mod config;
+pub mod pool;
+pub mod protocol;
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown as NetShutdown, SocketAddr, TcpListener, TcpStream};
+use std::panic::AssertUnwindSafe;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::runtime::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::runtime::sync::thread;
+use crate::util::json::{obj, Json};
+
+pub use pool::{PoolConfig, QueryOutcome, SessionPool, SessionSpec};
+pub use protocol::DEFAULT_MAX_LINE_BYTES;
+
+use pool::{OpenReport, PoolStats};
+use protocol::{error_response, parse_request, Request};
+
+/// How the serve endpoint is stood up.
+pub struct ServeOptions {
+    /// Bind address (`127.0.0.1:0` picks an ephemeral port).
+    pub addr: String,
+    /// Session-pool admission/eviction knobs.
+    pub pool: PoolConfig,
+    /// Per-line request size cap ([`DEFAULT_MAX_LINE_BYTES`]).
+    pub max_line_bytes: usize,
+    /// Sessions opened before the listener starts accepting.
+    pub preload: Vec<SessionSpec>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7071".to_string(),
+            pool: PoolConfig::default(),
+            max_line_bytes: DEFAULT_MAX_LINE_BYTES,
+            preload: Vec::new(),
+        }
+    }
+}
+
+/// State shared by the accept loop and every connection thread.
+struct Shared {
+    pool: SessionPool,
+    stop: AtomicBool,
+    conns_active: AtomicU64,
+    requests: AtomicU64,
+    max_line_bytes: usize,
+    addr: SocketAddr,
+}
+
+/// A bound (not yet serving) endpoint: the listener is live — so an
+/// ephemeral port is already resolvable via [`Server::local_addr`] —
+/// and preloads have run, but no connection is accepted until
+/// [`Server::run`] or [`Server::spawn`].
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+}
+
+/// A serving endpoint running on a background thread; dropping the
+/// handle leaks the server, [`ServerHandle::shutdown`] joins it.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    join: thread::JoinHandle<crate::Result<()>>,
+}
+
+impl Server {
+    /// Bind `opts.addr`, create the pool, and run the preloads. Errors
+    /// are bind failures or preload failures (bad dataset, admission
+    /// rejection) — a server that cannot hold its configured sessions
+    /// should fail its operator loudly at start, not its tenants later.
+    pub fn bind(opts: ServeOptions) -> crate::Result<Self> {
+        let listener = TcpListener::bind(&opts.addr)
+            .map_err(|e| anyhow::anyhow!("bind {}: {e}", opts.addr))?;
+        let addr = listener.local_addr()?;
+        let pool = SessionPool::new(opts.pool);
+        for spec in opts.preload {
+            let name = spec.name.clone();
+            pool.open(spec)
+                .map_err(|e| anyhow::anyhow!("preloading session '{name}': {e:#}"))?;
+        }
+        let shared = Arc::new(Shared {
+            pool,
+            stop: AtomicBool::new(false),
+            conns_active: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            max_line_bytes: opts.max_line_bytes,
+            addr,
+        });
+        Ok(Self { listener, shared })
+    }
+
+    /// The bound address (resolves `:0` to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// The session pool, for in-process preloads ([`SessionPool::open_graph`])
+    /// and observability before/while serving.
+    pub fn pool(&self) -> &SessionPool {
+        &self.shared.pool
+    }
+
+    /// Serve until a `shutdown` request (or [`ServerHandle::shutdown`])
+    /// stops the loop, then wait for in-flight connections to drain.
+    pub fn run(self) -> crate::Result<()> {
+        let Self { listener, shared } = self;
+        loop {
+            if shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match listener.accept() {
+                Ok((stream, _)) => stream,
+                Err(_) if shared.stop.load(Ordering::SeqCst) => break,
+                Err(e) if e.kind() == ErrorKind::ConnectionAborted => continue,
+                Err(e) => return Err(anyhow::anyhow!("accept: {e}")),
+            };
+            if shared.stop.load(Ordering::SeqCst) {
+                break; // the stream was the shutdown self-wake
+            }
+            let conn_shared = Arc::clone(&shared);
+            conn_shared.conns_active.fetch_add(1, Ordering::SeqCst);
+            let spawned = thread::Builder::new()
+                .name("infuser-serve-conn".to_string())
+                .spawn(move || {
+                    // Balance the conns_active increment even if the
+                    // connection body panics mid-request.
+                    struct Active(Arc<Shared>);
+                    impl Drop for Active {
+                        fn drop(&mut self) {
+                            self.0.conns_active.fetch_sub(1, Ordering::SeqCst);
+                        }
+                    }
+                    let active = Active(conn_shared);
+                    handle_connection(&active.0, stream);
+                });
+            if let Err(e) = spawned {
+                shared.conns_active.fetch_sub(1, Ordering::SeqCst);
+                eprintln!("infuser serve: spawn connection thread: {e}");
+            }
+        }
+        drop(listener);
+        // Drain: connection threads poll the stop flag at read-timeout
+        // granularity (~100ms), so this converges quickly.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while shared.conns_active.load(Ordering::SeqCst) > 0
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        Ok(())
+    }
+
+    /// [`Server::run`] on a background thread; returns once serving has
+    /// started. The in-process shape the tests and the bench use.
+    pub fn spawn(self) -> crate::Result<ServerHandle> {
+        let addr = self.local_addr();
+        let shared = Arc::clone(&self.shared);
+        let join = thread::Builder::new()
+            .name("infuser-serve-accept".to_string())
+            .spawn(move || self.run())
+            .map_err(|e| anyhow::anyhow!("spawn server thread: {e}"))?;
+        Ok(ServerHandle { addr, shared, join })
+    }
+}
+
+impl ServerHandle {
+    /// The serving address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain connections, join the server thread.
+    pub fn shutdown(self) -> crate::Result<()> {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        wake_accept(self.addr);
+        match self.join.join() {
+            Ok(result) => result,
+            Err(_) => anyhow::bail!("server thread panicked"),
+        }
+    }
+}
+
+/// Unblock a blocking `accept` after the stop flag is set by dialing
+/// the listener once. Failure is fine — it means the listener is
+/// already gone.
+fn wake_accept(addr: SocketAddr) {
+    let target = if addr.ip().is_unspecified() {
+        SocketAddr::new(std::net::Ipv4Addr::LOCALHOST.into(), addr.port())
+    } else {
+        addr
+    };
+    let _ = TcpStream::connect_timeout(&target, Duration::from_millis(500));
+}
+
+/// What one `next_line` poll produced.
+enum LineEvent {
+    /// A complete request line (without the newline).
+    Line(Vec<u8>),
+    /// A line exceeded the cap; it was discarded through its newline.
+    TooLong(usize),
+    /// Peer closed (EOF), server is stopping, or the socket errored —
+    /// either way the connection is done.
+    Closed,
+}
+
+/// Bounded line reader over a read-timeout socket: accumulates bytes,
+/// yields newline-delimited frames, discards oversized frames without
+/// losing stream sync, and polls the server stop flag between reads.
+struct LineReader<'a> {
+    stream: &'a TcpStream,
+    buf: Vec<u8>,
+    /// Bytes already scanned for a newline (restart point).
+    scanned: usize,
+    max_line: usize,
+    /// Inside an oversized frame: drop bytes until its newline.
+    discarding: bool,
+    discarded: usize,
+}
+
+impl<'a> LineReader<'a> {
+    fn new(stream: &'a TcpStream, max_line: usize) -> Self {
+        Self { stream, buf: Vec::new(), scanned: 0, max_line, discarding: false, discarded: 0 }
+    }
+
+    fn next_line(&mut self, stop: &AtomicBool) -> LineEvent {
+        let mut chunk = [0u8; 4096];
+        loop {
+            // Scan what we have.
+            if let Some(pos) = self.buf[self.scanned..].iter().position(|&b| b == b'\n') {
+                let pos = self.scanned + pos;
+                let rest = self.buf.split_off(pos + 1);
+                let mut line = std::mem::replace(&mut self.buf, rest);
+                line.pop(); // the newline
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                self.scanned = 0;
+                // Over-limit even if it arrived in one read: the cap is
+                // a protocol rule, not just a buffering bound.
+                if self.discarding || line.len() > self.max_line {
+                    let total = self.discarded + line.len();
+                    self.discarding = false;
+                    self.discarded = 0;
+                    return LineEvent::TooLong(total);
+                }
+                return LineEvent::Line(line);
+            }
+            self.scanned = self.buf.len();
+            if self.discarding {
+                self.discarded += self.buf.len();
+                self.buf.clear();
+                self.scanned = 0;
+            } else if self.buf.len() > self.max_line {
+                self.discarded = self.buf.len();
+                self.buf.clear();
+                self.scanned = 0;
+                self.discarding = true;
+            }
+            // Need more bytes.
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return LineEvent::Closed,
+                Ok(k) => self.buf.extend_from_slice(&chunk[..k]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                    if stop.load(Ordering::SeqCst) {
+                        return LineEvent::Closed;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => return LineEvent::Closed,
+            }
+        }
+    }
+}
+
+/// Serve one connection: read lines, dispatch, write one response line
+/// each. Returns when the peer closes, the socket errors, or the
+/// server stops.
+fn handle_connection(shared: &Shared, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    // Read timeouts make the blocking reads poll the stop flag.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut reader = LineReader::new(&stream, shared.max_line_bytes);
+    let mut writer = &stream;
+    loop {
+        let response = match reader.next_line(&shared.stop) {
+            LineEvent::Closed => break,
+            LineEvent::TooLong(len) => error_response(&anyhow::anyhow!(
+                "request line too long ({len} bytes > max {}); line discarded",
+                shared.max_line_bytes
+            )),
+            LineEvent::Line(bytes) => dispatch(shared, &bytes),
+        };
+        let mut line = response.to_string();
+        line.push('\n');
+        if writer.write_all(line.as_bytes()).is_err() {
+            break;
+        }
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    let _ = stream.shutdown(NetShutdown::Both);
+}
+
+/// Parse + execute one request line into one response object. Panics in
+/// the algorithm layer are caught and answered as errors — one tenant's
+/// panic must not take down the endpoint (the sync facade's
+/// poison-recovering locks keep the pool usable afterwards).
+fn dispatch(shared: &Shared, line: &[u8]) -> Json {
+    shared.requests.fetch_add(1, Ordering::SeqCst);
+    let parsed = std::str::from_utf8(line)
+        .map_err(|_| anyhow::anyhow!("request line is not valid UTF-8"))
+        .and_then(parse_request);
+    let request = match parsed {
+        Ok(r) => r,
+        Err(e) => return error_response(&e),
+    };
+    let executed =
+        std::panic::catch_unwind(AssertUnwindSafe(|| execute(shared, request))).unwrap_or_else(
+            |_| Err(anyhow::anyhow!("internal panic while serving the request")),
+        );
+    executed.unwrap_or_else(|e| error_response(&e))
+}
+
+fn execute(shared: &Shared, request: Request) -> crate::Result<Json> {
+    match request {
+        Request::Ping => Ok(obj(vec![
+            ("ok", Json::Bool(true)),
+            ("op", Json::Str("ping".into())),
+        ])),
+        Request::Open(spec) => {
+            let report = shared.pool.open(*spec)?;
+            Ok(open_response(&report))
+        }
+        Request::Query { session, query } => {
+            let (outcome, secs) = shared.pool.query(&session, &query)?;
+            Ok(query_response(&session, &query, outcome, secs))
+        }
+        Request::Stats => Ok(stats_response(&shared.pool.stats(), shared)),
+        Request::Close { session } => {
+            let freed = shared.pool.close(&session)?;
+            Ok(obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", Json::Str("close".into())),
+                ("session", Json::Str(session)),
+                ("freed_bytes", Json::Num(freed as f64)),
+            ]))
+        }
+        Request::Shutdown => {
+            shared.stop.store(true, Ordering::SeqCst);
+            wake_accept(shared.addr);
+            Ok(obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", Json::Str("shutdown".into())),
+            ]))
+        }
+    }
+}
+
+fn open_response(report: &OpenReport) -> Json {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", Json::Str("open".into())),
+        ("session", Json::Str(report.name.clone())),
+        ("n", Json::Num(report.n as f64)),
+        ("m", Json::Num(report.m as f64)),
+        ("bytes", Json::Num(report.bytes as f64)),
+        (
+            "evicted",
+            Json::Arr(report.evicted.iter().map(|s| Json::Str(s.clone())).collect()),
+        ),
+    ])
+}
+
+/// Render a query outcome in the CLI's convention: `"ok"` with the
+/// result payload, or the `-` / `oom` cells with no payload.
+fn query_response(session: &str, q: &crate::api::Query, outcome: QueryOutcome, secs: f64) -> Json {
+    let mut pairs = vec![
+        ("ok", Json::Bool(true)),
+        ("op", Json::Str("query".into())),
+        ("session", Json::Str(session.to_string())),
+        ("algo", Json::Str(q.algo.to_string())),
+        ("k", Json::Num(q.k as f64)),
+        ("secs", Json::Num(secs)),
+    ];
+    match outcome {
+        QueryOutcome::Answered(res) => {
+            pairs.push(("outcome", Json::Str("ok".into())));
+            pairs.push((
+                "seeds",
+                Json::Arr(res.seeds.iter().map(|&v| Json::Num(v as f64)).collect()),
+            ));
+            pairs.push(("sigma", Json::Num(res.influence)));
+            pairs.push(("tracked_bytes", Json::Num(res.tracked_bytes as f64)));
+            pairs.push((
+                "counters",
+                Json::Obj(
+                    res.counters
+                        .iter()
+                        .map(|&(k, v)| (k.to_string(), Json::Num(v)))
+                        .collect(),
+                ),
+            ));
+        }
+        QueryOutcome::TimedOut => pairs.push(("outcome", Json::Str("-".into()))),
+        QueryOutcome::OutOfMemory => pairs.push(("outcome", Json::Str("oom".into()))),
+    }
+    obj(pairs)
+}
+
+fn stats_response(stats: &PoolStats, shared: &Shared) -> Json {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", Json::Str("stats".into())),
+        ("used_bytes", Json::Num(stats.used_bytes as f64)),
+        (
+            "memory_budget",
+            match stats.memory_budget {
+                Some(b) => Json::Num(b as f64),
+                None => Json::Null,
+            },
+        ),
+        ("max_sessions", Json::Num(stats.max_sessions as f64)),
+        ("evictions", Json::Num(stats.evictions as f64)),
+        (
+            "requests",
+            Json::Num(shared.requests.load(Ordering::SeqCst) as f64),
+        ),
+        (
+            "sessions",
+            Json::Arr(
+                stats
+                    .sessions
+                    .iter()
+                    .map(|s| {
+                        obj(vec![
+                            ("name", Json::Str(s.name.clone())),
+                            ("dataset", Json::Str(s.dataset.clone())),
+                            ("weights", Json::Str(s.weights.clone())),
+                            ("n", Json::Num(s.n as f64)),
+                            ("m", Json::Num(s.m as f64)),
+                            ("bytes", Json::Num(s.bytes as f64)),
+                            ("queries", Json::Num(s.queries as f64)),
+                            ("in_flight", Json::Num(s.in_flight as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}

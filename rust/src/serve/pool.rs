@@ -1,0 +1,461 @@
+//! The multi-tenant session pool behind `infuser serve`.
+//!
+//! A [`SessionPool`] keeps named [`ImSession`]s — one per tenant, keyed
+//! by graph × weight scheme — and routes concurrent queries onto them.
+//! Two locks structure the concurrency:
+//!
+//! * one pool-state mutex guarding the entry table and the byte
+//!   accounting (held only for brief bookkeeping — lookups, LRU ticks,
+//!   admission/eviction decisions), and
+//! * one mutex per session guarding the warm [`ImSession`] itself
+//!   (held for the duration of a query — `ImSession` is `&mut self` by
+//!   design, so same-tenant queries serialize while different tenants
+//!   proceed in parallel on their own persistent `WorkerPool`s).
+//!
+//! A query never holds both locks at once except in the fixed order
+//! pool-state → session (acquire) and session → pool-state is never
+//! nested (the true-up after a query re-locks the pool state only after
+//! the session guard is dropped), so the pair cannot deadlock.
+//!
+//! Memory accounting ([`session_footprint`]) charges each session its
+//! CSR graph plus a worst-case dense-memo warm reserve at admission;
+//! after every query the charge is trued up to the session's actual
+//! [`Prepared::warm_bytes`](crate::api::Prepared::warm_bytes). When an
+//! `open` would overshoot the global budget, idle (no query in flight)
+//! sessions are evicted in LRU order *before* the new graph's warm
+//! state is allocated; if evicting every idle session still cannot make
+//! room, the open is rejected with the budget arithmetic in the error.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::algo::{is_oom, is_timeout, ImResult};
+use crate::api::{ImSession, Query, RunOptions};
+use crate::config::DatasetRef;
+use crate::graph::{Graph, WeightModel};
+use crate::runtime::sync::Mutex;
+use crate::util::json::Json;
+
+/// Admission/eviction knobs for a [`SessionPool`].
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Global byte budget across all resident sessions (`None` =
+    /// unlimited). Enforced at `open` admission and re-checked after
+    /// every query true-up.
+    pub memory_budget: Option<u64>,
+    /// Hard cap on resident sessions regardless of bytes.
+    pub max_sessions: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self { memory_budget: None, max_sessions: 16 }
+    }
+}
+
+/// Everything needed to open one named session: dataset, weight scheme,
+/// and the run options its warm state is prepared under.
+pub struct SessionSpec {
+    /// Pool-unique tenant name.
+    pub name: String,
+    /// Graph source (`catalog-id[@scale]` or `file:PATH`).
+    pub dataset: DatasetRef,
+    /// Edge-weight scheme; with the dataset it keys the session.
+    pub weights: WeightModel,
+    /// Run options the session is prepared under.
+    pub options: RunOptions,
+}
+
+impl SessionSpec {
+    /// Parse a spec from a protocol/config JSON object. Requires
+    /// `session` and `dataset`; `weights` defaults to `const:0.01`; every
+    /// run-option knob of [`RunOptions::from_json`] is honored (including
+    /// its conflicting-alias rejections).
+    pub fn from_json(json: &Json) -> crate::Result<Self> {
+        let name = json
+            .get("session")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("request needs a string 'session' name"))?
+            .to_string();
+        anyhow::ensure!(!name.is_empty(), "'session' name must be non-empty");
+        let dataset = DatasetRef::parse(
+            json.get("dataset")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("open needs a string 'dataset'"))?,
+        )?;
+        let weights = match json.get("weights").and_then(|v| v.as_str()) {
+            Some(s) => WeightModel::parse(s)?,
+            None => WeightModel::Const(0.01),
+        };
+        let options = RunOptions::from_json(json)?;
+        Ok(Self { name, dataset, weights, options })
+    }
+}
+
+/// Worst-case warm-state reserve charged at admission: a dense memo
+/// (labels + component sizes at 4 bytes per slot, covered bitmap at 1)
+/// over the lane-padded R, plus the 8-byte initial-gains vector.
+fn warm_reserve(n: usize, opts: &RunOptions) -> u64 {
+    let r_pad = opts.lanes.padded(opts.r_count);
+    (9 * n * r_pad + 8 * n) as u64
+}
+
+/// The bytes a session over `graph` prepared with `opts` is charged
+/// against the pool budget at admission: the CSR arrays plus the
+/// worst-case [dense-memo] warm reserve. Exposed so tests (and capacity
+/// planning) can pin budget edges exactly.
+///
+/// [dense-memo]: crate::algo::infuser::MemoKind::Dense
+pub fn session_footprint(graph: &Graph, opts: &RunOptions) -> u64 {
+    graph.heap_bytes() + warm_reserve(graph.num_vertices(), opts)
+}
+
+/// One resident session.
+struct Entry {
+    /// Monotonic id: names can be reused after close/evict, ids cannot,
+    /// so deferred true-ups never charge a same-named successor.
+    id: u64,
+    name: String,
+    dataset: String,
+    weights: String,
+    n: usize,
+    m: usize,
+    graph_bytes: u64,
+    /// Current charge against the budget (reserve until the first
+    /// true-up, actual graph + warm bytes after).
+    bytes: u64,
+    /// LRU tick of the last open/query touch.
+    last_used: u64,
+    /// Queries currently executing against this session.
+    in_flight: u32,
+    /// Total queries routed to this session since it opened.
+    queries: u64,
+    session: Arc<Mutex<ImSession<'static>>>,
+}
+
+/// Entry table + byte accounting, all under one mutex.
+struct PoolState {
+    entries: Vec<Entry>,
+    used_bytes: u64,
+    clock: u64,
+    next_id: u64,
+    evictions: u64,
+}
+
+impl PoolState {
+    fn find(&mut self, name: &str) -> Option<&mut Entry> {
+        self.entries.iter_mut().find(|e| e.name == name)
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Evict the least-recently-used *idle* session. Busy sessions
+    /// (queries in flight) are never evicted — their warm state is in
+    /// use. Returns the freed name × bytes, `None` if every resident
+    /// session is busy.
+    fn evict_lru_idle(&mut self) -> Option<(String, u64)> {
+        let idx = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.in_flight == 0)
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(i, _)| i)?;
+        let e = self.entries.remove(idx);
+        self.used_bytes -= e.bytes;
+        self.evictions += 1;
+        Some((e.name, e.bytes))
+    }
+}
+
+/// How a routed query ended, mirroring the CLI's outcome column: a
+/// result, the `-` timeout cell, or the `oom` cell.
+pub enum QueryOutcome {
+    /// The query completed; bit-identical to a cold run of the same spec.
+    Answered(ImResult),
+    /// The per-request/session budget expired mid-query (CLI `-`).
+    TimedOut,
+    /// The algorithm hit its memory cap (CLI `oom`).
+    OutOfMemory,
+}
+
+/// What an `open` did: admitted dimensions plus any LRU victims it
+/// displaced.
+pub struct OpenReport {
+    /// Tenant name.
+    pub name: String,
+    /// Vertices in the (re-ordered) served graph.
+    pub n: usize,
+    /// Undirected edges.
+    pub m: usize,
+    /// Bytes charged against the budget at admission.
+    pub bytes: u64,
+    /// Sessions evicted (LRU order) to make room.
+    pub evicted: Vec<String>,
+}
+
+/// Point-in-time pool observability snapshot.
+pub struct PoolStats {
+    /// Current total charge across resident sessions.
+    pub used_bytes: u64,
+    /// Configured byte budget (`None` = unlimited).
+    pub memory_budget: Option<u64>,
+    /// Configured session cap.
+    pub max_sessions: usize,
+    /// Sessions evicted since the pool was created.
+    pub evictions: u64,
+    /// Per-session rows.
+    pub sessions: Vec<SessionStats>,
+}
+
+/// One session's row in [`PoolStats`].
+pub struct SessionStats {
+    /// Tenant name.
+    pub name: String,
+    /// Dataset display name.
+    pub dataset: String,
+    /// Weight-scheme label.
+    pub weights: String,
+    /// Vertices.
+    pub n: usize,
+    /// Undirected edges.
+    pub m: usize,
+    /// Current byte charge.
+    pub bytes: u64,
+    /// Total queries routed here.
+    pub queries: u64,
+    /// Queries executing right now.
+    pub in_flight: u32,
+}
+
+/// A pool of named warm [`ImSession`]s with LRU eviction under a global
+/// memory budget. See the [module docs](self) for the locking and
+/// accounting contracts.
+pub struct SessionPool {
+    cfg: PoolConfig,
+    state: Mutex<PoolState>,
+}
+
+// `Arc<Mutex<ImSession>>` crosses connection threads; this pins the
+// Send bound the design depends on (`MemoBackend` boxes carry `+ Send`).
+const _: fn() = || {
+    fn assert_send<T: Send>() {}
+    assert_send::<ImSession<'static>>();
+};
+
+impl SessionPool {
+    /// An empty pool under `cfg`.
+    ///
+    /// # Panics
+    /// When `cfg.max_sessions` is 0 — a pool that can hold nothing is a
+    /// configuration error, not a runtime condition.
+    pub fn new(cfg: PoolConfig) -> Self {
+        assert!(cfg.max_sessions > 0, "max_sessions must be >= 1");
+        Self {
+            cfg,
+            state: Mutex::new(PoolState {
+                entries: Vec::new(),
+                used_bytes: 0,
+                clock: 0,
+                next_id: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    /// Open a session from a [`SessionSpec`]: load the dataset, weight
+    /// it with the session seed's weight derivation, admit it.
+    pub fn open(&self, spec: SessionSpec) -> crate::Result<OpenReport> {
+        let SessionSpec { name, dataset, weights, options } = spec;
+        let graph = dataset.load()?;
+        let label = dataset.name();
+        self.open_graph(&name, &label, graph, weights, options)
+    }
+
+    /// Admit an already-loaded (unweighted) graph as session `name`.
+    /// Applies `weights` under the coordinator's seed derivation
+    /// (`seed ^ 0x5E77`), reserves [`session_footprint`] bytes — evicting
+    /// idle LRU sessions as needed — and only then pays for
+    /// [`ImSession::prepare`]. Rejected opens allocate nothing.
+    pub fn open_graph(
+        &self,
+        name: &str,
+        dataset_label: &str,
+        graph: Graph,
+        weights: WeightModel,
+        options: RunOptions,
+    ) -> crate::Result<OpenReport> {
+        options.validate()?;
+        let graph = graph.with_weights(weights, options.seed ^ 0x5E77);
+        let (n, m) = (graph.num_vertices(), graph.num_edges());
+        let graph_bytes = graph.heap_bytes();
+        let need = session_footprint(&graph, &options);
+
+        let mut st = self.state.lock();
+        anyhow::ensure!(
+            st.find(name).is_none(),
+            "session '{name}' already open (close it first to re-prepare)"
+        );
+        let mut evicted = Vec::new();
+        while st.entries.len() >= self.cfg.max_sessions {
+            match st.evict_lru_idle() {
+                Some((victim, _)) => evicted.push(victim),
+                None => anyhow::bail!(
+                    "session cap reached ({} resident, max_sessions {}) and every session \
+                     has queries in flight",
+                    st.entries.len(),
+                    self.cfg.max_sessions
+                ),
+            }
+        }
+        if let Some(budget) = self.cfg.memory_budget {
+            anyhow::ensure!(
+                need <= budget,
+                "session '{name}' needs {need} bytes (graph {graph_bytes} + warm reserve), \
+                 exceeding the pool memory budget of {budget} bytes"
+            );
+            while st.used_bytes + need > budget {
+                match st.evict_lru_idle() {
+                    Some((victim, _)) => evicted.push(victim),
+                    None => anyhow::bail!(
+                        "admitting session '{name}' ({need} bytes) would exceed the memory \
+                         budget: {} bytes in use by busy sessions, budget {budget}",
+                        st.used_bytes
+                    ),
+                }
+            }
+        }
+        // Admission passed — only now allocate the warm state. A prepare
+        // failure leaves the accounting untouched (nothing was charged).
+        let session = ImSession::prepare(graph, options)?;
+        let id = st.next_id;
+        st.next_id += 1;
+        let tick = st.tick();
+        st.used_bytes += need;
+        st.entries.push(Entry {
+            id,
+            name: name.to_string(),
+            dataset: dataset_label.to_string(),
+            weights: weights.label(),
+            n,
+            m,
+            graph_bytes,
+            bytes: need,
+            last_used: tick,
+            in_flight: 0,
+            queries: 0,
+            session: Arc::new(Mutex::new(session)),
+        });
+        Ok(OpenReport { name: name.to_string(), n, m, bytes: need, evicted })
+    }
+
+    /// Route one query to session `name`. Per-query weight overrides are
+    /// rejected — sessions are keyed by graph × weight scheme, so a
+    /// different scheme is a different session. Returns the outcome and
+    /// the query's wall-clock seconds (lock wait included — what a
+    /// client actually observes).
+    pub fn query(&self, name: &str, q: &Query) -> crate::Result<(QueryOutcome, f64)> {
+        anyhow::ensure!(
+            q.weights.is_none(),
+            "per-query weight overrides are not served: sessions are keyed by \
+             graph x weight scheme — open a separate session for '{name}'"
+        );
+        let (id, session) = {
+            let mut st = self.state.lock();
+            let tick = st.tick();
+            let e = st
+                .find(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown session '{name}' (open it first)"))?;
+            e.last_used = tick;
+            e.in_flight += 1;
+            e.queries += 1;
+            (e.id, Arc::clone(&e.session))
+        };
+        // The long lock: the warm session itself. The per-request Budget
+        // is armed inside `query` (after this lock is granted), so time
+        // spent queued behind a same-tenant query does not eat a later
+        // request's budget.
+        let (result, secs, warm_bytes) = {
+            let mut s = session.lock();
+            let t0 = Instant::now();
+            let r = s.query(q);
+            (r, t0.elapsed().as_secs_f64(), s.prepared().warm_bytes())
+        };
+        self.settle(id, warm_bytes);
+        let outcome = match result {
+            Ok(res) => QueryOutcome::Answered(res),
+            Err(e) if is_timeout(&e) => QueryOutcome::TimedOut,
+            Err(e) if is_oom(&e) => QueryOutcome::OutOfMemory,
+            Err(e) => return Err(e),
+        };
+        Ok((outcome, secs))
+    }
+
+    /// Post-query bookkeeping: drop the in-flight mark and true up the
+    /// byte charge from the admission reserve to the session's actual
+    /// graph + warm bytes, then shed over-budget idle LRU sessions (a
+    /// warm state that grew past its reserve can push the pool over).
+    fn settle(&self, id: u64, warm_bytes: u64) {
+        let mut st = self.state.lock();
+        let Some(e) = st.entries.iter_mut().find(|e| e.id == id) else {
+            return; // closed/evicted concurrently; its bytes are already released
+        };
+        e.in_flight -= 1;
+        let actual = e.graph_bytes + warm_bytes;
+        let old = e.bytes;
+        e.bytes = actual;
+        st.used_bytes = st.used_bytes - old + actual;
+        if let Some(budget) = self.cfg.memory_budget {
+            while st.used_bytes > budget {
+                if st.evict_lru_idle().is_none() {
+                    break; // everything resident is busy; next settle retries
+                }
+            }
+        }
+    }
+
+    /// Close session `name`, releasing exactly its charged bytes.
+    pub fn close(&self, name: &str) -> crate::Result<u64> {
+        let mut st = self.state.lock();
+        let idx = st
+            .entries
+            .iter()
+            .position(|e| e.name == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown session '{name}'"))?;
+        anyhow::ensure!(
+            st.entries[idx].in_flight == 0,
+            "session '{name}' has queries in flight"
+        );
+        let e = st.entries.remove(idx);
+        st.used_bytes -= e.bytes;
+        Ok(e.bytes)
+    }
+
+    /// Snapshot the pool for the `stats` op / CLI banner.
+    pub fn stats(&self) -> PoolStats {
+        let st = self.state.lock();
+        PoolStats {
+            used_bytes: st.used_bytes,
+            memory_budget: self.cfg.memory_budget,
+            max_sessions: self.cfg.max_sessions,
+            evictions: st.evictions,
+            sessions: st
+                .entries
+                .iter()
+                .map(|e| SessionStats {
+                    name: e.name.clone(),
+                    dataset: e.dataset.clone(),
+                    weights: e.weights.clone(),
+                    n: e.n,
+                    m: e.m,
+                    bytes: e.bytes,
+                    queries: e.queries,
+                    in_flight: e.in_flight,
+                })
+                .collect(),
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! The `infuser serve` wire protocol: JSON lines over TCP.
+//!
+//! One request per line, one response line per request, in order. Every
+//! request is a JSON object with an `"op"` key; every response is a JSON
+//! object with `"ok": true|false` — errors are *responses* (`"ok": false`
+//! plus a human-readable `"error"`), never connection drops, so one
+//! tenant's malformed line cannot take the stream down. See the README
+//! "Serving" section for the one-page protocol reference.
+//!
+//! Ops:
+//!
+//! * `open` — `{"op":"open","session":NAME,"dataset":REF,
+//!   "weights":MODEL?, ...RunOptions knobs}` — admit a session
+//!   ([`SessionSpec::from_json`], so alias conflicts like `r` vs
+//!   `r_count` are rejected exactly as in config files).
+//! * `query` — `{"op":"query","session":NAME,"algo":SPEC,"k":K,
+//!   "seed":S?, "timeout_secs":T? | "timeout_ms":T?}` — run one query
+//!   ([`Query::from_json`] plus the serve-level `timeout_ms` alias).
+//! * `stats`, `close`, `ping`, `shutdown` — observability and lifecycle.
+
+use std::time::Duration;
+
+use crate::api::Query;
+use crate::util::json::{obj, Json};
+
+use super::pool::SessionSpec;
+
+/// Default cap on one request line, bytes (1 MiB). Longer lines are
+/// discarded to the next newline and answered with a structured error.
+pub const DEFAULT_MAX_LINE_BYTES: usize = 1 << 20;
+
+/// A parsed request line.
+pub enum Request {
+    /// Admit a named session.
+    Open(Box<SessionSpec>),
+    /// Run one query against a named session.
+    Query {
+        /// Target session name.
+        session: String,
+        /// The query (overrides resolved, `timeout_ms` folded in).
+        query: Box<Query>,
+    },
+    /// Snapshot the pool.
+    Stats,
+    /// Close a named session.
+    Close {
+        /// Target session name.
+        session: String,
+    },
+    /// Liveness check.
+    Ping,
+    /// Stop the server after responding.
+    Shutdown,
+}
+
+fn session_name(json: &Json) -> crate::Result<String> {
+    let name = json
+        .get("session")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("request needs a string 'session' name"))?;
+    anyhow::ensure!(!name.is_empty(), "'session' name must be non-empty");
+    Ok(name.to_string())
+}
+
+/// Parse one request line. Errors are protocol errors (malformed JSON,
+/// unknown op, bad fields) and become `"ok": false` responses.
+pub fn parse_request(line: &str) -> crate::Result<Request> {
+    let json = Json::parse(line).map_err(|e| anyhow::anyhow!("malformed JSON request: {e}"))?;
+    let op = json
+        .get("op")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("request needs a string 'op' key"))?;
+    match op {
+        "open" => Ok(Request::Open(Box::new(SessionSpec::from_json(&json)?))),
+        "query" => {
+            let session = session_name(&json)?;
+            let mut query = Query::from_json(&json)?;
+            match (json.get("timeout_ms"), json.get("timeout_secs")) {
+                (Some(_), Some(_)) => anyhow::bail!(
+                    "conflicting keys 'timeout_ms' and 'timeout_secs' (pick one)"
+                ),
+                (Some(v), None) => {
+                    let ms = v
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("'timeout_ms' must be a number"))?;
+                    anyhow::ensure!(
+                        ms.is_finite() && ms >= 0.0,
+                        "'timeout_ms' must be finite and >= 0 (got {ms})"
+                    );
+                    query.timeout = Some(Duration::try_from_secs_f64(ms / 1000.0)?);
+                }
+                _ => {}
+            }
+            Ok(Request::Query { session, query: Box::new(query) })
+        }
+        "stats" => Ok(Request::Stats),
+        "close" => Ok(Request::Close { session: session_name(&json)? }),
+        "ping" => Ok(Request::Ping),
+        "shutdown" => Ok(Request::Shutdown),
+        other => anyhow::bail!(
+            "unknown op '{other}' (expected open | query | stats | close | ping | shutdown)"
+        ),
+    }
+}
+
+/// The `"ok": false` response for `err`, with the full anyhow chain in
+/// `"error"`.
+pub fn error_response(err: &anyhow::Error) -> Json {
+    obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(format!("{err:#}")))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_rejects_bad_shapes() {
+        for (line, needle) in [
+            ("{nope", "malformed JSON"),
+            ("{\"k\": 3}", "'op'"),
+            ("{\"op\": \"dance\"}", "unknown op"),
+            ("{\"op\": \"query\", \"algo\": \"infuser\", \"k\": 2}", "'session'"),
+            (
+                "{\"op\": \"query\", \"session\": \"s\", \"algo\": \"infuser\", \"k\": 1, \
+                 \"timeout_ms\": 5, \"timeout_secs\": 1}",
+                "conflicting",
+            ),
+            ("{\"op\": \"open\", \"session\": \"s\", \"dataset\": \"er@1\", \"r\": 8, \"r_count\": 8}",
+             "conflicting"),
+        ] {
+            let err = parse_request(line).unwrap_err().to_string();
+            assert!(err.contains(needle), "line {line}: error {err:?} missing {needle:?}");
+        }
+    }
+
+    #[test]
+    fn timeout_ms_folds_into_query_timeout() {
+        let r = parse_request(
+            "{\"op\": \"query\", \"session\": \"s\", \"algo\": \"infuser\", \"k\": 2, \
+             \"timeout_ms\": 250}",
+        )
+        .unwrap();
+        match r {
+            Request::Query { session, query } => {
+                assert_eq!(session, "s");
+                assert_eq!(query.timeout, Some(Duration::from_millis(250)));
+            }
+            _ => panic!("expected query"),
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! The serving acceptance criterion: every response `infuser serve`
+//! gives to a concurrent multi-tenant client mix must be
+//! **bit-identical** — seeds, σ̂ bits, counters, tracked bytes — to a
+//! direct cold [`ImSession`] run of the same query, under K-ladders,
+//! repeats, per-thread seed overrides, and interleaved-tenant traffic
+//! (two graphs, alternating clients). Built on the same discipline as
+//! `session_reuse.rs`, one network hop further out.
+
+use infuser::algo::ImResult;
+use infuser::api::{ImSession, Query, RunOptions};
+use infuser::config::AlgoSpec;
+use infuser::gen::{self, GenSpec};
+use infuser::graph::WeightModel;
+use infuser::serve::client::{expect_ok, Client};
+use infuser::serve::{ServeOptions, Server, ServerHandle};
+use infuser::util::json::{obj, Json};
+
+/// The serve layer's weight-seed derivation (same as the coordinator):
+/// the graph is weighted with `session seed ^ 0x5E77`.
+const WEIGHT_SEED_XOR: u64 = 0x5E77;
+
+fn ephemeral() -> ServeOptions {
+    ServeOptions { addr: "127.0.0.1:0".to_string(), ..Default::default() }
+}
+
+/// Spin up an in-process server holding the given generated sessions.
+fn serve_sessions(sessions: &[(&str, GenSpec, WeightModel, RunOptions)]) -> ServerHandle {
+    let server = Server::bind(ephemeral()).unwrap();
+    for (name, spec, weights, opts) in sessions {
+        server
+            .pool()
+            .open_graph(name, spec.family(), gen::generate(spec), *weights, *opts)
+            .unwrap();
+    }
+    server.spawn().unwrap()
+}
+
+/// The cold mirror of the pool's open + query path: fresh weights,
+/// fresh session, one query.
+fn cold_answer(spec: &GenSpec, weights: WeightModel, opts: RunOptions, q: &Query) -> ImResult {
+    let g = gen::generate(spec).with_weights(weights, opts.seed ^ WEIGHT_SEED_XOR);
+    let mut session = ImSession::prepare(g, opts).unwrap();
+    session.query(q).unwrap()
+}
+
+fn query_body(session: &str, k: usize, seed: Option<u64>) -> Json {
+    let mut pairs = vec![
+        ("op", Json::Str("query".to_string())),
+        ("session", Json::Str(session.to_string())),
+        ("algo", Json::Str("infuser".to_string())),
+        ("k", Json::Num(k as f64)),
+    ];
+    if let Some(s) = seed {
+        pairs.push(("seed", Json::Num(s as f64)));
+    }
+    obj(pairs)
+}
+
+/// Field-by-field bit-identity of a served response against a cold run.
+fn assert_response_matches(resp: &Json, cold: &ImResult, what: &str) {
+    assert_eq!(
+        resp.get("outcome").and_then(|v| v.as_str()),
+        Some("ok"),
+        "{what}: outcome in {}",
+        resp.to_string()
+    );
+    let seeds: Vec<u32> = resp
+        .get("seeds")
+        .and_then(|v| v.as_arr())
+        .unwrap_or_else(|| panic!("{what}: no seeds in {}", resp.to_string()))
+        .iter()
+        .map(|v| v.as_f64().unwrap() as u32)
+        .collect();
+    assert_eq!(seeds, cold.seeds, "{what}: seeds");
+    let sigma = resp.get("sigma").and_then(|v| v.as_f64()).unwrap();
+    assert_eq!(
+        sigma.to_bits(),
+        cold.influence.to_bits(),
+        "{what}: sigma {sigma} vs {}",
+        cold.influence
+    );
+    let tracked = resp.get("tracked_bytes").and_then(|v| v.as_f64()).unwrap() as u64;
+    assert_eq!(tracked, cold.tracked_bytes, "{what}: tracked bytes");
+    let Some(Json::Obj(counters)) = resp.get("counters") else {
+        panic!("{what}: no counters object in {}", resp.to_string());
+    };
+    assert_eq!(counters.len(), cold.counters.len(), "{what}: counter set size");
+    for &(name, value) in &cold.counters {
+        let got = counters
+            .get(name)
+            .and_then(|v| v.as_f64())
+            .unwrap_or_else(|| panic!("{what}: counter '{name}' missing"));
+        assert_eq!(got.to_bits(), value.to_bits(), "{what}: counter '{name}'");
+    }
+}
+
+/// Four concurrent clients hammer ONE tenant with a K-ladder (warm
+/// extensions + prefix lookups), repeats, and per-thread seed overrides
+/// (which rebuild the shared warm state); every response equals the
+/// cold run bit-for-bit regardless of interleaving.
+#[test]
+fn concurrent_clients_bit_identical_on_one_tenant() {
+    let spec = GenSpec::barabasi_albert(300, 2, 9);
+    let weights = WeightModel::Const(0.1);
+    let opts = RunOptions::new().r_count(32).seed(7).threads(2);
+    let handle = serve_sessions(&[("hep", spec.clone(), weights, opts)]);
+    let addr = handle.addr();
+
+    let mut clients = Vec::new();
+    for tid in 0..4u64 {
+        let spec = spec.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            for k in [3usize, 6, 6, 2] {
+                let resp =
+                    expect_ok(client.request(&query_body("hep", k, None)).unwrap()).unwrap();
+                let cold = cold_answer(&spec, weights, opts, &Query::new(AlgoSpec::InfuserMg, k));
+                assert_response_matches(&resp, &cold, &format!("client {tid} k={k}"));
+            }
+            // A per-thread seed override: a fresh sample set, served from
+            // the same shared session other threads are querying.
+            let seed = 1000 + tid;
+            let resp =
+                expect_ok(client.request(&query_body("hep", 4, Some(seed))).unwrap()).unwrap();
+            let cold = cold_answer(
+                &spec,
+                weights,
+                opts,
+                &Query::new(AlgoSpec::InfuserMg, 4).seed(seed),
+            );
+            assert_response_matches(&resp, &cold, &format!("client {tid} seed={seed}"));
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    handle.shutdown().unwrap();
+}
+
+/// Interleaved-tenant traffic: two graphs with different weight schemes,
+/// four clients alternating between them request-by-request. Tenants
+/// must stay fully isolated — each response bit-matches its own
+/// tenant's cold run.
+#[test]
+fn interleaved_tenant_traffic_stays_isolated() {
+    let tenants = [
+        (
+            "ba",
+            GenSpec::barabasi_albert(280, 2, 5),
+            WeightModel::Const(0.1),
+            RunOptions::new().r_count(32).seed(7).threads(2),
+        ),
+        (
+            "er",
+            GenSpec::erdos_renyi(320, 900, 13),
+            WeightModel::Const(0.05),
+            RunOptions::new().r_count(24).seed(11).threads(2),
+        ),
+    ];
+    let handle = serve_sessions(&tenants);
+    let addr = handle.addr();
+
+    let mut clients = Vec::new();
+    for tid in 0..4usize {
+        let tenants = tenants.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            for step in 0..6usize {
+                // Thread parity staggers which tenant each step hits, so
+                // both sessions see genuinely concurrent mixed traffic.
+                let (name, spec, weights, opts) = &tenants[(tid + step) % 2];
+                let k = 2 + (step % 3) * 2;
+                let resp =
+                    expect_ok(client.request(&query_body(name, k, None)).unwrap()).unwrap();
+                let cold = cold_answer(spec, *weights, *opts, &Query::new(AlgoSpec::InfuserMg, k));
+                assert_response_matches(
+                    &resp,
+                    &cold,
+                    &format!("client {tid} step {step} tenant {name}"),
+                );
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    handle.shutdown().unwrap();
+}
+
+/// The full wire lifecycle: `open` a catalog dataset over the protocol
+/// (not in-process), `query` it bit-identically, watch it in `stats`,
+/// `close` it, and get a structured error for a query after the close.
+#[test]
+fn wire_open_query_stats_close_lifecycle() {
+    let handle = Server::bind(ephemeral()).unwrap().spawn().unwrap();
+    let mut client = Client::connect(handle.addr()).unwrap();
+    client.ping().unwrap();
+
+    let open = expect_ok(
+        client
+            .request(&obj(vec![
+                ("op", Json::Str("open".to_string())),
+                ("session", Json::Str("hep".to_string())),
+                ("dataset", Json::Str("nethep-s".to_string())),
+                ("weights", Json::Str("const:0.02".to_string())),
+                ("r", Json::Num(16.0)),
+                ("seed", Json::Num(3.0)),
+                ("threads", Json::Num(2.0)),
+            ]))
+            .unwrap(),
+    )
+    .unwrap();
+    let n = open.get("n").and_then(|v| v.as_f64()).unwrap() as usize;
+    assert!(n > 0, "open reported n={n}");
+
+    // Bit-identity against the same dataset loaded directly.
+    let opts = RunOptions::new().r_count(16).seed(3).threads(2);
+    let g = infuser::config::DatasetRef::parse("nethep-s")
+        .unwrap()
+        .load()
+        .unwrap()
+        .with_weights(WeightModel::Const(0.02), opts.seed ^ WEIGHT_SEED_XOR);
+    assert_eq!(g.num_vertices(), n, "served graph dimensions");
+    let cold = ImSession::prepare(g, opts)
+        .unwrap()
+        .query(&Query::new(AlgoSpec::InfuserMg, 4))
+        .unwrap();
+    let resp = expect_ok(client.request(&query_body("hep", 4, None)).unwrap()).unwrap();
+    assert_response_matches(&resp, &cold, "wire-opened session");
+
+    let stats = client.stats().unwrap();
+    let sessions = stats.get("sessions").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(sessions.len(), 1);
+    assert_eq!(sessions[0].get("name").and_then(|v| v.as_str()), Some("hep"));
+    assert_eq!(sessions[0].get("queries").and_then(|v| v.as_f64()), Some(1.0));
+    assert_eq!(sessions[0].get("dataset").and_then(|v| v.as_str()), Some("nethep-s"));
+
+    let closed = expect_ok(
+        client
+            .request(&obj(vec![
+                ("op", Json::Str("close".to_string())),
+                ("session", Json::Str("hep".to_string())),
+            ]))
+            .unwrap(),
+    )
+    .unwrap();
+    assert!(closed.get("freed_bytes").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    let after = client.request(&query_body("hep", 2, None)).unwrap();
+    assert_eq!(after.get("ok"), Some(&Json::Bool(false)), "query after close must error");
+    handle.shutdown().unwrap();
+}
+
+/// Shutdown over the wire: the server answers the `shutdown` request,
+/// stops accepting, and `run` returns — clients left connected get
+/// clean EOFs, not hangs.
+#[test]
+fn wire_shutdown_stops_the_server() {
+    let spec = GenSpec::grid(8, 8);
+    let opts = RunOptions::new().r_count(8).seed(1).threads(1);
+    let handle = serve_sessions(&[("g", spec, WeightModel::Const(0.2), opts)]);
+    let addr = handle.addr();
+    let mut a = Client::connect(addr).unwrap();
+    let mut b = Client::connect(addr).unwrap();
+    a.ping().unwrap();
+    b.shutdown().unwrap();
+    handle.shutdown().unwrap();
+    // The listener is gone: a fresh connect must fail (possibly after
+    // the OS-level accept queue drains — retry briefly).
+    let mut refused = false;
+    for _ in 0..50 {
+        match Client::connect(addr) {
+            Err(_) => {
+                refused = true;
+                break;
+            }
+            Ok(mut c) => {
+                if c.ping().is_err() {
+                    refused = true;
+                    break;
+                }
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    assert!(refused, "server kept serving after shutdown");
+}

@@ -1,0 +1,239 @@
+//! The serve fault menu: malformed JSON, unknown ops/sessions, alias
+//! conflicts (via the shared `RunOptions::from_json` rejection),
+//! per-query weight overrides, oversized request lines, and mid-request
+//! client disconnects. Every fault must yield a structured `"ok": false`
+//! response (or a clean connection drop) — never a dead server or a
+//! poisoned pool. The suite ends each scenario by proving the pool
+//! still answers a good query bit-identically.
+
+use std::io::Write;
+use std::net::TcpStream;
+
+use infuser::api::{ImSession, Query, RunOptions};
+use infuser::config::AlgoSpec;
+use infuser::gen::{self, GenSpec};
+use infuser::graph::WeightModel;
+use infuser::serve::client::{expect_ok, Client};
+use infuser::serve::{ServeOptions, Server, ServerHandle};
+use infuser::util::json::{obj, Json};
+
+fn spec() -> GenSpec {
+    GenSpec::barabasi_albert(250, 2, 4)
+}
+
+fn opts() -> RunOptions {
+    RunOptions::new().r_count(24).seed(6).threads(2)
+}
+
+fn start(max_line_bytes: usize) -> ServerHandle {
+    let server = Server::bind(ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        max_line_bytes,
+        ..Default::default()
+    })
+    .unwrap();
+    server
+        .pool()
+        .open_graph("hep", "ba-250", gen::generate(&spec()), WeightModel::Const(0.1), opts())
+        .unwrap();
+    server.spawn().unwrap()
+}
+
+/// The good query every scenario re-checks: the pool must keep giving
+/// the cold-identical answer after each fault.
+fn assert_pool_still_healthy(client: &mut Client, what: &str) {
+    let resp = expect_ok(
+        client
+            .request(&obj(vec![
+                ("op", Json::Str("query".to_string())),
+                ("session", Json::Str("hep".to_string())),
+                ("algo", Json::Str("infuser".to_string())),
+                ("k", Json::Num(3.0)),
+            ]))
+            .unwrap(),
+    )
+    .unwrap();
+    let g = gen::generate(&spec()).with_weights(WeightModel::Const(0.1), opts().seed ^ 0x5E77);
+    let cold = ImSession::prepare(g, opts())
+        .unwrap()
+        .query(&Query::new(AlgoSpec::InfuserMg, 3))
+        .unwrap();
+    let seeds: Vec<u32> = resp
+        .get("seeds")
+        .and_then(|v| v.as_arr())
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as u32)
+        .collect();
+    assert_eq!(seeds, cold.seeds, "{what}: post-fault seeds");
+    let sigma = resp.get("sigma").and_then(|v| v.as_f64()).unwrap();
+    assert_eq!(sigma.to_bits(), cold.influence.to_bits(), "{what}: post-fault sigma");
+}
+
+fn expect_error(client: &mut Client, line: &str, needle: &str, what: &str) {
+    let resp = client.request_line(line).unwrap();
+    assert_eq!(
+        resp.get("ok"),
+        Some(&Json::Bool(false)),
+        "{what}: expected ok=false, got {}",
+        resp.to_string()
+    );
+    let err = resp.get("error").and_then(|v| v.as_str()).unwrap_or("");
+    assert!(
+        err.contains(needle),
+        "{what}: error {err:?} does not mention {needle:?}"
+    );
+}
+
+/// Every protocol-level fault answers a structured error on the SAME
+/// connection, and the pool stays healthy throughout.
+#[test]
+fn structured_errors_for_the_full_fault_menu() {
+    let handle = start(1 << 20);
+    let mut client = Client::connect(handle.addr()).unwrap();
+
+    let menu: &[(&str, &str, &str)] = &[
+        ("{not json", "malformed JSON", "malformed line"),
+        ("[1, 2, 3]", "'op'", "non-object request"),
+        ("{\"op\": \"transmogrify\"}", "unknown op", "unknown op"),
+        (
+            "{\"op\": \"query\", \"session\": \"nope\", \"algo\": \"infuser\", \"k\": 2}",
+            "unknown session",
+            "unknown session",
+        ),
+        (
+            "{\"op\": \"open\", \"session\": \"x\", \"dataset\": \"nethep-s\", \
+             \"r\": 8, \"r_count\": 8}",
+            "conflicting keys 'r' and 'r_count'",
+            "RunOptions alias conflict",
+        ),
+        (
+            "{\"op\": \"query\", \"session\": \"hep\", \"algo\": \"infuser\", \"k\": 2, \
+             \"timeout_ms\": 10, \"timeout_secs\": 1}",
+            "conflicting keys 'timeout_ms' and 'timeout_secs'",
+            "timeout alias conflict",
+        ),
+        (
+            "{\"op\": \"query\", \"session\": \"hep\", \"algo\": \"infuser\", \"k\": 2, \
+             \"weights\": \"const:0.5\"}",
+            "weight overrides",
+            "per-query weight override",
+        ),
+        (
+            "{\"op\": \"open\", \"session\": \"hep\", \"dataset\": \"nethep-s\"}",
+            "already open",
+            "duplicate session name",
+        ),
+        (
+            "{\"op\": \"open\", \"session\": \"y\", \"dataset\": \"no-such-graph\"}",
+            "unknown catalog dataset",
+            "bad dataset",
+        ),
+        (
+            "{\"op\": \"close\", \"session\": \"nope\"}",
+            "unknown session",
+            "close unknown",
+        ),
+        ("{\"op\": \"query\", \"session\": \"hep\", \"algo\": \"infuser\"}", "'k'", "missing k"),
+    ];
+    for (line, needle, what) in menu {
+        expect_error(&mut client, line, needle, what);
+        assert_pool_still_healthy(&mut client, what);
+    }
+    handle.shutdown().unwrap();
+}
+
+/// An oversized request line is discarded through its newline and
+/// answered with a structured error; the SAME connection keeps its
+/// framing and serves the next (good) request.
+#[test]
+fn oversized_line_is_discarded_without_losing_stream_sync() {
+    let handle = start(4096);
+    let mut client = Client::connect(handle.addr()).unwrap();
+
+    // A syntactically valid but over-limit request: the server must
+    // reject it on size alone, without buffering it all.
+    let huge = format!(
+        "{{\"op\": \"query\", \"session\": \"hep\", \"algo\": \"infuser\", \"k\": 2, \
+         \"pad\": \"{}\"}}",
+        "x".repeat(64 * 1024)
+    );
+    let resp = client.request_line(&huge).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    assert!(
+        resp.get("error").and_then(|v| v.as_str()).unwrap().contains("too long"),
+        "got {}",
+        resp.to_string()
+    );
+    assert_pool_still_healthy(&mut client, "after oversized line");
+    handle.shutdown().unwrap();
+}
+
+/// Mid-request disconnects — half a line then EOF, and a vanishing
+/// client mid-burst — are clean drops: no response owed, and the server
+/// keeps serving everyone else.
+#[test]
+fn mid_request_disconnect_is_a_clean_drop() {
+    let handle = start(1 << 20);
+    let addr = handle.addr();
+
+    // Half a request line, then EOF.
+    {
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.write_all(b"{\"op\": \"query\", \"session\": \"hep\"").unwrap();
+        // Dropped here without a newline: the server must discard it.
+    }
+    // A full line then immediate disconnect before reading the response.
+    {
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.write_all(
+            b"{\"op\": \"query\", \"session\": \"hep\", \"algo\": \"infuser\", \"k\": 4}\n",
+        )
+        .unwrap();
+    }
+    // Give the server a beat to pick up both casualties, then prove the
+    // pool survives the drops (including the in-flight bookkeeping of
+    // the second one) and still answers a fresh client.
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    let mut client = Client::connect(addr).unwrap();
+    for round in 0..3 {
+        assert_pool_still_healthy(&mut client, &format!("post-disconnect round {round}"));
+    }
+    let stats = client.stats().unwrap();
+    let sessions = stats.get("sessions").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(
+        sessions[0].get("in_flight").and_then(|v| v.as_f64()),
+        Some(0.0),
+        "no stuck in-flight marks after disconnects"
+    );
+    handle.shutdown().unwrap();
+}
+
+/// Faults from several concurrent clients at once: half send garbage,
+/// half send good queries; the good half must see only good answers.
+#[test]
+fn concurrent_fault_and_good_traffic_stay_isolated() {
+    let handle = start(1 << 20);
+    let addr = handle.addr();
+    let mut threads = Vec::new();
+    for tid in 0..4usize {
+        threads.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            for round in 0..4usize {
+                if tid % 2 == 0 {
+                    let resp = client.request_line("{broken").unwrap();
+                    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+                } else {
+                    assert_pool_still_healthy(
+                        &mut client,
+                        &format!("good client {tid} round {round}"),
+                    );
+                }
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    handle.shutdown().unwrap();
+}

@@ -1,0 +1,218 @@
+//! Eviction boundary pins for the serve session pool: the
+//! tracked-bytes accounting at the exact budget edge. An open that
+//! would overshoot the global budget is rejected *before* any warm
+//! state is allocated; LRU eviction frees exactly the evicted
+//! session's charged bytes; and a re-prepared evicted session answers
+//! bit-identically to its pre-eviction self.
+
+use infuser::algo::ImResult;
+use infuser::api::{Query, RunOptions};
+use infuser::config::AlgoSpec;
+use infuser::gen::{self, GenSpec};
+use infuser::graph::WeightModel;
+use infuser::serve::client::{expect_ok, Client};
+use infuser::serve::pool::session_footprint;
+use infuser::serve::{PoolConfig, QueryOutcome, ServeOptions, Server, SessionPool};
+use infuser::util::json::{obj, Json};
+
+const W: WeightModel = WeightModel::Const(0.1);
+
+fn spec() -> GenSpec {
+    GenSpec::barabasi_albert(260, 2, 8)
+}
+
+fn opts() -> RunOptions {
+    // R a lane multiple: the dense-memo admission reserve then equals
+    // the actual warm bytes, so `used_bytes` is stable across true-ups
+    // and the boundary pins below are exact.
+    RunOptions::new().r_count(32).seed(3).threads(1)
+}
+
+/// The exact admission charge for `spec()` × `opts()` — computed the
+/// way the pool does, over the weighted (served) graph.
+fn footprint() -> u64 {
+    let g = gen::generate(&spec()).with_weights(W, opts().seed ^ 0x5E77);
+    session_footprint(&g, &opts())
+}
+
+fn pool_with(budget: Option<u64>, max_sessions: usize) -> SessionPool {
+    SessionPool::new(PoolConfig { memory_budget: budget, max_sessions })
+}
+
+fn open(pool: &SessionPool, name: &str) -> infuser::Result<infuser::serve::pool::OpenReport> {
+    pool.open_graph(name, "ba-260", gen::generate(&spec()), W, opts())
+}
+
+fn answered(pool: &SessionPool, name: &str, k: usize) -> ImResult {
+    match pool.query(name, &Query::new(AlgoSpec::InfuserMg, k)).unwrap() {
+        (QueryOutcome::Answered(r), _) => r,
+        _ => panic!("query on '{name}' did not answer"),
+    }
+}
+
+fn assert_bit_identical(a: &ImResult, b: &ImResult, what: &str) {
+    assert_eq!(a.seeds, b.seeds, "{what}: seeds");
+    assert_eq!(a.influence.to_bits(), b.influence.to_bits(), "{what}: sigma");
+    assert_eq!(a.counters, b.counters, "{what}: counters");
+    assert_eq!(a.tracked_bytes, b.tracked_bytes, "{what}: tracked bytes");
+}
+
+/// One byte under the footprint: rejected with the budget arithmetic,
+/// nothing charged, nothing resident, no eviction counted. At exactly
+/// the footprint: admitted, charged exactly [`session_footprint`].
+#[test]
+fn overshoot_rejected_before_allocation_and_exact_fit_admitted() {
+    let fp = footprint();
+
+    let pool = pool_with(Some(fp - 1), 8);
+    let err = open(&pool, "a").unwrap_err().to_string();
+    assert!(
+        err.contains("exceeding the pool memory budget"),
+        "rejection must carry the budget arithmetic: {err}"
+    );
+    let stats = pool.stats();
+    assert_eq!(stats.used_bytes, 0, "a rejected open must charge nothing");
+    assert!(stats.sessions.is_empty(), "a rejected open must leave nothing resident");
+    assert_eq!(stats.evictions, 0, "nothing resident, nothing to evict");
+
+    let pool = pool_with(Some(fp), 8);
+    let report = open(&pool, "a").unwrap();
+    assert_eq!(report.bytes, fp, "admission charge is exactly the published footprint");
+    assert!(report.evicted.is_empty());
+    assert_eq!(pool.stats().used_bytes, fp);
+}
+
+/// With R a lane multiple, the dense warm state built by a real query
+/// lands exactly on the admission reserve — the accounting identity the
+/// other pins in this file lean on.
+#[test]
+fn true_up_matches_the_admission_reserve_at_lane_aligned_r() {
+    let pool = pool_with(None, 4);
+    let report = open(&pool, "a").unwrap();
+    let _ = answered(&pool, "a", 4);
+    let stats = pool.stats();
+    assert_eq!(
+        stats.sessions[0].bytes, report.bytes,
+        "trued-up bytes (graph + warm) must equal the admission reserve"
+    );
+    assert_eq!(stats.used_bytes, report.bytes);
+}
+
+/// A third open over a two-session budget evicts exactly the LRU idle
+/// session and frees exactly its charged bytes — no more, no less.
+#[test]
+fn lru_eviction_frees_exactly_the_evicted_bytes() {
+    let fp = footprint();
+    let pool = pool_with(Some(2 * fp), 8);
+    open(&pool, "a").unwrap();
+    open(&pool, "b").unwrap();
+    // Touch "a" so "b" is the LRU entry.
+    let _ = answered(&pool, "a", 3);
+
+    let before = pool.stats();
+    assert_eq!(before.used_bytes, 2 * fp);
+    let b_bytes = before.sessions.iter().find(|s| s.name == "b").unwrap().bytes;
+
+    let report = open(&pool, "c").unwrap();
+    assert_eq!(report.evicted, vec!["b".to_string()], "LRU victim is b, not the just-used a");
+    let after = pool.stats();
+    let names: Vec<&str> = after.sessions.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(names, ["a", "c"]);
+    assert_eq!(
+        after.used_bytes,
+        before.used_bytes - b_bytes + report.bytes,
+        "eviction must free exactly b's charged bytes"
+    );
+    assert_eq!(after.evictions, 1);
+    // The accounting is internally consistent: the total equals the sum
+    // of the per-session charges.
+    let sum: u64 = after.sessions.iter().map(|s| s.bytes).sum();
+    assert_eq!(after.used_bytes, sum);
+}
+
+/// Evict a session that has served queries, re-open it with the same
+/// spec, and re-ask its pre-eviction queries: bit-identical answers
+/// (fresh warm state, same deterministic pipeline).
+#[test]
+fn evicted_session_reprepared_bit_identically() {
+    let fp = footprint();
+    let pool = pool_with(Some(2 * fp), 8);
+    open(&pool, "a").unwrap();
+    open(&pool, "b").unwrap();
+    let before_k4 = answered(&pool, "b", 4);
+    let before_k2 = answered(&pool, "b", 2);
+    // Make "b" the LRU entry, then displace it.
+    let _ = answered(&pool, "a", 3);
+    let report = open(&pool, "c").unwrap();
+    assert_eq!(report.evicted, vec!["b".to_string()]);
+
+    // Re-admitting "b" needs room again: close "c" to keep the budget
+    // arithmetic explicit rather than relying on cascading eviction.
+    pool.close("c").unwrap();
+    open(&pool, "b").unwrap();
+    let after_k4 = answered(&pool, "b", 4);
+    let after_k2 = answered(&pool, "b", 2);
+    assert_bit_identical(&before_k4, &after_k4, "k=4 across eviction");
+    assert_bit_identical(&before_k2, &after_k2, "k=2 across eviction");
+}
+
+/// The session-count cap evicts LRU exactly like the byte budget does.
+#[test]
+fn max_sessions_cap_evicts_lru() {
+    let pool = pool_with(None, 2);
+    open(&pool, "a").unwrap();
+    open(&pool, "b").unwrap();
+    let _ = answered(&pool, "a", 2);
+    let report = open(&pool, "c").unwrap();
+    assert_eq!(report.evicted, vec!["b".to_string()]);
+    assert_eq!(pool.stats().sessions.len(), 2);
+}
+
+/// The same boundary over the wire: a protocol `open` that displaces a
+/// tenant reports the victim in its `evicted` array, and the victim's
+/// name answers "unknown session" afterwards.
+#[test]
+fn wire_open_reports_the_eviction() {
+    let server = Server::bind(ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        pool: PoolConfig { memory_budget: None, max_sessions: 1 },
+        ..Default::default()
+    })
+    .unwrap();
+    server
+        .pool()
+        .open_graph("old", "ba-260", gen::generate(&spec()), W, opts())
+        .unwrap();
+    let handle = server.spawn().unwrap();
+    let mut client = Client::connect(handle.addr()).unwrap();
+    let resp = expect_ok(
+        client
+            .request(&obj(vec![
+                ("op", Json::Str("open".to_string())),
+                ("session", Json::Str("new".to_string())),
+                ("dataset", Json::Str("nethep-s".to_string())),
+                ("r", Json::Num(8.0)),
+                ("threads", Json::Num(1.0)),
+            ]))
+            .unwrap(),
+    )
+    .unwrap();
+    let evicted: Vec<&str> = resp
+        .get("evicted")
+        .and_then(|v| v.as_arr())
+        .unwrap()
+        .iter()
+        .filter_map(|v| v.as_str())
+        .collect();
+    assert_eq!(evicted, ["old"]);
+    let gone = client
+        .request(&obj(vec![
+            ("op", Json::Str("query".to_string())),
+            ("session", Json::Str("old".to_string())),
+            ("algo", Json::Str("infuser".to_string())),
+            ("k", Json::Num(2.0)),
+        ]))
+        .unwrap();
+    assert_eq!(gone.get("ok"), Some(&Json::Bool(false)));
+    handle.shutdown().unwrap();
+}

@@ -1,0 +1,178 @@
+//! Serve-layer timeout regressions: a per-request `timeout_ms` that
+//! expires mid-query returns the CLI's documented `-` outcome (and
+//! `oom` stays `oom`), while concurrent in-flight requests on the very
+//! same session complete unaffected and bit-identical. Also pins the
+//! budget precedence: a query override out-runs a session-level default
+//! timeout.
+
+use std::time::Duration;
+
+use infuser::algo::ImResult;
+use infuser::api::{ImSession, Query, RunOptions};
+use infuser::config::AlgoSpec;
+use infuser::gen::{self, GenSpec};
+use infuser::graph::WeightModel;
+use infuser::serve::client::{expect_ok, Client};
+use infuser::serve::{ServeOptions, Server, ServerHandle};
+use infuser::util::json::{obj, Json};
+
+const W: WeightModel = WeightModel::Const(0.05);
+
+fn spec() -> GenSpec {
+    // Big enough that a rebuild does real propagation work for the
+    // budget to interrupt; small enough to stay a unit-test fixture.
+    GenSpec::barabasi_albert(1200, 3, 2)
+}
+
+fn base_opts() -> RunOptions {
+    RunOptions::new().r_count(48).seed(5).threads(2)
+}
+
+fn serve(opts: RunOptions) -> ServerHandle {
+    let server =
+        Server::bind(ServeOptions { addr: "127.0.0.1:0".to_string(), ..Default::default() })
+            .unwrap();
+    server.pool().open_graph("big", "ba-1200", gen::generate(&spec()), W, opts).unwrap();
+    server.spawn().unwrap()
+}
+
+fn cold(opts: RunOptions, q: &Query) -> ImResult {
+    let g = gen::generate(&spec()).with_weights(W, opts.seed ^ 0x5E77);
+    ImSession::prepare(g, opts).unwrap().query(q).unwrap()
+}
+
+fn assert_matches(resp: &Json, expect: &ImResult, what: &str) {
+    assert_eq!(resp.get("outcome").and_then(|v| v.as_str()), Some("ok"), "{what}: outcome");
+    let seeds: Vec<u32> = resp
+        .get("seeds")
+        .and_then(|v| v.as_arr())
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as u32)
+        .collect();
+    assert_eq!(seeds, expect.seeds, "{what}: seeds");
+    let sigma = resp.get("sigma").and_then(|v| v.as_f64()).unwrap();
+    assert_eq!(sigma.to_bits(), expect.influence.to_bits(), "{what}: sigma");
+}
+
+fn query_json(k: usize, extra: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![
+        ("op", Json::Str("query".to_string())),
+        ("session", Json::Str("big".to_string())),
+        ("algo", Json::Str("infuser".to_string())),
+        ("k", Json::Num(k as f64)),
+    ];
+    pairs.extend(extra);
+    obj(pairs)
+}
+
+/// While one client's requests keep timing out mid-rebuild (seed
+/// override + `timeout_ms: 0` forces fresh propagation under an expired
+/// budget), a concurrent client on the SAME session completes a whole
+/// K-ladder bit-identically. Afterwards the session is clean: no stuck
+/// in-flight marks, and the timed-out seed left no half-built state.
+#[test]
+fn timeout_mid_query_returns_dash_while_concurrent_requests_complete() {
+    let opts = base_opts();
+    let handle = serve(opts);
+    let addr = handle.addr();
+
+    let victim = std::thread::spawn(move || {
+        let mut client = Client::connect(addr).unwrap();
+        for round in 0..3 {
+            let resp = expect_ok(
+                client
+                    .request(&query_json(
+                        8,
+                        vec![("seed", Json::Num(999.0)), ("timeout_ms", Json::Num(0.0))],
+                    ))
+                    .unwrap(),
+            )
+            .unwrap();
+            assert_eq!(
+                resp.get("outcome").and_then(|v| v.as_str()),
+                Some("-"),
+                "round {round}: an expired budget must answer the CLI's '-' cell, got {}",
+                resp.to_string()
+            );
+            assert!(
+                resp.get("seeds").is_none(),
+                "round {round}: a timed-out query must carry no seed payload"
+            );
+        }
+    });
+    let survivor = std::thread::spawn(move || {
+        let mut client = Client::connect(addr).unwrap();
+        for k in [4usize, 8, 8, 2] {
+            let resp = expect_ok(client.request(&query_json(k, vec![])).unwrap()).unwrap();
+            let want = cold(opts, &Query::new(AlgoSpec::InfuserMg, k));
+            assert_matches(&resp, &want, &format!("survivor k={k}"));
+        }
+    });
+    victim.join().unwrap();
+    survivor.join().unwrap();
+
+    // The session is still clean after the interleaved failures.
+    let mut client = Client::connect(addr).unwrap();
+    let resp = expect_ok(client.request(&query_json(6, vec![])).unwrap()).unwrap();
+    let want = cold(opts, &Query::new(AlgoSpec::InfuserMg, 6));
+    assert_matches(&resp, &want, "post-storm query");
+    let stats = client.stats().unwrap();
+    let sessions = stats.get("sessions").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(sessions[0].get("in_flight").and_then(|v| v.as_f64()), Some(0.0));
+    handle.shutdown().unwrap();
+}
+
+/// Budget precedence at the serve layer: a session opened with a
+/// hopeless default timeout answers `-` to plain queries, but a
+/// per-request `timeout_secs` override out-runs the default and gets
+/// the bit-identical answer.
+#[test]
+fn per_request_override_beats_the_session_default_timeout() {
+    let strangled = base_opts().timeout(Some(Duration::from_nanos(1)));
+    let handle = serve(strangled);
+    let mut client = Client::connect(handle.addr()).unwrap();
+
+    let resp = expect_ok(client.request(&query_json(4, vec![])).unwrap()).unwrap();
+    assert_eq!(
+        resp.get("outcome").and_then(|v| v.as_str()),
+        Some("-"),
+        "the session default must strangle a plain query"
+    );
+
+    let resp = expect_ok(
+        client
+            .request(&query_json(4, vec![("timeout_secs", Json::Num(3600.0))]))
+            .unwrap(),
+    )
+    .unwrap();
+    let want = cold(strangled, &Query::new(AlgoSpec::InfuserMg, 4).timeout(Duration::from_secs(3600)));
+    assert_matches(&resp, &want, "override query");
+    handle.shutdown().unwrap();
+}
+
+/// The `oom` cell crosses the wire too: an IMM query under a 1-byte RR
+/// memory cap answers `outcome: "oom"` — and the session keeps serving.
+#[test]
+fn imm_memory_cap_answers_oom_over_the_wire() {
+    let opts = base_opts().imm_memory_limit(Some(1));
+    let handle = serve(opts);
+    let mut client = Client::connect(handle.addr()).unwrap();
+
+    let resp = expect_ok(
+        client
+            .request(&query_json(2, vec![("algo", Json::Str("imm:0.5".to_string()))]))
+            .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(
+        resp.get("outcome").and_then(|v| v.as_str()),
+        Some("oom"),
+        "a tripped IMM memory cap must answer the CLI's 'oom' cell, got {}",
+        resp.to_string()
+    );
+    let resp = expect_ok(client.request(&query_json(3, vec![])).unwrap()).unwrap();
+    let want = cold(opts, &Query::new(AlgoSpec::InfuserMg, 3));
+    assert_matches(&resp, &want, "infuser query after the imm oom");
+    handle.shutdown().unwrap();
+}
