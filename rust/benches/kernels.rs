@@ -22,9 +22,15 @@
 //!   repeat/K-ladder queries, seeds asserted identical while timing
 //!   (dumped under `"session_reuse"` with `cold_run_secs` /
 //!   `warm_query_secs`).
+//! * `rr_store` — the IMM RR-pool layout sweep: the same IMM run under
+//!   the compressed packed store vs the legacy Vec-per-set layout, seeds
+//!   asserted bit-identical while timing; reports per-store footprint and
+//!   the compression ratio (dumped under `"rr_store_sweep"` with
+//!   `packed_over_legacy_bytes`, asserted ≤ 0.5).
 //!
 //! `INFUSER_BENCH_SMOKE=1` shrinks everything to CI-smoke scale.
 
+use infuser::algo::imm::{Imm, ImmParams};
 use infuser::algo::infuser::{InfuserMg, InfuserParams};
 use infuser::algo::Budget;
 use infuser::api::{ImSession, Query, RunOptions};
@@ -35,6 +41,7 @@ use infuser::engine::{Engine, NativeEngine};
 use infuser::gen::{self, GenSpec};
 use infuser::graph::weights::prob_to_threshold;
 use infuser::graph::{OrderStrategy, WeightModel};
+use infuser::rr::RrStoreKind;
 use infuser::labelprop::{Mode, PropagateOpts};
 use infuser::runtime::Schedule;
 use infuser::sampling::xr_stream_padded;
@@ -400,10 +407,99 @@ fn bench_session(env: &BenchEnv) -> infuser::Result<(Table, Json)> {
     Ok((t, json))
 }
 
+/// The IMM RR-pool layout sweep: the identical sampling + selection run
+/// under the compressed packed store and the legacy Vec-per-set layout.
+/// Seeds are asserted bit-identical across the stores while timing (the
+/// compressed store is a memory optimization, never a results change),
+/// and the headline number — packed bytes over legacy bytes — is
+/// asserted ≤ 0.5 in-bench so a codec regression fails loudly.
+fn bench_rr_store(env: &BenchEnv) -> infuser::Result<(Table, Json)> {
+    let mut t = Table::new("IMM RR-store sweep — packed vs legacy footprint");
+    t.header(vec![
+        "store".into(),
+        "rr sets".into(),
+        "rr entries".into(),
+        "bytes".into(),
+        "time (s)".into(),
+    ]);
+    // Supercritical edge probability: RR sets reach the giant component,
+    // so packed blocks land on the dense bitmap branch where the codec
+    // earns its keep (a subcritical pool of singletons compresses ~1.1×,
+    // not the order-of-magnitude the store exists for).
+    let spec = if env.smoke {
+        GenSpec::erdos_renyi(400, 1_600, 3)
+    } else {
+        GenSpec::erdos_renyi(20_000, 80_000, 3)
+    };
+    let g = gen::generate(&spec).with_weights(WeightModel::Const(0.2), 3);
+    let k = env.k.max(4);
+    let mut entries: Vec<Json> = Vec::new();
+    let mut results = Vec::new();
+    for kind in RrStoreKind::ALL {
+        let (res, secs) = time_it(|| {
+            Imm::new(ImmParams {
+                k,
+                epsilon: 0.5,
+                common: RunOptions::new().seed(9).threads(env.threads).rr_store(kind),
+                ..Default::default()
+            })
+            .run(&g, &Budget::unlimited())
+        });
+        let res = res?;
+        let counter = |name: &str| {
+            res.counters.iter().find(|c| c.0 == name).map_or(0.0, |c| c.1)
+        };
+        let (rr_sets, rr_entries) = (counter("rr_sets"), counter("rr_entries"));
+        t.row(vec![
+            kind.label().into(),
+            format!("{rr_sets:.0}"),
+            format!("{rr_entries:.0}"),
+            res.tracked_bytes.to_string(),
+            format!("{secs:.3}"),
+        ]);
+        entries.push(obj(vec![
+            ("store", Json::Str(kind.label().into())),
+            ("rr_sets", Json::Num(rr_sets)),
+            ("rr_entries", Json::Num(rr_entries)),
+            ("tracked_bytes", Json::Num(res.tracked_bytes as f64)),
+            ("secs", Json::Num(secs)),
+        ]));
+        results.push(res);
+    }
+    // `RrStoreKind::ALL` is [Packed, Legacy].
+    let (packed, legacy) = (&results[0], &results[1]);
+    assert_eq!(
+        packed.seeds, legacy.seeds,
+        "packed and legacy stores must select identical seeds"
+    );
+    let ratio = packed.tracked_bytes as f64 / legacy.tracked_bytes as f64;
+    assert!(
+        ratio <= 0.5,
+        "packed must be ≤ 0.5× legacy bytes, got {ratio:.3} ({} vs {})",
+        packed.tracked_bytes,
+        legacy.tracked_bytes
+    );
+    t.row(vec![
+        "packed/legacy".into(),
+        "-".into(),
+        "-".into(),
+        format!("{ratio:.3}"),
+        "-".into(),
+    ]);
+    let json = obj(vec![
+        ("k", Json::Num(k as f64)),
+        ("epsilon", Json::Num(0.5)),
+        ("smoke", Json::Bool(env.smoke)),
+        ("sweep", Json::Arr(entries)),
+        ("packed_over_legacy_bytes", Json::Num(ratio)),
+    ]);
+    Ok((t, json))
+}
+
 fn main() -> infuser::Result<()> {
     let env = BenchEnv::load()?;
     env.banner(
-        "Kernel microbenches — VECLABEL lane sweep + propagation engines + ordering + worker-scaling + session-reuse sweeps",
+        "Kernel microbenches — VECLABEL lane sweep + propagation engines + ordering + worker-scaling + session-reuse + rr-store sweeps",
         "AVX2 processes B lanes/step (8/16/32 = 1/2/4 registers); fused batching serves all R per edge visit",
     );
     let (t1, sweep_json) = bench_veclabel(&env);
@@ -411,7 +507,8 @@ fn main() -> infuser::Result<()> {
     let (t3, order_json) = bench_order(&env);
     let (t4, thread_json) = bench_threads(&env);
     let (t5, session_json) = bench_session(&env)?;
-    env.emit("kernels", &[&t1, &t2, &t3, &t4, &t5]);
+    let (t6, rr_json) = bench_rr_store(&env)?;
+    env.emit("kernels", &[&t1, &t2, &t3, &t4, &t5, &t6]);
     let mut combined = match sweep_json {
         Json::Obj(map) => map,
         other => BTreeMap::from([("veclabel".to_string(), other)]),
@@ -419,6 +516,7 @@ fn main() -> infuser::Result<()> {
     combined.insert("order_sweep".to_string(), order_json);
     combined.insert("thread_sweep".to_string(), thread_json);
     combined.insert("session_reuse".to_string(), session_json);
+    combined.insert("rr_store_sweep".to_string(), rr_json);
     env.emit_json("kernels", &Json::Obj(combined));
     Ok(())
 }

@@ -6,10 +6,15 @@
 //! biggest graphs), while INFUSER-MG's footprint is *flat across p* —
 //! fusing never materializes samples; the label matrix depends only on
 //! (n, R). An explicit per-setting flatness check is printed.
+//!
+//! The grid runs IMM under the default *packed* RR store; a supplemental
+//! legacy-store rerun of the IMM(ε=0.5) column reports peak bytes for
+//! both layouts and the packed/legacy compression ratio per dataset.
 
 use infuser::bench::BenchEnv;
 use infuser::config::{AlgoSpec, DatasetRef, ExperimentConfig};
 use infuser::coordinator::{render_grid, Outcome, Runner};
+use infuser::rr::RrStoreKind;
 
 fn main() -> infuser::Result<()> {
     let env = BenchEnv::load()?;
@@ -31,6 +36,13 @@ fn main() -> infuser::Result<()> {
             AlgoSpec::InfuserSketch,
         ],
         ..env.base_config()
+    };
+    // Legacy-store rerun of the IMM(ε=0.5) column only: same grid axes,
+    // same seeds, only the RR-pool layout flipped.
+    let legacy_cfg = ExperimentConfig {
+        algos: vec![AlgoSpec::Imm { epsilon: 0.5 }],
+        options: cfg.options.rr_store(RrStoreKind::Legacy),
+        ..cfg.clone()
     };
     let runner = Runner::new(cfg);
     let cells = runner.run_grid()?;
@@ -71,6 +83,34 @@ fn main() -> infuser::Result<()> {
             bytes_of(d, "Infuser-MG", "p=0.1"),
         );
         println!("  {d:<16} sketch/dense {ratio:>8}");
+    }
+
+    // RR-store compression: peak bytes per layout and the packed/legacy
+    // ratio, at the densest constant setting (big RR sets — where the
+    // codec's bitmap branch does the heavy lifting).
+    let legacy_cells = Runner::new(legacy_cfg).run_grid()?;
+    let legacy_bytes_of = |d: &str, setting: &str| {
+        legacy_cells
+            .iter()
+            .find(|c| c.dataset == d && c.algo == "IMM(e=0.5)" && c.setting == setting)
+            .and_then(|c| match &c.outcome {
+                Outcome::Done { bytes, .. } => Some(*bytes as f64),
+                _ => None,
+            })
+    };
+    println!("per-dataset RR-store footprint, IMM(e=0.5) at p=0.1:");
+    for d in env.dataset_ids() {
+        let packed = bytes_of(d, "IMM(e=0.5)", "p=0.1");
+        let legacy = legacy_bytes_of(d, "p=0.1");
+        let fmt = |b: Option<f64>| {
+            b.map_or_else(|| "oom/err".to_string(), |b| format!("{:.3} GB", b / 1e9))
+        };
+        let ratio = infuser::bench::ratio_cell(packed, legacy);
+        println!(
+            "  {d:<16} packed {:>10}   legacy {:>10}   packed/legacy {ratio:>8}",
+            fmt(packed),
+            fmt(legacy)
+        );
     }
     Ok(())
 }

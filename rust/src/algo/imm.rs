@@ -20,14 +20,16 @@ use super::{Budget, ImResult};
 use crate::api::RunOptions;
 use crate::graph::Graph;
 use crate::rng::{Pcg32, Rng32};
+use crate::rr::RrStore;
 use crate::util::ThreadPool;
 use crate::VertexId;
 
 /// IMM parameters: the RIS-specific knobs plus the shared [`RunOptions`]
 /// geometry, of which IMM uses `seed`, `threads`, `schedule` (RR-set
 /// generation is result-invariant: each RR set owns a deterministic RNG
-/// stream) and `imm_memory_limit` (the cap on tracked RR bytes that
-/// models the paper's OOM "-" cells).
+/// stream), `rr_store` (the pool layout — a pure memory knob, see
+/// [`crate::rr`]) and `imm_memory_limit` (the cap on tracked RR bytes
+/// that models the paper's OOM "-" cells).
 #[derive(Clone, Copy, Debug)]
 pub struct ImmParams {
     /// Seed-set size K.
@@ -51,63 +53,26 @@ pub struct Imm {
     params: ImmParams,
 }
 
-/// A growable pool of RR sets with the inverted index used by coverage.
-struct RrPool {
-    /// Flattened RR sets (`sets[i]` = vertices of RR set `i`).
-    sets: Vec<Vec<VertexId>>,
-    /// Total stored vertex entries (memory tracking).
-    entries: u64,
-}
-
-/// Bytes charged per stored RR entry: 4 for the `VertexId` itself plus 4
-/// for its slot in the inverted index that selection materializes (one
-/// `u32` RR id per entry). Charging the index up front keeps the
-/// `memory_limit` check honest about the true Table-6 peak — the index is
-/// always built before any seed is selected, so by the time the limit
-/// could matter the entry really does cost 8 bytes.
-const RR_ENTRY_BYTES: u64 = 4 + 4;
-
-/// Per-set `Vec` header overhead (ptr + len + cap on 64-bit).
-const RR_SET_HEADER_BYTES: u64 = 24;
-
-impl RrPool {
-    fn new() -> Self {
-        Self { sets: Vec::new(), entries: 0 }
-    }
-
-    fn len(&self) -> usize {
-        self.sets.len()
-    }
-
-    fn bytes(&self) -> u64 {
-        self.entries * RR_ENTRY_BYTES + self.sets.len() as u64 * RR_SET_HEADER_BYTES
-    }
-
-    /// What [`RrPool::bytes`] would report after appending a set of
-    /// `extra_entries` vertices — the pre-append admission check, so a
-    /// `memory_limit` is enforced *before* the pool overshoots it.
-    fn bytes_with(&self, extra_entries: usize) -> u64 {
-        (self.entries + extra_entries as u64) * RR_ENTRY_BYTES
-            + (self.sets.len() as u64 + 1) * RR_SET_HEADER_BYTES
-    }
-}
-
 /// One RR set: sampled BFS from a uniform root (undirected ⇒ reverse =
 /// forward). `visited` is an epoch array shared across calls per worker.
+/// The result is left in `out`, **sorted ascending** (the store contract;
+/// selection is order-independent within a set, so sorting is
+/// behavior-neutral) — callers copy or encode from the buffer instead of
+/// taking ownership, so sampling allocates nothing per set.
 fn rr_set(
     graph: &Graph,
     root: VertexId,
     rng: &mut Pcg32,
     visited: &mut [u32],
     epoch: u32,
-    queue: &mut Vec<VertexId>,
-) -> Vec<VertexId> {
-    queue.clear();
+    out: &mut Vec<VertexId>,
+) {
+    out.clear();
     visited[root as usize] = epoch;
-    queue.push(root);
+    out.push(root);
     let mut head = 0;
-    while head < queue.len() {
-        let u = queue[head];
+    while head < out.len() {
+        let u = out[head];
         head += 1;
         let (a, b) = (
             graph.xadj[u as usize] as usize,
@@ -120,11 +85,11 @@ fn rr_set(
             }
             if rng.next_f64() <= f64::from(graph.weights[idx]) {
                 visited[v as usize] = epoch;
-                queue.push(v);
+                out.push(v);
             }
         }
     }
-    queue.clone()
+    out.sort_unstable();
 }
 
 /// `log C(n, k)` via the log-gamma-free telescoping sum.
@@ -133,85 +98,25 @@ fn log_binom(n: usize, k: usize) -> f64 {
     (0..k).map(|i| (((n - i) as f64) / ((i + 1) as f64)).ln()).sum()
 }
 
-/// Greedy max-coverage over the RR pool: pick `k` vertices covering the
-/// most sets (lazy-greedy). Returns `(seeds, covered_fraction)`.
-fn max_coverage(pool: &RrPool, n: usize, k: usize) -> (Vec<VertexId>, f64) {
-    // Inverted index: vertex → RR ids containing it.
-    let mut deg = vec![0u32; n];
-    for set in &pool.sets {
-        for &v in set {
-            deg[v as usize] += 1;
-        }
-    }
-    let mut offsets = vec![0usize; n + 1];
-    for v in 0..n {
-        offsets[v + 1] = offsets[v] + deg[v] as usize;
-    }
-    let mut index = vec![0u32; offsets[n]];
-    let mut cursor = offsets.clone();
-    for (i, set) in pool.sets.iter().enumerate() {
-        for &v in set {
-            index[cursor[v as usize]] = i as u32;
-            cursor[v as usize] += 1;
-        }
-    }
-
-    let covered = std::cell::RefCell::new(vec![false; pool.len()]);
-    let covered_count = std::cell::Cell::new(0usize);
-    let gains: Vec<f64> = deg.iter().map(|&d| f64::from(d)).collect();
-    let mut seeds = Vec::with_capacity(k);
-    // Lazy greedy via the shared CELF queue (coverage is submodular).
-    let budget = Budget::unlimited();
-    let res = super::celf::celf_select(
-        &gains,
-        k,
-        |v, _| {
-            let cov = covered.borrow();
-            index[offsets[v as usize]..offsets[v as usize + 1]]
-                .iter()
-                .filter(|&&i| !cov[i as usize])
-                .count() as f64
-        },
-        |v, _| {
-            let mut cov = covered.borrow_mut();
-            for &i in &index[offsets[v as usize]..offsets[v as usize + 1]] {
-                if !cov[i as usize] {
-                    cov[i as usize] = true;
-                    covered_count.set(covered_count.get() + 1);
-                }
-            }
-            seeds.push(v);
-        },
-        &budget,
-    );
-    let _ = res; // infallible with unlimited budget
-    let frac = if pool.len() == 0 {
-        0.0
-    } else {
-        covered_count.get() as f64 / pool.len() as f64
-    };
-    (seeds, frac)
-}
-
 impl Imm {
     /// Create with parameters.
     pub fn new(params: ImmParams) -> Self {
         Self { params }
     }
 
-    /// Generate RR sets in parallel until the pool holds `target` sets.
+    /// Generate RR sets in parallel until the store holds `target` sets.
     fn extend_pool(
         &self,
         graph: &Graph,
         tp: &ThreadPool,
-        pool_sets: &mut RrPool,
+        store: &mut RrStore,
         target: usize,
         round: &mut u64,
         budget: &Budget,
     ) -> crate::Result<()> {
         let p = self.params;
         let n = graph.num_vertices();
-        let need = target.saturating_sub(pool_sets.len());
+        let need = target.saturating_sub(store.len());
         if need == 0 {
             return Ok(());
         }
@@ -219,37 +124,46 @@ impl Imm {
         let base = *round;
         *round += need as u64;
         // Each RR set gets its own deterministic RNG stream ⇒ results are
-        // independent of τ and of batching.
+        // independent of τ and of batching. Workers hand back one flat
+        // (vertices, lengths) pair each — sampling allocates no per-set
+        // `Vec`, and the main thread appends from the slices.
         let per_thread = need.div_ceil(tp.threads());
-        let batches: Vec<Vec<Vec<VertexId>>> = tp.map(tp.threads(), |t| {
+        let batches: Vec<(Vec<VertexId>, Vec<u32>)> = tp.map(tp.threads(), |t| {
             let lo = t * per_thread;
             let hi = ((t + 1) * per_thread).min(need);
             let mut visited = vec![u32::MAX; n];
             let mut queue = Vec::new();
-            let mut out = Vec::with_capacity(hi.saturating_sub(lo));
+            let mut data = Vec::new();
+            let mut lens = Vec::with_capacity(hi.saturating_sub(lo));
             for i in lo..hi {
                 let id = base + i as u64;
                 let mut rng =
                     Pcg32::from_seed_stream(p.common.seed, id.wrapping_mul(2).wrapping_add(1));
                 let root = rng.below(n as u32);
-                out.push(rr_set(graph, root, &mut rng, &mut visited, i as u32, &mut queue));
+                rr_set(graph, root, &mut rng, &mut visited, i as u32, &mut queue);
+                data.extend_from_slice(&queue);
+                lens.push(queue.len() as u32);
             }
-            out
+            (data, lens)
         });
-        for batch in batches {
-            for set in batch {
+        for (data, lens) in &batches {
+            let mut off = 0usize;
+            for &len in lens {
+                let set = &data[off..off + len as usize];
+                off += len as usize;
                 // Admission check *before* appending: the set that would
                 // push the pool past the limit is rejected, so tracked
                 // bytes never overshoot the configured budget (Table 6's
-                // OOM cells model a cap, not a high-water mark).
+                // OOM cells model a cap, not a high-water mark). The
+                // packed store predicts its exact post-append bytes from
+                // the encoded length without writing anything.
                 if let Some(limit) = p.common.imm_memory_limit {
-                    let would_be = pool_sets.bytes_with(set.len());
+                    let would_be = store.bytes_after(set);
                     if would_be > limit {
                         return Err(super::AlgoError::OutOfMemory(would_be).into());
                     }
                 }
-                pool_sets.entries += set.len() as u64;
-                pool_sets.sets.push(set);
+                store.append(set);
             }
         }
         budget.check()?;
@@ -282,7 +196,7 @@ impl Imm {
 
         // One persistent worker pool for every sampling round.
         let tp = ThreadPool::with_schedule(p.common.threads, p.common.schedule);
-        let mut pool = RrPool::new();
+        let mut pool = RrStore::new(p.common.rr_store, n);
         let mut round_counter = 0u64;
         let mut lb = 1.0f64;
         let max_rounds = (nf.log2() as usize).max(1);
@@ -290,7 +204,7 @@ impl Imm {
             let x = nf / 2f64.powi(i as i32);
             let theta_i = (lambda_p / x).ceil() as usize;
             self.extend_pool(graph, &tp, &mut pool, theta_i, &mut round_counter, budget)?;
-            let (_, frac) = max_coverage(&pool, n, k);
+            let (_, frac) = pool.max_coverage(k);
             if nf * frac >= (1.0 + eps_p) * x {
                 lb = nf * frac / (1.0 + eps_p);
                 break;
@@ -299,15 +213,16 @@ impl Imm {
         let theta = (lambda_star / lb).ceil() as usize;
         self.extend_pool(graph, &tp, &mut pool, theta, &mut round_counter, budget)?;
 
-        let (seeds, frac) = max_coverage(&pool, n, k);
+        let (seeds, frac) = pool.max_coverage(k);
         Ok(ImResult {
             seeds,
             influence: frac * nf,
-            // The inverted index is already part of the per-entry charge.
+            // Exact store bytes: arena payload + offsets + histogram for
+            // packed, the per-entry id + index charge for legacy.
             tracked_bytes: pool.bytes(),
             counters: vec![
                 ("rr_sets", pool.len() as f64),
-                ("rr_entries", pool.entries as f64),
+                ("rr_entries", pool.entries() as f64),
                 ("theta", theta as f64),
             ],
         })
@@ -319,6 +234,7 @@ mod tests {
     use super::*;
     use crate::gen::GenSpec;
     use crate::graph::{GraphBuilder, WeightModel};
+    use crate::rr::RrStoreKind;
 
     fn star(n: usize, p: f32) -> Graph {
         let mut b = GraphBuilder::new(n);
@@ -341,8 +257,9 @@ mod tests {
         let mut rng = Pcg32::seeded(1, 1);
         let mut visited = vec![u32::MAX; 10];
         let mut queue = Vec::new();
-        let set = rr_set(&g, 3, &mut rng, &mut visited, 0, &mut queue);
-        assert_eq!(set.len(), 10);
+        rr_set(&g, 3, &mut rng, &mut visited, 0, &mut queue);
+        // The whole component, sorted ascending (the store contract).
+        assert_eq!(queue, (0..10).collect::<Vec<VertexId>>());
     }
 
     #[test]
@@ -386,72 +303,75 @@ mod tests {
     }
 
     #[test]
-    fn rr_pool_accounting_is_explicit_per_entry_and_per_set() {
-        // 4 bytes VertexId + 4 bytes inverted-index slot per entry, plus
-        // one Vec header per set — pinned so the OOM model stays honest.
-        let mut pool = RrPool::new();
-        assert_eq!(pool.bytes(), 0);
-        assert_eq!(pool.bytes_with(3), 3 * 8 + 24);
-        pool.entries += 3;
-        pool.sets.push(vec![1, 2, 3]);
-        assert_eq!(pool.bytes(), 3 * 8 + 24);
-        assert_eq!(pool.bytes_with(2), 5 * 8 + 2 * 24);
-    }
-
-    #[test]
     fn memory_limit_is_enforced_before_append_at_the_boundary() {
         // Learn the exact byte count a fixed sampling target produces,
         // then rerun with the limit at, and one below, that boundary: the
         // exact limit must admit every set, one byte less must reject —
         // and in the failing run the pool must never overshoot the limit.
+        // Both store layouts obey the same pre-append admission contract.
         let g = crate::gen::generate(&GenSpec::erdos_renyi(120, 480, 3))
             .with_weights(WeightModel::Const(0.2), 5);
         let target = 64usize;
-        let run_with = |limit: Option<u64>| {
-            let imm = Imm::new(ImmParams {
-                k: 4,
-                epsilon: 0.3,
-                common: RunOptions::new().seed(9).threads(2).imm_memory_limit(limit),
-                ..Default::default()
-            });
-            let tp = ThreadPool::new(2);
-            let mut pool = RrPool::new();
-            let mut round = 0u64;
-            let res = imm.extend_pool(&g, &tp, &mut pool, target, &mut round, &Budget::unlimited());
-            (res, pool)
-        };
-        let (ok, full_pool) = run_with(None);
-        ok.unwrap();
-        let exact = full_pool.bytes();
-        assert_eq!(full_pool.len(), target);
+        for kind in RrStoreKind::ALL {
+            let run_with = |limit: Option<u64>| {
+                let imm = Imm::new(ImmParams {
+                    k: 4,
+                    epsilon: 0.3,
+                    common: RunOptions::new()
+                        .seed(9)
+                        .threads(2)
+                        .rr_store(kind)
+                        .imm_memory_limit(limit),
+                    ..Default::default()
+                });
+                let tp = ThreadPool::new(2);
+                let mut store = RrStore::new(kind, g.num_vertices());
+                let mut round = 0u64;
+                let res =
+                    imm.extend_pool(&g, &tp, &mut store, target, &mut round, &Budget::unlimited());
+                (res, store)
+            };
+            let (ok, full_pool) = run_with(None);
+            ok.unwrap();
+            let exact = full_pool.bytes();
+            assert_eq!(full_pool.len(), target);
 
-        let (at_limit, pool_at) = run_with(Some(exact));
-        at_limit.unwrap();
-        assert_eq!(pool_at.bytes(), exact, "exact limit admits everything");
+            let (at_limit, pool_at) = run_with(Some(exact));
+            at_limit.unwrap();
+            assert_eq!(
+                pool_at.bytes(),
+                exact,
+                "exact limit admits everything ({})",
+                kind.label()
+            );
 
-        let (err, pool_under) = run_with(Some(exact - 1));
-        assert!(super::super::is_oom(&err.unwrap_err()));
-        assert!(
-            pool_under.bytes() <= exact - 1,
-            "rejection must happen before the overshooting append: {} > {}",
-            pool_under.bytes(),
-            exact - 1
-        );
+            let (err, pool_under) = run_with(Some(exact - 1));
+            assert!(super::super::is_oom(&err.unwrap_err()));
+            assert!(
+                pool_under.bytes() <= exact - 1,
+                "rejection must happen before the overshooting append ({}): {} > {}",
+                kind.label(),
+                pool_under.bytes(),
+                exact - 1
+            );
+        }
     }
 
     #[test]
     fn memory_limit_trips_oom() {
         let g = crate::gen::generate(&GenSpec::erdos_renyi(300, 1200, 7))
             .with_weights(WeightModel::Const(0.3), 1);
-        let out = Imm::new(ImmParams {
-            k: 10,
-            epsilon: 0.13,
-            common: RunOptions::new().seed(2).imm_memory_limit(Some(10_000)),
-            ..Default::default()
-        })
-        .run(&g, &Budget::unlimited());
-        assert!(out.is_err());
-        assert!(super::super::is_oom(&out.unwrap_err()));
+        for kind in RrStoreKind::ALL {
+            let out = Imm::new(ImmParams {
+                k: 10,
+                epsilon: 0.13,
+                common: RunOptions::new().seed(2).rr_store(kind).imm_memory_limit(Some(10_000)),
+                ..Default::default()
+            })
+            .run(&g, &Budget::unlimited());
+            assert!(out.is_err(), "{} must trip", kind.label());
+            assert!(super::super::is_oom(&out.unwrap_err()));
+        }
     }
 
     #[test]

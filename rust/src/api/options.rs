@@ -28,6 +28,7 @@
 use crate::algo::infuser::MemoKind;
 use crate::algo::Budget;
 use crate::graph::OrderStrategy;
+use crate::rr::RrStoreKind;
 use crate::labelprop::{Mode, PropagateOpts, DEFAULT_EDGE_BLOCK};
 use crate::runtime::pool::{default_threads, Schedule};
 use crate::simd::{Backend, LaneWidth};
@@ -66,6 +67,11 @@ pub struct RunOptions {
     pub order: OrderStrategy,
     /// Memoization backend for the CELF phase (dense / sketch).
     pub memo: MemoKind,
+    /// RR-set pool layout for IMM ([`crate::rr`]): `packed` compressed
+    /// arenas (default) or the `legacy` Vec-per-set inverted-index store.
+    /// A pure memory knob — seeds, σ̂, and counters are bit-identical
+    /// across layouts; other algorithms ignore it.
+    pub rr_store: RrStoreKind,
     /// Wall-clock budget per run/query (`None` = unlimited). Armed fresh
     /// by [`RunOptions::budget`] each time; entry points that accept an
     /// explicit [`Budget`] ignore it.
@@ -88,6 +94,7 @@ impl Default for RunOptions {
             block_size: DEFAULT_EDGE_BLOCK,
             order: OrderStrategy::Identity,
             memo: MemoKind::Dense,
+            rr_store: RrStoreKind::Packed,
             timeout: None,
             imm_memory_limit: None,
         }
@@ -149,6 +156,10 @@ impl RunOptions {
         memo: MemoKind
     );
     setter!(
+        /// Set IMM's RR-set store layout.
+        rr_store: RrStoreKind
+    );
+    setter!(
         /// Set the per-query wall-clock budget.
         timeout: Option<Duration>
     );
@@ -198,7 +209,8 @@ impl RunOptions {
     ///   "r": 256, "seed": 0, "threads": 16,
     ///   "backend": "auto", "lanes": 16, "memo": "dense",
     ///   "schedule": "steal", "block_size": 4096,
-    ///   "order": "identity", "timeout_secs": 600
+    ///   "order": "identity", "rr_store": "packed",
+    ///   "timeout_secs": 600
     /// }
     /// ```
     ///
@@ -252,6 +264,9 @@ impl RunOptions {
         if let Some(m) = json.get("memo").and_then(|v| v.as_str()) {
             opts.memo = MemoKind::parse(m)?;
         }
+        if let Some(s) = json.get("rr_store").and_then(|v| v.as_str()) {
+            opts.rr_store = RrStoreKind::parse(s)?;
+        }
         if let Some(t) = json.get("timeout_secs").and_then(|v| v.as_f64()) {
             opts.timeout = Some(parse_timeout_secs(t)?);
         }
@@ -301,6 +316,7 @@ mod tests {
             .block_size(128)
             .order(OrderStrategy::Degree)
             .memo(MemoKind::Sketch)
+            .rr_store(RrStoreKind::Legacy)
             .timeout(Some(Duration::from_secs(5)))
             .imm_memory_limit(Some(1 << 20));
         assert_eq!(opts.r_count, 64);
@@ -311,6 +327,7 @@ mod tests {
         assert_eq!(opts.block_size, 128);
         assert_eq!(opts.order, OrderStrategy::Degree);
         assert_eq!(opts.memo, MemoKind::Sketch);
+        assert_eq!(opts.rr_store, RrStoreKind::Legacy);
         assert_eq!(opts.timeout, Some(Duration::from_secs(5)));
         assert_eq!(opts.imm_memory_limit, Some(1 << 20));
     }
@@ -340,7 +357,8 @@ mod tests {
         let json = Json::parse(
             r#"{"r": 64, "seed": 3, "threads": 2, "lanes": 16,
                 "schedule": "dynamic", "block_size": 512,
-                "order": "bfs", "memo": "sketch", "timeout_secs": 30}"#,
+                "order": "bfs", "memo": "sketch", "rr_store": "legacy",
+                "timeout_secs": 30}"#,
         )
         .unwrap();
         let opts = RunOptions::from_json(&json).unwrap();
@@ -352,6 +370,7 @@ mod tests {
         assert_eq!(opts.block_size, 512);
         assert_eq!(opts.order, OrderStrategy::Bfs);
         assert_eq!(opts.memo, MemoKind::Sketch);
+        assert_eq!(opts.rr_store, RrStoreKind::Legacy);
         assert_eq!(opts.timeout, Some(Duration::from_secs(30)));
     }
 
@@ -382,6 +401,7 @@ mod tests {
             r#"{"block_size": 0}"#,
             r#"{"order": "zigzag"}"#,
             r#"{"memo": "zip"}"#,
+            r#"{"rr_store": "huffman"}"#,
             // A negative/overflowing timeout must be a clean parse error,
             // never Duration::from_secs_f64's panic.
             r#"{"timeout_secs": -1}"#,

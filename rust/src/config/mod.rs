@@ -161,8 +161,8 @@ pub struct ExperimentConfig {
     /// Oracle simulations for influence rescoring (0 = skip rescoring).
     pub oracle_r: usize,
     /// Shared run geometry (JSON keys `r`, `seed`, `threads`, `backend`,
-    /// `lanes`, `schedule`, `block_size`, `memo`, `timeout_secs`,
-    /// `imm_memory_limit_gb` — parsed once by
+    /// `lanes`, `schedule`, `block_size`, `memo`, `rr_store`,
+    /// `timeout_secs`, `imm_memory_limit_gb` — parsed once by
     /// [`RunOptions::from_json`], never re-read per algorithm). The
     /// `order` knob holds the *primary* ordering; sweeps live in
     /// [`ExperimentConfig::orders`].
@@ -202,7 +202,7 @@ impl ExperimentConfig {
     ///   "k": 50, "r": 256, "threads": 16, "seed": 0,
     ///   "timeout_secs": 600, "oracle_r": 1024,
     ///   "backend": "auto", "lanes": 16, "memo": "dense",
-    ///   "schedule": "steal", "block_size": 4096,
+    ///   "schedule": "steal", "block_size": 4096, "rr_store": "packed",
     ///   "order": ["identity", "degree", "bfs", "hybrid"]
     /// }
     /// ```
@@ -444,6 +444,18 @@ mod tests {
         assert_eq!(cfg.options.memo, MemoKind::Sketch);
         assert_eq!(ExperimentConfig::from_json("{}").unwrap().options.memo, MemoKind::Dense);
         assert!(ExperimentConfig::from_json(r#"{"memo": "zip"}"#).is_err());
+    }
+
+    #[test]
+    fn rr_store_parses_from_json() {
+        use crate::rr::RrStoreKind;
+        let cfg = ExperimentConfig::from_json(r#"{"rr_store": "legacy"}"#).unwrap();
+        assert_eq!(cfg.options.rr_store, RrStoreKind::Legacy);
+        assert_eq!(
+            ExperimentConfig::from_json("{}").unwrap().options.rr_store,
+            RrStoreKind::Packed
+        );
+        assert!(ExperimentConfig::from_json(r#"{"rr_store": "huffman"}"#).is_err());
     }
 
     #[test]

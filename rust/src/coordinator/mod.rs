@@ -188,7 +188,7 @@ impl Runner {
     pub fn run_grid(&self) -> crate::Result<Vec<CellResult>> {
         let cfg = &self.cfg;
         self.log(&format!(
-            "grid geometry: K={} R={} tau={} backend={} lanes=B{} schedule={} block={} orders={}",
+            "grid geometry: K={} R={} tau={} backend={} lanes=B{} schedule={} block={} rr_store={} orders={}",
             cfg.k,
             cfg.options.r_count,
             cfg.options.threads,
@@ -196,6 +196,7 @@ impl Runner {
             cfg.options.lanes.label(),
             cfg.options.schedule.label(),
             cfg.options.block_size,
+            cfg.options.rr_store.label(),
             cfg.orders.iter().map(|o| o.label()).collect::<Vec<_>>().join(",")
         ));
         let sweep_orders = cfg.orders.len() > 1;

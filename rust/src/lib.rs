@@ -53,6 +53,7 @@ pub mod graph;
 pub mod hash;
 pub mod labelprop;
 pub mod rng;
+pub mod rr;
 pub mod runtime;
 pub mod sampling;
 pub mod serve;

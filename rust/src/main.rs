@@ -89,6 +89,12 @@ COMMANDS
              [--block-size N]          hub-splitting edge-block size (default
                                        4096 edges; seeds are identical for
                                        every block size)
+             [--rr-store packed|legacy]
+                                       IMM RR-pool layout (default packed:
+                                       compressed arenas, several-fold less
+                                       memory; seeds are identical for both)
+             [--imm-mem-gb GB]         IMM RR-pool byte cap (exact accounting;
+                                       exceeding it is an `oom` outcome)
   query      --dataset ID --queries FILE.json
                                        serve a JSON batch of queries from ONE
                                        prepared session (warm-state reuse: a
@@ -170,6 +176,7 @@ fn session_options(args: &Args) -> infuser::Result<RunOptions> {
         })
         .memo(infuser::algo::infuser::MemoKind::parse(args.opt("memo").unwrap_or("dense"))?)
         .order(infuser::graph::OrderStrategy::parse(args.opt("order").unwrap_or("identity"))?)
+        .rr_store(infuser::rr::RrStoreKind::parse(args.opt("rr-store").unwrap_or("packed"))?)
         .timeout(Some({
             let t: f64 = args.get_or("timeout", 3600.0f64)?;
             std::time::Duration::try_from_secs_f64(t).map_err(|_| {

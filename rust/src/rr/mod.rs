@@ -1,0 +1,552 @@
+//! Compressed RR-set storage for IMM — the memory side of "scale IMM an
+//! order of magnitude past RAM" (HBMax, arXiv 2208.00613; gIM, arXiv
+//! 2009.07325).
+//!
+//! IMM's footprint is the total RR-set pool, and the legacy layout pays 8
+//! bytes per stored vertex (4 for the id + 4 for the inverted-index slot
+//! selection materializes) plus a heap `Vec` per set. This module replaces
+//! that with [`PackedStore`]: every RR set is sorted and passed through the
+//! [`codec`] (delta + LEB128 varints, dense-bitmap fallback), appended to
+//! large flat byte arenas, and indexed by a 4-byte end offset. The
+//! per-vertex coverage histogram (`deg`) is maintained incrementally at
+//! append time, so selection is gIM-style: the histogram *is* the gain
+//! oracle, no inverted index is ever rebuilt, and compressed blocks are
+//! walked only to retire the sets a chosen seed newly covers.
+//!
+//! Both layouts sit behind [`RrStore`], selected by the
+//! [`RunOptions::rr_store`](crate::api::RunOptions::rr_store) knob
+//! (`packed` is the default; `legacy` keeps the inverted-index store for
+//! comparison). Selection is **bit-identical** across stores: the packed
+//! histogram equals the legacy uncovered-count re-evaluation at every step
+//! by construction, so both feed the shared CELF queue the same numbers —
+//! seeds, σ̂, and counters match to the bit, only `tracked_bytes` differs.
+//!
+//! Memory accounting is exact, not heuristic: [`RrStore::bytes`] counts
+//! the bytes actually written into arenas plus the real index/histogram
+//! overhead, and [`RrStore::bytes_after`] predicts the post-append total
+//! so an `imm_memory_limit` is enforced *before* the overshooting append.
+//!
+//! ```
+//! use infuser::rr::{RrStore, RrStoreKind};
+//!
+//! let mut store = RrStore::new(RrStoreKind::Packed, 100);
+//! store.append(&[2, 3, 50]);    // RR sets arrive sorted + deduped
+//! store.append(&[0, 1, 2, 3]);
+//! assert_eq!(store.len(), 2);
+//! assert_eq!(store.entries(), 7);
+//! // Vertex 2 is in both sets, so it alone covers the whole pool.
+//! let (seeds, frac) = store.max_coverage(1);
+//! assert_eq!(seeds, vec![2]);
+//! assert_eq!(frac, 1.0);
+//! ```
+
+pub mod codec;
+
+use crate::algo::Budget;
+use crate::VertexId;
+use std::cell::{Cell, RefCell};
+
+/// Which RR-set layout IMM stores its pool in. A memory knob only: seeds,
+/// σ̂, and counters are bit-identical across kinds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RrStoreKind {
+    /// Compressed block store ([`PackedStore`]): delta+varint / bitmap
+    /// blocks in flat arenas, incremental coverage histogram. The
+    /// default — several-fold smaller on every Table-6 geometry.
+    #[default]
+    Packed,
+    /// The historical layout ([`LegacyStore`]): one heap `Vec` per set,
+    /// inverted index rebuilt per selection, 8 bytes per stored entry.
+    Legacy,
+}
+
+impl RrStoreKind {
+    /// Every kind, for sweeps.
+    pub const ALL: [RrStoreKind; 2] = [RrStoreKind::Packed, RrStoreKind::Legacy];
+
+    /// Parse from a CLI/config string (`packed` / `legacy`).
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "packed" => Ok(Self::Packed),
+            "legacy" => Ok(Self::Legacy),
+            other => Err(anyhow::anyhow!("unknown rr store '{other}' (packed|legacy)")),
+        }
+    }
+
+    /// Short id for logs and table headers.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Packed => "packed",
+            Self::Legacy => "legacy",
+        }
+    }
+}
+
+/// Target arena capacity: large enough that arena count (and its 4-byte
+/// first-set entry) is noise, small enough that the final arena's unused
+/// tail is bounded.
+const ARENA_BYTES: usize = 1 << 20;
+
+/// Compressed RR-set store: codec-packed blocks in flat byte arenas.
+///
+/// Layout: blocks are appended back-to-back into `arenas` (each arena a
+/// single `Vec<u8>` of up to [`ARENA_BYTES`], except that a block larger
+/// than the target gets a dedicated arena). `ends[i]` is set `i`'s end
+/// offset *within its arena*; the start is the previous set's end (or 0 at
+/// an arena boundary), and `arena_first_set[a]` says which set opens arena
+/// `a` — together they delimit every block with 4 bytes per set and 4 per
+/// arena. `deg[v]` counts the stored sets containing `v`, maintained at
+/// append time, so selection starts from ready-made gains.
+pub struct PackedStore {
+    /// Graph size (bitmap width, histogram length).
+    n: usize,
+    /// Arena capacity target (constant in production; tests shrink it to
+    /// exercise arena-boundary paths cheaply).
+    arena_bytes: usize,
+    arenas: Vec<Vec<u8>>,
+    ends: Vec<u32>,
+    arena_first_set: Vec<u32>,
+    deg: Vec<u32>,
+    entries: u64,
+}
+
+impl PackedStore {
+    fn new(n: usize) -> Self {
+        Self::with_arena_bytes(n, ARENA_BYTES)
+    }
+
+    fn with_arena_bytes(n: usize, arena_bytes: usize) -> Self {
+        Self {
+            n,
+            arena_bytes,
+            arenas: Vec::new(),
+            ends: Vec::new(),
+            arena_first_set: Vec::new(),
+            deg: vec![0; n],
+            entries: 0,
+        }
+    }
+
+    /// Whether a block of `len` bytes opens a new arena (the current one
+    /// is full, absent, or the block is oversized).
+    fn needs_new_arena(&self, len: usize) -> bool {
+        match self.arenas.last() {
+            None => true,
+            Some(a) => a.len() + len > self.arena_bytes,
+        }
+    }
+
+    /// Exact tracked bytes: payload actually written into arenas, the
+    /// 4-byte end offset per set, the 4-byte first-set entry per arena,
+    /// and the 4-byte-per-vertex coverage histogram.
+    fn bytes(&self) -> u64 {
+        let payload: u64 = self.arenas.iter().map(|a| a.len() as u64).sum();
+        payload
+            + 4 * self.ends.len() as u64
+            + 4 * self.arena_first_set.len() as u64
+            + 4 * self.n as u64
+    }
+
+    /// What [`PackedStore::bytes`] will report after appending `set` —
+    /// computed from [`codec::encoded_len`] without writing anything.
+    fn bytes_after(&self, set: &[VertexId]) -> u64 {
+        let len = codec::encoded_len(set, self.n);
+        let new_arena_entry = if self.needs_new_arena(len) { 4 } else { 0 };
+        self.bytes() + len as u64 + 4 + new_arena_entry
+    }
+
+    fn append(&mut self, set: &[VertexId]) {
+        let len = codec::encoded_len(set, self.n);
+        if self.needs_new_arena(len) {
+            self.arenas.push(Vec::with_capacity(self.arena_bytes.max(len)));
+            self.arena_first_set.push(self.ends.len() as u32);
+        }
+        let arena = self.arenas.last_mut().expect("arena just ensured");
+        codec::encode_into(set, self.n, arena);
+        self.ends.push(arena.len() as u32);
+        for &v in set {
+            self.deg[v as usize] += 1;
+        }
+        self.entries += set.len() as u64;
+    }
+
+    /// Iterate the stored blocks in append order.
+    fn blocks(&self) -> Blocks<'_> {
+        Blocks { store: self, arena: 0, set: 0, start: 0 }
+    }
+
+    /// Greedy max-coverage without an inverted index: the incrementally
+    /// maintained histogram is the exact marginal gain of every vertex
+    /// (sets are retired from it as they become covered), so CELF's
+    /// re-evaluation is an O(1) lookup and each commit only walks the
+    /// still-uncovered blocks to retire the ones containing the new seed.
+    fn max_coverage(&self, k: usize) -> (Vec<VertexId>, f64) {
+        let total = self.ends.len();
+        // Selection must not disturb the store's pristine histogram: the
+        // pool keeps growing between calls, so work on a copy.
+        let gains: Vec<f64> = self.deg.iter().map(|&d| f64::from(d)).collect();
+        let deg = RefCell::new(self.deg.clone());
+        let covered = RefCell::new(vec![false; total]);
+        let covered_count = Cell::new(0usize);
+        let mut members: Vec<VertexId> = Vec::new();
+        let mut seeds = Vec::with_capacity(k);
+        let budget = Budget::unlimited();
+        let res = crate::algo::celf::celf_select(
+            &gains,
+            k,
+            |v, _| f64::from(deg.borrow()[v as usize]),
+            |v, _| {
+                let mut deg = deg.borrow_mut();
+                let mut cov = covered.borrow_mut();
+                for (i, block) in self.blocks().enumerate() {
+                    if cov[i] || !codec::block_contains(block, v) {
+                        continue;
+                    }
+                    cov[i] = true;
+                    covered_count.set(covered_count.get() + 1);
+                    members.clear();
+                    codec::decode_block(block, &mut members);
+                    for &u in &members {
+                        deg[u as usize] -= 1;
+                    }
+                }
+                seeds.push(v);
+            },
+            &budget,
+        );
+        let _ = res; // infallible with an unlimited budget
+        let frac = if total == 0 { 0.0 } else { covered_count.get() as f64 / total as f64 };
+        (seeds, frac)
+    }
+}
+
+/// Iterator over a [`PackedStore`]'s blocks (encoded byte slices), in
+/// append order.
+struct Blocks<'a> {
+    store: &'a PackedStore,
+    /// Current arena index.
+    arena: usize,
+    /// Next global set id.
+    set: usize,
+    /// Start offset of the next block within the current arena.
+    start: usize,
+}
+
+impl<'a> Iterator for Blocks<'a> {
+    type Item = &'a [u8];
+
+    fn next(&mut self) -> Option<&'a [u8]> {
+        if self.set >= self.store.ends.len() {
+            return None;
+        }
+        while self.arena + 1 < self.store.arena_first_set.len()
+            && self.set >= self.store.arena_first_set[self.arena + 1] as usize
+        {
+            self.arena += 1;
+            self.start = 0;
+        }
+        let end = self.store.ends[self.set] as usize;
+        let block = &self.store.arenas[self.arena][self.start..end];
+        self.start = end;
+        self.set += 1;
+        Some(block)
+    }
+}
+
+/// Bytes charged per stored entry in the legacy layout: 4 for the
+/// `VertexId` itself plus 4 for its slot in the inverted index that
+/// selection materializes (one `u32` RR id per entry). Charging the index
+/// up front keeps the `memory_limit` check honest about the true Table-6
+/// peak — the index is always built before any seed is selected, so by the
+/// time the limit could matter the entry really does cost 8 bytes.
+pub const RR_ENTRY_BYTES: u64 = 4 + 4;
+
+/// The historical RR-set layout: one heap `Vec<VertexId>` per set, an
+/// inverted index rebuilt by every selection, [`RR_ENTRY_BYTES`] charged
+/// per stored entry. Kept as the `rr_store = legacy` baseline the packed
+/// store is diffed against (bit-identical seeds, several-fold more bytes).
+pub struct LegacyStore {
+    n: usize,
+    sets: Vec<Vec<VertexId>>,
+    entries: u64,
+}
+
+impl LegacyStore {
+    fn new(n: usize) -> Self {
+        Self { n, sets: Vec::new(), entries: 0 }
+    }
+
+    fn bytes(&self) -> u64 {
+        self.entries * RR_ENTRY_BYTES
+    }
+
+    fn bytes_after(&self, set: &[VertexId]) -> u64 {
+        (self.entries + set.len() as u64) * RR_ENTRY_BYTES
+    }
+
+    fn append(&mut self, set: &[VertexId]) {
+        self.entries += set.len() as u64;
+        self.sets.push(set.to_vec());
+    }
+
+    /// Greedy max-coverage over the pool via a freshly built inverted
+    /// index (vertex → RR ids containing it) — the classic formulation.
+    fn max_coverage(&self, k: usize) -> (Vec<VertexId>, f64) {
+        let n = self.n;
+        let mut deg = vec![0u32; n];
+        for set in &self.sets {
+            for &v in set {
+                deg[v as usize] += 1;
+            }
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + deg[v] as usize;
+        }
+        let mut index = vec![0u32; offsets[n]];
+        let mut cursor = offsets.clone();
+        for (i, set) in self.sets.iter().enumerate() {
+            for &v in set {
+                index[cursor[v as usize]] = i as u32;
+                cursor[v as usize] += 1;
+            }
+        }
+
+        let covered = RefCell::new(vec![false; self.sets.len()]);
+        let covered_count = Cell::new(0usize);
+        let gains: Vec<f64> = deg.iter().map(|&d| f64::from(d)).collect();
+        let mut seeds = Vec::with_capacity(k);
+        // Lazy greedy via the shared CELF queue (coverage is submodular).
+        let budget = Budget::unlimited();
+        let res = crate::algo::celf::celf_select(
+            &gains,
+            k,
+            |v, _| {
+                let cov = covered.borrow();
+                index[offsets[v as usize]..offsets[v as usize + 1]]
+                    .iter()
+                    .filter(|&&i| !cov[i as usize])
+                    .count() as f64
+            },
+            |v, _| {
+                let mut cov = covered.borrow_mut();
+                for &i in &index[offsets[v as usize]..offsets[v as usize + 1]] {
+                    if !cov[i as usize] {
+                        cov[i as usize] = true;
+                        covered_count.set(covered_count.get() + 1);
+                    }
+                }
+                seeds.push(v);
+            },
+            &budget,
+        );
+        let _ = res; // infallible with an unlimited budget
+        let frac = if self.sets.is_empty() {
+            0.0
+        } else {
+            covered_count.get() as f64 / self.sets.len() as f64
+        };
+        (seeds, frac)
+    }
+}
+
+/// A growable pool of RR sets in one of the two layouts. The layout is a
+/// pure memory knob: every query answer is bit-identical across kinds.
+///
+/// Sets must be appended **sorted and duplicate-free** (IMM sorts each
+/// sampled set once, in the worker that sampled it) with members `< n`.
+pub enum RrStore {
+    /// Compressed arenas + incremental histogram.
+    Packed(PackedStore),
+    /// Heap `Vec` per set + rebuilt inverted index.
+    Legacy(LegacyStore),
+}
+
+impl RrStore {
+    /// Empty store of `kind` for a graph of `n` vertices.
+    pub fn new(kind: RrStoreKind, n: usize) -> Self {
+        match kind {
+            RrStoreKind::Packed => Self::Packed(PackedStore::new(n)),
+            RrStoreKind::Legacy => Self::Legacy(LegacyStore::new(n)),
+        }
+    }
+
+    /// The layout this store uses.
+    pub fn kind(&self) -> RrStoreKind {
+        match self {
+            Self::Packed(_) => RrStoreKind::Packed,
+            Self::Legacy(_) => RrStoreKind::Legacy,
+        }
+    }
+
+    /// Number of stored RR sets.
+    pub fn len(&self) -> usize {
+        match self {
+            Self::Packed(s) => s.ends.len(),
+            Self::Legacy(s) => s.sets.len(),
+        }
+    }
+
+    /// Whether the pool is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total stored vertex entries across all sets.
+    pub fn entries(&self) -> u64 {
+        match self {
+            Self::Packed(s) => s.entries,
+            Self::Legacy(s) => s.entries,
+        }
+    }
+
+    /// Exact tracked bytes of the pool (what `tracked_bytes` reports and
+    /// `imm_memory_limit` is enforced against).
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Self::Packed(s) => s.bytes(),
+            Self::Legacy(s) => s.bytes(),
+        }
+    }
+
+    /// What [`RrStore::bytes`] will report after appending `set` — the
+    /// pre-append admission check, so a memory limit is enforced *before*
+    /// the pool overshoots it (and before the block is even written).
+    pub fn bytes_after(&self, set: &[VertexId]) -> u64 {
+        match self {
+            Self::Packed(s) => s.bytes_after(set),
+            Self::Legacy(s) => s.bytes_after(set),
+        }
+    }
+
+    /// Append one RR set (sorted, duplicate-free, members `< n`).
+    pub fn append(&mut self, set: &[VertexId]) {
+        debug_assert!(set.windows(2).all(|w| w[0] < w[1]), "RR sets arrive sorted unique");
+        match self {
+            Self::Packed(s) => s.append(set),
+            Self::Legacy(s) => s.append(set),
+        }
+    }
+
+    /// Greedy max-coverage: pick `k` vertices covering the most stored
+    /// sets (lazy-greedy on the shared CELF queue). Returns
+    /// `(seeds, covered_fraction)`, bit-identical across store kinds.
+    pub fn max_coverage(&self, k: usize) -> (Vec<VertexId>, f64) {
+        match self {
+            Self::Packed(s) => s.max_coverage(k),
+            Self::Legacy(s) => s.max_coverage(k),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg32, Rng32};
+    use crate::util::proptest_lite::{check, Gen};
+
+    #[test]
+    fn kind_parses_and_labels_roundtrip() {
+        for kind in RrStoreKind::ALL {
+            assert_eq!(RrStoreKind::parse(kind.label()).unwrap(), kind);
+        }
+        assert_eq!(RrStoreKind::default(), RrStoreKind::Packed);
+        assert!(RrStoreKind::parse("zip").is_err());
+    }
+
+    #[test]
+    fn packed_accounting_is_exact_arena_bytes() {
+        // n=100: empty store carries only the 4-byte-per-vertex histogram.
+        let mut store = RrStore::new(RrStoreKind::Packed, 100);
+        assert_eq!(store.bytes(), 400);
+        // [1,2,3] encodes as tag + varint(1) + two gap-1 varints = 4
+        // bytes, plus a 4-byte end offset and the first arena's 4-byte
+        // first-set entry. The prediction must match to the byte.
+        let predicted = store.bytes_after(&[1, 2, 3]);
+        store.append(&[1, 2, 3]);
+        assert_eq!(store.bytes(), predicted);
+        assert_eq!(store.bytes(), 400 + 4 + 4 + 4);
+        // Same arena: [0, 99] is 3 payload bytes + one end offset.
+        let predicted = store.bytes_after(&[0, 99]);
+        store.append(&[0, 99]);
+        assert_eq!(store.bytes(), predicted);
+        assert_eq!(store.bytes(), 412 + 3 + 4);
+        assert_eq!(store.entries(), 5);
+        assert_eq!(store.len(), 2);
+    }
+
+    #[test]
+    fn legacy_accounting_is_per_entry_only() {
+        // The dead per-set Vec-header heuristic is gone: the legacy model
+        // is exactly 8 bytes per stored entry (id + inverted-index slot).
+        let mut store = RrStore::new(RrStoreKind::Legacy, 100);
+        assert_eq!(store.bytes(), 0);
+        assert_eq!(store.bytes_after(&[1, 2, 3]), 3 * RR_ENTRY_BYTES);
+        store.append(&[1, 2, 3]);
+        assert_eq!(store.bytes(), 3 * RR_ENTRY_BYTES);
+        assert_eq!(store.bytes_after(&[7, 9]), 5 * RR_ENTRY_BYTES);
+    }
+
+    #[test]
+    fn arena_rollover_and_oversized_blocks_keep_every_set_addressable() {
+        // A tiny arena target exercises the rollover and dedicated-arena
+        // paths that would need megabytes at the production constant.
+        let n = 4096usize;
+        let mut store = PackedStore::with_arena_bytes(n, 64);
+        let mut rng = Pcg32::seeded(7, 7);
+        let mut expected: Vec<Vec<VertexId>> = Vec::new();
+        for i in 0..200 {
+            let len = if i % 17 == 0 { 600 } else { 1 + rng.below(12) as usize };
+            let mut set: Vec<VertexId> = (0..len).map(|_| rng.below(n as u32)).collect();
+            set.sort_unstable();
+            set.dedup();
+            let predicted = store.bytes_after(&set);
+            store.append(&set);
+            assert_eq!(store.bytes(), predicted, "prediction exact at set {i}");
+            expected.push(set);
+        }
+        assert!(store.arenas.len() > 2, "64-byte arenas must roll over");
+        let mut got = Vec::new();
+        let blocks: Vec<&[u8]> = store.blocks().collect();
+        assert_eq!(blocks.len(), expected.len());
+        for (block, want) in blocks.iter().zip(&expected) {
+            got.clear();
+            codec::decode_block(block, &mut got);
+            assert_eq!(&got, want);
+        }
+        // Histogram agrees with a from-scratch count.
+        let mut deg = vec![0u32; n];
+        for set in &expected {
+            for &v in set {
+                deg[v as usize] += 1;
+            }
+        }
+        assert_eq!(store.deg, deg);
+    }
+
+    #[test]
+    fn proptest_stores_select_identical_seeds() {
+        // The equivalence the whole design leans on: for any pool, packed
+        // selection (incremental histogram + block walk) and legacy
+        // selection (rebuilt inverted index) commit the same seeds with
+        // the same coverage.
+        check("rr_store_selection_parity", 60, |g: &mut Gen| {
+            let n = 8 + g.below(120) as usize;
+            let mut packed = RrStore::new(RrStoreKind::Packed, n);
+            let mut legacy = RrStore::new(RrStoreKind::Legacy, n);
+            for _ in 0..g.below(40) {
+                let mut set: Vec<VertexId> =
+                    (0..1 + g.below(16)).map(|_| g.below(n as u32)).collect();
+                set.sort_unstable();
+                set.dedup();
+                packed.append(&set);
+                legacy.append(&set);
+            }
+            let k = 1 + g.below(6) as usize;
+            let (ps, pf) = packed.max_coverage(k);
+            let (ls, lf) = legacy.max_coverage(k);
+            assert_eq!(ps, ls, "seeds diverge at n={n} k={k}");
+            assert_eq!(pf.to_bits(), lf.to_bits(), "coverage fraction diverges");
+        });
+    }
+}

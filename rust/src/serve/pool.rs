@@ -178,7 +178,12 @@ pub enum QueryOutcome {
     Answered(ImResult),
     /// The per-request/session budget expired mid-query (CLI `-`).
     TimedOut,
-    /// The algorithm hit its memory cap (CLI `oom`).
+    /// The algorithm hit its memory cap (CLI `oom`). For IMM the cap is
+    /// enforced against the RR store's *exact* byte accounting (arena
+    /// payload + offsets + histogram under the packed layout) before each
+    /// set is appended, so the wire cell fires without overshooting the
+    /// budget — and switching `rr_store` layouts changes when it fires,
+    /// never its shape on the wire.
     OutOfMemory,
 }
 

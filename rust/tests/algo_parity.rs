@@ -188,6 +188,37 @@ fn influence_estimates_agree_with_oracle_within_noise() {
 }
 
 #[test]
+fn imm_rr_stores_are_bit_identical_end_to_end() {
+    // Guard for the zero-alloc RR-generation refactor (workers hand back
+    // flat buffers instead of a Vec per sampled set) and the compressed
+    // store: both layouts consume the exact same sampled sets and feed
+    // CELF the same gains, so packed and legacy runs must agree to the
+    // bit on seeds, σ̂, and counters — only the byte footprint differs.
+    let g = test_graph();
+    let run = |kind| {
+        Imm::new(ImmParams {
+            k: 8,
+            epsilon: 0.2,
+            common: RunOptions::new().seed(1).threads(2).rr_store(kind),
+            ..Default::default()
+        })
+        .run(&g, &Budget::unlimited())
+        .unwrap()
+    };
+    let packed = run(infuser::rr::RrStoreKind::Packed);
+    let legacy = run(infuser::rr::RrStoreKind::Legacy);
+    assert_eq!(packed.seeds, legacy.seeds);
+    assert_eq!(packed.influence.to_bits(), legacy.influence.to_bits());
+    assert_eq!(packed.counters, legacy.counters);
+    assert!(
+        packed.tracked_bytes < legacy.tracked_bytes,
+        "compressed store must undercut the legacy footprint: {} vs {}",
+        packed.tracked_bytes,
+        legacy.tracked_bytes
+    );
+}
+
+#[test]
 fn timeout_injection_trips_every_algorithm() {
     // Failure injection: an already-expired budget must surface as a
     // TimedOut error (not a panic, not a wrong result) in every algorithm.

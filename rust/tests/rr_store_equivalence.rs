@@ -1,0 +1,125 @@
+//! RR-store equivalence battery: the compressed [`infuser::rr`] store is
+//! a *memory* optimization, never a results change. Packed and legacy
+//! layouts must agree to the bit on seeds, σ̂, and counters across the
+//! seed × ε × τ matrix, while the packed footprint undercuts legacy by at
+//! least 2× — and a memory limit that kills a legacy run must leave the
+//! packed run not just alive but bit-identical to its uncapped self.
+
+use infuser::algo::imm::{Imm, ImmParams};
+use infuser::algo::{is_oom, Budget, ImResult};
+use infuser::api::{ImSession, Query, RunOptions};
+use infuser::config::AlgoSpec;
+use infuser::gen::{self, GenSpec};
+use infuser::graph::{Graph, WeightModel};
+use infuser::rr::RrStoreKind;
+
+fn run_imm(
+    g: &Graph,
+    kind: RrStoreKind,
+    seed: u64,
+    epsilon: f64,
+    threads: usize,
+    limit: Option<u64>,
+) -> infuser::Result<ImResult> {
+    Imm::new(ImmParams {
+        k: 6,
+        epsilon,
+        common: RunOptions::new()
+            .seed(seed)
+            .threads(threads)
+            .rr_store(kind)
+            .imm_memory_limit(limit),
+        ..Default::default()
+    })
+    .run(g, &Budget::unlimited())
+}
+
+fn assert_bit_identical(p: &ImResult, l: &ImResult, ctx: &str) {
+    assert_eq!(p.seeds, l.seeds, "seeds diverge ({ctx})");
+    assert_eq!(
+        p.influence.to_bits(),
+        l.influence.to_bits(),
+        "σ̂ diverges ({ctx}): {} vs {}",
+        p.influence,
+        l.influence
+    );
+    assert_eq!(p.counters, l.counters, "counters diverge ({ctx})");
+}
+
+#[test]
+fn packed_matches_legacy_across_the_seed_epsilon_tau_matrix() {
+    let g = gen::generate(&GenSpec::barabasi_albert(350, 3, 11))
+        .with_weights(WeightModel::Const(0.08), 5);
+    for seed in [1u64, 2, 3] {
+        for epsilon in [0.5, 0.3] {
+            for threads in [1usize, 4] {
+                let p = run_imm(&g, RrStoreKind::Packed, seed, epsilon, threads, None).unwrap();
+                let l = run_imm(&g, RrStoreKind::Legacy, seed, epsilon, threads, None).unwrap();
+                assert_bit_identical(&p, &l, &format!("seed={seed} eps={epsilon} tau={threads}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_matches_legacy_at_tight_epsilon() {
+    // ε = 0.13 (the paper's tight variant) drives θ up by an order of
+    // magnitude; keep the graph small so the matrix cell stays fast.
+    let g = gen::generate(&GenSpec::erdos_renyi(150, 450, 17))
+        .with_weights(WeightModel::Const(0.1), 9);
+    let p = run_imm(&g, RrStoreKind::Packed, 2, 0.13, 2, None).unwrap();
+    let l = run_imm(&g, RrStoreKind::Legacy, 2, 0.13, 2, None).unwrap();
+    assert_bit_identical(&p, &l, "eps=0.13");
+}
+
+#[test]
+fn packed_survives_a_limit_that_ooms_legacy() {
+    // The acceptance scenario: a graph whose RR pool is supercritical
+    // (large sets, bitmap-friendly), a byte limit strictly between the
+    // two footprints — legacy must die with an OOM, packed must complete
+    // and return exactly what it returns without any limit.
+    let g = gen::generate(&GenSpec::erdos_renyi(600, 2400, 13))
+        .with_weights(WeightModel::Const(0.15), 7);
+    let packed = run_imm(&g, RrStoreKind::Packed, 4, 0.5, 2, None).unwrap();
+    let legacy = run_imm(&g, RrStoreKind::Legacy, 4, 0.5, 2, None).unwrap();
+    assert_bit_identical(&packed, &legacy, "uncapped");
+    assert!(
+        packed.tracked_bytes * 2 <= legacy.tracked_bytes,
+        "compression target: packed {} must be ≤ 0.5× legacy {}",
+        packed.tracked_bytes,
+        legacy.tracked_bytes
+    );
+
+    let limit = (packed.tracked_bytes + legacy.tracked_bytes) / 2;
+    let err = run_imm(&g, RrStoreKind::Legacy, 4, 0.5, 2, Some(limit)).unwrap_err();
+    assert!(is_oom(&err), "legacy under {limit} bytes must OOM, got {err}");
+
+    let capped = run_imm(&g, RrStoreKind::Packed, 4, 0.5, 2, Some(limit)).unwrap();
+    assert_eq!(capped.seeds, packed.seeds, "a non-binding limit must not change packed");
+    assert_eq!(capped.influence.to_bits(), packed.influence.to_bits());
+    assert_eq!(capped.tracked_bytes, packed.tracked_bytes);
+}
+
+#[test]
+fn rr_store_knob_flows_through_the_session_api() {
+    // The knob must ride RunOptions end to end: a prepared session built
+    // with `legacy` answers IMM queries from the legacy store, and the
+    // answers match the packed default to the bit.
+    let g = gen::generate(&GenSpec::barabasi_albert(250, 3, 19))
+        .with_weights(WeightModel::Const(0.1), 3);
+    let query = Query::new(AlgoSpec::Imm { epsilon: 0.5 }, 5);
+    let run = |kind: RrStoreKind| {
+        let opts = RunOptions::new().seed(3).threads(2).rr_store(kind);
+        let mut session = ImSession::prepare(g.clone(), opts).unwrap();
+        session.query(&query).unwrap()
+    };
+    let packed = run(RrStoreKind::Packed);
+    let legacy = run(RrStoreKind::Legacy);
+    assert_bit_identical(&packed, &legacy, "session query");
+    assert!(
+        packed.tracked_bytes < legacy.tracked_bytes,
+        "packed sessions must report the smaller footprint: {} vs {}",
+        packed.tracked_bytes,
+        legacy.tracked_bytes
+    );
+}

@@ -8,7 +8,8 @@
 //!
 //! Rules (scanned over `rust/src`; `#[cfg(test)]` regions are exempt
 //! from R2–R4 — test code may use raw primitives and synthetic ids —
-//! but **not** from R1, unsafety must be justified everywhere):
+//! but **not** from R1, unsafety must be justified everywhere, and not
+//! from R2 under the strict `rr/` paths):
 //!
 //! * **R1 `safety-comment`** — every `unsafe` token (block, fn, impl)
 //!   carries a `// SAFETY:` comment or a `# Safety` doc section within
@@ -18,7 +19,9 @@
 //!   tests carries an `// ORDERING:` justification within the preceding
 //!   12 lines (either "the CAS word carries its whole payload" or "the
 //!   data crosses the pool's mutex/condvar handshake" — see
-//!   `runtime/sync`'s module docs).
+//!   `runtime/sync`'s module docs). Under `rr/` (the compressed RR-set
+//!   store, whose byte accounting backs OOM admission) the rule is
+//!   strict: it applies inside `#[cfg(test)]` regions too.
 //! * **R3 `facade-bypass`** — no direct `std::sync::Mutex`/`Condvar`/
 //!   `RwLock` or `std::thread::{spawn, Builder, scope}` outside
 //!   `runtime/` (which includes the `runtime/sync` facade) and
@@ -325,6 +328,14 @@ fn facade_bypass_allowed(relpath: &str) -> bool {
     relpath.starts_with("runtime/") || relpath == "util/par.rs"
 }
 
+/// Paths where R2 (`ordering-comment`) applies even inside `#[cfg(test)]`
+/// regions: the compressed RR-set store. Its byte accounting is what the
+/// OOM admission check trusts, so even test-side relaxed atomics must say
+/// why relaxed is enough.
+fn ordering_strict(relpath: &str) -> bool {
+    relpath.starts_with("rr/")
+}
+
 #[derive(Debug)]
 pub struct Violation {
     pub file: String,
@@ -375,12 +386,12 @@ pub fn check_source(relpath: &str, text: &str) -> Vec<Violation> {
             ));
         }
 
-        if mask[i] {
-            continue; // R2–R4 do not apply to #[cfg(test)] regions
-        }
-
-        // R2: Relaxed needs an ORDERING justification.
-        if has_word(code, "Relaxed") && !comment_in_window(i, ORDERING_WINDOW, &["ORDERING:"]) {
+        // R2: Relaxed needs an ORDERING justification. Test regions are
+        // exempt everywhere except the strict `rr/` paths.
+        if (!mask[i] || ordering_strict(relpath))
+            && has_word(code, "Relaxed")
+            && !comment_in_window(i, ORDERING_WINDOW, &["ORDERING:"])
+        {
             out.push(violation(
                 i,
                 "ordering-comment",
@@ -388,6 +399,10 @@ pub fn check_source(relpath: &str, text: &str) -> Vec<Violation> {
                  preceding lines"
                     .to_string(),
             ));
+        }
+
+        if mask[i] {
+            continue; // R3–R4 do not apply to #[cfg(test)] regions
         }
 
         // R3: raw sync primitives outside the runtime layer.
@@ -517,6 +532,23 @@ mod tests {
     fn ordering_rule_exempts_test_regions() {
         let text = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        X.fetch_add(1, Ordering::Relaxed);\n    }\n}\n";
         assert!(rules("algo/x.rs", text).is_empty());
+    }
+
+    #[test]
+    fn ordering_rule_is_strict_in_rr_paths_even_inside_tests() {
+        // The `rr/` store's accounting backs OOM admission, so the test
+        // exemption does not apply there: a bare Relaxed in a test module
+        // must still carry its ORDERING justification.
+        let bad = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        X.fetch_add(1, Ordering::Relaxed);\n    }\n}\n";
+        assert_eq!(rules("rr/mod.rs", bad), vec!["ordering-comment"]);
+        assert_eq!(rules("rr/codec.rs", bad), vec!["ordering-comment"]);
+
+        let good = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        // ORDERING: test-local counter; the assert reads it after join.\n        X.fetch_add(1, Ordering::Relaxed);\n    }\n}\n";
+        assert!(rules("rr/mod.rs", good).is_empty());
+
+        // Non-test `rr/` code gets the ordinary (already strict) rule.
+        let plain = "fn f(a: &AtomicUsize) -> usize {\n    a.load(Ordering::Relaxed)\n}\n";
+        assert_eq!(rules("rr/mod.rs", plain), vec!["ordering-comment"]);
     }
 
     #[test]
