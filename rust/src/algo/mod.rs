@@ -55,11 +55,15 @@ impl Budget {
     }
 
     /// Limit to `d` from now.
+    // DETERMINISM: wall-clock budgets are an explicit outcome axis — a
+    // tripped budget reports TimedOut (the tables' "-" cells), it never
+    // changes which seeds/σ̂ a completed run produces.
     pub fn timeout(d: Duration) -> Self {
         Self { deadline: Some(Instant::now() + d) }
     }
 
     /// True once the deadline passed.
+    // DETERMINISM: see `timeout` — timing decides completion, not results.
     #[inline]
     pub fn exceeded(&self) -> bool {
         self.deadline.is_some_and(|d| Instant::now() >= d)

@@ -188,15 +188,20 @@ impl Runner {
     pub fn run_grid(&self) -> crate::Result<Vec<CellResult>> {
         let cfg = &self.cfg;
         self.log(&format!(
-            "grid geometry: K={} R={} tau={} backend={} lanes=B{} schedule={} block={} rr_store={} orders={}",
+            "grid geometry: K={} R={} seed={} tau={} backend={} lanes=B{} schedule={} \
+             block={} memo={} rr_store={} timeout={} imm_memory_limit={} orders={}",
             cfg.k,
             cfg.options.r_count,
+            cfg.options.seed,
             cfg.options.threads,
             cfg.options.backend.label(),
             cfg.options.lanes.label(),
             cfg.options.schedule.label(),
             cfg.options.block_size,
+            cfg.options.memo.label(),
             cfg.options.rr_store.label(),
+            cfg.options.timeout.map_or_else(|| "-".to_string(), |d| format!("{}s", d.as_secs_f64())),
+            cfg.options.imm_memory_limit.map_or_else(|| "-".to_string(), |b| format!("{b}B")),
             cfg.orders.iter().map(|o| o.label()).collect::<Vec<_>>().join(",")
         ));
         let sweep_orders = cfg.orders.len() > 1;

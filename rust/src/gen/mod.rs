@@ -139,6 +139,8 @@ fn erdos_renyi(n: usize, m: usize, seed: u64) -> Graph {
     assert!(n >= 2, "ER needs at least 2 vertices");
     let mut rng = Pcg32::from_seed_stream(seed, 0xE5);
     let mut b = GraphBuilder::new(n);
+    // DETERMINISM: insert-only membership set for edge dedup; it is never
+    // iterated, and edges are appended in RNG draw order.
     let mut seen = std::collections::HashSet::with_capacity(m * 2);
     let mut added = 0usize;
     let cap = n * (n - 1) / 2;
@@ -228,6 +230,8 @@ fn rmat(scale: u32, m: usize, a: f64, bq: f64, cq: f64, seed: u64) -> Graph {
     let mut added = 0usize;
     let mut guard = 0usize;
     let max_attempts = m * 20 + 1000;
+    // DETERMINISM: insert-only membership set for edge dedup; it is never
+    // iterated, and edges are appended in RNG draw order.
     let mut seen = std::collections::HashSet::with_capacity(m * 2);
     while added < m && guard < max_attempts {
         guard += 1;

@@ -20,7 +20,10 @@ pub fn read_edge_list(path: &Path) -> crate::Result<Graph> {
 
 /// Parse an edge list from any reader (unit-testable entry point).
 pub fn parse_edge_list<R: Read>(reader: BufReader<R>, name: &str) -> crate::Result<Graph> {
-    let mut remap = std::collections::HashMap::<u64, VertexId>::new();
+    // BTreeMap, not HashMap: ids are assigned in first-seen order either
+    // way, but keeping the map order-deterministic means no future
+    // iteration over it can reintroduce process-random order.
+    let mut remap = std::collections::BTreeMap::<u64, VertexId>::new();
     let mut pairs: Vec<(VertexId, VertexId)> = Vec::new();
     let mut pair_w: Vec<f32> = Vec::new();
     let mut any_weight = false;
@@ -82,7 +85,8 @@ pub fn parse_edge_list_declared<R: Read>(
     n: usize,
 ) -> crate::Result<Graph> {
     let mut b = GraphBuilder::new(n).name(name);
-    let mut first_weight = std::collections::HashMap::<(VertexId, VertexId), (f32, usize)>::new();
+    // BTreeMap for the same determinism reason as `remap` above.
+    let mut first_weight = std::collections::BTreeMap::<(VertexId, VertexId), (f32, usize)>::new();
     for (lineno, line) in reader.lines().enumerate() {
         let line = line?;
         let lineno = lineno + 1;

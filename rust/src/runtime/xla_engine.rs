@@ -15,7 +15,7 @@ use crate::engine::Engine;
 use crate::graph::Graph;
 use crate::labelprop::{Labels, PropagateOpts, PropagationResult};
 use crate::sampling::xr_word;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 /// Propagation engine backed by the PJRT-loaded AOT artifacts.
@@ -23,8 +23,9 @@ pub struct XlaEngine {
     runtime: PjrtRuntime,
     artifacts: Artifacts,
     /// Compiled-executable cache, keyed by artifact file name. Compilation
-    /// is per-bucket, not per-call — the AOT analog of warmup.
-    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+    /// is per-bucket, not per-call — the AOT analog of warmup. Ordered map
+    /// so nothing downstream can ever observe process-random order.
+    cache: Mutex<BTreeMap<String, std::sync::Arc<Executable>>>,
 }
 
 impl XlaEngine {
@@ -33,7 +34,7 @@ impl XlaEngine {
         Ok(Self {
             runtime: PjrtRuntime::cpu()?,
             artifacts,
-            cache: Mutex::new(HashMap::new()),
+            cache: Mutex::new(BTreeMap::new()),
         })
     }
 

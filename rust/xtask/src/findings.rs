@@ -1,0 +1,264 @@
+//! Structured findings shared by `xtask analyze` and `xtask lint`.
+//!
+//! Every pass emits [`Finding`]s — `file:line`, the pass and rule ids, an
+//! optional symbol (function, field, or token the rule anchored on), and
+//! a human message. Findings render as text for terminals and as JSON
+//! (`--json`) for CI artifacts, and can be *waived* by a checked-in
+//! waiver file:
+//!
+//! ```text
+//! # analyze.waivers — one waiver per line:
+//! #   <rule> <file> <symbol|*>        # trailing comments allowed
+//! det-hash-iter graph/io.rs *
+//! knob-missing-banner coordinator/mod.rs timeout
+//! ```
+//!
+//! A waiver matches a finding when the rule and file are equal and the
+//! symbol is equal or the waiver declares `*`. Waived findings still
+//! appear in the JSON artifact (flagged `"waived": true`) but do not
+//! fail the run.
+
+use crate::lint::Violation;
+use std::fmt;
+
+/// One structured finding from a pass.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Which pass produced it (`lint`, `determinism`, `unsafe-boundary`,
+    /// `knob-parity`).
+    pub pass: &'static str,
+    /// Stable rule id within the pass.
+    pub rule: &'static str,
+    /// Path relative to the scan root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// The symbol the rule anchored on (fn name, struct field, token);
+    /// empty when the rule has no natural anchor.
+    pub symbol: String,
+    pub msg: String,
+    /// Set by [`Waivers::apply`] when a waiver matches.
+    pub waived: bool,
+}
+
+impl Finding {
+    pub fn new(
+        pass: &'static str,
+        rule: &'static str,
+        file: &str,
+        line: usize,
+        symbol: &str,
+        msg: String,
+    ) -> Self {
+        Self {
+            pass,
+            rule,
+            file: file.to_string(),
+            line,
+            symbol: symbol.to_string(),
+            msg,
+            waived: false,
+        }
+    }
+
+    /// Adapt a lint [`Violation`] into the shared finding shape.
+    pub fn from_lint(v: Violation) -> Self {
+        Self {
+            pass: "lint",
+            rule: v.rule,
+            file: v.file,
+            line: v.line,
+            symbol: String::new(),
+            msg: v.msg,
+            waived: false,
+        }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}/{}] {}", self.file, self.line, self.pass, self.rule, self.msg)?;
+        if self.waived {
+            write!(f, " (waived)")?;
+        }
+        Ok(())
+    }
+}
+
+/// Render findings as a JSON array (stable key order, no dependencies).
+pub fn render_json(findings: &[Finding]) -> String {
+    let mut out = String::from("[\n");
+    for (i, f) in findings.iter().enumerate() {
+        out.push_str("  {");
+        out.push_str(&format!("\"pass\": \"{}\", ", json_escape(f.pass)));
+        out.push_str(&format!("\"rule\": \"{}\", ", json_escape(f.rule)));
+        out.push_str(&format!("\"file\": \"{}\", ", json_escape(&f.file)));
+        out.push_str(&format!("\"line\": {}, ", f.line));
+        out.push_str(&format!("\"symbol\": \"{}\", ", json_escape(&f.symbol)));
+        out.push_str(&format!("\"msg\": \"{}\", ", json_escape(&f.msg)));
+        out.push_str(&format!("\"waived\": {}", f.waived));
+        out.push('}');
+        if i + 1 < findings.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push(']');
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One parsed waiver line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Waiver {
+    rule: String,
+    file: String,
+    /// `*` matches any symbol.
+    symbol: String,
+}
+
+/// The parsed waiver file.
+#[derive(Debug, Default)]
+pub struct Waivers {
+    entries: Vec<Waiver>,
+}
+
+impl Waivers {
+    /// Parse waiver text: one `<rule> <file> <symbol|*>` per line, blank
+    /// lines and `#` comments (full-line or trailing) ignored. A
+    /// malformed line is an error naming its line number — a silently
+    /// dropped waiver would un-waive a finding and fail CI confusingly.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut entries = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                Some(pos) => &raw[..pos],
+                None => raw,
+            };
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 3 {
+                return Err(format!(
+                    "waiver line {}: expected '<rule> <file> <symbol|*>', got '{line}'",
+                    lineno + 1
+                ));
+            }
+            entries.push(Waiver {
+                rule: parts[0].to_string(),
+                file: parts[1].to_string(),
+                symbol: parts[2].to_string(),
+            });
+        }
+        Ok(Self { entries })
+    }
+
+    /// Load from a path; a missing file is an empty waiver set.
+    pub fn load(path: &std::path::Path) -> Result<Self, String> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Self::parse(&text),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Self::default()),
+            Err(e) => Err(format!("read {}: {e}", path.display())),
+        }
+    }
+
+    fn matches(&self, f: &Finding) -> bool {
+        self.entries.iter().any(|w| {
+            w.rule == f.rule && w.file == f.file && (w.symbol == "*" || w.symbol == f.symbol)
+        })
+    }
+
+    /// Mark matching findings as waived; returns how many were waived.
+    pub fn apply(&self, findings: &mut [Finding]) -> usize {
+        let mut n = 0;
+        for f in findings.iter_mut() {
+            if self.matches(f) {
+                f.waived = true;
+                n += 1;
+            }
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &'static str, file: &str, symbol: &str) -> Finding {
+        Finding::new("determinism", rule, file, 3, symbol, "msg".to_string())
+    }
+
+    #[test]
+    fn waivers_match_exact_and_wildcard_symbols() {
+        let w = Waivers::parse(
+            "# header comment\n\
+             det-hash-iter graph/io.rs remap  # trailing comment\n\
+             det-wall-clock algo/mod.rs *\n",
+        )
+        .unwrap();
+        let mut fs = vec![
+            finding("det-hash-iter", "graph/io.rs", "remap"),
+            finding("det-hash-iter", "graph/io.rs", "first_weight"),
+            finding("det-wall-clock", "algo/mod.rs", "exceeded"),
+            finding("det-wall-clock", "serve/mod.rs", "exceeded"),
+        ];
+        assert_eq!(w.apply(&mut fs), 2);
+        assert!(fs[0].waived, "exact symbol match");
+        assert!(!fs[1].waived, "different symbol, no wildcard");
+        assert!(fs[2].waived, "wildcard symbol");
+        assert!(!fs[3].waived, "different file");
+    }
+
+    #[test]
+    fn malformed_waiver_lines_are_errors_with_line_numbers() {
+        let err = Waivers::parse("det-hash-iter graph/io.rs\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let err = Waivers::parse("ok x y\n\nrule file sym extra\n").unwrap_err();
+        assert!(err.contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn json_rendering_escapes_and_shapes() {
+        let mut f = finding("det-hash-iter", "graph/io.rs", "remap");
+        f.msg = "say \"hi\"\tok\n".to_string();
+        let json = render_json(&[f]);
+        assert!(json.starts_with('['), "{json}");
+        assert!(json.ends_with(']'), "{json}");
+        assert!(json.contains("\"pass\": \"determinism\""), "{json}");
+        assert!(json.contains("\"line\": 3"), "{json}");
+        assert!(json.contains("say \\\"hi\\\"\\tok\\n"), "{json}");
+        assert!(json.contains("\"waived\": false"), "{json}");
+        assert_eq!(render_json(&[]), "[\n]");
+    }
+
+    #[test]
+    fn lint_violations_adapt_to_findings() {
+        let v = Violation {
+            file: "algo/x.rs".to_string(),
+            line: 7,
+            rule: "safety-comment",
+            msg: "missing".to_string(),
+        };
+        let f = Finding::from_lint(v);
+        assert_eq!(f.pass, "lint");
+        assert_eq!(format!("{f}"), "algo/x.rs:7: [lint/safety-comment] missing");
+    }
+}

@@ -1,0 +1,299 @@
+//! Crate-level model for `xtask analyze`: all parsed source files, the
+//! module graph (`mod x;` declarations), and an intra-crate call graph
+//! with file-level reachability.
+//!
+//! Name resolution is deliberately approximate — no type checking, no
+//! import tracking. A call `foo::bar(...)` resolves to definitions of
+//! `bar` in files whose path matches the module `foo`; when no path
+//! matches (the qualifier was a type, `Self`, or an external crate) it
+//! falls back to *every* definition of `bar`, and bare/method calls
+//! resolve to every definition too. That can only widen the reachable
+//! set, which is the safe direction for a determinism gate: scope grows,
+//! findings never silently disappear.
+
+use crate::parser::{self, SourceFile};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+pub(crate) struct CrateModel {
+    pub files: Vec<SourceFile>,
+}
+
+/// A function definition site: file index plus (for parsed fns) the
+/// index into that file's `fns`. Macro-generated fns have no parsed
+/// body and act as call-graph leaves.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Def {
+    Parsed { file: usize, fn_idx: usize },
+    Generated { file: usize },
+}
+
+impl CrateModel {
+    /// Build the model from in-memory `(relpath, text)` pairs — the
+    /// fixture-friendly constructor every pass self-test uses.
+    pub fn from_sources(sources: &[(&str, &str)]) -> Self {
+        let files = sources.iter().map(|(rel, text)| parser::parse(rel, text)).collect();
+        Self { files }
+    }
+
+    /// Load every `.rs` file under `root`. Unreadable files become
+    /// `(relpath, error)` pairs so the caller can report them as
+    /// findings instead of aborting the whole run.
+    pub fn load_tree(root: &Path) -> Result<(Self, Vec<(String, String)>), String> {
+        let mut rels = Vec::new();
+        crate::lint::collect_rs_files(root, root, &mut rels)?;
+        if rels.is_empty() {
+            return Err(format!("no .rs files under {}", root.display()));
+        }
+        rels.sort();
+        let mut files = Vec::new();
+        let mut errors = Vec::new();
+        for rel in rels {
+            match std::fs::read_to_string(root.join(&rel)) {
+                Ok(text) => files.push(parser::parse(&rel, &text)),
+                Err(e) => errors.push((rel, e.to_string())),
+            }
+        }
+        Ok((Self { files }, errors))
+    }
+
+    pub fn file_index(&self, rel: &str) -> Option<usize> {
+        self.files.iter().position(|f| f.rel == rel)
+    }
+
+    /// Child modules declared by `mod x;` in `files[idx]`: resolved to
+    /// `<dir>/x.rs` or `<dir>/x/mod.rs` where `<dir>` is the declaring
+    /// file's module directory.
+    pub fn module_children(&self, idx: usize) -> Vec<usize> {
+        let rel = &self.files[idx].rel;
+        let dir = if rel == "lib.rs" || rel == "main.rs" {
+            String::new()
+        } else if let Some(stripped) = rel.strip_suffix("/mod.rs") {
+            stripped.to_string()
+        } else if let Some(stripped) = rel.strip_suffix(".rs") {
+            stripped.to_string()
+        } else {
+            rel.clone()
+        };
+        let mut out = Vec::new();
+        for name in &self.files[idx].mods {
+            let flat = if dir.is_empty() { format!("{name}.rs") } else { format!("{dir}/{name}.rs") };
+            let nested =
+                if dir.is_empty() { format!("{name}/mod.rs") } else { format!("{dir}/{name}/mod.rs") };
+            if let Some(c) = self.file_index(&flat).or_else(|| self.file_index(&nested)) {
+                out.push(c);
+            }
+        }
+        out
+    }
+
+    /// Name → definition sites, over non-test parsed fns and
+    /// macro-generated fns. Aliases (`use m::f as g`) add the target's
+    /// definitions under the alias name.
+    fn fn_defs(&self) -> BTreeMap<String, Vec<Def>> {
+        let mut defs: BTreeMap<String, Vec<Def>> = BTreeMap::new();
+        for (fi, file) in self.files.iter().enumerate() {
+            for (ki, f) in file.fns.iter().enumerate() {
+                if !f.in_test {
+                    defs.entry(f.name.clone()).or_default().push(Def::Parsed { file: fi, fn_idx: ki });
+                }
+            }
+            for g in &file.generated {
+                defs.entry(g.name.clone()).or_default().push(Def::Generated { file: fi });
+            }
+        }
+        // One alias round is enough in practice (alias-of-alias chains
+        // do not occur in this crate).
+        let mut alias_defs: Vec<(String, Vec<Def>)> = Vec::new();
+        for file in &self.files {
+            for (target, alias) in &file.aliases {
+                if alias != target {
+                    if let Some(d) = defs.get(target) {
+                        alias_defs.push((alias.clone(), d.clone()));
+                    }
+                }
+            }
+        }
+        for (alias, d) in alias_defs {
+            defs.entry(alias).or_default().extend(d);
+        }
+        for d in defs.values_mut() {
+            d.sort();
+            d.dedup();
+        }
+        defs
+    }
+
+    /// File indices reachable (via the call graph) from the `pub`
+    /// entry-point functions of every file selected by `is_root`. Root
+    /// files are always in the result (they are scanned whole at the
+    /// file level); private helpers inside them are traversed as soon
+    /// as any entry point calls them.
+    pub fn reachable_files(&self, is_root: impl Fn(&SourceFile) -> bool) -> BTreeSet<usize> {
+        let defs = self.fn_defs();
+        let mut reachable_files = BTreeSet::new();
+        let mut visited: BTreeSet<Def> = BTreeSet::new();
+        let mut queue: Vec<Def> = Vec::new();
+        for (fi, file) in self.files.iter().enumerate() {
+            if is_root(file) {
+                reachable_files.insert(fi);
+                for (ki, f) in file.fns.iter().enumerate() {
+                    if f.is_pub && !f.in_test {
+                        queue.push(Def::Parsed { file: fi, fn_idx: ki });
+                    }
+                }
+            }
+        }
+        while let Some(def) = queue.pop() {
+            if !visited.insert(def) {
+                continue;
+            }
+            let (fi, ki) = match def {
+                Def::Generated { file } => {
+                    reachable_files.insert(file);
+                    continue;
+                }
+                Def::Parsed { file, fn_idx } => (file, fn_idx),
+            };
+            reachable_files.insert(fi);
+            for call in &self.files[fi].fns[ki].calls {
+                let Some(candidates) = defs.get(&call.name) else { continue };
+                let narrowed: Vec<Def> = if call.is_method {
+                    // Receiver types are unknown: resolve to every
+                    // definition of the method name.
+                    candidates.clone()
+                } else {
+                    match &call.qualifier {
+                        Some(q) => {
+                            let m: Vec<Def> = candidates
+                                .iter()
+                                .copied()
+                                .filter(|d| {
+                                    let file = match d {
+                                        Def::Parsed { file, .. } | Def::Generated { file } => *file,
+                                    };
+                                    file_matches_module(&self.files[file].rel, q)
+                                })
+                                .collect();
+                            // Qualifier was a type / Self / external
+                            // path: fall back to every candidate.
+                            if m.is_empty() { candidates.clone() } else { m }
+                        }
+                        None => candidates.clone(),
+                    }
+                };
+                queue.extend(narrowed);
+            }
+        }
+        reachable_files
+    }
+}
+
+/// Does `rel` plausibly implement module `q`? Matches `q.rs`,
+/// `.../q.rs`, `q/mod.rs`, and any file under a `q/` directory.
+fn file_matches_module(rel: &str, q: &str) -> bool {
+    rel == format!("{q}.rs")
+        || rel.ends_with(&format!("/{q}.rs"))
+        || rel == format!("{q}/mod.rs")
+        || rel.ends_with(&format!("/{q}/mod.rs"))
+        || rel.starts_with(&format!("{q}/"))
+        || rel.contains(&format!("/{q}/"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CrateModel {
+        CrateModel::from_sources(&[
+            (
+                "algo/mod.rs",
+                "pub fn entry(g: u32) -> u32 {\n    helper::go(g) + local(g)\n}\nfn local(g: u32) -> u32 { g }\n",
+            ),
+            ("util/helper.rs", "pub fn go(g: u32) -> u32 {\n    deep(g)\n}\nfn deep(g: u32) -> u32 { g }\n"),
+            ("util/unused.rs", "pub fn island(g: u32) -> u32 { g }\n"),
+            (
+                "simd/mod.rs",
+                "mod avx2;\nmod scalar;\npub use avx2::row_w8 as veclabel_row_avx2;\n",
+            ),
+            (
+                "simd/avx2.rs",
+                concat!(
+                    "macro_rules! gen_row {\n",
+                    "    ($name:ident) => {\n",
+                    "        /// # Safety\n",
+                    "        pub unsafe fn $name() {}\n",
+                    "    };\n",
+                    "}\n",
+                    "gen_row!(row_w8);\n",
+                ),
+            ),
+            ("simd/scalar.rs", "pub fn row_scalar() {}\n"),
+        ])
+    }
+
+    #[test]
+    fn qualified_calls_reach_across_files_and_islands_stay_out() {
+        let m = model();
+        let reached = m.reachable_files(|f| f.rel.starts_with("algo/"));
+        let names: Vec<&str> = reached.iter().map(|&i| m.files[i].rel.as_str()).collect();
+        assert!(names.contains(&"algo/mod.rs"), "{names:?}");
+        assert!(names.contains(&"util/helper.rs"), "qualified call resolves: {names:?}");
+        assert!(!names.contains(&"util/unused.rs"), "island not reachable: {names:?}");
+    }
+
+    #[test]
+    fn aliases_resolve_to_generated_fns() {
+        let m = CrateModel::from_sources(&[
+            ("algo/mod.rs", "pub fn entry() {\n    veclabel_row_avx2()\n}\n"),
+            (
+                "simd/mod.rs",
+                "mod avx2;\npub use avx2::row_w8 as veclabel_row_avx2;\n",
+            ),
+            (
+                "simd/avx2.rs",
+                "macro_rules! gen_row {\n    ($name:ident) => {\n        pub unsafe fn $name() {}\n    };\n}\ngen_row!(row_w8);\n",
+            ),
+        ]);
+        let reached = m.reachable_files(|f| f.rel.starts_with("algo/"));
+        let names: Vec<&str> = reached.iter().map(|&i| m.files[i].rel.as_str()).collect();
+        assert!(names.contains(&"simd/avx2.rs"), "alias → generated fn: {names:?}");
+    }
+
+    #[test]
+    fn test_only_callers_do_not_seed_reachability() {
+        let m = CrateModel::from_sources(&[
+            (
+                "algo/mod.rs",
+                "pub fn entry() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { crate::util::secret::hidden() }\n}\n",
+            ),
+            ("util/secret.rs", "pub fn hidden() {}\n"),
+        ]);
+        let reached = m.reachable_files(|f| f.rel.starts_with("algo/"));
+        let names: Vec<&str> = reached.iter().map(|&i| m.files[i].rel.as_str()).collect();
+        assert!(!names.contains(&"util/secret.rs"), "{names:?}");
+    }
+
+    #[test]
+    fn module_children_resolve_flat_and_nested() {
+        let m = model();
+        let simd = m.file_index("simd/mod.rs").unwrap();
+        let kids: Vec<&str> =
+            m.module_children(simd).iter().map(|&i| m.files[i].rel.as_str()).collect();
+        assert_eq!(kids, vec!["simd/avx2.rs", "simd/scalar.rs"]);
+    }
+
+    #[test]
+    fn load_tree_reports_unreadable_files_without_aborting() {
+        let dir = std::env::temp_dir().join(format!("xtask-graph-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("ok.rs"), "pub fn fine() {}\n").unwrap();
+        std::fs::write(dir.join("bad.rs"), [0xFFu8, 0xFE, 0x00, 0xC0]).unwrap();
+        let (model, errors) = CrateModel::load_tree(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(model.files.len(), 1);
+        assert_eq!(model.files[0].rel, "ok.rs");
+        assert_eq!(errors.len(), 1);
+        assert_eq!(errors[0].0, "bad.rs");
+    }
+}

@@ -1,0 +1,273 @@
+//! The shared source-level lexer behind `xtask lint` and `xtask analyze`.
+//!
+//! Splits every source line into *code text* (with comments, string
+//! literals, and char literals blanked out) and *comment text*, so the
+//! rule passes can match tokens without tripping on `"unsafe"` inside a
+//! string or a doc comment. Extracted from the PR 6 lint pass; the item
+//! parser ([`crate::parser`]) builds on the same per-line model.
+
+/// One source line after lexing: `code` with comments/strings/chars
+/// blanked out, `comment` holding only comment text (line, block, doc).
+pub(crate) struct Line {
+    pub(crate) code: String,
+    pub(crate) comment: String,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Code,
+    /// `// ...` until end of line.
+    LineComment,
+    /// `/* ... */`, nesting depth.
+    BlockComment(u32),
+    /// `"..."` with backslash escapes.
+    Str,
+    /// `r"..."` / `r##"..."##`, closing needs this many `#`s.
+    RawStr(u32),
+    /// `'x'` / `'\n'` with backslash escapes.
+    CharLit,
+}
+
+/// Lex `text` into per-line code/comment split. Handles nested block
+/// comments, raw strings, byte strings, and the char-literal/lifetime
+/// ambiguity (`'a'` is a literal, `<'a>` is not).
+pub(crate) fn classify(text: &str) -> Vec<Line> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let ch = chars[i];
+        if ch == '\n' {
+            if mode == Mode::LineComment {
+                mode = Mode::Code;
+            }
+            lines.push(Line { code: std::mem::take(&mut code), comment: std::mem::take(&mut comment) });
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let next = chars.get(i + 1).copied();
+                if ch == '/' && next == Some('/') {
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if ch == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                } else if ch == '"' {
+                    mode = Mode::Str;
+                    code.push(' ');
+                    i += 1;
+                } else if (ch == 'r' || ch == 'b')
+                    && !code.chars().last().is_some_and(is_ident_char)
+                {
+                    // Possible raw/byte-string prefix: b" r" br" r#" br#" ...
+                    let mut j = i;
+                    if chars.get(j) == Some(&'b') {
+                        j += 1;
+                    }
+                    let raw = chars.get(j) == Some(&'r');
+                    if raw {
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if raw && chars.get(j) == Some(&'"') {
+                        mode = Mode::RawStr(hashes);
+                        code.push(' ');
+                        i = j + 1;
+                    } else if ch == 'b' && chars.get(i + 1) == Some(&'"') {
+                        mode = Mode::Str;
+                        code.push(' ');
+                        i += 2;
+                    } else {
+                        code.push(ch);
+                        i += 1;
+                    }
+                } else if ch == '\'' {
+                    if next == Some('\\') {
+                        mode = Mode::CharLit;
+                        code.push(' ');
+                        // Consume the quote, the backslash, AND the escaped
+                        // character, so `'\\'` / `'\''` cannot re-trigger
+                        // escape handling on the escaped character itself.
+                        i += 3;
+                    } else if next.is_some() && chars.get(i + 2) == Some(&'\'') {
+                        // 'x' — a one-char literal.
+                        code.push(' ');
+                        i += 3;
+                    } else {
+                        // A lifetime; keep scanning as code.
+                        code.push(ch);
+                        i += 1;
+                    }
+                } else {
+                    code.push(ch);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                comment.push(ch);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if ch == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else if ch == '*' && next == Some('/') {
+                    mode = if depth == 1 { Mode::Code } else { Mode::BlockComment(depth - 1) };
+                    i += 2;
+                } else {
+                    comment.push(ch);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if ch == '\\' {
+                    // Skip the escaped character — except a line
+                    // continuation's newline, which must still flush the
+                    // physical line above (line numbers stay 1:1 with the
+                    // file).
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if ch == '"' {
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if ch == '"' && (0..hashes).all(|k| chars.get(i + 1 + k as usize) == Some(&'#')) {
+                    mode = Mode::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::CharLit => {
+                // The opening quote, backslash, and escaped character are
+                // already consumed; scan for the closing quote (loose
+                // enough for multi-char escapes like `'\u{7fff}'`).
+                if ch == '\'' {
+                    mode = Mode::Code;
+                }
+                i += 1;
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(Line { code, comment });
+    }
+    lines
+}
+
+pub(crate) fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+pub(crate) fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// True when `word` occurs in `code` with non-identifier characters (or
+/// line boundaries) on both sides. Byte-wise so non-ASCII in `code`
+/// cannot cause slicing trouble.
+pub(crate) fn has_word(code: &str, word: &str) -> bool {
+    word_position(code, word).is_some()
+}
+
+pub(crate) fn word_position(code: &str, word: &str) -> Option<usize> {
+    let c = code.as_bytes();
+    let w = word.as_bytes();
+    if w.is_empty() || c.len() < w.len() {
+        return None;
+    }
+    for i in 0..=c.len() - w.len() {
+        if &c[i..i + w.len()] == w {
+            let before_ok = i == 0 || !is_ident_byte(c[i - 1]);
+            let after = i + w.len();
+            let after_ok = after >= c.len() || !is_ident_byte(c[after]);
+            if before_ok && after_ok {
+                return Some(i);
+            }
+        }
+    }
+    None
+}
+
+/// True when `word` occurs as an identifier immediately followed by
+/// `follow` (e.g. a call: `edge_hash(`).
+pub(crate) fn has_word_followed_by(code: &str, word: &str, follow: u8) -> bool {
+    let c = code.as_bytes();
+    let w = word.as_bytes();
+    if w.is_empty() || c.len() < w.len() + 1 {
+        return false;
+    }
+    for i in 0..=c.len() - w.len() - 1 {
+        if &c[i..i + w.len()] == w
+            && (i == 0 || !is_ident_byte(c[i - 1]))
+            && c[i + w.len()] == follow
+        {
+            return true;
+        }
+    }
+    false
+}
+
+/// Mark the lines belonging to `#[cfg(test)]`-gated items: from the
+/// attribute line through the matching close brace of the item's body
+/// (found by brace counting over code text — string/char contents were
+/// already blanked by the lexer).
+pub(crate) fn test_mask(lines: &[Line]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0usize;
+    while i < lines.len() {
+        if !lines[i].code.contains("cfg(test") {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut j = i;
+        while j < lines.len() {
+            for ch in lines[j].code.chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        let end = j.min(lines.len().saturating_sub(1));
+        for flag in &mut mask[start..=end] {
+            *flag = true;
+        }
+        i = end + 1;
+    }
+    mask
+}
+
+/// True when any line in `lines[lo..=i]` (where `lo = i - window`,
+/// clamped) carries a comment containing one of `needles`. The shared
+/// "justification comment within N lines above" check used by every
+/// annotation rule (SAFETY / ORDERING / DETERMINISM).
+pub(crate) fn comment_in_window(lines: &[Line], i: usize, window: usize, needles: &[&str]) -> bool {
+    lines[i.saturating_sub(window)..=i]
+        .iter()
+        .any(|l| needles.iter().any(|n| l.comment.contains(n)))
+}

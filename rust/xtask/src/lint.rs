@@ -2,9 +2,9 @@
 //!
 //! Clippy sees types and syntax; these rules encode *project* contracts
 //! that live in comments and module boundaries, so they are enforced at
-//! the source level with a small lexer that strips comments, string
-//! literals, and char literals before matching (a `"unsafe"` inside a
-//! string or doc comment never trips a rule).
+//! the source level with the shared lexer ([`crate::lexer`]) that strips
+//! comments, string literals, and char literals before matching (a
+//! `"unsafe"` inside a string or doc comment never trips a rule).
 //!
 //! Rules (scanned over `rust/src`; `#[cfg(test)]` regions are exempt
 //! from R2–R4 — test code may use raw primitives and synthetic ids —
@@ -32,273 +32,14 @@
 //!   `edge_hash(...)` call site must reference `orig` in its argument
 //!   window, and the body of `rebuild_sampling_tables` must call
 //!   `orig(...)`.
+//!
+//! An unreadable file is reported as a `read-error` violation on line 1
+//! and the walk continues, so one bad file cannot mask findings in the
+//! rest of the tree.
 
+use crate::lexer::{classify, comment_in_window, has_word, has_word_followed_by, test_mask};
 use std::fmt;
 use std::path::Path;
-
-// ---------------------------------------------------------------------------
-// Lexer: split each source line into code text and comment text
-// ---------------------------------------------------------------------------
-
-/// One source line after lexing: `code` with comments/strings/chars
-/// blanked out, `comment` holding only comment text (line, block, doc).
-struct Line {
-    code: String,
-    comment: String,
-}
-
-#[derive(Clone, Copy, PartialEq, Eq)]
-enum Mode {
-    Code,
-    /// `// ...` until end of line.
-    LineComment,
-    /// `/* ... */`, nesting depth.
-    BlockComment(u32),
-    /// `"..."` with backslash escapes.
-    Str,
-    /// `r"..."` / `r##"..."##`, closing needs this many `#`s.
-    RawStr(u32),
-    /// `'x'` / `'\n'` with backslash escapes.
-    CharLit,
-}
-
-/// Lex `text` into per-line code/comment split. Handles nested block
-/// comments, raw strings, byte strings, and the char-literal/lifetime
-/// ambiguity (`'a'` is a literal, `<'a>` is not).
-fn classify(text: &str) -> Vec<Line> {
-    let chars: Vec<char> = text.chars().collect();
-    let mut lines = Vec::new();
-    let mut code = String::new();
-    let mut comment = String::new();
-    let mut mode = Mode::Code;
-    let mut i = 0usize;
-    while i < chars.len() {
-        let ch = chars[i];
-        if ch == '\n' {
-            if mode == Mode::LineComment {
-                mode = Mode::Code;
-            }
-            lines.push(Line { code: std::mem::take(&mut code), comment: std::mem::take(&mut comment) });
-            i += 1;
-            continue;
-        }
-        match mode {
-            Mode::Code => {
-                let next = chars.get(i + 1).copied();
-                if ch == '/' && next == Some('/') {
-                    mode = Mode::LineComment;
-                    i += 2;
-                } else if ch == '/' && next == Some('*') {
-                    mode = Mode::BlockComment(1);
-                    i += 2;
-                } else if ch == '"' {
-                    mode = Mode::Str;
-                    code.push(' ');
-                    i += 1;
-                } else if (ch == 'r' || ch == 'b')
-                    && !code.chars().last().is_some_and(is_ident_char)
-                {
-                    // Possible raw/byte-string prefix: b" r" br" r#" br#" ...
-                    let mut j = i;
-                    if chars.get(j) == Some(&'b') {
-                        j += 1;
-                    }
-                    let raw = chars.get(j) == Some(&'r');
-                    if raw {
-                        j += 1;
-                    }
-                    let mut hashes = 0u32;
-                    while chars.get(j) == Some(&'#') {
-                        hashes += 1;
-                        j += 1;
-                    }
-                    if raw && chars.get(j) == Some(&'"') {
-                        mode = Mode::RawStr(hashes);
-                        code.push(' ');
-                        i = j + 1;
-                    } else if ch == 'b' && chars.get(i + 1) == Some(&'"') {
-                        mode = Mode::Str;
-                        code.push(' ');
-                        i += 2;
-                    } else {
-                        code.push(ch);
-                        i += 1;
-                    }
-                } else if ch == '\'' {
-                    if next == Some('\\') {
-                        mode = Mode::CharLit;
-                        code.push(' ');
-                        // Consume the quote, the backslash, AND the escaped
-                        // character, so `'\\'` / `'\''` cannot re-trigger
-                        // escape handling on the escaped character itself.
-                        i += 3;
-                    } else if next.is_some() && chars.get(i + 2) == Some(&'\'') {
-                        // 'x' — a one-char literal.
-                        code.push(' ');
-                        i += 3;
-                    } else {
-                        // A lifetime; keep scanning as code.
-                        code.push(ch);
-                        i += 1;
-                    }
-                } else {
-                    code.push(ch);
-                    i += 1;
-                }
-            }
-            Mode::LineComment => {
-                comment.push(ch);
-                i += 1;
-            }
-            Mode::BlockComment(depth) => {
-                let next = chars.get(i + 1).copied();
-                if ch == '/' && next == Some('*') {
-                    mode = Mode::BlockComment(depth + 1);
-                    i += 2;
-                } else if ch == '*' && next == Some('/') {
-                    mode = if depth == 1 { Mode::Code } else { Mode::BlockComment(depth - 1) };
-                    i += 2;
-                } else {
-                    comment.push(ch);
-                    i += 1;
-                }
-            }
-            Mode::Str => {
-                if ch == '\\' {
-                    // Skip the escaped character — except a line
-                    // continuation's newline, which must still flush the
-                    // physical line above (line numbers stay 1:1 with the
-                    // file).
-                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
-                } else if ch == '"' {
-                    mode = Mode::Code;
-                    i += 1;
-                } else {
-                    i += 1;
-                }
-            }
-            Mode::RawStr(hashes) => {
-                if ch == '"' && (0..hashes).all(|k| chars.get(i + 1 + k as usize) == Some(&'#')) {
-                    mode = Mode::Code;
-                    i += 1 + hashes as usize;
-                } else {
-                    i += 1;
-                }
-            }
-            Mode::CharLit => {
-                // The opening quote, backslash, and escaped character are
-                // already consumed; scan for the closing quote (loose
-                // enough for multi-char escapes like `'\u{7fff}'`).
-                if ch == '\'' {
-                    mode = Mode::Code;
-                }
-                i += 1;
-            }
-        }
-    }
-    if !code.is_empty() || !comment.is_empty() {
-        lines.push(Line { code, comment });
-    }
-    lines
-}
-
-fn is_ident_char(c: char) -> bool {
-    c.is_ascii_alphanumeric() || c == '_'
-}
-
-fn is_ident_byte(b: u8) -> bool {
-    b.is_ascii_alphanumeric() || b == b'_'
-}
-
-/// True when `word` occurs in `code` with non-identifier characters (or
-/// line boundaries) on both sides. Byte-wise so non-ASCII in `code`
-/// cannot cause slicing trouble.
-fn has_word(code: &str, word: &str) -> bool {
-    word_position(code, word).is_some()
-}
-
-fn word_position(code: &str, word: &str) -> Option<usize> {
-    let c = code.as_bytes();
-    let w = word.as_bytes();
-    if w.is_empty() || c.len() < w.len() {
-        return None;
-    }
-    for i in 0..=c.len() - w.len() {
-        if &c[i..i + w.len()] == w {
-            let before_ok = i == 0 || !is_ident_byte(c[i - 1]);
-            let after = i + w.len();
-            let after_ok = after >= c.len() || !is_ident_byte(c[after]);
-            if before_ok && after_ok {
-                return Some(i);
-            }
-        }
-    }
-    None
-}
-
-/// True when `word` occurs as an identifier immediately followed by
-/// `follow` (e.g. a call: `edge_hash(`).
-fn has_word_followed_by(code: &str, word: &str, follow: u8) -> bool {
-    let c = code.as_bytes();
-    let w = word.as_bytes();
-    if w.is_empty() || c.len() < w.len() + 1 {
-        return false;
-    }
-    for i in 0..=c.len() - w.len() - 1 {
-        if &c[i..i + w.len()] == w
-            && (i == 0 || !is_ident_byte(c[i - 1]))
-            && c[i + w.len()] == follow
-        {
-            return true;
-        }
-    }
-    false
-}
-
-/// Mark the lines belonging to `#[cfg(test)]`-gated items: from the
-/// attribute line through the matching close brace of the item's body
-/// (found by brace counting over code text — string/char contents were
-/// already blanked by the lexer).
-fn test_mask(lines: &[Line]) -> Vec<bool> {
-    let mut mask = vec![false; lines.len()];
-    let mut i = 0usize;
-    while i < lines.len() {
-        if !lines[i].code.contains("cfg(test") {
-            i += 1;
-            continue;
-        }
-        let start = i;
-        let mut depth = 0i64;
-        let mut opened = false;
-        let mut j = i;
-        while j < lines.len() {
-            for ch in lines[j].code.chars() {
-                match ch {
-                    '{' => {
-                        depth += 1;
-                        opened = true;
-                    }
-                    '}' => depth -= 1,
-                    _ => {}
-                }
-            }
-            if opened && depth <= 0 {
-                break;
-            }
-            j += 1;
-        }
-        let end = j.min(lines.len().saturating_sub(1));
-        for flag in &mut mask[start..=end] {
-            *flag = true;
-        }
-        i = end + 1;
-    }
-    mask
-}
-
-// ---------------------------------------------------------------------------
-// Rules
-// ---------------------------------------------------------------------------
 
 /// How far above an `unsafe` token a SAFETY justification may sit
 /// (multi-bullet `# Safety` doc sections plus attributes need room).
@@ -364,18 +105,12 @@ pub fn check_source(relpath: &str, text: &str) -> Vec<Violation> {
         msg,
     };
 
-    let comment_in_window = |i: usize, window: usize, needles: &[&str]| {
-        lines[i.saturating_sub(window)..=i]
-            .iter()
-            .any(|l| needles.iter().any(|n| l.comment.contains(n)))
-    };
-
     for i in 0..lines.len() {
         let code = lines[i].code.as_str();
 
         // R1: unsafe needs a SAFETY justification — tests included.
         if has_word(code, "unsafe")
-            && !comment_in_window(i, SAFETY_WINDOW, &["SAFETY:", "# Safety"])
+            && !comment_in_window(&lines, i, SAFETY_WINDOW, &["SAFETY:", "# Safety"])
         {
             out.push(violation(
                 i,
@@ -390,7 +125,7 @@ pub fn check_source(relpath: &str, text: &str) -> Vec<Violation> {
         // exempt everywhere except the strict `rr/` paths.
         if (!mask[i] || ordering_strict(relpath))
             && has_word(code, "Relaxed")
-            && !comment_in_window(i, ORDERING_WINDOW, &["ORDERING:"])
+            && !comment_in_window(&lines, i, ORDERING_WINDOW, &["ORDERING:"])
         {
             out.push(violation(
                 i,
@@ -450,7 +185,9 @@ pub fn check_source(relpath: &str, text: &str) -> Vec<Violation> {
     out
 }
 
-/// Lint every `.rs` file under `root`, in sorted order.
+/// Lint every `.rs` file under `root`, in sorted order. A file that
+/// cannot be read yields a `read-error` violation for that file and the
+/// walk continues — every other file is still fully reported.
 pub fn check_tree(root: &Path) -> Result<Vec<Violation>, String> {
     let mut files = Vec::new();
     collect_rs_files(root, root, &mut files)?;
@@ -460,14 +197,20 @@ pub fn check_tree(root: &Path) -> Result<Vec<Violation>, String> {
     files.sort();
     let mut out = Vec::new();
     for rel in files {
-        let text = std::fs::read_to_string(root.join(&rel))
-            .map_err(|e| format!("read {rel}: {e}"))?;
-        out.extend(check_source(&rel, &text));
+        match std::fs::read_to_string(root.join(&rel)) {
+            Ok(text) => out.extend(check_source(&rel, &text)),
+            Err(e) => out.push(Violation {
+                file: rel,
+                line: 1,
+                rule: "read-error",
+                msg: format!("could not read file: {e}"),
+            }),
+        }
     }
     Ok(out)
 }
 
-fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<(), String> {
+pub(crate) fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<(), String> {
     let entries = std::fs::read_dir(dir).map_err(|e| format!("read {}: {e}", dir.display()))?;
     for entry in entries {
         let entry = entry.map_err(|e| format!("read {}: {e}", dir.display()))?;
@@ -664,5 +407,42 @@ mod tests {
         }
         text.push_str("fn f(p: *mut u8) { unsafe { *p = 1 }; }\n");
         assert_eq!(rules("algo/x.rs", &text), vec!["safety-comment"]);
+    }
+
+    #[test]
+    fn multiple_violations_in_one_file_are_all_reported() {
+        // One file, three independent violations — the pass must report
+        // every one, not stop at the first.
+        let text = concat!(
+            "use std::sync::Mutex;\n",
+            "fn f(p: *mut u8) {\n",
+            "    unsafe { *p = 1 };\n",
+            "}\n",
+            "fn g(a: &AtomicUsize) -> usize {\n",
+            "    a.load(Ordering::Relaxed)\n",
+            "}\n"
+        );
+        let mut got = rules("algo/x.rs", text);
+        got.sort();
+        assert_eq!(got, vec!["facade-bypass", "ordering-comment", "safety-comment"]);
+    }
+
+    #[test]
+    fn unreadable_file_is_a_read_error_not_an_abort() {
+        // A tree with one good and one unreadable .rs entry: the good
+        // file's violations still surface alongside the read-error.
+        let dir = std::env::temp_dir().join("xtask_lint_read_error");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("good.rs"), "use std::sync::Mutex;\n").unwrap();
+        // A directory named *.rs is unreadable as a file on every platform…
+        // except it walks as a directory; use invalid UTF-8 instead, which
+        // read_to_string rejects deterministically.
+        std::fs::write(dir.join("bad.rs"), [0xFFu8, 0xFE, 0x00, 0xC0]).unwrap();
+        let violations = check_tree(&dir).unwrap();
+        let rules: Vec<&str> = violations.iter().map(|v| v.rule).collect();
+        assert!(rules.contains(&"read-error"), "{rules:?}");
+        assert!(rules.contains(&"facade-bypass"), "{rules:?}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

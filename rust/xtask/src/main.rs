@@ -1,55 +1,160 @@
 //! Repo tooling, invoked as `cargo xtask <command>` (alias in
 //! `rust/.cargo/config.toml`).
 //!
-//! The one command is `lint`: a source-level pass over `rust/src`
-//! enforcing repo-specific invariants that clippy cannot express (see
-//! [`lint`] for the rule list). It is a hard CI gate — `cargo xtask
-//! lint` must exit 0 on every PR.
+//! Two commands:
+//!
+//! * `lint` — the PR 6 token-level pass over `rust/src`: SAFETY/ORDERING
+//!   comment coverage, sync-facade bypasses, orig-id hashing invariants
+//!   (see [`lint`] for the rule list).
+//! * `analyze` — the static-analysis passes over the parsed crate
+//!   ([`parser`] + [`graph`]): determinism hazards on kernel paths,
+//!   the `simd/` unsafe boundary, and `RunOptions` knob parity (see
+//!   [`passes`]). Findings can be waived via `xtask/analyze.waivers`.
+//!
+//! Both are hard CI gates and both support `--json` for artifact
+//! upload. Exit codes: 0 clean (or all findings waived), 1 unwaived
+//! findings, 2 usage or I/O error.
 
+mod findings;
+mod graph;
+mod lexer;
 mod lint;
+mod parser;
+mod passes;
 
+use findings::{render_json, Finding, Waivers};
 use std::path::PathBuf;
 use std::process::ExitCode;
 
 fn usage() -> ExitCode {
-    eprintln!("usage: cargo xtask lint [--root <src-dir>]");
+    eprintln!("usage: cargo xtask <command> [--root <src-dir>] [--json]");
     eprintln!();
     eprintln!("commands:");
-    eprintln!("  lint    check SAFETY/ORDERING comment coverage, sync-facade");
-    eprintln!("          bypasses, and orig-id hashing invariants over rust/src");
+    eprintln!("  lint      check SAFETY/ORDERING comment coverage, sync-facade");
+    eprintln!("            bypasses, and orig-id hashing invariants over rust/src");
+    eprintln!("  analyze   run the determinism, unsafe-boundary, and knob-parity");
+    eprintln!("            passes over rust/src (also: --waivers <file>)");
     ExitCode::from(2)
 }
 
-fn main() -> ExitCode {
-    let mut args = std::env::args().skip(1);
-    match args.next().as_deref() {
-        Some("lint") => {
-            let root = match (args.next().as_deref(), args.next()) {
-                (Some("--root"), Some(dir)) => PathBuf::from(dir),
-                (None, _) => {
-                    // xtask lives at rust/xtask; the lint surface is rust/src.
-                    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../src")
-                }
-                _ => return usage(),
-            };
-            match lint::check_tree(&root) {
-                Ok(violations) if violations.is_empty() => {
-                    println!("xtask lint: clean");
-                    ExitCode::SUCCESS
-                }
-                Ok(violations) => {
-                    for v in &violations {
-                        eprintln!("{v}");
-                    }
-                    eprintln!("xtask lint: {} violation(s)", violations.len());
-                    ExitCode::FAILURE
-                }
-                Err(err) => {
-                    eprintln!("xtask lint: {err}");
-                    ExitCode::from(2)
-                }
+struct Flags {
+    root: PathBuf,
+    json: bool,
+    waivers: Option<PathBuf>,
+}
+
+fn parse_flags(args: &[String], allow_waivers: bool) -> Result<Flags, String> {
+    // xtask lives at rust/xtask; the analysis surface is rust/src.
+    let mut flags = Flags {
+        root: PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../src"),
+        json: false,
+        waivers: None,
+    };
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--root" => {
+                flags.root =
+                    PathBuf::from(it.next().ok_or("--root needs a directory argument")?);
             }
+            "--json" => flags.json = true,
+            "--waivers" if allow_waivers => {
+                flags.waivers =
+                    Some(PathBuf::from(it.next().ok_or("--waivers needs a file argument")?));
+            }
+            other => return Err(format!("unknown flag: {other}")),
         }
+    }
+    Ok(flags)
+}
+
+/// Print findings (text or JSON) and map them to the exit code. Waived
+/// findings are shown — and kept in the JSON artifact — but do not
+/// fail the run.
+fn report(command: &str, findings: &[Finding], json: bool) -> ExitCode {
+    let unwaived = findings.iter().filter(|f| !f.waived).count();
+    let waived = findings.len() - unwaived;
+    if json {
+        println!("{}", render_json(findings));
+    } else {
+        for f in findings {
+            eprintln!("{f}");
+        }
+        if unwaived == 0 && waived == 0 {
+            println!("xtask {command}: clean");
+        } else {
+            eprintln!("xtask {command}: {unwaived} finding(s), {waived} waived");
+        }
+    }
+    if unwaived == 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn run_lint(args: &[String]) -> ExitCode {
+    let flags = match parse_flags(args, false) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("xtask lint: {e}");
+            return usage();
+        }
+    };
+    match lint::check_tree(&flags.root) {
+        Ok(violations) => {
+            let all: Vec<Finding> = violations.into_iter().map(Finding::from_lint).collect();
+            report("lint", &all, flags.json)
+        }
+        Err(err) => {
+            eprintln!("xtask lint: {err}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run_analyze(args: &[String]) -> ExitCode {
+    let flags = match parse_flags(args, true) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("xtask analyze: {e}");
+            return usage();
+        }
+    };
+    let (model, read_errors) = match graph::CrateModel::load_tree(&flags.root) {
+        Ok(pair) => pair,
+        Err(err) => {
+            eprintln!("xtask analyze: {err}");
+            return ExitCode::from(2);
+        }
+    };
+    let mut all: Vec<Finding> = read_errors
+        .into_iter()
+        .map(|(rel, e)| {
+            Finding::new("analyze", "read-error", &rel, 1, "", format!("could not read file: {e}"))
+        })
+        .collect();
+    all.extend(passes::run_all(&model));
+
+    let waiver_path = flags
+        .waivers
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("analyze.waivers"));
+    let waivers = match Waivers::load(&waiver_path) {
+        Ok(w) => w,
+        Err(err) => {
+            eprintln!("xtask analyze: {err}");
+            return ExitCode::from(2);
+        }
+    };
+    waivers.apply(&mut all);
+    report("analyze", &all, flags.json)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("lint") => run_lint(&args[1..]),
+        Some("analyze") => run_analyze(&args[1..]),
         _ => usage(),
     }
 }

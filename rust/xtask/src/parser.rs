@@ -1,0 +1,543 @@
+//! A lightweight Rust item/body parser on top of the shared lexer — no
+//! dependencies, no syn. It recovers exactly the structure the analyze
+//! passes need and nothing more:
+//!
+//! * functions — name, `pub`/`unsafe` flags, body line span (by brace
+//!   counting over lexed code text), and the calls inside the body;
+//! * structs with named fields (name + declaration line per field);
+//! * `macro_rules!` definitions, flagging the ones whose bodies expand to
+//!   `unsafe fn` items, plus their invocations (`mac!(name, ...)` is
+//!   treated as declaring the function `name` — the `simd/avx2.rs`
+//!   kernel-generator pattern);
+//! * `use ... as ...` aliases and `mod x;` declarations (module graph).
+//!
+//! The parser is deliberately an over-approximation: it may attribute a
+//! nested function's calls to its enclosing item too, and it never
+//! resolves types. The passes are designed so that over-approximation
+//! can only widen the analyzed scope, never hide a finding.
+
+use crate::lexer::{self, classify, test_mask, word_position, Line};
+
+/// One parsed source file: raw text, lexed lines, test mask, and items.
+pub(crate) struct SourceFile {
+    /// Path relative to the scan root, `/`-separated.
+    pub rel: String,
+    /// Raw line text (same indexing as `lines`).
+    pub raw: Vec<String>,
+    /// Lexed lines (code/comment split).
+    pub lines: Vec<Line>,
+    /// Per-line `#[cfg(test)]` membership.
+    pub mask: Vec<bool>,
+    pub fns: Vec<FnItem>,
+    pub structs: Vec<StructItem>,
+    pub macros: Vec<MacroDef>,
+    /// Functions declared by invoking an unsafe-fn-generating macro.
+    pub generated: Vec<GeneratedFn>,
+    /// `target as alias` ident pairs (from `use` lists and anywhere else;
+    /// consumers look up by target name, so cast noise is inert).
+    pub aliases: Vec<(String, String)>,
+    /// `mod x;` out-of-line module declarations.
+    pub mods: Vec<String>,
+}
+
+#[derive(Debug)]
+pub(crate) struct FnItem {
+    pub name: String,
+    /// 0-based declaration line.
+    pub line: usize,
+    /// 0-based inclusive line span from the declaration through the
+    /// body's closing brace; `None` for bodyless trait signatures.
+    pub body: Option<(usize, usize)>,
+    pub is_pub: bool,
+    pub is_unsafe: bool,
+    pub in_test: bool,
+    pub calls: Vec<CallRef>,
+}
+
+#[derive(Debug)]
+pub(crate) struct CallRef {
+    pub name: String,
+    /// Last path segment before the call (`avx2` in `avx2::row_w8(...)`).
+    pub qualifier: Option<String>,
+    /// True for `.name(...)` method-call syntax.
+    pub is_method: bool,
+    /// 0-based line — diagnostic context, read by the self-tests.
+    #[allow(dead_code)]
+    pub line: usize,
+}
+
+#[derive(Debug)]
+pub(crate) struct StructItem {
+    pub name: String,
+    /// 0-based declaration line.
+    pub line: usize,
+    /// Named fields: `(name, 0-based declaration line)`.
+    pub fields: Vec<(String, usize)>,
+}
+
+#[derive(Debug)]
+pub(crate) struct MacroDef {
+    pub name: String,
+    /// 0-based inclusive body span.
+    pub body: (usize, usize),
+    /// Lines inside the body declaring `unsafe fn` templates.
+    pub unsafe_fn_lines: Vec<usize>,
+}
+
+#[derive(Debug)]
+pub(crate) struct GeneratedFn {
+    /// The function name the invocation generates.
+    pub name: String,
+    pub macro_name: String,
+    /// 0-based invocation line — diagnostic context, read by the
+    /// self-tests.
+    #[allow(dead_code)]
+    pub line: usize,
+    /// The `unsafe fn` template line inside the macro body (for doc
+    /// checks), when the macro generates unsafe fns.
+    pub template_line: usize,
+}
+
+const KEYWORDS: [&str; 18] = [
+    "if", "else", "while", "match", "for", "loop", "return", "fn", "in", "as", "move", "let",
+    "unsafe", "where", "impl", "use", "pub", "ref",
+];
+
+/// Parse one file into the item model.
+pub(crate) fn parse(rel: &str, text: &str) -> SourceFile {
+    let lines = classify(text);
+    let mask = test_mask(&lines);
+    let mut raw: Vec<String> = text.lines().map(|l| l.to_string()).collect();
+    raw.resize(lines.len().max(raw.len()), String::new());
+
+    let mut file = SourceFile {
+        rel: rel.to_string(),
+        raw,
+        lines,
+        mask,
+        fns: Vec::new(),
+        structs: Vec::new(),
+        macros: Vec::new(),
+        generated: Vec::new(),
+        aliases: Vec::new(),
+        mods: Vec::new(),
+    };
+
+    parse_macros(&mut file);
+    parse_fns(&mut file);
+    parse_structs(&mut file);
+    parse_generated(&mut file);
+    parse_aliases_and_mods(&mut file);
+    file
+}
+
+fn ident_at(code: &str, mut i: usize) -> Option<(String, usize)> {
+    let b = code.as_bytes();
+    while i < b.len() && (b[i] == b' ' || b[i] == b'\t') {
+        i += 1;
+    }
+    let start = i;
+    while i < b.len() && lexer::is_ident_byte(b[i]) {
+        i += 1;
+    }
+    if i > start && !b[start].is_ascii_digit() {
+        Some((code[start..i].to_string(), i))
+    } else {
+        None
+    }
+}
+
+/// Scan character-wise from `(line, col)` to find the item's body span:
+/// the first top-level `{` opens it, the matching `}` closes it; a `;`
+/// before any `{` means a bodyless signature. Returns the inclusive line
+/// span of the body (starting at `line`), or `None`.
+fn body_span(lines: &[Line], line: usize, col: usize) -> Option<(usize, usize)> {
+    let mut depth = 0i64;
+    let mut opened = false;
+    let mut j = line;
+    let mut start_col = col;
+    while j < lines.len() {
+        let code = lines[j].code.as_bytes();
+        for &ch in code.iter().skip(start_col) {
+            match ch {
+                b'{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                b'}' => depth -= 1,
+                b';' if !opened && depth == 0 => return None,
+                _ => {}
+            }
+            if opened && depth <= 0 {
+                return Some((line, j));
+            }
+        }
+        start_col = 0;
+        j += 1;
+    }
+    // Unterminated (truncated fixture): treat the rest of the file as the
+    // body rather than dropping the item.
+    opened.then(|| (line, lines.len().saturating_sub(1)))
+}
+
+fn parse_fns(file: &mut SourceFile) {
+    let n = file.lines.len();
+    for i in 0..n {
+        let code = file.lines[i].code.clone();
+        let Some(pos) = word_position(&code, "fn") else { continue };
+        let Some((name, name_end)) = ident_at(&code, pos + 2) else { continue };
+        // `$name` macro templates are handled by parse_macros/generated.
+        let before = &code[..pos];
+        let is_unsafe = lexer::has_word(before, "unsafe");
+        let is_pub = lexer::has_word(before, "pub");
+        let body = body_span(&file.lines, i, name_end);
+        let mut calls = Vec::new();
+        if let Some((lo, hi)) = body {
+            for j in lo..=hi.min(n - 1) {
+                extract_calls(&file.lines[j].code, j, &mut calls);
+            }
+        }
+        file.fns.push(FnItem {
+            name,
+            line: i,
+            body,
+            is_pub,
+            is_unsafe,
+            in_test: file.mask[i],
+            calls,
+        });
+    }
+}
+
+fn extract_calls(code: &str, line: usize, out: &mut Vec<CallRef>) {
+    let b = code.as_bytes();
+    let mut i = 0usize;
+    while i < b.len() {
+        if !(lexer::is_ident_byte(b[i]) && !b[i].is_ascii_digit())
+            || (i > 0 && lexer::is_ident_byte(b[i - 1]))
+        {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        while i < b.len() && lexer::is_ident_byte(b[i]) {
+            i += 1;
+        }
+        let name = &code[start..i];
+        if i >= b.len() || b[i] != b'(' || KEYWORDS.contains(&name) {
+            continue;
+        }
+        // `fn name(` is a declaration, not a call.
+        let head = code[..start].trim_end();
+        if head.ends_with("fn")
+            && (head.len() == 2 || !lexer::is_ident_byte(head.as_bytes()[head.len() - 3]))
+        {
+            continue;
+        }
+        let mut qualifier = None;
+        let mut is_method = false;
+        if start >= 2 && &b[start - 2..start] == b"::" {
+            let q_end = start - 2;
+            let mut q_start = q_end;
+            while q_start > 0 && lexer::is_ident_byte(b[q_start - 1]) {
+                q_start -= 1;
+            }
+            if q_start < q_end {
+                qualifier = Some(code[q_start..q_end].to_string());
+            }
+        } else if start >= 1 && b[start - 1] == b'.' {
+            is_method = true;
+        }
+        out.push(CallRef { name: name.to_string(), qualifier, is_method, line });
+    }
+}
+
+fn parse_structs(file: &mut SourceFile) {
+    let n = file.lines.len();
+    for i in 0..n {
+        let code = &file.lines[i].code;
+        let Some(pos) = word_position(code, "struct") else { continue };
+        let Some((name, name_end)) = ident_at(code, pos + 6) else { continue };
+        let Some((lo, hi)) = body_span(&file.lines, i, name_end) else {
+            continue; // unit / tuple struct: no named fields
+        };
+        // Tuple structs `struct X(u32);` never reach here (no `{`), but
+        // `struct X(...)` followed by a where-clause brace would; the
+        // field scan below simply finds nothing in that case.
+        let mut fields = Vec::new();
+        let mut depth = 0i64;
+        for j in lo..=hi.min(n - 1) {
+            let line_code = &file.lines[j].code;
+            let depth_at_start = depth;
+            for ch in line_code.bytes() {
+                match ch {
+                    b'{' => depth += 1,
+                    b'}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if depth_at_start != 1 && !(j == lo && depth == 1) {
+                // Fields live at depth 1; also allow `struct X { f: T }`
+                // one-liners (depth becomes 1 on the decl line itself).
+                if !(j == lo && line_code.contains('{')) {
+                    continue;
+                }
+            }
+            let mut rest = line_code.as_str();
+            if j == lo {
+                // Start after the opening brace on the decl line.
+                match rest.find('{') {
+                    Some(p) => rest = &rest[p + 1..],
+                    None => continue,
+                }
+            }
+            let trimmed = rest.trim_start();
+            if trimmed.is_empty() || trimmed.starts_with('#') {
+                continue;
+            }
+            let mut t = trimmed;
+            if let Some(p) = word_position(t, "pub") {
+                if p == 0 {
+                    t = &t[3..];
+                    let tt = t.trim_start();
+                    if tt.starts_with('(') {
+                        match tt.find(')') {
+                            Some(p2) => t = &tt[p2 + 1..],
+                            None => continue,
+                        }
+                    } else {
+                        t = tt;
+                    }
+                }
+            }
+            if let Some((fname, end)) = ident_at(t, 0) {
+                let after = t[end..].trim_start();
+                if after.starts_with(':') && !after.starts_with("::") {
+                    fields.push((fname, j));
+                }
+            }
+        }
+        file.structs.push(StructItem { name, line: i, fields });
+    }
+}
+
+fn parse_macros(file: &mut SourceFile) {
+    let n = file.lines.len();
+    for i in 0..n {
+        let code = &file.lines[i].code;
+        let Some(pos) = word_position(code, "macro_rules") else { continue };
+        let after = code[pos + "macro_rules".len()..].trim_start();
+        let Some(rest) = after.strip_prefix('!') else { continue };
+        let Some((name, _)) = ident_at(rest, 0) else { continue };
+        let Some((lo, hi)) = body_span(&file.lines, i, pos) else { continue };
+        let mut unsafe_fn_lines = Vec::new();
+        for j in lo..=hi.min(n - 1) {
+            let c = &file.lines[j].code;
+            if lexer::has_word(c, "unsafe") && lexer::has_word(c, "fn") {
+                unsafe_fn_lines.push(j);
+            }
+        }
+        file.macros.push(MacroDef { name, body: (lo, hi), unsafe_fn_lines });
+    }
+}
+
+fn parse_generated(file: &mut SourceFile) {
+    let mut generated = Vec::new();
+    for mac in &file.macros {
+        let Some(&template_line) = mac.unsafe_fn_lines.first() else { continue };
+        for (j, line) in file.lines.iter().enumerate() {
+            if j >= mac.body.0 && j <= mac.body.1 {
+                continue; // the definition itself
+            }
+            let code = &line.code;
+            let Some(pos) = word_position(code, &mac.name) else { continue };
+            let after = &code[pos + mac.name.len()..];
+            let Some(args) = after.strip_prefix('!') else { continue };
+            let args = args.trim_start();
+            let Some(args) = args.strip_prefix('(').or_else(|| args.strip_prefix('{')) else {
+                continue;
+            };
+            if let Some((gname, _)) = ident_at(args, 0) {
+                generated.push(GeneratedFn {
+                    name: gname,
+                    macro_name: mac.name.clone(),
+                    line: j,
+                    template_line,
+                });
+            }
+        }
+    }
+    file.generated = generated;
+}
+
+fn parse_aliases_and_mods(file: &mut SourceFile) {
+    for (j, line) in file.lines.iter().enumerate() {
+        let code = &line.code;
+        // `target as alias` pairs.
+        let b = code.as_bytes();
+        let mut search_from = 0usize;
+        while let Some(rel_pos) = word_position(&code[search_from..], "as") {
+            let pos = search_from + rel_pos;
+            let before = code[..pos].trim_end();
+            let target = before
+                .rfind(|c: char| !lexer::is_ident_char(c))
+                .map(|p| &before[p + 1..])
+                .unwrap_or(before);
+            if let Some((alias, _)) = ident_at(code, pos + 2) {
+                if !target.is_empty()
+                    && !target.as_bytes()[0].is_ascii_digit()
+                    && !alias.is_empty()
+                {
+                    file.aliases.push((target.to_string(), alias));
+                }
+            }
+            search_from = pos + 2;
+            if search_from >= b.len() {
+                break;
+            }
+        }
+        // `mod x;` declarations (out-of-line modules).
+        if let Some(pos) = word_position(code, "mod") {
+            if let Some((name, end)) = ident_at(code, pos + 3) {
+                if code[end..].trim_start().starts_with(';') {
+                    let _ = j;
+                    file.mods.push(name);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_fns_with_flags_bodies_and_calls() {
+        let text = concat!(
+            "pub fn outer(x: u32) -> u32 {\n",
+            "    helper(x) + other::helper2(x)\n",
+            "}\n",
+            "unsafe fn danger(p: *mut u8) {}\n",
+            "fn bodyless_type(f: fn(u32) -> u32) -> u32 { f(1) }\n",
+        );
+        let f = parse("algo/x.rs", text);
+        let names: Vec<&str> = f.fns.iter().map(|i| i.name.as_str()).collect();
+        assert_eq!(names, vec!["outer", "danger", "bodyless_type"]);
+        let outer = &f.fns[0];
+        assert!(outer.is_pub && !outer.is_unsafe);
+        assert_eq!(outer.body, Some((0, 2)));
+        let calls: Vec<(&str, Option<&str>)> = outer
+            .calls
+            .iter()
+            .map(|c| (c.name.as_str(), c.qualifier.as_deref()))
+            .collect();
+        assert!(calls.contains(&("helper", None)), "{calls:?}");
+        assert!(calls.contains(&("helper2", Some("other"))), "{calls:?}");
+        assert!(f.fns[1].is_unsafe);
+    }
+
+    #[test]
+    fn trait_signatures_have_no_body() {
+        let text = "trait T {\n    fn labels(&self) -> u32;\n    fn with_default(&self) -> u32 { 1 }\n}\n";
+        let f = parse("algo/x.rs", text);
+        let labels = f.fns.iter().find(|i| i.name == "labels").unwrap();
+        assert_eq!(labels.body, None);
+        let wd = f.fns.iter().find(|i| i.name == "with_default").unwrap();
+        assert_eq!(wd.body, Some((2, 2)));
+    }
+
+    #[test]
+    fn method_calls_are_flagged() {
+        let text = "fn f(e: E) { e.run(); plain(); }\n";
+        let f = parse("algo/x.rs", text);
+        let calls = &f.fns[0].calls;
+        let run = calls.iter().find(|c| c.name == "run").unwrap();
+        assert!(run.is_method);
+        let plain = calls.iter().find(|c| c.name == "plain").unwrap();
+        assert!(!plain.is_method);
+    }
+
+    #[test]
+    fn parses_struct_fields_with_lines() {
+        let text = concat!(
+            "#[derive(Debug)]\n",
+            "pub struct Opts {\n",
+            "    /// docs\n",
+            "    pub r_count: usize,\n",
+            "    pub(crate) seed: u64,\n",
+            "    threads: usize,\n",
+            "    pub timeout: Option<Duration>,\n",
+            "}\n",
+        );
+        let f = parse("api/options.rs", text);
+        assert_eq!(f.structs.len(), 1);
+        let s = &f.structs[0];
+        assert_eq!(s.name, "Opts");
+        let fields: Vec<&str> = s.fields.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(fields, vec!["r_count", "seed", "threads", "timeout"]);
+        assert_eq!(s.fields[0].1, 3, "field line is the declaration line");
+    }
+
+    #[test]
+    fn nested_braces_do_not_leak_fields() {
+        // A nested type expression with braces must not promote inner
+        // idents to fields of the outer struct.
+        let text = concat!(
+            "struct A {\n",
+            "    cb: fn() -> u32,\n",
+            "}\n",
+            "struct B { x: u32 }\n",
+        );
+        let f = parse("x.rs", text);
+        assert_eq!(f.structs.len(), 2);
+        assert_eq!(f.structs[0].fields.len(), 1);
+        assert_eq!(f.structs[1].fields, vec![("x".to_string(), 3)]);
+    }
+
+    #[test]
+    fn unsafe_generating_macros_and_invocations_are_linked() {
+        let text = concat!(
+            "macro_rules! gen_kernel {\n",
+            "    ($name:ident, $regs:expr) => {\n",
+            "        /// # Safety\n",
+            "        /// CPU must support AVX2.\n",
+            "        pub unsafe fn $name(x: &[i32]) -> bool { x.is_empty() }\n",
+            "    };\n",
+            "}\n",
+            "gen_kernel!(row_w8, 1);\n",
+            "gen_kernel!(row_w16, 2);\n",
+        );
+        let f = parse("simd/avx2.rs", text);
+        assert_eq!(f.macros.len(), 1);
+        assert_eq!(f.macros[0].name, "gen_kernel");
+        assert_eq!(f.macros[0].unsafe_fn_lines, vec![4]);
+        let gen: Vec<(&str, usize)> =
+            f.generated.iter().map(|g| (g.name.as_str(), g.line)).collect();
+        assert_eq!(gen, vec![("row_w8", 7), ("row_w16", 8)]);
+        assert_eq!(f.generated[0].template_line, 4);
+    }
+
+    #[test]
+    fn aliases_and_mods_are_recorded() {
+        let text = concat!(
+            "pub use avx2::{masked_w8 as row_masked, row_w8 as row_plain};\n",
+            "mod scalar;\n",
+            "pub mod avx2;\n",
+            "fn f(x: u64) -> usize { x as usize }\n",
+        );
+        let f = parse("simd/mod.rs", text);
+        assert!(f.aliases.contains(&("masked_w8".to_string(), "row_masked".to_string())));
+        assert!(f.aliases.contains(&("row_w8".to_string(), "row_plain".to_string())));
+        assert_eq!(f.mods, vec!["scalar", "avx2"]);
+    }
+
+    #[test]
+    fn fn_decl_is_not_its_own_call() {
+        let text = "pub fn session_options(args: &Args) -> u32 { helper(args) }\n";
+        let f = parse("main.rs", text);
+        let calls: Vec<&str> = f.fns[0].calls.iter().map(|c| c.name.as_str()).collect();
+        assert!(!calls.contains(&"session_options"), "{calls:?}");
+        assert!(calls.contains(&"helper"), "{calls:?}");
+    }
+}

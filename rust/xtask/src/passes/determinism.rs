@@ -1,0 +1,279 @@
+//! Determinism pass: the paper's headline invariant is that seeds and
+//! σ̂ are bit-identical across lanes, orderings, schedules, and stores,
+//! so anything order- or time-dependent on a kernel/algorithm path is a
+//! hazard. This pass flags, on every file reachable from the kernel
+//! entry modules:
+//!
+//! * `det-hash-iter` — `HashMap`/`HashSet` use (iteration order is
+//!   randomized per process since `RandomState` seeds from the OS);
+//! * `det-wall-clock` — `Instant::now` / `SystemTime` / thread-identity
+//!   reads (`RandomState` construction counts too);
+//! * `det-float-reduce` — float `.sum()`/`.fold()` inside a function
+//!   that also drives parallel execution: float addition is not
+//!   associative, so reduction order must be documented.
+//!
+//! A hazard is accepted when a `DETERMINISM:` comment within
+//! [`DETERMINISM_WINDOW`] lines above justifies it (mirroring the
+//! SAFETY/ORDERING conventions), or when the file is an allowlisted
+//! I/O / orchestration module whose output never feeds σ̂.
+
+use crate::findings::Finding;
+use crate::graph::CrateModel;
+use crate::lexer::{comment_in_window, has_word};
+use crate::parser::SourceFile;
+
+/// How many lines above a hazard the `DETERMINISM:` comment may sit.
+pub(crate) const DETERMINISM_WINDOW: usize = 10;
+
+/// Kernel/algorithm entry modules: reachability roots.
+const ROOT_DIRS: [&str; 12] = [
+    "algo/", "api/", "labelprop/", "sampling/", "simd/", "rr/", "sketch/", "gen/", "graph/",
+    "rng/", "hash/", "runtime/",
+];
+
+/// I/O-only and orchestration modules: their timing/ordering never
+/// reaches seed selection or σ̂.
+const ALLOW_FILES: [&str; 4] = ["main.rs", "bench.rs", "util/timer.rs", "util/args.rs"];
+const ALLOW_DIRS: [&str; 3] = ["coordinator/", "config/", "serve/"];
+
+/// Tokens marking a function as driving parallel execution.
+const PARALLEL_TOKENS: [&str; 5] =
+    ["parallel_for", "parallel_region", "WorkerPool", "spawn", "par_iter"];
+
+fn allowlisted(rel: &str) -> bool {
+    ALLOW_FILES.contains(&rel) || ALLOW_DIRS.iter().any(|d| rel.starts_with(d))
+}
+
+fn is_root(f: &SourceFile) -> bool {
+    ROOT_DIRS.iter().any(|d| f.rel.starts_with(d))
+}
+
+pub(crate) fn run(model: &CrateModel) -> Vec<Finding> {
+    // Scope: call-graph reachability from the kernel entry modules,
+    // widened with the module graph (a parent's declared children are
+    // analyzed even when every call into them is through trait objects
+    // the call graph cannot see).
+    let mut scope = model.reachable_files(is_root);
+    loop {
+        let mut grew = false;
+        for idx in scope.clone() {
+            for child in model.module_children(idx) {
+                grew |= scope.insert(child);
+            }
+        }
+        if !grew {
+            break;
+        }
+    }
+    let mut out = Vec::new();
+    for &idx in &scope {
+        let file = &model.files[idx];
+        if allowlisted(&file.rel) {
+            continue;
+        }
+        scan_file(file, &mut out);
+    }
+    out
+}
+
+fn justified(file: &SourceFile, i: usize) -> bool {
+    comment_in_window(&file.lines, i, DETERMINISM_WINDOW, &["DETERMINISM"])
+}
+
+fn symbol_at(file: &SourceFile, i: usize) -> String {
+    super::enclosing_fn(file, i).map_or_else(String::new, |f| f.name.clone())
+}
+
+fn scan_file(file: &SourceFile, out: &mut Vec<Finding>) {
+    for i in 0..file.lines.len() {
+        if file.mask[i] {
+            continue;
+        }
+        let code = &file.lines[i].code;
+
+        // det-hash-iter: flag uses, not imports — an import alone has no
+        // iteration order, and flagging it would double-report.
+        if (has_word(code, "HashMap") || has_word(code, "HashSet"))
+            && !code.trim_start().starts_with("use ")
+            && !justified(file, i)
+        {
+            out.push(Finding::new(
+                "determinism",
+                "det-hash-iter",
+                &file.rel,
+                i + 1,
+                &symbol_at(file, i),
+                "HashMap/HashSet on a kernel path: iteration order is process-random; \
+                 use BTreeMap/BTreeSet, sort before iterating, or justify with a \
+                 `// DETERMINISM:` comment"
+                    .to_string(),
+            ));
+        }
+
+        if (code.contains("Instant::now")
+            || has_word(code, "SystemTime")
+            || code.contains("thread::current")
+            || has_word(code, "RandomState"))
+            && !justified(file, i)
+        {
+            out.push(Finding::new(
+                "determinism",
+                "det-wall-clock",
+                &file.rel,
+                i + 1,
+                &symbol_at(file, i),
+                "wall-clock/thread-identity read on a kernel path: results become \
+                 timing-dependent; justify with a `// DETERMINISM:` comment or move \
+                 it to an allowlisted module"
+                    .to_string(),
+            ));
+        }
+
+        // det-float-reduce: a reduction whose accumulator type is a
+        // float, in a function that also drives parallel execution.
+        // Sequential reductions are fine (their order is fixed by the
+        // iterator), and so is the documented exact-integer pattern —
+        // `.sum::<i64>() as f64` keeps the reduction associative and
+        // only converts the exact total.
+        if (code.contains(".sum::<f32") || code.contains(".sum::<f64")
+            || (code.contains(".fold(") && (has_word(code, "f32") || has_word(code, "f64"))))
+            && !justified(file, i)
+        {
+            let parallel = super::enclosing_fn(file, i).is_some_and(|f| {
+                let (lo, hi) = f.body.unwrap_or((f.line, f.line));
+                file.lines[lo..=hi.min(file.lines.len() - 1)]
+                    .iter()
+                    .any(|l| PARALLEL_TOKENS.iter().any(|t| has_word(&l.code, t)))
+            });
+            if parallel {
+                out.push(Finding::new(
+                    "determinism",
+                    "det-float-reduce",
+                    &file.rel,
+                    i + 1,
+                    &symbol_at(file, i),
+                    "float reduction in a parallel-driving function: float addition is \
+                     not associative, so the reduction order must be documented with a \
+                     `// DETERMINISM:` comment (or use the exact-integer pattern)"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(sources: &[(&str, &str)]) -> Vec<(String, &'static str, String)> {
+        let model = CrateModel::from_sources(sources);
+        run(&model).into_iter().map(|f| (f.file, f.rule, f.symbol)).collect()
+    }
+
+    #[test]
+    fn hash_iter_fires_and_determinism_comment_clears_it() {
+        let bad = "pub fn remap_ids() {\n    let mut m = std::collections::HashMap::<u64, u32>::new();\n    m.insert(1, 2);\n}\n";
+        let got = findings(&[("graph/io.rs", bad)]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].1, "det-hash-iter");
+        assert_eq!(got[0].2, "remap_ids");
+
+        let good = "pub fn remap_ids() {\n    // DETERMINISM: insert-only membership set; iteration order never observed.\n    let mut m = std::collections::HashMap::<u64, u32>::new();\n    m.insert(1, 2);\n}\n";
+        assert!(findings(&[("graph/io.rs", good)]).is_empty());
+
+        let btree = "pub fn remap_ids() {\n    let mut m = std::collections::BTreeMap::<u64, u32>::new();\n    m.insert(1, 2);\n}\n";
+        assert!(findings(&[("graph/io.rs", btree)]).is_empty());
+    }
+
+    #[test]
+    fn imports_and_test_code_are_exempt() {
+        let text = concat!(
+            "use std::collections::HashMap;\n",
+            "pub fn touch() {}\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    #[test]\n",
+            "    fn t() {\n",
+            "        let mut m = std::collections::HashSet::new();\n",
+            "        m.insert(1);\n",
+            "    }\n",
+            "}\n",
+        );
+        assert!(findings(&[("hash/mod.rs", text)]).is_empty());
+    }
+
+    #[test]
+    fn allowlisted_modules_are_skipped_even_when_reachable() {
+        let serve = "pub fn tick() {\n    let m = std::collections::HashMap::<u32, u32>::new();\n    let _ = (m, std::time::Instant::now());\n}\n";
+        let entry = "pub fn entry() { crate::serve::tick() }\n";
+        assert!(findings(&[("algo/mod.rs", entry), ("serve/mod.rs", serve)]).is_empty());
+    }
+
+    #[test]
+    fn reachability_pulls_in_helpers_but_not_islands() {
+        let entry = "pub fn entry() {\n    helper::go()\n}\n";
+        let helper = "pub fn go() {\n    let m = std::collections::HashMap::<u32, u32>::new();\n    drop(m);\n}\n";
+        let island = "pub fn lonely() {\n    let m = std::collections::HashMap::<u32, u32>::new();\n    drop(m);\n}\n";
+        let got = findings(&[
+            ("algo/mod.rs", entry),
+            ("util/helper.rs", helper),
+            ("util/island.rs", island),
+        ]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].0, "util/helper.rs");
+    }
+
+    #[test]
+    fn wall_clock_fires_and_comment_clears_it() {
+        let bad = "pub fn exceeded() -> bool {\n    std::time::Instant::now().elapsed().as_secs() > 1\n}\n";
+        let got = findings(&[("algo/mod.rs", bad)]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].1, "det-wall-clock");
+
+        let good = "pub fn exceeded() -> bool {\n    // DETERMINISM: budgets are an explicit outcome axis, not part of seed determinism.\n    std::time::Instant::now().elapsed().as_secs() > 1\n}\n";
+        assert!(findings(&[("algo/mod.rs", good)]).is_empty());
+    }
+
+    #[test]
+    fn float_reduce_fires_only_in_parallel_functions() {
+        let bad = concat!(
+            "pub fn par_sigma(xs: &[f32], pool: &WorkerPool) -> f32 {\n",
+            "    pool.parallel_for(xs.len(), |_| {});\n",
+            "    xs.iter().map(|x| *x).sum::<f32>()\n",
+            "}\n",
+        );
+        let got = findings(&[("sampling/mod.rs", bad)]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].1, "det-float-reduce");
+
+        let sequential = "pub fn sigma(xs: &[f32]) -> f32 {\n    xs.iter().map(|x| *x).sum::<f32>()\n}\n";
+        assert!(findings(&[("sampling/mod.rs", sequential)]).is_empty());
+
+        let documented = concat!(
+            "pub fn par_sigma(xs: &[f32], pool: &WorkerPool) -> f32 {\n",
+            "    pool.parallel_for(xs.len(), |_| {});\n",
+            "    // DETERMINISM: reduced sequentially on the coordinator thread, fixed order.\n",
+            "    xs.iter().map(|x| *x).sum::<f32>()\n",
+            "}\n",
+        );
+        assert!(findings(&[("sampling/mod.rs", documented)]).is_empty());
+    }
+
+    #[test]
+    fn module_graph_widens_scope_to_declared_children() {
+        // `util/helper.rs` becomes reachable through a call edge; its
+        // child `util/helper/sub.rs` has no call edge at all — only the
+        // `mod sub;` declaration — yet is still analyzed.
+        let entry = "pub fn entry() {\n    helper::go()\n}\n";
+        let parent = "mod sub;\npub fn go() {}\n";
+        let child = "pub fn build() {\n    let m = std::collections::HashMap::<u32, u32>::new();\n    drop(m);\n}\n";
+        let got = findings(&[
+            ("algo/mod.rs", entry),
+            ("util/helper.rs", parent),
+            ("util/helper/sub.rs", child),
+        ]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].0, "util/helper/sub.rs");
+    }
+}

@@ -1,0 +1,320 @@
+//! Knob-parity pass: every `RunOptions` field must be threaded through
+//! all three user-facing surfaces —
+//!
+//! * `from_json` (the JSON session/config loader, same file as the
+//!   struct),
+//! * the CLI builder (`session_options`, which maps parsed args onto
+//!   builder calls), and
+//! * the coordinator banner (the `"grid geometry: ..."` log line that
+//!   makes a run's full configuration reproducible from its log).
+//!
+//! The last five PRs each hand-threaded a new knob through these
+//! surfaces; this pass turns the convention into a gate. When one of
+//! the anchors (struct, loader fn, CLI fn, banner) cannot be found the
+//! pass fails loudly with `knob-self-check` instead of silently
+//! passing — renaming an anchor must break the build, not the gate.
+
+use crate::findings::Finding;
+use crate::graph::CrateModel;
+use crate::lexer::{has_word, has_word_followed_by};
+use crate::parser::{SourceFile, StructItem};
+
+const STRUCT_NAME: &str = "RunOptions";
+const LOADER_FN: &str = "from_json";
+const CLI_FN: &str = "session_options";
+const BANNER_TOKEN: &str = "grid geometry";
+/// How far above the banner token line its `format!` may sit.
+const BANNER_FORMAT_WINDOW: usize = 3;
+
+fn self_check(msg: String) -> Finding {
+    Finding::new("knob-parity", "knob-self-check", "", 0, "", msg)
+}
+
+pub(crate) fn run(model: &CrateModel) -> Vec<Finding> {
+    let mut out = Vec::new();
+
+    let Some((opt_fi, s)) = find_struct(model, STRUCT_NAME) else {
+        out.push(self_check(format!("anchor lost: struct `{STRUCT_NAME}` not found")));
+        return out;
+    };
+    if s.fields.is_empty() {
+        out.push(self_check(format!("anchor lost: `{STRUCT_NAME}` has no parsed fields")));
+        return out;
+    }
+    let opts_file = &model.files[opt_fi];
+
+    // Surface 1: the JSON loader, in the same file as the struct.
+    match opts_file.fns.iter().find(|f| f.name == LOADER_FN && !f.in_test && f.body.is_some()) {
+        None => out.push(self_check(format!(
+            "anchor lost: fn `{LOADER_FN}` not found in {}",
+            opts_file.rel
+        ))),
+        Some(fj) => {
+            let (lo, hi) = fj.body.unwrap();
+            for (field, fline) in &s.fields {
+                let present = opts_file.lines[lo..=hi.min(opts_file.lines.len() - 1)]
+                    .iter()
+                    .any(|l| l.code.contains("opts.") && has_word(&l.code, field));
+                if !present {
+                    out.push(Finding::new(
+                        "knob-parity",
+                        "knob-missing-from-json",
+                        &opts_file.rel,
+                        fline + 1,
+                        field,
+                        format!("RunOptions field `{field}` is not read by `{LOADER_FN}`"),
+                    ));
+                }
+            }
+        }
+    }
+
+    // Surface 2: the CLI builder.
+    let cli = model.files.iter().find_map(|file| {
+        file.fns
+            .iter()
+            .find(|f| f.name == CLI_FN && !f.in_test && f.body.is_some())
+            .map(|f| (file, f))
+    });
+    match cli {
+        None => out.push(self_check(format!("anchor lost: fn `{CLI_FN}` not found"))),
+        Some((file, f)) => {
+            let (lo, hi) = f.body.unwrap();
+            for (field, _) in &s.fields {
+                let present = file.lines[lo..=hi.min(file.lines.len() - 1)]
+                    .iter()
+                    .any(|l| has_word_followed_by(&l.code, field, b'('));
+                if !present {
+                    out.push(Finding::new(
+                        "knob-parity",
+                        "knob-missing-cli",
+                        &file.rel,
+                        f.line + 1,
+                        field,
+                        format!("RunOptions field `{field}` has no builder call in `{CLI_FN}`"),
+                    ));
+                }
+            }
+        }
+    }
+
+    // Surface 3: the coordinator banner.
+    match find_banner(model) {
+        None => out.push(self_check(format!(
+            "anchor lost: no non-test line containing \"{BANNER_TOKEN}\""
+        ))),
+        Some((file, anchor, region)) => {
+            for (field, _) in &s.fields {
+                // Accept plural spellings — the banner prints the grid
+                // axis `orders=` for the `order` knob.
+                let plural = format!("{field}s");
+                if !has_word(&region, field) && !has_word(&region, &plural) {
+                    out.push(Finding::new(
+                        "knob-parity",
+                        "knob-missing-banner",
+                        &file.rel,
+                        anchor + 1,
+                        field,
+                        format!("RunOptions field `{field}` is not printed by the banner"),
+                    ));
+                }
+            }
+        }
+    }
+
+    out
+}
+
+fn find_struct<'m>(model: &'m CrateModel, name: &str) -> Option<(usize, &'m StructItem)> {
+    for (fi, file) in model.files.iter().enumerate() {
+        if let Some(s) = file.structs.iter().find(|s| s.name == name && !file.mask[s.line]) {
+            return Some((fi, s));
+        }
+    }
+    None
+}
+
+/// Locate the banner: the first non-test raw line containing
+/// [`BANNER_TOKEN`], then the `format!` call it belongs to (within
+/// [`BANNER_FORMAT_WINDOW`] lines above), then the paren-balanced
+/// extent of that call. Returns the file, the 0-based token line, and
+/// the region's raw text — raw, because field names live inside the
+/// format string literal, which the lexer blanks from code text.
+fn find_banner(model: &CrateModel) -> Option<(&SourceFile, usize, String)> {
+    for file in &model.files {
+        for i in 0..file.lines.len() {
+            if file.mask[i] || !file.raw[i].contains(BANNER_TOKEN) {
+                continue;
+            }
+            let start = (0..=BANNER_FORMAT_WINDOW)
+                .filter_map(|d| i.checked_sub(d))
+                .find(|&j| file.lines[j].code.contains("format!"))?;
+            let end = balance_parens(file, start).unwrap_or(i);
+            let region = file.raw[start..=end.min(file.raw.len() - 1)].join("\n");
+            return Some((file, i, region));
+        }
+    }
+    None
+}
+
+/// From the `format!` occurrence on line `start`, find the line where
+/// its parenthesis nesting returns to zero (scanning code text, so
+/// parens inside string literals are already blanked).
+fn balance_parens(file: &SourceFile, start: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    let mut opened = false;
+    let mut col = file.lines[start].code.find("format!").unwrap_or(0);
+    for j in start..file.lines.len() {
+        for ch in file.lines[j].code.bytes().skip(col) {
+            match ch {
+                b'(' => {
+                    depth += 1;
+                    opened = true;
+                }
+                b')' => depth -= 1,
+                _ => {}
+            }
+            if opened && depth <= 0 {
+                return Some(j);
+            }
+        }
+        col = 0;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parser;
+    use std::path::Path;
+
+    const OPTIONS_OK: &str = concat!(
+        "pub struct RunOptions {\n",
+        "    pub r_count: usize,\n",
+        "    pub seed: u64,\n",
+        "}\n",
+        "pub fn from_json(text: &str) -> RunOptions {\n",
+        "    let mut opts = RunOptions::default();\n",
+        "    opts.r_count = 1;\n",
+        "    opts.seed = 2;\n",
+        "    opts\n",
+        "}\n",
+    );
+    const MAIN_OK: &str = concat!(
+        "pub fn session_options(args: &Args) -> RunOptions {\n",
+        "    RunOptions::default().r_count(args.r).seed(args.s)\n",
+        "}\n",
+    );
+    const COORD_OK: &str = concat!(
+        "pub fn banner(cfg: &Cfg) {\n",
+        "    log(&format!(\n",
+        "        \"grid geometry: r_count={} seeds={}\",\n",
+        "        cfg.options.r_count,\n",
+        "        cfg.seeds.join(\",\")\n",
+        "    ));\n",
+        "    let tail = cfg.options.hidden_knob;\n",
+        "}\n",
+    );
+
+    fn findings(sources: &[(&str, &str)]) -> Vec<(&'static str, String)> {
+        let model = CrateModel::from_sources(sources);
+        run(&model).into_iter().map(|f| (f.rule, f.symbol)).collect()
+    }
+
+    #[test]
+    fn full_parity_is_clean_and_plural_banner_spelling_counts() {
+        // `seeds={}` in the banner covers the `seed` field via the
+        // plural rule — and `hidden_knob` after the banner's close
+        // paren must NOT count as banner coverage (region bounding).
+        let got = findings(&[
+            ("api/options.rs", OPTIONS_OK),
+            ("main.rs", MAIN_OK),
+            ("coordinator/mod.rs", COORD_OK),
+        ]);
+        assert!(got.is_empty(), "{got:?}");
+    }
+
+    #[test]
+    fn unthreaded_field_fails_all_three_surfaces() {
+        let options = OPTIONS_OK.replace(
+            "    pub seed: u64,\n",
+            "    pub seed: u64,\n    pub hidden_knob: bool,\n",
+        );
+        let got = findings(&[
+            ("api/options.rs", &options),
+            ("main.rs", MAIN_OK),
+            ("coordinator/mod.rs", COORD_OK),
+        ]);
+        let rules: Vec<&str> =
+            got.iter().filter(|(_, s)| s == "hidden_knob").map(|(r, _)| *r).collect();
+        assert!(rules.contains(&"knob-missing-from-json"), "{got:?}");
+        assert!(rules.contains(&"knob-missing-cli"), "{got:?}");
+        // `hidden_knob` appears in COORD_OK *after* the banner's close
+        // paren — the region bound keeps it a finding.
+        assert!(rules.contains(&"knob-missing-banner"), "{got:?}");
+        assert_eq!(got.len(), 3, "no findings for threaded fields: {got:?}");
+    }
+
+    #[test]
+    fn partially_threaded_field_fails_only_missing_surfaces() {
+        let options = OPTIONS_OK
+            .replace("    pub seed: u64,\n", "    pub seed: u64,\n    pub lanes: u8,\n")
+            .replace("    opts.seed = 2;\n", "    opts.seed = 2;\n    opts.lanes = 8;\n");
+        let main_rs = MAIN_OK.replace(".seed(args.s)", ".seed(args.s).lanes(args.l)");
+        let got = findings(&[
+            ("api/options.rs", &options),
+            ("main.rs", &main_rs),
+            ("coordinator/mod.rs", COORD_OK),
+        ]);
+        assert_eq!(got, vec![("knob-missing-banner", "lanes".to_string())]);
+    }
+
+    #[test]
+    fn lost_anchors_fail_the_self_check() {
+        let no_struct = findings(&[("main.rs", MAIN_OK), ("coordinator/mod.rs", COORD_OK)]);
+        assert_eq!(no_struct, vec![("knob-self-check", String::new())]);
+
+        let no_cli =
+            findings(&[("api/options.rs", OPTIONS_OK), ("coordinator/mod.rs", COORD_OK)]);
+        assert!(no_cli.iter().any(|(r, _)| *r == "knob-self-check"), "{no_cli:?}");
+
+        let no_banner = findings(&[("api/options.rs", OPTIONS_OK), ("main.rs", MAIN_OK)]);
+        assert!(no_banner.iter().any(|(r, _)| *r == "knob-self-check"), "{no_banner:?}");
+    }
+
+    /// The satellite-(c) property: renaming ANY real `RunOptions` field
+    /// must be caught. Exhaustive over the real field list (strictly
+    /// stronger than sampling), with an LCG for suffix variety.
+    #[test]
+    fn renaming_any_real_field_is_caught() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../src");
+        let options = std::fs::read_to_string(root.join("api/options.rs")).unwrap();
+        let main_rs = std::fs::read_to_string(root.join("main.rs")).unwrap();
+        let coord = std::fs::read_to_string(root.join("coordinator/mod.rs")).unwrap();
+
+        let parsed = parser::parse("api/options.rs", &options);
+        let s = parsed.structs.iter().find(|s| s.name == STRUCT_NAME).unwrap();
+        assert!(s.fields.len() >= 10, "parser must see the real field list: {:?}", s.fields);
+
+        let mut state: u64 = 0x9E37_79B9_7F4A_7C15;
+        for (field, fline) in &s.fields {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let renamed = format!("{field}_x{}", state % 97);
+            let mut lines: Vec<String> = options.lines().map(|l| l.to_string()).collect();
+            // The recorded field line is the declaration itself, where
+            // the first occurrence of the name is the field ident.
+            lines[*fline] = lines[*fline].replacen(field.as_str(), &renamed, 1);
+            let mutated = lines.join("\n");
+            let got = findings(&[
+                ("api/options.rs", &mutated),
+                ("main.rs", &main_rs),
+                ("coordinator/mod.rs", &coord),
+            ]);
+            assert!(
+                got.iter().any(|(_, sym)| *sym == renamed),
+                "renaming `{field}` -> `{renamed}` went undetected: {got:?}"
+            );
+        }
+    }
+}

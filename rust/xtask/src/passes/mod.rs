@@ -1,0 +1,78 @@
+//! The `xtask analyze` passes. Each pass takes the parsed
+//! [`CrateModel`](crate::graph::CrateModel) and returns structured
+//! [`Finding`]s; `run_all` runs all three and sorts the result into a
+//! stable file/line/rule order.
+//!
+//! * [`determinism`] — nondeterminism sources (`HashMap` iteration,
+//!   wall-clock reads, parallel float reductions) on paths reachable
+//!   from kernel/algorithm entry points, unless justified by a
+//!   `DETERMINISM:` comment.
+//! * [`unsafe_boundary`] — every `unsafe fn` in `simd/` needs a
+//!   `# Safety` contract and feature-detection-guarded call sites.
+//! * [`knob_parity`] — every `RunOptions` field must be threaded through
+//!   `from_json`, the CLI builder, and the coordinator banner.
+
+pub(crate) mod determinism;
+pub(crate) mod knob_parity;
+pub(crate) mod unsafe_boundary;
+
+use crate::findings::Finding;
+use crate::graph::CrateModel;
+use crate::parser::{FnItem, SourceFile};
+
+/// Run all three analyze passes and sort the findings.
+pub(crate) fn run_all(model: &CrateModel) -> Vec<Finding> {
+    let mut out = Vec::new();
+    out.extend(determinism::run(model));
+    out.extend(unsafe_boundary::run(model));
+    out.extend(knob_parity::run(model));
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule, a.symbol.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.rule, b.symbol.as_str()))
+    });
+    out
+}
+
+/// The innermost parsed function whose body spans 0-based line `i`.
+pub(crate) fn enclosing_fn(file: &SourceFile, i: usize) -> Option<&FnItem> {
+    file.fns
+        .iter()
+        .filter(|f| f.body.is_some_and(|(lo, hi)| lo <= i && i <= hi))
+        .min_by_key(|f| f.body.map_or(usize::MAX, |(lo, hi)| hi - lo))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::findings::Waivers;
+    use std::path::Path;
+
+    #[test]
+    fn enclosing_fn_picks_the_innermost_body() {
+        let m = CrateModel::from_sources(&[(
+            "algo/x.rs",
+            "fn outer() {\n    fn inner() {\n        work();\n    }\n    inner();\n}\n",
+        )]);
+        let f = &m.files[0];
+        assert_eq!(enclosing_fn(f, 2).unwrap().name, "inner");
+        assert_eq!(enclosing_fn(f, 4).unwrap().name, "outer");
+        assert!(enclosing_fn(f, 6).is_none());
+    }
+
+    /// The acceptance gate: `cargo xtask analyze` must run clean on the
+    /// real crate — every finding either fixed at the source or waived
+    /// in the checked-in waiver file.
+    #[test]
+    fn analyze_runs_clean_on_the_crate() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../src");
+        let (model, errors) = CrateModel::load_tree(&root).unwrap();
+        assert!(errors.is_empty(), "unreadable files: {errors:?}");
+        let mut findings = run_all(&model);
+        let waivers =
+            Waivers::load(&Path::new(env!("CARGO_MANIFEST_DIR")).join("analyze.waivers")).unwrap();
+        waivers.apply(&mut findings);
+        let unwaived: Vec<String> =
+            findings.iter().filter(|f| !f.waived).map(|f| f.to_string()).collect();
+        assert!(unwaived.is_empty(), "unwaived findings:\n{}", unwaived.join("\n"));
+    }
+}

@@ -1,0 +1,301 @@
+//! Unsafe-boundary pass for the `simd/` kernels.
+//!
+//! Two rules:
+//!
+//! * `unsafe-no-safety-doc` — every `unsafe fn` in `simd/` (including
+//!   the `macro_rules!` templates that generate the AVX2 kernels) must
+//!   carry a `# Safety` doc section stating its preconditions.
+//! * `unsafe-call-unguarded` — every non-test call to one of those
+//!   functions (under its own name or a `pub use ... as` alias) must
+//!   sit within a few lines of (a) a `SAFETY:` comment restating the
+//!   preconditions and (b) evidence of CPU feature detection
+//!   (`is_x86_feature_detected!`, `#[target_feature]`, or a
+//!   "…after detection" argument).
+//!
+//! The call scan covers the whole crate, not just `simd/` — an
+//! unguarded caller in `labelprop/` is exactly the bug this pass
+//! exists to catch.
+
+use crate::findings::Finding;
+use crate::graph::CrateModel;
+use crate::lexer::{comment_in_window, is_ident_byte};
+use std::collections::BTreeSet;
+
+/// How far above an `unsafe fn` its `# Safety` doc may sit.
+const SAFETY_DOC_WINDOW: usize = 12;
+/// How far above a call site its SAFETY comment / guard may sit.
+const GUARD_WINDOW: usize = 8;
+/// Lower-cased tokens accepted as evidence of feature detection.
+const GUARD_TOKENS: [&str; 3] = ["detect", "is_x86_feature_detected", "target_feature"];
+
+pub(crate) fn run(model: &CrateModel) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut unsafe_names: BTreeSet<String> = BTreeSet::new();
+
+    // Collect the unsafe surface of simd/ and check `# Safety` docs.
+    for file in &model.files {
+        if !file.rel.starts_with("simd/") {
+            continue;
+        }
+        for f in &file.fns {
+            if !f.is_unsafe || f.in_test {
+                continue;
+            }
+            unsafe_names.insert(f.name.clone());
+            if !comment_in_window(&file.lines, f.line, SAFETY_DOC_WINDOW, &["# Safety"]) {
+                out.push(Finding::new(
+                    "unsafe-boundary",
+                    "unsafe-no-safety-doc",
+                    &file.rel,
+                    f.line + 1,
+                    &f.name,
+                    format!("unsafe fn `{}` has no `# Safety` doc section", f.name),
+                ));
+            }
+        }
+        for mac in &file.macros {
+            for &l in &mac.unsafe_fn_lines {
+                if !comment_in_window(&file.lines, l, SAFETY_DOC_WINDOW, &["# Safety"]) {
+                    let generates: Vec<&str> = file
+                        .generated
+                        .iter()
+                        .filter(|g| g.macro_name == mac.name && g.template_line == l)
+                        .map(|g| g.name.as_str())
+                        .collect();
+                    let detail = if generates.is_empty() {
+                        String::new()
+                    } else {
+                        format!(" (generates {})", generates.join(", "))
+                    };
+                    out.push(Finding::new(
+                        "unsafe-boundary",
+                        "unsafe-no-safety-doc",
+                        &file.rel,
+                        l + 1,
+                        &mac.name,
+                        format!(
+                            "unsafe fn template in macro `{}`{detail} has no `# Safety` doc section",
+                            mac.name
+                        ),
+                    ));
+                }
+            }
+        }
+        for g in &file.generated {
+            // parse_generated only records invocations of macros whose
+            // bodies declare `unsafe fn`, so every generated name is an
+            // unsafe entry point.
+            unsafe_names.insert(g.name.clone());
+        }
+    }
+
+    // Close over `use ... as` aliases (anywhere in the crate).
+    loop {
+        let mut grew = false;
+        for file in &model.files {
+            for (target, alias) in &file.aliases {
+                if unsafe_names.contains(target) && !unsafe_names.contains(alias) {
+                    unsafe_names.insert(alias.clone());
+                    grew = true;
+                }
+            }
+        }
+        if !grew {
+            break;
+        }
+    }
+
+    // Scan every non-test line in the crate for calls.
+    for file in &model.files {
+        for (i, line) in file.lines.iter().enumerate() {
+            if file.mask[i] {
+                continue;
+            }
+            for name in &unsafe_names {
+                if !is_call_line(&line.code, name) {
+                    continue;
+                }
+                let lo = i.saturating_sub(GUARD_WINDOW);
+                let window = &file.lines[lo..=i];
+                let has_safety = window.iter().any(|l| l.comment.contains("SAFETY"));
+                let has_guard = window.iter().any(|l| {
+                    let t = format!("{} {}", l.code, l.comment).to_lowercase();
+                    GUARD_TOKENS.iter().any(|g| t.contains(g))
+                });
+                if !(has_safety && has_guard) {
+                    let mut missing = Vec::new();
+                    if !has_safety {
+                        missing.push("a SAFETY: comment restating the preconditions");
+                    }
+                    if !has_guard {
+                        missing.push("evidence of CPU feature detection");
+                    }
+                    out.push(Finding::new(
+                        "unsafe-boundary",
+                        "unsafe-call-unguarded",
+                        &file.rel,
+                        i + 1,
+                        name,
+                        format!("call to unsafe fn `{name}` is missing {}", missing.join(" and ")),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Does `code` call `name` (identifier immediately followed by `(`),
+/// excluding the `fn name(` declaration itself?
+fn is_call_line(code: &str, name: &str) -> bool {
+    let c = code.as_bytes();
+    let w = name.as_bytes();
+    if w.is_empty() || c.len() < w.len() + 1 {
+        return false;
+    }
+    for i in 0..=c.len() - w.len() - 1 {
+        if &c[i..i + w.len()] != w
+            || (i > 0 && is_ident_byte(c[i - 1]))
+            || c[i + w.len()] != b'('
+        {
+            continue;
+        }
+        let head = code[..i].trim_end();
+        let is_decl = head.ends_with("fn")
+            && (head.len() == 2 || !is_ident_byte(head.as_bytes()[head.len() - 3]));
+        if !is_decl {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GEN_MACRO_WITH_DOC: &str = concat!(
+        "macro_rules! gen_row {\n",
+        "    ($name:ident, $regs:expr) => {\n",
+        "        /// # Safety\n",
+        "        /// Caller must verify AVX2 via is_x86_feature_detected!.\n",
+        "        pub unsafe fn $name(lu: &[i32]) -> bool { lu.is_empty() }\n",
+        "    };\n",
+        "}\n",
+        "gen_row!(row_w8, 1);\n",
+    );
+
+    fn findings(sources: &[(&str, &str)]) -> Vec<(String, &'static str, usize, String)> {
+        let model = CrateModel::from_sources(sources);
+        run(&model).into_iter().map(|f| (f.file, f.rule, f.line, f.symbol)).collect()
+    }
+
+    #[test]
+    fn macro_template_without_safety_doc_is_flagged() {
+        let bad = concat!(
+            "macro_rules! gen_row {\n",
+            "    ($name:ident, $regs:expr) => {\n",
+            "        pub unsafe fn $name(lu: &[i32]) -> bool { lu.is_empty() }\n",
+            "    };\n",
+            "}\n",
+            "gen_row!(row_w8, 1);\n",
+        );
+        let got = findings(&[("simd/avx2.rs", bad)]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!((got[0].1, got[0].2, got[0].3.as_str()), ("unsafe-no-safety-doc", 3, "gen_row"));
+
+        assert!(findings(&[("simd/avx2.rs", GEN_MACRO_WITH_DOC)]).is_empty());
+    }
+
+    #[test]
+    fn plain_unsafe_fn_without_safety_doc_is_flagged() {
+        let bad = "pub unsafe fn danger(p: *const i32) -> i32 { *p }\n";
+        let got = findings(&[("simd/avx2.rs", bad)]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].1, "unsafe-no-safety-doc");
+        assert_eq!(got[0].3, "danger");
+
+        let good = "/// # Safety\n/// `p` must be valid for reads.\npub unsafe fn danger(p: *const i32) -> i32 { *p }\n";
+        assert!(findings(&[("simd/avx2.rs", good)]).is_empty());
+    }
+
+    #[test]
+    fn unsafe_fns_outside_simd_are_out_of_scope() {
+        let text = "pub unsafe fn raw_park(p: *const i32) -> i32 { *p }\n";
+        assert!(findings(&[("util/par.rs", text)]).is_empty());
+    }
+
+    #[test]
+    fn guarded_call_passes_and_unguarded_calls_fail() {
+        let guarded = concat!(
+            "pub fn dispatch(lu: &[i32]) -> bool {\n",
+            "    // SAFETY: Backend::Avx2 is only constructed after detection.\n",
+            "    unsafe { avx2::row_w8(lu) }\n",
+            "}\n",
+        );
+        assert!(
+            findings(&[("simd/avx2.rs", GEN_MACRO_WITH_DOC), ("simd/mod.rs", guarded)]).is_empty()
+        );
+
+        let no_safety = concat!(
+            "pub fn dispatch(lu: &[i32]) -> bool {\n",
+            "    unsafe { avx2::row_w8(lu) }\n",
+            "}\n",
+        );
+        let got = findings(&[("simd/avx2.rs", GEN_MACRO_WITH_DOC), ("simd/mod.rs", no_safety)]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!((got[0].0.as_str(), got[0].1, got[0].2), ("simd/mod.rs", "unsafe-call-unguarded", 2));
+
+        let no_guard = concat!(
+            "pub fn dispatch(lu: &[i32]) -> bool {\n",
+            "    // SAFETY: caller promises the slices are padded.\n",
+            "    unsafe { avx2::row_w8(lu) }\n",
+            "}\n",
+        );
+        let got = findings(&[("simd/avx2.rs", GEN_MACRO_WITH_DOC), ("simd/mod.rs", no_guard)]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].3 == "row_w8");
+    }
+
+    #[test]
+    fn aliased_calls_are_checked_crate_wide() {
+        let reexport = "pub use avx2::row_w8 as veclabel_row_avx2;\n";
+        let caller = concat!(
+            "pub fn fuse(lu: &[i32]) -> bool {\n",
+            "    unsafe { crate::simd::veclabel_row_avx2(lu) }\n",
+            "}\n",
+        );
+        let got = findings(&[
+            ("simd/avx2.rs", GEN_MACRO_WITH_DOC),
+            ("simd/mod.rs", reexport),
+            ("labelprop/mod.rs", caller),
+        ]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].0, "labelprop/mod.rs");
+        assert_eq!(got[0].3, "veclabel_row_avx2");
+    }
+
+    #[test]
+    fn test_code_and_declarations_are_not_call_sites() {
+        let with_test = concat!(
+            "macro_rules! gen_row {\n",
+            "    ($name:ident, $regs:expr) => {\n",
+            "        /// # Safety\n",
+            "        /// Caller must verify AVX2 support first.\n",
+            "        pub unsafe fn $name(lu: &[i32]) -> bool { lu.is_empty() }\n",
+            "    };\n",
+            "}\n",
+            "gen_row!(row_w8, 1);\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    #[test]\n",
+            "    fn t() {\n",
+            "        let _ = unsafe { super::row_w8(&[]) };\n",
+            "    }\n",
+            "}\n",
+        );
+        assert!(findings(&[("simd/avx2.rs", with_test)]).is_empty());
+        assert!(!is_call_line("pub unsafe fn row_w8(lu: &[i32]) -> bool {", "row_w8"));
+        assert!(is_call_line("let x = row_w8(lu);", "row_w8"));
+    }
+}
