@@ -216,6 +216,7 @@ impl InfuserWarm {
     /// Assemble the cold-identical result for a `k`-seed query.
     fn result(&self, k: usize) -> ImResult {
         let kk = k.min(self.trajectory.len());
+        // PANIC-OK: kk is clamped to trajectory.len() one line up.
         let served = &self.trajectory[..kk];
         let (sigma, reevals) = served
             .last()
@@ -313,6 +314,8 @@ impl Prepared<'_> {
         let budget = self.budget_for(q);
         let mut warm = self.warm.borrow_mut();
         let slot = &mut warm.infuser;
+        // PANIC-OK: i comes from position() on this same slot vec, which
+        // is not resized between; both slot[i] arms are in bounds.
         let idx = match slot.iter().position(|(kind, _)| *kind == memo_kind) {
             Some(i) if slot[i].1.seed == seed => i,
             Some(i) => {
@@ -327,6 +330,8 @@ impl Prepared<'_> {
                 slot.len() - 1
             }
         };
+        // PANIC-OK: idx is either a position() hit or len()-1 right
+        // after a push, so it indexes an existing slot entry.
         let w = &mut slot[idx].1;
         let target = if first_seed_only { 1 } else { q.k };
         w.extend_to(target, &self.pool, &budget)?;

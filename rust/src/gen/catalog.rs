@@ -178,7 +178,7 @@ pub fn dataset(id: &str) -> Option<DatasetSpec> {
     let norm = norm.strip_suffix("-s").unwrap_or(&norm);
     catalog()
         .into_iter()
-        .find(|d| d.id.strip_suffix("-s").unwrap() == norm)
+        .find(|d| d.id.strip_suffix("-s").unwrap_or(d.id) == norm)
 }
 
 #[cfg(test)]

@@ -54,7 +54,9 @@ impl GraphBuilder {
             self.pair_weights = Some(vec![1.0; self.pairs.len()]);
         }
         self.pairs.push((u.min(v), u.max(v)));
-        self.pair_weights.as_mut().unwrap().push(w);
+        if let Some(weights) = &mut self.pair_weights {
+            weights.push(w);
+        }
         self
     }
 

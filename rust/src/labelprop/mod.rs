@@ -189,6 +189,8 @@ pub fn propagate(graph: &Graph, opts: &PropagateOpts) -> PropagationResult {
     if opts.order.is_identity() {
         return propagate_core(graph, opts);
     }
+    // PANIC-OK: the closure always returns Ok, and run_reordered only
+    // forwards its closure's error — Err is unreachable here.
     run_reordered(graph, opts, |g, o| Ok(propagate_core(g, o)))
         .expect("native propagation is infallible")
 }

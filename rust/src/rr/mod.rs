@@ -115,6 +115,9 @@ impl PackedStore {
         Self::with_arena_bytes(n, ARENA_BYTES)
     }
 
+    // ACCOUNTED: empty-store scaffolding — the fixed O(n) histogram is
+    // counted by bytes() from the start, and arenas/ends only grow via
+    // append, which is admitted through bytes_after.
     fn with_arena_bytes(n: usize, arena_bytes: usize) -> Self {
         Self {
             n,
@@ -155,12 +158,16 @@ impl PackedStore {
         self.bytes() + len as u64 + 4 + new_arena_entry
     }
 
+    // ACCOUNTED: the append path — capacity was admitted via bytes_after
+    // before this runs, including the fresh-arena case.
     fn append(&mut self, set: &[VertexId]) {
         let len = codec::encoded_len(set, self.n);
         if self.needs_new_arena(len) {
             self.arenas.push(Vec::with_capacity(self.arena_bytes.max(len)));
             self.arena_first_set.push(self.ends.len() as u32);
         }
+        // PANIC-OK: needs_new_arena pushed a fresh arena on the branch
+        // above, so last_mut is always Some here.
         let arena = self.arenas.last_mut().expect("arena just ensured");
         codec::encode_into(set, self.n, arena);
         self.ends.push(arena.len() as u32);
@@ -180,6 +187,9 @@ impl PackedStore {
     /// (sets are retired from it as they become covered), so CELF's
     /// re-evaluation is an O(1) lookup and each commit only walks the
     /// still-uncovered blocks to retire the ones containing the new seed.
+    // ACCOUNTED: selection scratch — O(pool + n) copies (gains, histogram
+    // copy, covered bitmap) that live only for this call; the store's own
+    // tracked bytes are untouched.
     fn max_coverage(&self, k: usize) -> (Vec<VertexId>, f64) {
         let total = self.ends.len();
         // Selection must not disturb the store's pristine histogram: the
@@ -273,6 +283,8 @@ pub struct LegacyStore {
 
 impl LegacyStore {
     fn new(n: usize) -> Self {
+        // ACCOUNTED: empty store; sets only grow via append, admitted
+        // through bytes_after at RR_ENTRY_BYTES per entry.
         Self { n, sets: Vec::new(), entries: 0 }
     }
 
@@ -284,6 +296,8 @@ impl LegacyStore {
         (self.entries + set.len() as u64) * RR_ENTRY_BYTES
     }
 
+    // ACCOUNTED: append path — admission charged RR_ENTRY_BYTES per
+    // entry via bytes_after before this copy is made.
     fn append(&mut self, set: &[VertexId]) {
         self.entries += set.len() as u64;
         self.sets.push(set.to_vec());
@@ -291,6 +305,9 @@ impl LegacyStore {
 
     /// Greedy max-coverage over the pool via a freshly built inverted
     /// index (vertex → RR ids containing it) — the classic formulation.
+    // ACCOUNTED: selection scratch — the rebuilt inverted index and the
+    // covered bitmap are transient, and RR_ENTRY_BYTES already charged
+    // the index slot for every entry at append time.
     fn max_coverage(&self, k: usize) -> (Vec<VertexId>, f64) {
         let n = self.n;
         let mut deg = vec![0u32; n];

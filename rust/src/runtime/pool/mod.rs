@@ -377,6 +377,10 @@ impl WorkerPool {
                 let shared = Arc::clone(&shared);
                 thread::Builder::new()
                     .name(format!("infuser-worker-{id}"))
+                    // PANIC-OK: spawn fails only on OS thread exhaustion
+                    // at session prepare; there is no pool to degrade to,
+                    // and the serve dispatch catch_unwind maps it to a
+                    // structured error for the one affected open.
                     .spawn(move || worker_loop(&shared, id))
                     .expect("spawn pool worker")
             })
@@ -468,6 +472,9 @@ impl WorkerPool {
                 unsafe { *slots.get(i) = Some(body(i)) };
             });
         }
+        // PANIC-OK: for_each ran every index to completion (worker
+        // panics are re-propagated before it returns), so every slot
+        // was written exactly once.
         out.into_iter().map(|x| x.unwrap()).collect()
     }
 }

@@ -62,7 +62,9 @@ impl XlaEngine {
                 )
             })?
             .clone();
-        let mut cache = self.cache.lock().unwrap();
+        // A poisoned cache only means a panic mid-compile elsewhere; the
+        // map itself is still a valid executable cache, so recover it.
+        let mut cache = self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         if let Some(exe) = cache.get(&entry.file) {
             return Ok(exe.clone());
         }

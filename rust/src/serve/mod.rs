@@ -272,6 +272,8 @@ impl<'a> LineReader<'a> {
         let mut chunk = [0u8; 4096];
         loop {
             // Scan what we have.
+            // PANIC-OK: scanned is only ever set to 0 or buf.len() and
+            // buf never shrinks between, so scanned <= buf.len() holds.
             if let Some(pos) = self.buf[self.scanned..].iter().position(|&b| b == b'\n') {
                 let pos = self.scanned + pos;
                 let rest = self.buf.split_off(pos + 1);
@@ -305,6 +307,7 @@ impl<'a> LineReader<'a> {
             // Need more bytes.
             match self.stream.read(&mut chunk) {
                 Ok(0) => return LineEvent::Closed,
+                // PANIC-OK: read() returns k <= chunk.len() by contract.
                 Ok(k) => self.buf.extend_from_slice(&chunk[..k]),
                 Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
                     if stop.load(Ordering::SeqCst) {

@@ -262,6 +262,8 @@ impl SessionPool {
         Self {
             cfg,
             state: Mutex::new(PoolState {
+                // ACCOUNTED: empty pool scaffolding; entries grow only
+                // through admitted open_graph calls.
                 entries: Vec::new(),
                 used_bytes: 0,
                 clock: 0,
@@ -304,6 +306,7 @@ impl SessionPool {
             st.find(name).is_none(),
             "session '{name}' already open (close it first to re-prepare)"
         );
+        // ACCOUNTED: transient O(evictions) name list for the open report.
         let mut evicted = Vec::new();
         while st.entries.len() >= self.cfg.max_sessions {
             match st.evict_lru_idle() {
@@ -352,6 +355,8 @@ impl SessionPool {
             last_used: tick,
             in_flight: 0,
             queries: 0,
+            // ACCOUNTED: the entry's bytes were charged to used_bytes at
+            // the admitted reserve just above.
             session: Arc::new(Mutex::new(session)),
         });
         Ok(OpenReport { name: name.to_string(), n, m, bytes: need, evicted })
@@ -430,6 +435,8 @@ impl SessionPool {
             .iter()
             .position(|e| e.name == name)
             .ok_or_else(|| anyhow::anyhow!("unknown session '{name}'"))?;
+        // PANIC-OK: idx came from position() on the same entries vec
+        // under the same lock, so it is in bounds by construction.
         anyhow::ensure!(
             st.entries[idx].in_flight == 0,
             "session '{name}' has queries in flight"
@@ -440,6 +447,8 @@ impl SessionPool {
     }
 
     /// Snapshot the pool for the `stats` op / CLI banner.
+    // ACCOUNTED: O(sessions) observability snapshot owned by the caller,
+    // freed with the response; not session-charged bytes.
     pub fn stats(&self) -> PoolStats {
         let st = self.state.lock();
         PoolStats {

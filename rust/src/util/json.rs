@@ -310,7 +310,9 @@ impl<'a> Parser<'a> {
                 Some(_) => {
                     // consume one UTF-8 char
                     let rest = std::str::from_utf8(&self.b[self.i..])?;
-                    let c = rest.chars().next().unwrap();
+                    let Some(c) = rest.chars().next() else {
+                        bail!("unterminated string at byte {}", self.i);
+                    };
                     s.push(c);
                     self.i += c.len_utf8();
                 }

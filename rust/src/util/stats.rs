@@ -30,7 +30,7 @@ pub fn summarize(xs: &[f64]) -> Summary {
     let mean = xs.iter().sum::<f64>() / n as f64;
     let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     Summary {
         n,
         mean,
@@ -63,7 +63,7 @@ pub fn ks_distance_uniform(xs: &[f64]) -> f64 {
         return 1.0;
     }
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let n = sorted.len() as f64;
     let mut d: f64 = 0.0;
     for (i, &x) in sorted.iter().enumerate() {
@@ -77,7 +77,7 @@ pub fn ks_distance_uniform(xs: &[f64]) -> f64 {
 /// Empirical CDF evaluated on a fixed grid (for Fig. 2 series output).
 pub fn cdf_on_grid(xs: &[f64], grid: usize) -> Vec<(f64, f64)> {
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let n = sorted.len() as f64;
     (0..=grid)
         .map(|i| {

@@ -196,6 +196,65 @@ impl Waivers {
         }
         n
     }
+
+    /// Stale-waiver check: every entry must still name a real file in
+    /// the analyzed tree and — unless the symbol is `*` — a symbol
+    /// that still exists there (a fn, struct, field, macro-generated
+    /// fn, or failing those at least an identifier in the file's code:
+    /// lock names and tokens anchor on field identifiers). A waiver
+    /// that outlives its code would silently shadow the *next* finding
+    /// at that location, so staleness is itself a finding.
+    pub fn stale_findings(&self, model: &crate::graph::CrateModel) -> Vec<Finding> {
+        let mut out = Vec::new();
+        for w in &self.entries {
+            let Some(fi) = model.file_index(&w.file) else {
+                out.push(Finding::new(
+                    "analyze",
+                    "stale-waiver",
+                    &w.file,
+                    1,
+                    &w.symbol,
+                    format!(
+                        "waiver `{} {} {}` names a file that no longer exists; \
+                         delete or update the entry in analyze.waivers",
+                        w.rule, w.file, w.symbol
+                    ),
+                ));
+                continue;
+            };
+            if w.symbol == "*" {
+                continue;
+            }
+            let file = &model.files[fi];
+            // Lock names are `<module>.<receiver>`: anchor on the
+            // receiver identifier.
+            let tail = w.symbol.rsplit('.').next().unwrap_or(&w.symbol);
+            let known = file.fns.iter().any(|f| f.name == w.symbol)
+                || file.structs.iter().any(|s| {
+                    s.name == w.symbol || s.fields.iter().any(|(n, _)| n == &w.symbol)
+                })
+                || file.generated.iter().any(|g| g.name == w.symbol)
+                || file.lines.iter().any(|l| {
+                    crate::lexer::has_word(&l.code, &w.symbol)
+                        || crate::lexer::has_word(&l.code, tail)
+                });
+            if !known {
+                out.push(Finding::new(
+                    "analyze",
+                    "stale-waiver",
+                    &w.file,
+                    1,
+                    &w.symbol,
+                    format!(
+                        "waiver `{} {} {}` names a symbol that no longer exists in \
+                         the file; delete or update the entry in analyze.waivers",
+                        w.rule, w.file, w.symbol
+                    ),
+                ));
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]

@@ -4,14 +4,18 @@
 //!
 //! Name resolution is deliberately approximate — no type checking, no
 //! import tracking. A call `foo::bar(...)` resolves to definitions of
-//! `bar` in files whose path matches the module `foo`; when no path
-//! matches (the qualifier was a type, `Self`, or an external crate) it
-//! falls back to *every* definition of `bar`, and bare/method calls
-//! resolve to every definition too. That can only widen the reachable
-//! set, which is the safe direction for a determinism gate: scope grows,
-//! findings never silently disappear.
+//! `bar` in files whose path matches the module `foo` *or* whose
+//! enclosing `impl` self-type is `foo` (so `ImSession::prepare` finds
+//! the method, and `Self::f` resolves through the caller's own impl
+//! block); when nothing matches (an external crate path) it falls back
+//! to *every* definition of `bar`, and bare/method calls resolve to
+//! every definition too. That can only widen the reachable set, which
+//! is the safe direction for a reachability gate: scope grows, findings
+//! never silently disappear. Passes that must *not* over-approximate
+//! (lock-discipline's acquisition propagation fabricating edges) use
+//! [`CallGraph::resolve`] directly and act only on unique resolutions.
 
-use crate::parser::{self, SourceFile};
+use crate::parser::{self, CallRef, FnItem, SourceFile};
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
 
@@ -22,10 +26,18 @@ pub(crate) struct CrateModel {
 /// A function definition site: file index plus (for parsed fns) the
 /// index into that file's `fns`. Macro-generated fns have no parsed
 /// body and act as call-graph leaves.
-#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-enum Def {
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub(crate) enum Def {
     Parsed { file: usize, fn_idx: usize },
     Generated { file: usize },
+}
+
+impl Def {
+    pub fn file(self) -> usize {
+        match self {
+            Def::Parsed { file, .. } | Def::Generated { file } => file,
+        }
+    }
 }
 
 impl CrateModel {
@@ -124,68 +136,169 @@ impl CrateModel {
         defs
     }
 
+    /// The resolver + BFS front-end the passes share. Builds the
+    /// name → definitions index once, plus a crate-global type-alias
+    /// map (`pub use runtime::pool::WorkerPool as ThreadPool`) so a
+    /// `ThreadPool::with_schedule(..)` call matches the `impl
+    /// WorkerPool` definition. Only CamelCase pairs are kept: the
+    /// parser also records `x as usize` cast pairs, which must not
+    /// become qualifier synonyms.
+    pub fn call_graph(&self) -> CallGraph<'_> {
+        let mut type_aliases: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        for file in &self.files {
+            for (target, alias) in &file.aliases {
+                let camel = |s: &String| s.starts_with(|c: char| c.is_ascii_uppercase());
+                if camel(target) && camel(alias) && target != alias {
+                    let entry = type_aliases.entry(alias.clone()).or_default();
+                    if !entry.contains(target) {
+                        entry.push(target.clone());
+                    }
+                }
+            }
+        }
+        CallGraph { model: self, defs: self.fn_defs(), type_aliases }
+    }
+
     /// File indices reachable (via the call graph) from the `pub`
     /// entry-point functions of every file selected by `is_root`. Root
     /// files are always in the result (they are scanned whole at the
     /// file level); private helpers inside them are traversed as soon
     /// as any entry point calls them.
     pub fn reachable_files(&self, is_root: impl Fn(&SourceFile) -> bool) -> BTreeSet<usize> {
-        let defs = self.fn_defs();
-        let mut reachable_files = BTreeSet::new();
-        let mut visited: BTreeSet<Def> = BTreeSet::new();
-        let mut queue: Vec<Def> = Vec::new();
+        let cg = self.call_graph();
+        let mut out = BTreeSet::new();
+        let mut seeds = Vec::new();
         for (fi, file) in self.files.iter().enumerate() {
             if is_root(file) {
-                reachable_files.insert(fi);
-                for (ki, f) in file.fns.iter().enumerate() {
-                    if f.is_pub && !f.in_test {
-                        queue.push(Def::Parsed { file: fi, fn_idx: ki });
-                    }
-                }
+                out.insert(fi);
+                seeds.extend(cg.fns_in_file(fi, |f| f.is_pub));
             }
         }
+        out.extend(cg.reachable_fns(seeds).into_iter().map(Def::file));
+        out
+    }
+}
+
+/// Call-graph front-end: qualifier/owner-restricted resolution with the
+/// widen-to-all fallback, plus fn-level reachability.
+pub(crate) struct CallGraph<'a> {
+    pub model: &'a CrateModel,
+    defs: BTreeMap<String, Vec<Def>>,
+    /// alias → original type names, from CamelCase `use .. as ..` pairs.
+    type_aliases: BTreeMap<String, Vec<String>>,
+}
+
+impl<'a> CallGraph<'a> {
+    /// The parsed item behind a `Def`, when it has one (generated fns
+    /// are leaves without bodies).
+    pub fn fn_item(&self, def: Def) -> Option<&'a FnItem> {
+        match def {
+            Def::Parsed { file, fn_idx } => Some(&self.model.files[file].fns[fn_idx]),
+            Def::Generated { .. } => None,
+        }
+    }
+
+    /// Non-test fns of `files[fi]` passing `pred`, as seeds.
+    pub fn fns_in_file(&self, fi: usize, pred: impl Fn(&FnItem) -> bool) -> Vec<Def> {
+        self.model.files[fi]
+            .fns
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| !f.in_test && pred(f))
+            .map(|(ki, _)| Def::Parsed { file: fi, fn_idx: ki })
+            .collect()
+    }
+
+    /// Every definition site a call from `caller` may land on.
+    ///
+    /// * method calls (`recv.name(..)`): every definition of the name —
+    ///   receiver types are unknown, and trait-object dispatch means any
+    ///   impl could be the target;
+    /// * `Q::name(..)`: definitions whose file matches module `Q` *or*
+    ///   whose impl self-type is `Q`; `Self::name(..)` substitutes the
+    ///   caller's own impl type; when the restriction matches nothing
+    ///   (external path), widen to every definition;
+    /// * bare `name(..)`: every definition.
+    pub fn resolve(&self, caller: Def, call: &CallRef) -> Vec<Def> {
+        let Some(candidates) = self.defs.get(&call.name) else { return Vec::new() };
+        if call.is_method {
+            return candidates.clone();
+        }
+        let Some(q) = call.qualifier.as_deref() else { return candidates.clone() };
+        let q: &str = if q == "Self" {
+            match self.fn_item(caller).and_then(|f| f.owner.as_deref()) {
+                Some(owner) => owner,
+                None => return candidates.clone(),
+            }
+        } else {
+            q
+        };
+        let narrowed: Vec<Def> =
+            candidates.iter().copied().filter(|&d| self.qualifier_matches(d, q)).collect();
+        if narrowed.is_empty() { candidates.clone() } else { narrowed }
+    }
+
+    /// Does definition `d` plausibly belong to qualifier `q` — its file
+    /// matches module `q`, its impl self-type is `q`, or either holds
+    /// for a type `q` aliases (`ThreadPool` → `WorkerPool`)?
+    fn qualifier_matches(&self, d: Def, q: &str) -> bool {
+        let names =
+            std::iter::once(q).chain(self.type_aliases.get(q).into_iter().flatten().map(String::as_str));
+        for n in names {
+            if file_matches_module(&self.model.files[d.file()].rel, n)
+                || self.fn_item(d).is_some_and(|f| f.owner.as_deref() == Some(n))
+            {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Strict variant for passes that must *not* over-approximate: the
+    /// unique target of `call`, or `None`. Unlike [`CallGraph::resolve`]
+    /// there is no widen-to-all fallback — a qualified call whose
+    /// restriction matches nothing (`File::open`, `Arc::clone`, any
+    /// external path that happens to share a name with a crate fn) is
+    /// unresolved, not "uniquely" the unrelated crate fn. Lock-order
+    /// propagation uses this: a fabricated edge would fabricate an
+    /// ordering violation.
+    pub fn resolve_strict(&self, caller: Def, call: &CallRef) -> Option<Def> {
+        let candidates = self.defs.get(&call.name)?;
+        if call.is_method || call.qualifier.is_none() {
+            return match candidates.as_slice() {
+                [only] => Some(*only),
+                _ => None,
+            };
+        }
+        let q = call.qualifier.as_deref()?;
+        let q: &str = if q == "Self" {
+            self.fn_item(caller).and_then(|f| f.owner.as_deref())?
+        } else {
+            q
+        };
+        let narrowed: Vec<Def> =
+            candidates.iter().copied().filter(|&d| self.qualifier_matches(d, q)).collect();
+        match narrowed.as_slice() {
+            [only] => Some(*only),
+            _ => None,
+        }
+    }
+
+    /// Fn-level BFS over [`CallGraph::resolve`] from `seeds` (which are
+    /// included in the result).
+    pub fn reachable_fns(&self, seeds: Vec<Def>) -> BTreeSet<Def> {
+        let mut visited: BTreeSet<Def> = BTreeSet::new();
+        let mut queue = seeds;
         while let Some(def) = queue.pop() {
             if !visited.insert(def) {
                 continue;
             }
-            let (fi, ki) = match def {
-                Def::Generated { file } => {
-                    reachable_files.insert(file);
-                    continue;
-                }
-                Def::Parsed { file, fn_idx } => (file, fn_idx),
-            };
-            reachable_files.insert(fi);
-            for call in &self.files[fi].fns[ki].calls {
-                let Some(candidates) = defs.get(&call.name) else { continue };
-                let narrowed: Vec<Def> = if call.is_method {
-                    // Receiver types are unknown: resolve to every
-                    // definition of the method name.
-                    candidates.clone()
-                } else {
-                    match &call.qualifier {
-                        Some(q) => {
-                            let m: Vec<Def> = candidates
-                                .iter()
-                                .copied()
-                                .filter(|d| {
-                                    let file = match d {
-                                        Def::Parsed { file, .. } | Def::Generated { file } => *file,
-                                    };
-                                    file_matches_module(&self.files[file].rel, q)
-                                })
-                                .collect();
-                            // Qualifier was a type / Self / external
-                            // path: fall back to every candidate.
-                            if m.is_empty() { candidates.clone() } else { m }
-                        }
-                        None => candidates.clone(),
-                    }
-                };
-                queue.extend(narrowed);
+            let Some(item) = self.fn_item(def) else { continue };
+            for call in &item.calls {
+                queue.extend(self.resolve(def, call));
             }
         }
-        reachable_files
+        visited
     }
 }
 
@@ -272,6 +385,107 @@ mod tests {
         let reached = m.reachable_files(|f| f.rel.starts_with("algo/"));
         let names: Vec<&str> = reached.iter().map(|&i| m.files[i].rel.as_str()).collect();
         assert!(!names.contains(&"util/secret.rs"), "{names:?}");
+    }
+
+    #[test]
+    fn owner_and_self_qualifiers_narrow_resolution() {
+        let m = CrateModel::from_sources(&[
+            ("serve/pool.rs", "pub fn open() {\n    ImSession::prepare()\n}\n"),
+            (
+                "api/session.rs",
+                concat!(
+                    "pub struct ImSession;\n",
+                    "impl ImSession {\n",
+                    "    pub fn prepare() { Self::prepare_cow() }\n",
+                    "    fn prepare_cow() { helper::deep() }\n",
+                    "}\n",
+                ),
+            ),
+            ("util/helper.rs", "pub fn deep() {}\n"),
+            (
+                "gen/other.rs",
+                "fn quiet() {}\npub fn prepare() { quiet() }\npub fn prepare_cow() { quiet() }\n",
+            ),
+        ]);
+        let cg = m.call_graph();
+        let serve = m.file_index("serve/pool.rs").unwrap();
+        let reached = cg.reachable_fns(cg.fns_in_file(serve, |f| f.is_pub));
+        let files: BTreeSet<&str> =
+            reached.iter().map(|d| m.files[d.file()].rel.as_str()).collect();
+        assert!(files.contains("api/session.rs"), "{files:?}");
+        assert!(files.contains("util/helper.rs"), "{files:?}");
+        assert!(
+            !files.contains("gen/other.rs"),
+            "owner narrowing keeps same-name decoys out: {files:?}"
+        );
+    }
+
+    #[test]
+    fn method_calls_still_widen_to_every_definition() {
+        let m = CrateModel::from_sources(&[
+            ("serve/mod.rs", "pub fn dispatch(s: S) {\n    s.query()\n}\n"),
+            (
+                "api/session.rs",
+                "pub struct A;\nimpl A {\n    pub fn query(&self) { leaf() }\n}\nfn leaf() {}\n",
+            ),
+        ]);
+        let cg = m.call_graph();
+        let serve = m.file_index("serve/mod.rs").unwrap();
+        let reached = cg.reachable_fns(cg.fns_in_file(serve, |f| f.is_pub));
+        let files: BTreeSet<&str> =
+            reached.iter().map(|d| m.files[d.file()].rel.as_str()).collect();
+        assert!(files.contains("api/session.rs"), "trait-object-safe widening: {files:?}");
+    }
+
+    #[test]
+    fn type_aliased_qualifiers_resolve_strictly_through_the_alias() {
+        let m = CrateModel::from_sources(&[
+            (
+                "util/par.rs",
+                "pub use crate::runtime::pool::{Schedule, WorkerPool as ThreadPool};\n",
+            ),
+            (
+                "api/session.rs",
+                "pub fn prepare_cow(t: usize) {\n    let pool = ThreadPool::with_schedule(t);\n    drop(pool);\n}\n",
+            ),
+            (
+                "runtime/pool/mod.rs",
+                "pub struct WorkerPool;\nimpl WorkerPool {\n    pub fn with_schedule(_t: usize) -> Self {\n        WorkerPool\n    }\n}\n",
+            ),
+            ("gen/decoy.rs", "pub fn with_schedule() {}\n"),
+        ]);
+        let cg = m.call_graph();
+        let api = m.file_index("api/session.rs").unwrap();
+        let caller = cg.fns_in_file(api, |f| f.name == "prepare_cow")[0];
+        let call =
+            cg.fn_item(caller).unwrap().calls.iter().find(|c| c.name == "with_schedule").unwrap();
+        let target = cg.resolve_strict(caller, call).expect("alias-qualified call resolves");
+        assert_eq!(m.files[target.file()].rel, "runtime/pool/mod.rs");
+    }
+
+    #[test]
+    fn strict_resolution_never_widens_through_foreign_qualifiers() {
+        let m = CrateModel::from_sources(&[
+            (
+                "runtime/xla_engine.rs",
+                "pub fn compiled() {\n    std::fs::File::open()\n}\n",
+            ),
+            ("serve/pool.rs", "pub fn open() {}\n"),
+        ]);
+        let cg = m.call_graph();
+        let engine = m.file_index("runtime/xla_engine.rs").unwrap();
+        let caller = cg.fns_in_file(engine, |f| f.name == "compiled")[0];
+        let call = cg.fn_item(caller).unwrap().calls.iter().find(|c| c.name == "open").unwrap();
+        assert_eq!(
+            cg.resolve(caller, call).len(),
+            1,
+            "reachability widens File::open to the crate's only `open`"
+        );
+        assert_eq!(
+            cg.resolve_strict(caller, call),
+            None,
+            "strict resolution must not claim File::open is SessionPool::open"
+        );
     }
 
     #[test]

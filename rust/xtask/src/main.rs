@@ -8,12 +8,20 @@
 //!   (see [`lint`] for the rule list).
 //! * `analyze` — the static-analysis passes over the parsed crate
 //!   ([`parser`] + [`graph`]): determinism hazards on kernel paths,
-//!   the `simd/` unsafe boundary, and `RunOptions` knob parity (see
-//!   [`passes`]). Findings can be waived via `xtask/analyze.waivers`.
+//!   the `simd/` unsafe boundary, `RunOptions` knob parity, panic-path
+//!   reachability from the serve loop, lock discipline against
+//!   `xtask/lock.order`, and alloc accountability on budget-admitted
+//!   paths (see [`passes`]). Findings can be waived via
+//!   `xtask/analyze.waivers`; waivers and lock.order entries that no
+//!   longer match real code are themselves findings.
 //!
 //! Both are hard CI gates and both support `--json` for artifact
-//! upload. Exit codes: 0 clean (or all findings waived), 1 unwaived
-//! findings, 2 usage or I/O error.
+//! upload. `analyze` additionally supports `--summary` (per-pass
+//! finding counts on stdout) and `--baseline <file>` (fail if any
+//! pass's unwaived or waived count exceeds the committed baseline —
+//! catches both new findings and waiver creep). Exit codes: 0 clean
+//! (or all findings waived), 1 unwaived findings or baseline
+//! regression, 2 usage or I/O error.
 
 mod findings;
 mod graph;
@@ -32,8 +40,10 @@ fn usage() -> ExitCode {
     eprintln!("commands:");
     eprintln!("  lint      check SAFETY/ORDERING comment coverage, sync-facade");
     eprintln!("            bypasses, and orig-id hashing invariants over rust/src");
-    eprintln!("  analyze   run the determinism, unsafe-boundary, and knob-parity");
-    eprintln!("            passes over rust/src (also: --waivers <file>)");
+    eprintln!("  analyze   run the determinism, unsafe-boundary, knob-parity,");
+    eprintln!("            panic-path, lock-discipline, and alloc-accountability");
+    eprintln!("            passes over rust/src (also: --waivers <file>,");
+    eprintln!("            --lock-order <file>, --baseline <file>, --summary)");
     ExitCode::from(2)
 }
 
@@ -41,14 +51,20 @@ struct Flags {
     root: PathBuf,
     json: bool,
     waivers: Option<PathBuf>,
+    lock_order: Option<PathBuf>,
+    baseline: Option<PathBuf>,
+    summary: bool,
 }
 
-fn parse_flags(args: &[String], allow_waivers: bool) -> Result<Flags, String> {
+fn parse_flags(args: &[String], analyze: bool) -> Result<Flags, String> {
     // xtask lives at rust/xtask; the analysis surface is rust/src.
     let mut flags = Flags {
         root: PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../src"),
         json: false,
         waivers: None,
+        lock_order: None,
+        baseline: None,
+        summary: false,
     };
     let mut it = args.iter();
     while let Some(arg) = it.next() {
@@ -58,14 +74,66 @@ fn parse_flags(args: &[String], allow_waivers: bool) -> Result<Flags, String> {
                     PathBuf::from(it.next().ok_or("--root needs a directory argument")?);
             }
             "--json" => flags.json = true,
-            "--waivers" if allow_waivers => {
+            "--waivers" if analyze => {
                 flags.waivers =
                     Some(PathBuf::from(it.next().ok_or("--waivers needs a file argument")?));
             }
+            "--lock-order" if analyze => {
+                flags.lock_order =
+                    Some(PathBuf::from(it.next().ok_or("--lock-order needs a file argument")?));
+            }
+            "--baseline" if analyze => {
+                flags.baseline =
+                    Some(PathBuf::from(it.next().ok_or("--baseline needs a file argument")?));
+            }
+            "--summary" if analyze => flags.summary = true,
             other => return Err(format!("unknown flag: {other}")),
         }
     }
     Ok(flags)
+}
+
+/// Per-pass `(unwaived, waived)` counts in pass-name order.
+fn pass_counts(findings: &[Finding]) -> std::collections::BTreeMap<&'static str, (usize, usize)> {
+    let mut counts = std::collections::BTreeMap::new();
+    for f in findings {
+        let entry = counts.entry(f.pass).or_insert((0, 0));
+        if f.waived {
+            entry.1 += 1;
+        } else {
+            entry.0 += 1;
+        }
+    }
+    counts
+}
+
+/// Parse a baseline file: one `<pass> <unwaived> <waived>` per line,
+/// blank lines and `#` comments ignored. Passes absent from the file
+/// baseline at zero, so any new finding in them is a regression.
+fn parse_baseline(text: &str) -> Result<std::collections::BTreeMap<String, (usize, usize)>, String> {
+    let mut out = std::collections::BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = match raw.find('#') {
+            Some(pos) => &raw[..pos],
+            None => raw,
+        };
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.is_empty() {
+            continue;
+        }
+        let bad = || {
+            format!("baseline line {}: expected '<pass> <unwaived> <waived>'", lineno + 1)
+        };
+        if parts.len() != 3 {
+            return Err(bad());
+        }
+        let unwaived: usize = parts[1].parse().map_err(|_| bad())?;
+        let waived: usize = parts[2].parse().map_err(|_| bad())?;
+        if out.insert(parts[0].to_string(), (unwaived, waived)).is_some() {
+            return Err(format!("baseline line {}: duplicate pass '{}'", lineno + 1, parts[0]));
+        }
+    }
+    Ok(out)
 }
 
 /// Print findings (text or JSON) and map them to the exit code. Waived
@@ -134,10 +202,22 @@ fn run_analyze(args: &[String]) -> ExitCode {
             Finding::new("analyze", "read-error", &rel, 1, "", format!("could not read file: {e}"))
         })
         .collect();
-    all.extend(passes::run_all(&model));
+    let lock_order_path = flags
+        .lock_order
+        .clone()
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("lock.order"));
+    let lock_order = match passes::LockOrder::load(&lock_order_path) {
+        Ok(o) => o,
+        Err(err) => {
+            eprintln!("xtask analyze: {err}");
+            return ExitCode::from(2);
+        }
+    };
+    all.extend(passes::run_all(&model, &lock_order));
 
     let waiver_path = flags
         .waivers
+        .clone()
         .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("analyze.waivers"));
     let waivers = match Waivers::load(&waiver_path) {
         Ok(w) => w,
@@ -147,7 +227,55 @@ fn run_analyze(args: &[String]) -> ExitCode {
         }
     };
     waivers.apply(&mut all);
-    report("analyze", &all, flags.json)
+    // A waiver that no longer matches real code is itself a finding —
+    // it would silently shadow the next finding at that location.
+    all.extend(waivers.stale_findings(&model));
+
+    let counts = pass_counts(&all);
+    if flags.summary {
+        for (pass, (unwaived, waived)) in &counts {
+            println!("{pass} {unwaived} {waived}");
+        }
+    }
+
+    let mut regressions = Vec::new();
+    if let Some(baseline_path) = &flags.baseline {
+        let baseline = match std::fs::read_to_string(baseline_path)
+            .map_err(|e| format!("read {}: {e}", baseline_path.display()))
+            .and_then(|text| parse_baseline(&text))
+        {
+            Ok(b) => b,
+            Err(err) => {
+                eprintln!("xtask analyze: {err}");
+                return ExitCode::from(2);
+            }
+        };
+        for (pass, (unwaived, waived)) in &counts {
+            let (base_unwaived, base_waived) =
+                baseline.get(*pass).copied().unwrap_or((0, 0));
+            if *unwaived > base_unwaived {
+                regressions.push(format!(
+                    "pass {pass}: {unwaived} unwaived finding(s), baseline allows {base_unwaived}"
+                ));
+            }
+            if *waived > base_waived {
+                regressions.push(format!(
+                    "pass {pass}: {waived} waived finding(s), baseline allows {base_waived} \
+                     (waiver creep — update {} deliberately)",
+                    baseline_path.display()
+                ));
+            }
+        }
+    }
+
+    let code = report("analyze", &all, flags.json);
+    if !regressions.is_empty() {
+        for r in &regressions {
+            eprintln!("xtask analyze: baseline regression: {r}");
+        }
+        return ExitCode::FAILURE;
+    }
+    code
 }
 
 fn main() -> ExitCode {
@@ -156,5 +284,34 @@ fn main() -> ExitCode {
         Some("lint") => run_lint(&args[1..]),
         Some("analyze") => run_analyze(&args[1..]),
         _ => usage(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_parses_counts_and_rejects_malformed_lines() {
+        let b = parse_baseline(
+            "# pass <unwaived> <waived>\n\
+             determinism 0 2\n\
+             lock-discipline 0 0  # trailing comment\n",
+        )
+        .unwrap();
+        assert_eq!(b.get("determinism"), Some(&(0, 2)));
+        assert_eq!(b.get("lock-discipline"), Some(&(0, 0)));
+        assert!(parse_baseline("determinism 0\n").unwrap_err().contains("line 1"));
+        assert!(parse_baseline("determinism zero 0\n").unwrap_err().contains("line 1"));
+        assert!(parse_baseline("p 0 0\np 1 1\n").unwrap_err().contains("duplicate"));
+    }
+
+    #[test]
+    fn pass_counts_split_unwaived_from_waived() {
+        let mut f1 = Finding::new("panic-path", "pp-unwrap", "serve/mod.rs", 1, "f", "m".into());
+        let f2 = Finding::new("panic-path", "pp-panic", "serve/mod.rs", 2, "g", "m".into());
+        f1.waived = true;
+        let counts = pass_counts(&[f1, f2]);
+        assert_eq!(counts.get("panic-path"), Some(&(1, 1)));
     }
 }

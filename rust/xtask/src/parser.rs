@@ -29,6 +29,8 @@ pub(crate) struct SourceFile {
     /// Per-line `#[cfg(test)]` membership.
     pub mask: Vec<bool>,
     pub fns: Vec<FnItem>,
+    /// `impl [Trait for] Type` blocks (self-type name + body span).
+    pub impls: Vec<ImplBlock>,
     pub structs: Vec<StructItem>,
     pub macros: Vec<MacroDef>,
     /// Functions declared by invoking an unsafe-fn-generating macro.
@@ -51,7 +53,20 @@ pub(crate) struct FnItem {
     pub is_pub: bool,
     pub is_unsafe: bool,
     pub in_test: bool,
+    /// Self type of the innermost enclosing `impl` block, when any. For
+    /// `impl Trait for Type` the owner is `Type` (the last path segment,
+    /// generics stripped) — the name a `Type::method` call site uses.
+    pub owner: Option<String>,
     pub calls: Vec<CallRef>,
+}
+
+#[derive(Debug)]
+pub(crate) struct ImplBlock {
+    /// Last path segment of the self type, generics stripped (`Foo` in
+    /// `impl<T> fmt::Display for Foo<T>`).
+    pub self_type: String,
+    /// 0-based inclusive line span (declaration through closing brace).
+    pub body: (usize, usize),
 }
 
 #[derive(Debug)]
@@ -116,6 +131,7 @@ pub(crate) fn parse(rel: &str, text: &str) -> SourceFile {
         lines,
         mask,
         fns: Vec::new(),
+        impls: Vec::new(),
         structs: Vec::new(),
         macros: Vec::new(),
         generated: Vec::new(),
@@ -124,6 +140,7 @@ pub(crate) fn parse(rel: &str, text: &str) -> SourceFile {
     };
 
     parse_macros(&mut file);
+    parse_impls(&mut file);
     parse_fns(&mut file);
     parse_structs(&mut file);
     parse_generated(&mut file);
@@ -180,6 +197,105 @@ fn body_span(lines: &[Line], line: usize, col: usize) -> Option<(usize, usize)> 
     opened.then(|| (line, lines.len().saturating_sub(1)))
 }
 
+/// Skip a balanced `<...>` generic-argument list starting at `i` (which
+/// must point at `<`). Every `>` closes one level, so `>>` closes two —
+/// correct for type position, where shift operators cannot appear.
+fn skip_generics(b: &[u8], mut i: usize) -> usize {
+    let mut depth = 0i64;
+    while i < b.len() {
+        match b[i] {
+            b'<' => depth += 1,
+            b'>' => {
+                depth -= 1;
+                if depth <= 0 {
+                    return i + 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Parse a type path at `i`: `seg(::seg)*`, each segment optionally
+/// followed by generics. Returns the last segment name and the index
+/// just past the path. Leading `&`/`dyn` noise is skipped.
+fn type_path(code: &str, mut i: usize) -> Option<(String, usize)> {
+    let b = code.as_bytes();
+    loop {
+        while i < b.len() && (b[i] == b' ' || b[i] == b'\t' || b[i] == b'&') {
+            i += 1;
+        }
+        match ident_at(code, i) {
+            Some((w, end)) if w == "dyn" || w == "mut" => i = end,
+            _ => break,
+        }
+    }
+    let mut last = None;
+    loop {
+        let (seg, mut end) = ident_at(code, i)?;
+        last = Some(seg);
+        if end < b.len() && b[end] == b'<' {
+            end = skip_generics(b, end);
+        }
+        if code[end..].starts_with("::") {
+            i = end + 2;
+        } else {
+            return last.map(|s| (s, end));
+        }
+    }
+}
+
+/// Recognize `impl [Trait for] Type` blocks. Only lines whose code
+/// *starts* with `impl` (after an optional `unsafe`) are considered, so
+/// `impl Trait` in argument or return position never creates a block.
+fn parse_impls(file: &mut SourceFile) {
+    for i in 0..file.lines.len() {
+        let code = file.lines[i].code.clone();
+        let trimmed = code.trim_start();
+        let rest = trimmed.strip_prefix("unsafe ").map(str::trim_start).unwrap_or(trimmed);
+        if !(rest.starts_with("impl") && !lexer::is_ident_byte(*rest.as_bytes().get(4).unwrap_or(&b'{'))) {
+            continue;
+        }
+        let base = code.len() - rest.len();
+        let mut pos = base + 4;
+        let b = code.as_bytes();
+        // Generic parameters on the impl itself: `impl<T: Bound> ...`.
+        let mut j = pos;
+        while j < b.len() && (b[j] == b' ' || b[j] == b'\t') {
+            j += 1;
+        }
+        if j < b.len() && b[j] == b'<' {
+            pos = skip_generics(b, j);
+        }
+        let Some((first, end)) = type_path(&code, pos) else { continue };
+        let after = code[end..].trim_start();
+        let self_type = if after.starts_with("for")
+            && !lexer::is_ident_byte(*after.as_bytes().get(3).unwrap_or(&b' '))
+        {
+            let for_pos = end + (code[end..].len() - after.len()) + 3;
+            match type_path(&code, for_pos) {
+                Some((t, _)) => t,
+                None => continue,
+            }
+        } else {
+            first
+        };
+        let Some(body) = body_span(&file.lines, i, end) else { continue };
+        file.impls.push(ImplBlock { self_type, body });
+    }
+}
+
+/// Innermost impl block whose span contains line `i`.
+fn owner_at(impls: &[ImplBlock], i: usize) -> Option<String> {
+    impls
+        .iter()
+        .filter(|b| b.body.0 <= i && i <= b.body.1)
+        .max_by_key(|b| b.body.0)
+        .map(|b| b.self_type.clone())
+}
+
 fn parse_fns(file: &mut SourceFile) {
     let n = file.lines.len();
     for i in 0..n {
@@ -204,6 +320,7 @@ fn parse_fns(file: &mut SourceFile) {
             is_pub,
             is_unsafe,
             in_test: file.mask[i],
+            owner: owner_at(&file.impls, i),
             calls,
         });
     }
@@ -530,6 +647,128 @@ mod tests {
         assert!(f.aliases.contains(&("masked_w8".to_string(), "row_masked".to_string())));
         assert!(f.aliases.contains(&("row_w8".to_string(), "row_plain".to_string())));
         assert_eq!(f.mods, vec!["scalar", "avx2"]);
+    }
+
+    #[test]
+    fn impl_blocks_assign_owners() {
+        let text = concat!(
+            "pub struct Pool;\n",
+            "impl Pool {\n",
+            "    pub fn open(&self) { self.tick() }\n",
+            "}\n",
+            "impl<T: Clone> fmt::Display for Wrapper<T> {\n",
+            "    fn fmt(&self) -> u32 { 0 }\n",
+            "}\n",
+            "unsafe impl Send for Pool {}\n",
+            "pub fn free() {}\n",
+            "fn takes(x: impl Iterator<Item = u32>) -> u32 { 0 }\n",
+        );
+        let f = parse("serve/pool.rs", text);
+        let types: Vec<&str> = f.impls.iter().map(|b| b.self_type.as_str()).collect();
+        assert_eq!(types, vec!["Pool", "Wrapper", "Pool"], "{types:?}");
+        let owners: Vec<(&str, Option<&str>)> =
+            f.fns.iter().map(|i| (i.name.as_str(), i.owner.as_deref())).collect();
+        assert!(owners.contains(&("open", Some("Pool"))), "{owners:?}");
+        assert!(owners.contains(&("fmt", Some("Wrapper"))), "{owners:?}");
+        assert!(owners.contains(&("free", None)), "{owners:?}");
+        assert!(owners.contains(&("takes", None)), "{owners:?}");
+    }
+
+    #[test]
+    fn impl_in_argument_or_return_position_is_not_a_block() {
+        let text = concat!(
+            "fn mk() -> impl Iterator<Item = u32> {\n",
+            "    (0..3).map(|x| x)\n",
+            "}\n",
+            "fn use_it(it: impl Iterator<Item = u32>) -> usize { it.count() }\n",
+        );
+        let f = parse("algo/x.rs", text);
+        assert!(f.impls.is_empty(), "{:?}", f.impls);
+        assert!(f.fns.iter().all(|i| i.owner.is_none()));
+    }
+
+    /// Hand-rolled property test (no deps): generate random nestings of
+    /// fns, closures, and plain blocks from a seeded LCG, then check the
+    /// recovered body spans are well-formed — each span starts at its
+    /// declaration line, braces balance to zero across it, and every
+    /// nested fn's span sits inside some enclosing span or after it,
+    /// never straddling a boundary.
+    #[test]
+    fn proptest_body_spans_over_nested_items() {
+        let mut state = 0x9e37_79b9_7f4a_7c15u64;
+        let mut rng = move |bound: usize| {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as usize) % bound.max(1)
+        };
+        for case in 0..200 {
+            let mut text = String::new();
+            let mut names: Vec<String> = Vec::new();
+            let mut depth = 0usize;
+            let mut emitted = 0usize;
+            while emitted < 12 {
+                match rng(4) {
+                    0 => {
+                        let name = format!("f{}_{}", case, emitted);
+                        text.push_str(&format!("fn {name}(x: u32) -> u32 {{\n"));
+                        names.push(name);
+                        depth += 1;
+                        emitted += 1;
+                    }
+                    1 if depth > 0 => {
+                        // A closure with a braced body, on one line.
+                        text.push_str("    let c = |y: u32| { y + 1 };\n");
+                        emitted += 1;
+                    }
+                    2 if depth > 0 => {
+                        text.push_str("    {\n        helper(x);\n    }\n");
+                        emitted += 1;
+                    }
+                    _ if depth > 0 => {
+                        text.push_str("}\n");
+                        depth -= 1;
+                    }
+                    _ => {
+                        text.push_str("// filler\n");
+                    }
+                }
+            }
+            while depth > 0 {
+                text.push_str("}\n");
+                depth -= 1;
+            }
+            let f = parse("algo/gen.rs", &text);
+            let found: Vec<&str> = f.fns.iter().map(|i| i.name.as_str()).collect();
+            for name in &names {
+                assert!(found.contains(&name.as_str()), "case {case}: lost fn {name}\n{text}");
+            }
+            let mut spans: Vec<(usize, usize)> = Vec::new();
+            for item in &f.fns {
+                let (lo, hi) = item.body.expect("generated fns always have bodies");
+                assert_eq!(lo, item.line, "case {case}: span must start at the decl");
+                assert!(hi >= lo && hi < f.lines.len(), "case {case}: span out of range");
+                let mut bal = 0i64;
+                for line in &f.lines[lo..=hi] {
+                    for ch in line.code.bytes() {
+                        match ch {
+                            b'{' => bal += 1,
+                            b'}' => bal -= 1,
+                            _ => {}
+                        }
+                    }
+                }
+                assert_eq!(bal, 0, "case {case}: unbalanced span {lo}..={hi}\n{text}");
+                spans.push((lo, hi));
+            }
+            for &(lo, hi) in &spans {
+                for &(lo2, hi2) in &spans {
+                    let nested = lo2 > lo && lo2 <= hi;
+                    assert!(
+                        !nested || hi2 <= hi,
+                        "case {case}: straddling spans ({lo},{hi}) vs ({lo2},{hi2})\n{text}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,185 @@
+//! Alloc-accountability pass: the serve memory budget (`SessionPool`'s
+//! reserve-then-true-up admission) and `imm_memory_limit` (the rr
+//! store's exact byte accounting) only mean something if heap growth on
+//! those paths is *accounted* — charged to the budget before it
+//! happens, or documented as transient and bounded. This pass scans the
+//! budget-admitted surfaces — `serve/pool.rs` and everything under
+//! `rr/` — and flags heap-allocating calls that are neither inside an
+//! accounted region nor annotated.
+//!
+//! Tokens flagged (`alloc-unaccounted`): `Vec::new(` /
+//! `with_capacity(` / `.collect(` / `collect::<` / `Box::new(` /
+//! `Arc::new(` / `vec![` / `.to_vec(` / `.clone()`. `Arc::clone` /
+//! `Rc::clone` are exempt (refcount bumps, not allocations).
+//!
+//! Clearing a site:
+//!
+//! * a `// ACCOUNTED:` comment within [`ACCOUNTED_WINDOW`] lines above
+//!   the site, stating which budget the bytes are charged to (or why
+//!   they are transient and bounded); or
+//! * an *accounted region*: a `// ACCOUNTED:` comment within the window
+//!   above the enclosing fn's declaration, which clears every site in
+//!   that fn — for functions whose whole job is charged allocation
+//!   (e.g. the store append path, whose capacity was admitted via
+//!   `bytes_after` before any allocation).
+//!
+//! Deleting an annotation re-opens every site it cleared; the
+//! acceptance self-test checks exactly that against the real tree.
+
+use crate::findings::Finding;
+use crate::graph::CrateModel;
+use crate::lexer::comment_in_window;
+use crate::parser::SourceFile;
+
+/// How many lines above a site (or a fn declaration) the `ACCOUNTED:`
+/// comment may sit.
+pub(crate) const ACCOUNTED_WINDOW: usize = 10;
+
+/// The budget-admitted surfaces.
+const SCOPE_FILES: [&str; 1] = ["serve/pool.rs"];
+const SCOPE_DIRS: [&str; 1] = ["rr/"];
+
+const ALLOC_TOKENS: [&str; 9] = [
+    "Vec::new(",
+    "with_capacity(",
+    ".collect(",
+    "collect::<",
+    "Box::new(",
+    "Arc::new(",
+    "vec![",
+    ".to_vec(",
+    ".clone()",
+];
+
+fn in_scope(rel: &str) -> bool {
+    SCOPE_FILES.contains(&rel) || SCOPE_DIRS.iter().any(|d| rel.starts_with(d))
+}
+
+fn alloc_token_at(code: &str) -> Option<&'static str> {
+    for t in ALLOC_TOKENS {
+        if code.contains(t) {
+            // Refcount bumps are not allocations.
+            if t == ".clone()" && (code.contains("Arc::clone") || code.contains("Rc::clone")) {
+                continue;
+            }
+            return Some(t);
+        }
+    }
+    None
+}
+
+pub(crate) fn run(model: &CrateModel) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for file in &model.files {
+        if !in_scope(&file.rel) {
+            continue;
+        }
+        scan_file(file, &mut out);
+    }
+    out
+}
+
+fn scan_file(file: &SourceFile, out: &mut Vec<Finding>) {
+    for i in 0..file.lines.len() {
+        if file.mask[i] {
+            continue;
+        }
+        let Some(token) = alloc_token_at(&file.lines[i].code) else { continue };
+        // Allocation outside any fn body (consts, statics) has no
+        // runtime accounting story to check.
+        let Some(f) = super::enclosing_fn(file, i) else { continue };
+        let site_ok = comment_in_window(&file.lines, i, ACCOUNTED_WINDOW, &["ACCOUNTED"]);
+        let region_ok = comment_in_window(&file.lines, f.line, ACCOUNTED_WINDOW, &["ACCOUNTED"]);
+        if site_ok || region_ok {
+            continue;
+        }
+        out.push(Finding::new(
+            "alloc-accountability",
+            "alloc-unaccounted",
+            &file.rel,
+            i + 1,
+            &f.name,
+            format!(
+                "heap allocation (`{token}`) on a budget-admitted path without an \
+                 `// ACCOUNTED:` annotation: charge it to the session/store budget \
+                 before allocating, or document why it is transient and bounded"
+            ),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(sources: &[(&str, &str)]) -> Vec<(String, usize, String)> {
+        let model = CrateModel::from_sources(sources);
+        run(&model).into_iter().map(|f| (f.file, f.line, f.symbol)).collect()
+    }
+
+    #[test]
+    fn collect_on_the_budget_path_fires_and_site_annotation_clears() {
+        let bad = "pub fn stats(&self) -> Vec<u32> {\n    self.xs.iter().map(|x| x + 1).collect()\n}\n";
+        let got = findings(&[("serve/pool.rs", bad)]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].1, 2);
+        assert_eq!(got[0].2, "stats");
+
+        let good = "pub fn stats(&self) -> Vec<u32> {\n    // ACCOUNTED: O(sessions) observability snapshot, not session-owned bytes.\n    self.xs.iter().map(|x| x + 1).collect()\n}\n";
+        assert!(findings(&[("serve/pool.rs", good)]).is_empty());
+    }
+
+    #[test]
+    fn fn_level_region_clears_every_site_inside() {
+        let region = concat!(
+            "// ACCOUNTED: append path; capacity was admitted via bytes_after\n",
+            "// before any allocation below runs.\n",
+            "pub fn append(&mut self, n: usize) {\n",
+            "    let mut buf = Vec::with_capacity(n);\n",
+            "    buf.push(1u8);\n",
+            "    self.arena = buf.to_vec();\n",
+            "}\n",
+        );
+        assert!(findings(&[("rr/mod.rs", region)]).is_empty());
+    }
+
+    #[test]
+    fn arc_clone_is_exempt_but_deep_clone_is_not() {
+        let refcount = "pub fn share(&self) -> Arc<S> {\n    Arc::clone(&self.s)\n}\n";
+        assert!(findings(&[("serve/pool.rs", refcount)]).is_empty());
+
+        let deep = "pub fn snapshot(&self) -> String {\n    self.name.clone()\n}\n";
+        let got = findings(&[("serve/pool.rs", deep)]);
+        assert_eq!(got.len(), 1, "{got:?}");
+    }
+
+    #[test]
+    fn out_of_scope_files_and_test_code_are_exempt() {
+        let alloc = "pub fn anywhere() -> Vec<u32> {\n    vec![1, 2, 3]\n}\n";
+        assert!(findings(&[("serve/mod.rs", alloc)]).is_empty());
+        assert!(findings(&[("algo/mod.rs", alloc)]).is_empty());
+
+        let test_only = concat!(
+            "pub fn quiet() {}\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    #[test]\n",
+            "    fn t() {\n",
+            "        let v: Vec<u32> = (0..4).collect();\n",
+            "        drop(v);\n",
+            "    }\n",
+            "}\n",
+        );
+        assert!(findings(&[("rr/codec.rs", test_only)]).is_empty());
+    }
+
+    #[test]
+    fn deleting_an_annotation_reopens_the_site() {
+        let annotated = "pub fn grow(&mut self) {\n    // ACCOUNTED: charged to entries_bytes one line up.\n    self.entries = Vec::with_capacity(8);\n}\n";
+        assert!(findings(&[("rr/mod.rs", annotated)]).is_empty());
+        let stripped = annotated.replace("// ACCOUNTED: charged to entries_bytes one line up.", "");
+        let got = findings(&[("rr/mod.rs", &stripped)]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].2, "grow");
+    }
+}

@@ -1,0 +1,740 @@
+//! Lock-discipline pass: derive the lock-acquisition graph from the
+//! `runtime::sync` facade `.lock()` sites and enforce a declared total
+//! order, checked in as `rust/xtask/lock.order`.
+//!
+//! **Naming.** A site's lock is named `<module>.<receiver>` where
+//! `<module>` is the file path with `.rs` / `/mod.rs` stripped and
+//! `<receiver>` is the last identifier before `.lock(` (`self.shared.`
+//! `state.lock()` → `runtime/pool.state`; a tuple-field receiver like
+//! `self.0` becomes `field0`). Renaming a lock field therefore renames
+//! the lock, and the manifest goes stale loudly (`lock-stale-order`).
+//!
+//! **Held-set tracking** is intraprocedural and syntactic: a guard
+//! `let g = recv.lock()` is live from its binding line until the
+//! enclosing brace scope closes or an unconditional `drop(g)` at the
+//! binding depth; a guard-less `.lock()` temporary lives for its line
+//! only. While a guard is live, every further `.lock()` site forms an
+//! ordered pair, and every *strictly uniquely resolvable* bare or
+//! `Q::`-qualified call
+//! ([`CallGraph::resolve_strict`](crate::graph::CallGraph::resolve_strict))
+//! contributes the callee's transitive acquisition set. Strict,
+//! non-method resolution only — the widen-to-all fallback that is sound
+//! for reachability would fabricate acquisition edges here (`File::open`
+//! "resolving" to `SessionPool::open`), and method calls are worse
+//! still: receiver types are unknown, so `parts.join("; ")` sharing a
+//! name with the one crate `fn join` proves nothing. Fabricated edges
+//! mean phantom violations, which is exactly the unsound direction for
+//! an order checker. The held windows in this crate are small and drop
+//! their guards before crossing module boundaries, so the common case
+//! (same-fn nesting) is always visible, and the one real
+//! interprocedural chain (`SessionPool::open` holding the pool state
+//! while `ImSession::prepare` spins up a `WorkerPool`) is all bare or
+//! qualified calls.
+//!
+//! Rules:
+//!
+//! * `lock-unnamed` — a `.lock()` whose receiver has no identifier to
+//!   name the lock by; bind the receiver first.
+//! * `lock-undeclared` — a site whose lock name is missing from
+//!   `lock.order`.
+//! * `lock-stale-order` — a manifest entry matching no site (renamed or
+//!   deleted lock).
+//! * `lock-order-violation` — a derived pair acquired against the
+//!   declared order (or a reentrant self-pair, which self-deadlocks).
+//! * `lock-cycle` — a cycle in the derived acquisition graph itself,
+//!   reported even when the manifest is empty.
+
+use crate::findings::Finding;
+use crate::graph::{CrateModel, Def};
+use crate::lexer::is_ident_byte;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// The parsed `lock.order` manifest: lock names, most-outer first.
+#[derive(Debug, Default)]
+pub(crate) struct LockOrder {
+    /// `(name, 1-based manifest line)` in declaration order.
+    entries: Vec<(String, usize)>,
+}
+
+impl LockOrder {
+    /// One lock name per line, `#` comments (full-line or trailing) and
+    /// blank lines ignored; duplicates are an error.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut entries: Vec<(String, usize)> = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                Some(pos) => &raw[..pos],
+                None => raw,
+            };
+            let name = line.trim();
+            if name.is_empty() {
+                continue;
+            }
+            if name.split_whitespace().count() != 1 {
+                return Err(format!(
+                    "lock.order line {}: expected a single lock name, got '{name}'",
+                    lineno + 1
+                ));
+            }
+            if entries.iter().any(|(n, _)| n == name) {
+                return Err(format!("lock.order line {}: duplicate lock '{name}'", lineno + 1));
+            }
+            entries.push((name.to_string(), lineno + 1));
+        }
+        Ok(Self { entries })
+    }
+
+    /// Load from a path; a missing file is an empty manifest (every
+    /// site then reports `lock-undeclared`, so absence fails loudly).
+    pub fn load(path: &std::path::Path) -> Result<Self, String> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Self::parse(&text),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Self::default()),
+            Err(e) => Err(format!("read {}: {e}", path.display())),
+        }
+    }
+
+    fn position(&self, name: &str) -> Option<usize> {
+        self.entries.iter().position(|(n, _)| n == name)
+    }
+}
+
+/// One discovered `.lock()` acquisition site.
+#[derive(Debug, Clone)]
+struct Site {
+    file: usize,
+    /// 0-based line.
+    line: usize,
+    /// Derived lock name, or `None` when the receiver is unnameable.
+    name: Option<String>,
+}
+
+/// One derived ordered acquisition: `held` was live when `then` was
+/// acquired at `file:line`.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct Pair {
+    held: String,
+    then: String,
+    file: usize,
+    /// 0-based line of the second acquisition.
+    line: usize,
+}
+
+fn module_key(rel: &str) -> String {
+    rel.strip_suffix("/mod.rs")
+        .or_else(|| rel.strip_suffix(".rs"))
+        .unwrap_or(rel)
+        .to_string()
+}
+
+/// Last identifier before `.lock(` starting at byte `dot` (the `.`).
+fn receiver_name(code: &str, dot: usize) -> Option<String> {
+    let b = code.as_bytes();
+    let end = dot;
+    let mut start = end;
+    while start > 0 && is_ident_byte(b[start - 1]) {
+        start -= 1;
+    }
+    if start == end {
+        return None;
+    }
+    let ident = &code[start..end];
+    if ident.bytes().all(|c| c.is_ascii_digit()) {
+        Some(format!("field{ident}"))
+    } else {
+        Some(ident.to_string())
+    }
+}
+
+/// All `.lock(` occurrences on one code line: byte offsets of the `.`.
+fn lock_dots(code: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(".lock(") {
+        let dot = from + pos;
+        out.push(dot);
+        from = dot + ".lock".len();
+    }
+    out
+}
+
+fn discover_sites(model: &CrateModel) -> Vec<Site> {
+    let mut out = Vec::new();
+    for (fi, file) in model.files.iter().enumerate() {
+        for (i, line) in file.lines.iter().enumerate() {
+            if file.mask[i] {
+                continue;
+            }
+            for dot in lock_dots(&line.code) {
+                let name = receiver_name(&line.code, dot)
+                    .map(|r| format!("{}.{r}", module_key(&file.rel)));
+                out.push(Site { file: fi, line: i, name });
+            }
+        }
+    }
+    out
+}
+
+/// Direct lock names acquired inside each fn body (nested-fn lines are
+/// attributed to the enclosing fn too — over-approximate, like the
+/// parser itself).
+fn direct_acquires(model: &CrateModel, sites: &[Site]) -> BTreeMap<Def, BTreeSet<String>> {
+    let mut out: BTreeMap<Def, BTreeSet<String>> = BTreeMap::new();
+    for (fi, file) in model.files.iter().enumerate() {
+        for (ki, f) in file.fns.iter().enumerate() {
+            if f.in_test {
+                continue;
+            }
+            let Some((lo, hi)) = f.body else { continue };
+            let def = Def::Parsed { file: fi, fn_idx: ki };
+            let names: BTreeSet<String> = sites
+                .iter()
+                .filter(|s| s.file == fi && s.line >= lo && s.line <= hi)
+                .filter_map(|s| s.name.clone())
+                .collect();
+            if !names.is_empty() {
+                out.insert(def, names);
+            }
+        }
+    }
+    out
+}
+
+/// Transitive closure of `direct_acquires` over uniquely-resolving
+/// calls (`lock` itself excluded: a `.lock()` call *is* a site, not a
+/// propagation edge).
+fn transitive_acquires(
+    model: &CrateModel,
+    cg: &crate::graph::CallGraph<'_>,
+    direct: BTreeMap<Def, BTreeSet<String>>,
+) -> BTreeMap<Def, BTreeSet<String>> {
+    let mut acq = direct;
+    loop {
+        let mut grew = false;
+        for (fi, file) in model.files.iter().enumerate() {
+            for (ki, f) in file.fns.iter().enumerate() {
+                if f.in_test {
+                    continue;
+                }
+                let def = Def::Parsed { file: fi, fn_idx: ki };
+                let mut add: BTreeSet<String> = BTreeSet::new();
+                for call in &f.calls {
+                    // `.lock()` calls ARE sites, not propagation edges;
+                    // method calls are untrusted entirely — a receiver's
+                    // type is unknown, so `xs.join(", ")` or `.map(..)`
+                    // sharing a name with one crate fn proves nothing.
+                    if call.name == "lock" || call.is_method {
+                        continue;
+                    }
+                    if let Some(target) = cg.resolve_strict(def, call) {
+                        if let Some(names) = acq.get(&target) {
+                            add.extend(names.iter().cloned());
+                        }
+                    }
+                }
+                if !add.is_empty() {
+                    let entry = acq.entry(def).or_default();
+                    let before = entry.len();
+                    entry.extend(add);
+                    grew |= entry.len() != before;
+                }
+            }
+        }
+        if !grew {
+            return acq;
+        }
+    }
+}
+
+/// One live guard during the body walk.
+struct Guard {
+    /// Binding variable, when the site was a `let` binding.
+    var: Option<String>,
+    name: String,
+    /// Brace depth (relative to the body walk) at the binding line's
+    /// start; the guard dies when depth dips below this.
+    depth: i64,
+}
+
+/// `let [mut] IDENT = ...` binding variable, if this line is one and
+/// the `=` comes before `col`.
+fn binding_var(code: &str, col: usize) -> Option<String> {
+    let eq = code.find('=')?;
+    if eq > col {
+        return None;
+    }
+    let head = code[..eq].trim();
+    let rest = head.strip_prefix("let")?;
+    if !rest.starts_with(|c: char| c.is_whitespace()) {
+        return None;
+    }
+    let rest = rest.trim_start();
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+    let b = rest.as_bytes();
+    let mut end = 0;
+    while end < b.len() && is_ident_byte(b[end]) {
+        end += 1;
+    }
+    if end == 0 {
+        return None; // tuple/struct pattern: no single guard variable
+    }
+    let after = rest[end..].trim_start();
+    (after.is_empty() || after.starts_with(':')).then(|| rest[..end].to_string())
+}
+
+/// Walk one fn body tracking live guards; record ordered pairs.
+#[allow(clippy::too_many_arguments)]
+fn walk_body(
+    model: &CrateModel,
+    cg: &crate::graph::CallGraph<'_>,
+    acquires: &BTreeMap<Def, BTreeSet<String>>,
+    sites: &[Site],
+    fi: usize,
+    ki: usize,
+    pairs: &mut BTreeSet<Pair>,
+) {
+    let file = &model.files[fi];
+    let f = &file.fns[ki];
+    let Some((lo, hi)) = f.body else { return };
+    let def = Def::Parsed { file: fi, fn_idx: ki };
+    let mut depth = 0i64;
+    let mut guards: Vec<Guard> = Vec::new();
+    for i in lo..=hi.min(file.lines.len() - 1) {
+        let code = &file.lines[i].code;
+
+        // Unconditional drop(g) at the binding depth releases the guard.
+        if let Some(pos) = code.find("drop(") {
+            let arg: String = code[pos + 5..]
+                .bytes()
+                .take_while(|&b| is_ident_byte(b))
+                .map(char::from)
+                .collect();
+            guards.retain(|g| {
+                !(g.depth == depth && g.var.as_deref() == Some(arg.as_str()) && !arg.is_empty())
+            });
+        }
+
+        // New acquisition sites on this line.
+        for site in sites.iter().filter(|s| s.file == fi && s.line == i) {
+            let Some(name) = &site.name else { continue };
+            for g in &guards {
+                pairs.insert(Pair { held: g.name.clone(), then: name.clone(), file: fi, line: i });
+            }
+            if let Some(dot) = lock_dots(code).first().copied() {
+                if let Some(var) = binding_var(code, dot) {
+                    guards.push(Guard { var: Some(var), name: name.clone(), depth });
+                }
+            }
+        }
+
+        // Calls made while a guard is held contribute the callee's
+        // transitive acquisitions — unique resolutions only.
+        if !guards.is_empty() {
+            for call in
+                f.calls.iter().filter(|c| c.line == i && c.name != "lock" && !c.is_method)
+            {
+                let Some(target) = cg.resolve_strict(def, call) else { continue };
+                let Some(names) = acquires.get(&target) else { continue };
+                for g in &guards {
+                    for name in names {
+                        pairs.insert(Pair {
+                            held: g.name.clone(),
+                            then: name.clone(),
+                            file: fi,
+                            line: i,
+                        });
+                    }
+                }
+            }
+        }
+
+        // Scope exit: a dip below the binding depth kills the guard
+        // (`}`, `} else {`, `};` all dip mid-line).
+        let mut min_depth = depth;
+        for ch in code.bytes() {
+            match ch {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    min_depth = min_depth.min(depth);
+                }
+                _ => {}
+            }
+        }
+        guards.retain(|g| min_depth >= g.depth);
+    }
+}
+
+pub(crate) fn run(model: &CrateModel, order: &LockOrder) -> Vec<Finding> {
+    let cg = model.call_graph();
+    let sites = discover_sites(model);
+    let acquires = transitive_acquires(model, &cg, direct_acquires(model, &sites));
+
+    let mut out = Vec::new();
+    let mut seen_names: BTreeSet<&str> = BTreeSet::new();
+    for site in &sites {
+        let rel = &model.files[site.file].rel;
+        match &site.name {
+            None => out.push(Finding::new(
+                "lock-discipline",
+                "lock-unnamed",
+                rel,
+                site.line + 1,
+                "",
+                "cannot derive a lock name for this `.lock()` (no receiver identifier); \
+                 bind the receiver to a named local first"
+                    .to_string(),
+            )),
+            Some(name) => {
+                seen_names.insert(name);
+                if order.position(name).is_none() {
+                    out.push(Finding::new(
+                        "lock-discipline",
+                        "lock-undeclared",
+                        rel,
+                        site.line + 1,
+                        name,
+                        format!(
+                            "lock `{name}` is not declared in xtask/lock.order; add it at \
+                             the position matching its acquisition order"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    for (name, lineno) in &order.entries {
+        if !seen_names.contains(name.as_str()) {
+            out.push(Finding::new(
+                "lock-discipline",
+                "lock-stale-order",
+                "lock.order",
+                *lineno,
+                name,
+                format!(
+                    "manifest lock `{name}` matches no `.lock()` site — the lock was \
+                     renamed or removed; update xtask/lock.order"
+                ),
+            ));
+        }
+    }
+
+    let mut pairs: BTreeSet<Pair> = BTreeSet::new();
+    for (fi, file) in model.files.iter().enumerate() {
+        for ki in 0..file.fns.len() {
+            if !file.fns[ki].in_test {
+                walk_body(model, &cg, &acquires, &sites, fi, ki, &mut pairs);
+            }
+        }
+    }
+
+    for p in &pairs {
+        let rel = &model.files[p.file].rel;
+        if p.held == p.then {
+            out.push(Finding::new(
+                "lock-discipline",
+                "lock-order-violation",
+                rel,
+                p.line + 1,
+                &p.then,
+                format!("reentrant acquisition of `{}` while already held: self-deadlock", p.then),
+            ));
+            continue;
+        }
+        if let (Some(a), Some(b)) = (order.position(&p.held), order.position(&p.then)) {
+            if a > b {
+                out.push(Finding::new(
+                    "lock-discipline",
+                    "lock-order-violation",
+                    rel,
+                    p.line + 1,
+                    &p.then,
+                    format!(
+                        "`{}` acquired while holding `{}`, against the declared order in \
+                         xtask/lock.order (a concurrent thread taking them in manifest \
+                         order deadlocks)",
+                        p.then, p.held
+                    ),
+                ));
+            }
+        }
+    }
+
+    // Cycle detection over the derived graph, independent of the
+    // manifest: held → then edges; a back edge is a potential deadlock.
+    let mut edges: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for p in &pairs {
+        edges.entry(&p.held).or_default().insert(&p.then);
+    }
+    for cyc in find_cycles(&edges) {
+        // Anchor on a pair belonging to the cycle's first edge.
+        let anchor = pairs
+            .iter()
+            .find(|p| p.held == cyc[0] && cyc.contains(&p.then))
+            .expect("cycle edges come from pairs");
+        out.push(Finding::new(
+            "lock-discipline",
+            "lock-cycle",
+            &model.files[anchor.file].rel,
+            anchor.line + 1,
+            &cyc[0],
+            format!("cyclic lock acquisition: {}", cyc.join(" -> ")),
+        ));
+    }
+    out
+}
+
+/// Minimal cycle enumeration: DFS from each node, reporting each cycle
+/// once by its lexicographically-smallest member.
+fn find_cycles(edges: &BTreeMap<&str, BTreeSet<&str>>) -> Vec<Vec<String>> {
+    let mut cycles: BTreeSet<Vec<String>> = BTreeSet::new();
+    for &start in edges.keys() {
+        let mut stack: Vec<(&str, Vec<&str>)> = vec![(start, vec![start])];
+        while let Some((node, path)) = stack.pop() {
+            let Some(nexts) = edges.get(node) else { continue };
+            for &next in nexts {
+                if next == start {
+                    // Canonical rotation: smallest member first.
+                    if path.iter().min() == Some(&start) {
+                        let mut cyc: Vec<String> =
+                            path.iter().map(|s| s.to_string()).collect();
+                        cyc.push(start.to_string());
+                        cycles.insert(cyc);
+                    }
+                } else if !path.contains(&next) {
+                    let mut p = path.clone();
+                    p.push(next);
+                    stack.push((next, p));
+                }
+            }
+        }
+    }
+    cycles.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(sources: &[(&str, &str)], order: &str) -> Vec<(&'static str, String, usize)> {
+        let model = CrateModel::from_sources(sources);
+        let order = LockOrder::parse(order).unwrap();
+        run(&model, &order).into_iter().map(|f| (f.rule, f.symbol, f.line)).collect()
+    }
+
+    const POOL: &str = concat!(
+        "pub struct Pool { state: Mutex<u32>, session: Mutex<u32> }\n",
+        "impl Pool {\n",
+        "    pub fn query(&self) {\n",
+        "        let st = self.state.lock();\n",
+        "        let s = self.session.lock();\n",
+        "        drop(s);\n",
+        "        drop(st);\n",
+        "    }\n",
+        "}\n",
+    );
+
+    #[test]
+    fn sites_are_named_and_undeclared_locks_fire() {
+        let got = findings(&[("serve/pool.rs", POOL)], "serve/pool.state\n");
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0], ("lock-undeclared", "serve/pool.session".to_string(), 5));
+    }
+
+    #[test]
+    fn declared_order_accepts_and_reversal_fires() {
+        let ok = "serve/pool.state\nserve/pool.session\n";
+        assert!(findings(&[("serve/pool.rs", POOL)], ok).is_empty());
+
+        let reversed = "serve/pool.session\nserve/pool.state\n";
+        let got = findings(&[("serve/pool.rs", POOL)], reversed);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].0, "lock-order-violation");
+        assert_eq!(got[0].1, "serve/pool.session");
+    }
+
+    #[test]
+    fn stale_manifest_entries_fire_with_their_line() {
+        let order = "# comment\nserve/pool.state\nserve/pool.session\nserve/pool.ghost\n";
+        let got = findings(&[("serve/pool.rs", POOL)], order);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0], ("lock-stale-order", "serve/pool.ghost".to_string(), 4));
+    }
+
+    #[test]
+    fn dropping_or_closing_scope_releases_the_guard() {
+        // state dropped (at binding depth) before session: no pair.
+        let drop_first = concat!(
+            "pub fn query(p: &Pool) {\n",
+            "    let st = p.state.lock();\n",
+            "    drop(st);\n",
+            "    let s = p.session.lock();\n",
+            "    drop(s);\n",
+            "}\n",
+        );
+        // Reversed order declared: a pair would fire, so emptiness
+        // proves the pair never formed.
+        let order = "serve/pool.session\nserve/pool.state\n";
+        assert!(findings(&[("serve/pool.rs", drop_first)], order).is_empty());
+
+        let scope_first = concat!(
+            "pub fn query(p: &Pool) {\n",
+            "    let id = {\n",
+            "        let st = p.state.lock();\n",
+            "        7\n",
+            "    };\n",
+            "    let s = p.session.lock();\n",
+            "    drop((id, s));\n",
+            "}\n",
+        );
+        assert!(findings(&[("serve/pool.rs", scope_first)], order).is_empty());
+
+        // A conditional drop (deeper than the binding) does NOT release.
+        let cond_drop = concat!(
+            "pub fn query(p: &Pool, b: bool) {\n",
+            "    let st = p.state.lock();\n",
+            "    if b {\n",
+            "        drop(st);\n",
+            "    }\n",
+            "    let s = p.session.lock();\n",
+            "    drop(s);\n",
+            "}\n",
+        );
+        let got = findings(&[("serve/pool.rs", cond_drop)], order);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].0, "lock-order-violation");
+    }
+
+    #[test]
+    fn reentrant_acquisition_is_a_violation_even_when_declared() {
+        let reentrant = concat!(
+            "pub fn tick(p: &Pool) {\n",
+            "    let a = p.state.lock();\n",
+            "    let b = p.state.lock();\n",
+            "    drop((a, b));\n",
+            "}\n",
+        );
+        let got = findings(&[("serve/pool.rs", reentrant)], "serve/pool.state\n");
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].0, "lock-order-violation");
+        assert!(got[0].1.contains("state"));
+    }
+
+    #[test]
+    fn interprocedural_acquisition_through_unique_calls() {
+        // query holds state and calls prepare(), which (transitively,
+        // through worker()) locks jobs — order declared jobs-first, so
+        // the derived pair violates.
+        let serve = concat!(
+            "pub fn query(p: &Pool) {\n",
+            "    let st = p.state.lock();\n",
+            "    crate::runtime::prepare();\n",
+            "    drop(st);\n",
+            "}\n",
+        );
+        let runtime = concat!(
+            "pub fn prepare() {\n",
+            "    worker()\n",
+            "}\n",
+            "fn worker() {\n",
+            "    let j = self_jobs().jobs.lock();\n",
+            "    drop(j);\n",
+            "}\n",
+        );
+        let order = "runtime/pool.jobs\nserve/pool.state\n";
+        let got = findings(&[("serve/pool.rs", serve), ("runtime/pool.rs", runtime)], order);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].0, "lock-order-violation");
+        assert_eq!(got[0].1, "runtime/pool.jobs");
+        assert_eq!(got[0].2, 3, "anchored at the call site");
+
+        // Same shape with the consistent order: clean.
+        let ok = "serve/pool.state\nruntime/pool.jobs\n";
+        assert!(findings(&[("serve/pool.rs", serve), ("runtime/pool.rs", runtime)], ok)
+            .is_empty());
+    }
+
+    #[test]
+    fn method_calls_do_not_fabricate_edges() {
+        // `parts.join("; ")` is a slice method, but the crate has
+        // exactly one `fn join` — which locks. Method calls must not
+        // propagate acquisitions, or this would be a phantom reentrant
+        // self-pair.
+        let model_src = concat!(
+            "pub fn drive(sched: &S) {\n",
+            "    let st = sched.q.lock();\n",
+            "    let parts: Vec<String> = vec![];\n",
+            "    let _msg = parts.join(\"; \");\n",
+            "    drop(st);\n",
+            "}\n",
+            "pub fn join(sched: &S) {\n",
+            "    let st = sched.q.lock();\n",
+            "    drop(st);\n",
+            "}\n",
+        );
+        let got = findings(&[("runtime/sync/model.rs", model_src)], "runtime/sync/model.q\n");
+        assert!(got.is_empty(), "{got:?}");
+    }
+
+    #[test]
+    fn ambiguous_calls_do_not_fabricate_edges() {
+        // Two defs named `prepare`: resolution is ambiguous, so no
+        // acquisition propagates and no violation fires.
+        let serve = concat!(
+            "pub fn query(p: &Pool) {\n",
+            "    let st = p.state.lock();\n",
+            "    ambiguous_prepare();\n",
+            "    drop(st);\n",
+            "}\n",
+        );
+        let a = "pub fn ambiguous_prepare() {\n    let j = jobs_of().jobs.lock();\n    drop(j);\n}\n";
+        let b = "pub fn ambiguous_prepare() {}\n";
+        let order = "runtime/pool.jobs\nserve/pool.state\nutil/x.jobs\n";
+        let got = findings(
+            &[("serve/pool.rs", serve), ("runtime/pool.rs", a), ("util/other.rs", b)],
+            order,
+        );
+        // Only the stale entry for util/x.jobs (declared, never seen).
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].0, "lock-stale-order");
+    }
+
+    #[test]
+    fn cycles_are_reported_even_without_a_manifest() {
+        let ab = concat!(
+            "pub fn forward(p: &P) {\n",
+            "    let a = p.alpha.lock();\n",
+            "    let b = p.beta.lock();\n",
+            "    drop((a, b));\n",
+            "}\n",
+            "pub fn backward(p: &P) {\n",
+            "    let b = p.beta.lock();\n",
+            "    let a = p.alpha.lock();\n",
+            "    drop((a, b));\n",
+            "}\n",
+        );
+        let got = findings(&[("runtime/pool.rs", ab)], "");
+        let rules: Vec<&str> = got.iter().map(|(r, _, _)| *r).collect();
+        assert!(rules.contains(&"lock-cycle"), "{got:?}");
+        // Both sites also report lock-undeclared with the empty manifest.
+        assert!(rules.contains(&"lock-undeclared"), "{got:?}");
+    }
+
+    #[test]
+    fn tuple_field_receivers_get_stable_names() {
+        let shim = "pub fn lock_shim(m: &M) {\n    let g = m.0.lock();\n    drop(g);\n}\n";
+        let got = findings(&[("runtime/sync/mod.rs", shim)], "");
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].1, "runtime/sync.field0");
+    }
+
+    #[test]
+    fn manifest_parser_rejects_duplicates_and_multiword_lines() {
+        assert!(LockOrder::parse("a.x\nb.y\na.x\n").is_err());
+        assert!(LockOrder::parse("a.x b.y\n").is_err());
+        let ok = LockOrder::parse("# c\na.x # trailing\n\nb.y\n").unwrap();
+        assert_eq!(ok.position("a.x"), Some(0));
+        assert_eq!(ok.position("b.y"), Some(1));
+    }
+}

@@ -1,0 +1,268 @@
+//! Panic-path pass: a panic on a serving path kills a request thread
+//! (or, outside the `dispatch` catch_unwind, the whole server), so the
+//! multi-tenant story in `serve/` only holds if every function reachable
+//! from the request loop or from `ImSession::query` is panic-free.
+//!
+//! Reachability is fn-level over [`CallGraph`]: every non-test function
+//! in `serve/` is a root (the accept loop, the reader, and the dispatch
+//! table are all private), plus `query` in `api/session.rs`. Resolution
+//! over-approximates (methods widen to every definition), which for a
+//! *no-panic* gate is the safe direction — scope grows, sites cannot
+//! hide.
+//!
+//! Rules, on every non-test line of a reachable body:
+//!
+//! * `pp-unwrap` — `.unwrap()` / `.expect(` calls. Files that define a
+//!   non-test `fn expect` of their own (the `util/json.rs` pull parser)
+//!   are exempt from the `.expect(` half only.
+//! * `pp-panic` — `panic!` / `unreachable!` / `todo!` / `unimplemented!`
+//!   invocations (`assert!` family is deliberately allowed: those state
+//!   invariants, and the serve loop maps them through catch_unwind).
+//! * `pp-index` — unchecked `x[..]` indexing, restricted to `serve/`
+//!   and `api/` files: that is the tenant boundary where an
+//!   out-of-bounds panic crosses sessions; kernel-internal indexing is
+//!   bounds-certified by the SAFETY/lint machinery instead.
+//!
+//! A site is accepted when a `// PANIC-OK:` comment within
+//! [`PANIC_OK_WINDOW`] lines above states why it cannot fire (the
+//! SAFETY/ORDERING/DETERMINISM convention extended).
+
+use crate::findings::Finding;
+use crate::graph::{CrateModel, Def};
+use crate::lexer::{comment_in_window, has_word_followed_by, is_ident_byte};
+use std::collections::BTreeSet;
+
+/// How many lines above a site the `PANIC-OK:` comment may sit.
+pub(crate) const PANIC_OK_WINDOW: usize = 10;
+
+/// Operator-facing and checker-internal surfaces where a panic answers
+/// to a human or is the failure-reporting mechanism itself, not a
+/// served request: the CLI binaries, the bench/coordinator harness, and
+/// the loom-personality model checker (test-only, panics by design).
+const ALLOW_FILES: [&str; 5] =
+    ["main.rs", "bench.rs", "util/args.rs", "util/proptest_lite.rs", "runtime/sync/model.rs"];
+const ALLOW_DIRS: [&str; 1] = ["coordinator/"];
+
+/// Files where `pp-index` applies (see the module docs).
+const INDEX_DIRS: [&str; 2] = ["serve/", "api/"];
+
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+fn allowlisted(rel: &str) -> bool {
+    ALLOW_FILES.contains(&rel) || ALLOW_DIRS.iter().any(|d| rel.starts_with(d))
+}
+
+/// Seed set: every non-test fn in `serve/`, plus `ImSession::query`.
+fn seeds(model: &CrateModel, cg: &crate::graph::CallGraph<'_>) -> Vec<Def> {
+    let mut out = Vec::new();
+    for (fi, file) in model.files.iter().enumerate() {
+        if file.rel.starts_with("serve/") {
+            out.extend(cg.fns_in_file(fi, |_| true));
+        }
+        if file.rel == "api/session.rs" {
+            out.extend(cg.fns_in_file(fi, |f| f.name == "query"));
+        }
+    }
+    out
+}
+
+pub(crate) fn run(model: &CrateModel) -> Vec<Finding> {
+    let cg = model.call_graph();
+    let reachable = cg.reachable_fns(seeds(model, &cg));
+
+    // Nested fns are spanned by their enclosing fn too; dedup by line.
+    let mut lines_to_scan: BTreeSet<(usize, usize)> = BTreeSet::new();
+    for def in &reachable {
+        let Some(item) = cg.fn_item(*def) else { continue };
+        let Some((lo, hi)) = item.body else { continue };
+        let file = &model.files[def.file()];
+        if allowlisted(&file.rel) {
+            continue;
+        }
+        for i in lo..=hi.min(file.lines.len() - 1) {
+            if !file.mask[i] {
+                lines_to_scan.insert((def.file(), i));
+            }
+        }
+    }
+
+    let mut out = Vec::new();
+    for (fi, i) in lines_to_scan {
+        let file = &model.files[fi];
+        let code = &file.lines[i].code;
+        let justified = comment_in_window(&file.lines, i, PANIC_OK_WINDOW, &["PANIC-OK"]);
+        let symbol = super::enclosing_fn(file, i).map_or_else(String::new, |f| f.name.clone());
+        // The pull-parser pattern: a file-local `fn expect` makes
+        // `self.expect(..)` an ordinary fallible call, not Option::expect.
+        let own_expect = file.fns.iter().any(|f| !f.in_test && f.name == "expect");
+
+        if (code.contains(".unwrap()") || (code.contains(".expect(") && !own_expect)) && !justified
+        {
+            out.push(Finding::new(
+                "panic-path",
+                "pp-unwrap",
+                &file.rel,
+                i + 1,
+                &symbol,
+                "unwrap/expect on a serving path: a poisoned Option/Result kills the \
+                 request thread; return a structured error, or justify the invariant \
+                 with a `// PANIC-OK:` comment"
+                    .to_string(),
+            ));
+        }
+
+        if PANIC_MACROS.iter().any(|m| has_word_followed_by(code, m, b'!')) && !justified {
+            out.push(Finding::new(
+                "panic-path",
+                "pp-panic",
+                &file.rel,
+                i + 1,
+                &symbol,
+                "panic!/unreachable!/todo! on a serving path: convert to a structured \
+                 protocol error, or justify with a `// PANIC-OK:` comment"
+                    .to_string(),
+            ));
+        }
+
+        if INDEX_DIRS.iter().any(|d| file.rel.starts_with(d))
+            && has_unchecked_index(code)
+            && !justified
+        {
+            out.push(Finding::new(
+                "panic-path",
+                "pp-index",
+                &file.rel,
+                i + 1,
+                &symbol,
+                "unchecked indexing at the tenant boundary: out-of-bounds panics cross \
+                 sessions; use get()/split checks, or justify the bound with a \
+                 `// PANIC-OK:` comment"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+/// `expr[..]` indexing: a `[` whose previous non-space byte ends an
+/// expression (identifier, `)`, or `]`). Attributes (`#[`), macro
+/// brackets (`vec![`), array types (`: [u8; 4]`), and slice patterns
+/// all have non-expression bytes before the bracket.
+fn has_unchecked_index(code: &str) -> bool {
+    let b = code.as_bytes();
+    for (i, &ch) in b.iter().enumerate() {
+        if ch != b'[' {
+            continue;
+        }
+        let mut j = i;
+        while j > 0 && (b[j - 1] == b' ' || b[j - 1] == b'\t') {
+            j -= 1;
+        }
+        if j == 0 {
+            continue;
+        }
+        let prev = b[j - 1];
+        if is_ident_byte(prev) || prev == b')' || prev == b']' {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(sources: &[(&str, &str)]) -> Vec<(String, &'static str, usize, String)> {
+        let model = CrateModel::from_sources(sources);
+        run(&model).into_iter().map(|f| (f.file, f.rule, f.line, f.symbol)).collect()
+    }
+
+    #[test]
+    fn unwrap_on_a_serve_path_fires_and_panic_ok_clears_it() {
+        let bad = "fn dispatch(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+        let got = findings(&[("serve/mod.rs", bad)]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].1, "pp-unwrap");
+        assert_eq!(got[0].2, 2);
+        assert_eq!(got[0].3, "dispatch");
+
+        let good = "fn dispatch(x: Option<u32>) -> u32 {\n    // PANIC-OK: x was checked by the caller one line up.\n    x.unwrap()\n}\n";
+        assert!(findings(&[("serve/mod.rs", good)]).is_empty());
+    }
+
+    #[test]
+    fn reachability_follows_method_calls_out_of_serve() {
+        // serve -> (method call) -> api helper with a panic: flagged even
+        // though the receiver type is unknown.
+        let serve = "fn dispatch(s: S) -> u32 {\n    s.query(1)\n}\n";
+        let api = "pub struct S;\nimpl S {\n    pub fn query(&self, x: u32) -> u32 {\n        deep(x)\n    }\n}\nfn deep(x: u32) -> u32 {\n    panic!(\"boom\")\n}\n";
+        let island = "pub fn lonely() -> u32 {\n    panic!(\"never reached\")\n}\n";
+        let got = findings(&[
+            ("serve/mod.rs", serve),
+            ("api/session.rs", api),
+            ("labelprop/mod.rs", island),
+        ]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].0, "api/session.rs");
+        assert_eq!(got[0].1, "pp-panic");
+        assert_eq!(got[0].3, "deep");
+    }
+
+    #[test]
+    fn query_root_is_seeded_without_any_serve_caller() {
+        let api = "pub struct ImSession;\nimpl ImSession {\n    pub fn query(&self) -> u32 {\n        helper::boom()\n    }\n}\n";
+        let helper = "pub fn boom() -> u32 {\n    unreachable!()\n}\n";
+        let got = findings(&[("api/session.rs", api), ("util/helper.rs", helper)]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].0, "util/helper.rs");
+    }
+
+    #[test]
+    fn own_expect_method_is_not_option_expect() {
+        let json = "pub struct P;\nimpl P {\n    fn expect(&self, b: u8) -> Result<(), ()> { Err(()) }\n    pub fn parse(&self) -> Result<(), ()> {\n        self.expect(b'{')\n    }\n}\n";
+        let serve = "fn dispatch(p: P) {\n    let _ = p.parse();\n}\n";
+        assert!(findings(&[("serve/mod.rs", serve), ("util/json.rs", json)]).is_empty());
+    }
+
+    #[test]
+    fn indexing_fires_only_at_the_tenant_boundary() {
+        let serve = "fn scan(buf: &[u8], k: usize) -> u8 {\n    buf[k]\n}\n";
+        let got = findings(&[("serve/reader.rs", serve)]);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].1, "pp-index");
+
+        // The same pattern in a kernel file reachable from serve: no
+        // pp-index (that boundary is certified by SAFETY/lint rules).
+        let serve2 = "fn scan(buf: &[u8], k: usize) -> u8 {\n    simd::row(buf, k)\n}\n";
+        let kernel = "pub fn row(buf: &[u8], k: usize) -> u8 {\n    buf[k]\n}\n";
+        assert!(findings(&[("serve/reader.rs", serve2), ("simd/mod.rs", kernel)]).is_empty());
+
+        // Attributes, macro brackets, and array types are not indexing.
+        let clean = "#[derive(Debug)]\nfn scan() -> Vec<u8> {\n    let a: [u8; 2] = [0, 1];\n    vec![a[0]]\n}\n";
+        let got = findings(&[("serve/reader.rs", clean)]);
+        assert_eq!(got.len(), 1, "only a[0] inside the macro args: {got:?}");
+    }
+
+    #[test]
+    fn allowlisted_surfaces_and_test_code_are_exempt() {
+        let main = "fn cli(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+        let serve = concat!(
+            "fn dispatch() {\n    crate::cli(None)\n}\n",
+            "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        Some(1).unwrap();\n    }\n}\n",
+        );
+        // main.rs is allowlisted even when reachable from serve.
+        let got = findings(&[("serve/mod.rs", serve), ("main.rs", main)]);
+        assert!(got.is_empty(), "{got:?}");
+    }
+
+    #[test]
+    fn unreached_fns_in_reachable_files_are_not_scanned() {
+        // `dead` lives in a serve file, so it IS a root here (every
+        // serve fn is). Put it in api/ instead: reachable file, dead fn.
+        let serve = "fn dispatch(s: S) {\n    s.live()\n}\n";
+        let api = "pub struct S;\nimpl S {\n    pub fn live(&self) {}\n}\npub fn dead() {\n    panic!(\"not on any serving path\")\n}\n";
+        let got = findings(&[("serve/mod.rs", serve), ("api/session.rs", api)]);
+        assert!(got.is_empty(), "{got:?}");
+    }
+}
